@@ -1,0 +1,72 @@
+//! End-to-end driver: the complete reproduction campaign.
+//!
+//! Runs EVERY experiment (Figs. 1, 2, 5, 6, 7a/b, 8, 9; Tables 2, 3; the
+//! section-5.4 summary, section-6.1 headline projection, and the
+//! section-2 analytical model tables) at the chosen scale, writes the CSV
+//! data to `results/`, prints the markdown tables, and — with artifacts
+//! built — routes the MCA port-pressure analyzer through the Pallas/PJRT
+//! path, proving all three layers compose on a real campaign.
+//!
+//! Run: `cargo run --release --example full_campaign [tiny|small|paper]`
+//!
+//! Record of runs lives in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use larc::coordinator::report::results_dir;
+use larc::experiments::{self, ExpOptions};
+use larc::runtime::{Manifest, Runtime};
+use larc::trace::Scale;
+
+fn main() -> anyhow::Result<()> {
+    let scale = match std::env::args().nth(1).as_deref() {
+        Some("tiny") => Scale::Tiny,
+        Some("paper") => Scale::Paper,
+        _ => Scale::Small,
+    };
+    let mut opts = ExpOptions::default();
+    opts.scale = scale;
+    opts.use_pjrt = Manifest::default_dir().join("manifest.json").exists();
+    eprintln!(
+        "campaign at {scale:?} scale; PJRT artifacts {}",
+        if opts.use_pjrt { "ON" } else { "OFF (run `make artifacts`)" }
+    );
+
+    // sanity: prove the PJRT runtime is live before the long campaign
+    if opts.use_pjrt {
+        let rt = Runtime::new()?;
+        let m = rt.model("triad_fom_n4096")?;
+        let s = [3.0f32];
+        let b = vec![1.0f32; 4096];
+        let c = vec![2.0f32; 4096];
+        let out = m.run_f32(&[(&s, &[1]), (&b, &[4096]), (&c, &[4096])])?;
+        assert!((out[1][0] - 7.0 * 4096.0).abs() < 1.0);
+        eprintln!("PJRT smoke test OK (triad checksum verified)");
+    }
+
+    let t0 = Instant::now();
+    for id in experiments::EXPERIMENTS {
+        let t = Instant::now();
+        eprintln!("=== {id} ===");
+        match experiments::run(id, &opts) {
+            Ok(reports) => {
+                for r in &reports {
+                    println!("{}", r.render());
+                    let path = r.write_csv(&results_dir())?;
+                    eprintln!("  wrote {}", path.display());
+                }
+                eprintln!("  ({id}: {:.1} s)", t.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("  {id} FAILED: {e:#}");
+                return Err(e);
+            }
+        }
+    }
+    eprintln!(
+        "campaign complete in {:.1} s; CSVs in {}",
+        t0.elapsed().as_secs_f64(),
+        results_dir().display()
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Cache-parameter sensitivity (the paper's Fig. 8) on a chosen TAPP
+//! kernel: sweep L2 latency, capacity, and bank count against LARC_C.
+//!
+//! Run: `cargo run --release --example larc_sensitivity [kernel-prefix]`
+//! (default kernel: tapp17-matvecsplit)
+
+use larc::cachesim::{self, configs};
+use larc::trace::workloads::tapp;
+use larc::trace::Scale;
+
+fn main() {
+    let prefix = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "tapp17".to_string());
+    let specs = tapp::workloads(Scale::Small);
+    let spec = specs
+        .iter()
+        .find(|s| s.name.starts_with(&prefix))
+        .unwrap_or_else(|| panic!("no TAPP kernel starting with {prefix:?}"));
+
+    let base_cfg = configs::larc_c();
+    let threads = spec.effective_threads(base_cfg.cores);
+    let base = cachesim::simulate(spec, &base_cfg, threads).runtime_s;
+    println!(
+        "kernel {} ({} threads); baseline larc_c: {:.6} s\n",
+        spec.name, threads, base
+    );
+
+    println!("L2 latency sweep (rel. runtime; 1.0 = baseline 37 cycles):");
+    for lat in [22.0, 30.0, 37.0, 45.0, 52.0] {
+        let r = cachesim::simulate(spec, &configs::larc_c_with_latency(lat), threads);
+        println!("  {lat:>4} cyc : {:.3}", r.runtime_s / base);
+    }
+
+    println!("L2 capacity sweep:");
+    for mib in [64u64, 128, 256, 512, 1024] {
+        let r = cachesim::simulate(spec, &configs::larc_c_with_l2_size(mib), threads);
+        println!("  {mib:>4} MiB : {:.3}", r.runtime_s / base);
+    }
+
+    println!("L2 bankbits sweep (banks = 2^x; bandwidth scales with banks):");
+    for bb in [0u32, 1, 2, 3, 4] {
+        let r = cachesim::simulate(spec, &configs::larc_c_with_bankbits(bb), threads);
+        println!("  {bb:>4}     : {:.3}", r.runtime_s / base);
+    }
+}

@@ -1,0 +1,74 @@
+//! MCA upper-bound estimation (the paper's Fig. 6 pipeline) for a chosen
+//! set of workloads, with the port-pressure analyzer running through the
+//! PJRT batcher when artifacts are available.
+//!
+//! Run: `cargo run --release --example mca_upperbound [workload ...]`
+
+use std::sync::Arc;
+
+use larc::cachesim::{self, configs};
+use larc::coordinator::McaBatcher;
+use larc::mca::{self, PortModel};
+use larc::runtime::Runtime;
+use larc::trace::workloads;
+use larc::trace::Scale;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let names: Vec<String> = if args.is_empty() {
+        // the paper's headline MCA workloads
+        ["tapp20-spmv", "cg-omp", "xsbench", "miniamr", "hpl", "swim"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        args
+    };
+
+    let cfg = configs::broadwell();
+    let pm = PortModel::get(cfg.port_arch);
+    let runtime = Runtime::new().ok().map(Arc::new);
+    let mut batcher = runtime.clone().map(|rt| McaBatcher::new(rt, &pm));
+    if batcher.is_some() {
+        println!("port-pressure analyzer: PJRT (batched artifact)");
+    } else {
+        println!("port-pressure analyzer: native (run `make artifacts` for PJRT)");
+    }
+
+    println!(
+        "{:<22} {:>12} {:>12} {:>9}",
+        "workload", "measured[s]", "all-L1[s]", "speedup"
+    );
+    for name in names {
+        let Some(spec) = workloads::by_name(&name, Scale::Small) else {
+            eprintln!("unknown workload {name:?} — see `larc list workloads`");
+            continue;
+        };
+        let threads = spec.effective_threads(cfg.cores);
+        let measured = cachesim::simulate(&spec, &cfg, threads).runtime_s;
+        let est = match batcher.as_mut() {
+            Some(b) => {
+                let mut eval = |blocks: &[larc::isa::BasicBlock]| -> Vec<f32> {
+                    b.eval(blocks).expect("pjrt eval")
+                };
+                mca::estimate::estimate_runtime_with(&spec, &pm, cfg.freq_ghz, 7, &mut eval)
+                    .runtime_s
+            }
+            None => mca::estimate_runtime(&spec, &pm, cfg.freq_ghz, 7).runtime_s,
+        };
+        println!(
+            "{:<22} {:>12.6} {:>12.6} {:>8.2}x",
+            name,
+            measured,
+            est,
+            measured / est
+        );
+    }
+    if let Some(b) = &batcher {
+        println!(
+            "\nbatcher: {} PJRT executions for {} blocks ({} padded rows)",
+            b.executions, b.rows_evaluated, b.rows_padded
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: one workload, two machines, one answer.
+//!
+//! Simulates MiniFE (the paper's Fig. 1 pilot application) on the baseline
+//! A64FX_S CMG and on the conservative LARC_C CMG, prints the speedup, and
+//! — when `make artifacts` has been run — executes the stencil
+//! figure-of-merit numerics through the AOT-compiled PJRT artifact to show
+//! the full three-layer stack composing.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use larc::cachesim::{self, configs};
+use larc::runtime::Runtime;
+use larc::trace::workloads;
+use larc::trace::Scale;
+use larc::util::units::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let spec = workloads::by_name("minife", Scale::Small).expect("minife registered");
+    println!("workload : {} (footprint {})", spec.name, fmt_bytes(spec.footprint()));
+
+    let base = configs::a64fx_s();
+    let larc = configs::larc_c();
+    let tb = spec.effective_threads(base.cores);
+    let tl = spec.effective_threads(larc.cores);
+
+    let rb = cachesim::simulate(&spec, &base, tb);
+    let rl = cachesim::simulate(&spec, &larc, tl);
+
+    println!(
+        "{:<10} {:>2} threads: {:>10.6} s   L2 miss {:>5.1}%",
+        base.name,
+        tb,
+        rb.runtime_s,
+        rb.stats.l2_miss_rate() * 100.0
+    );
+    println!(
+        "{:<10} {:>2} threads: {:>10.6} s   L2 miss {:>5.1}%",
+        larc.name,
+        tl,
+        rl.runtime_s,
+        rl.stats.l2_miss_rate() * 100.0
+    );
+    println!("speedup  : {:.2}x (CMG level)", rb.runtime_s / rl.runtime_s);
+    println!(
+        "chip-level (ideal scaling, paper section 6.1): {:.2}x",
+        larc::model::full_chip_speedup(rb.runtime_s / rl.runtime_s)
+    );
+
+    // Three-layer proof: run the MiniFE-class stencil numerics through the
+    // AOT artifact (Pallas kernel -> jax model -> HLO -> PJRT).
+    match Runtime::new() {
+        Ok(rt) => {
+            let m = rt.model("stencil_fom_18x18x18")?;
+            let mut w = vec![0f32; 27];
+            w[13] = 1.0; // identity stencil: residual must be ~0
+            let x: Vec<f32> = (0..18 * 18 * 18).map(|i| (i % 97) as f32 * 0.1).collect();
+            let out = m.run_f32(&[(&w, &[27]), (&x, &[18, 18, 18])])?;
+            let residual = out[1][0];
+            println!("PJRT stencil FoM (identity weights): residual = {residual:.3e}");
+            assert!(residual.abs() < 1e-3, "stencil numerics broken");
+            println!("three-layer stack OK (Pallas -> HLO -> PJRT -> rust)");
+        }
+        Err(e) => {
+            println!("PJRT artifacts not available ({e}); run `make artifacts`");
+        }
+    }
+    Ok(())
+}

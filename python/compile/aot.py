@@ -1,0 +1,102 @@
+"""AOT lowering: jax (L2) -> HLO text artifacts for the Rust runtime (L3).
+
+HLO *text* -- NOT ``lowered.compile().serialize()`` -- is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side reassigns ids and round-trips cleanly.
+
+Python runs ONLY here, at build time (``make artifacts``); the Rust binary
+is self-contained afterwards.
+
+Each entry point is exported at one or more fixed shapes (PJRT executables
+are shape-specialized).  The manifest (artifacts/manifest.json) tells the
+Rust runtime which file serves which (entry, shape) pair.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.port_pressure import BLOCK_TILE
+
+# Instruction-class / port dimensions are fixed across the repo; the Rust
+# isa module mirrors these constants (see rust/src/isa/mod.rs).
+NUM_CLASSES = 16
+NUM_PORTS = 8
+
+# Batch sizes exported for the MCA batcher (rust pads to the next size up).
+MCA_BATCHES = [128, 512, 2048, 8192]
+
+# Triad vector lengths (Fig. 7 sweep FoM) and stencil grids (end-to-end).
+TRIAD_SIZES = [4096, 65536]
+STENCIL_GRIDS = [(18, 18, 18), (34, 34, 34)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    for b in MCA_BATCHES:
+        assert b % BLOCK_TILE == 0
+        args = (f32(b, NUM_CLASSES), f32(NUM_CLASSES, NUM_PORTS),
+                f32(NUM_CLASSES), f32(b))
+        yield (f"mca_block_cost_b{b}", model.mca_block_cost, args,
+               {"entry": "mca_block_cost", "batch": b,
+                "classes": NUM_CLASSES, "ports": NUM_PORTS})
+        args = args + (f32(b),)
+        yield (f"mca_workload_cycles_b{b}", model.mca_workload_cycles, args,
+               {"entry": "mca_workload_cycles", "batch": b,
+                "classes": NUM_CLASSES, "ports": NUM_PORTS})
+    for n in TRIAD_SIZES:
+        yield (f"triad_fom_n{n}", model.triad_fom,
+               (f32(1), f32(n), f32(n)),
+               {"entry": "triad_fom", "n": n})
+    for nz, ny, nx in STENCIL_GRIDS:
+        yield (f"stencil_fom_{nz}x{ny}x{nx}", model.stencil_fom,
+               (f32(27), f32(nz, ny, nx)),
+               {"entry": "stencil_fom", "nz": nz, "ny": ny, "nx": nx})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args, meta in entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": fname,
+            "arg_shapes": [list(a.shape) for a in example_args],
+            **meta,
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the LARC reproduction.
+
+Every kernel here is authored as a Pallas kernel (``interpret=True`` so the
+lowered HLO runs on the CPU PJRT plugin -- real-TPU lowering would emit a
+Mosaic custom-call the CPU client cannot execute) and has a pure-jnp oracle
+in :mod:`compile.kernels.ref` used by the pytest suite.
+"""
+
+from compile.kernels.port_pressure import port_pressure_cpiter
+from compile.kernels.triad import triad
+from compile.kernels.stencil import stencil27
+
+__all__ = ["port_pressure_cpiter", "triad", "stencil27"]

@@ -1,0 +1,93 @@
+"""Pallas kernel: batched MCA port-pressure CPIter estimation.
+
+This is the compute hot-spot of the paper's MCA pipeline (Section 3.1): for
+every basic block we must estimate its cycles-per-iteration (CPIter).  A
+machine-code-analyzer style estimate combines two lower bounds:
+
+* the **throughput bound** -- each instruction class ``c`` issues micro-ops
+  onto execution ports; with ``counts[b, c]`` instructions of class ``c`` in
+  block ``b`` and ``ports[c, p]`` cycles of pressure a class-``c``
+  instruction puts on port ``p``, port ``p`` is busy ``(counts @ ports)[b, p]``
+  cycles per iteration, and the block cannot retire faster than the busiest
+  port;
+* the **latency bound** -- the critical dependency chain; approximated as
+  the latency-weighted instruction count divided by the exploitable ILP
+  (``chain[b] = counts[b] . lat / ilp[b]``).
+
+``CPIter[b] = max(max_p (counts @ ports)[b, p], chain[b])``
+
+The contraction ``counts @ ports`` is MXU-shaped (tall-skinny matmul in
+bf16/f32), which is why this lives in Pallas.  The grid tiles the block
+dimension B; the small ``ports``/``lat`` operands are replicated into VMEM
+for every tile (C x P is a few KiB).
+
+Hardware adaptation note: the paper targets CPUs; the kernel itself is
+designed TPU-first -- B-tiles sized so ``counts`` tile + ``ports`` + output
+tile fit VMEM, contraction fed to the MXU, and the max-reductions on the
+VPU.  See DESIGN.md section 7 for the footprint table.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile over the block (batch) dimension.  128 rows keeps the counts tile at
+# 128 x C floats (C <= 32 -> 16 KiB) + ports (C x P <= 4 KiB) + out (0.5 KiB)
+# comfortably inside a single VMEM-sized budget even with double-buffering.
+BLOCK_TILE = 128
+
+
+def _cpiter_kernel(counts_ref, ports_ref, lat_ref, ilp_ref, out_ref):
+    """One grid step: CPIter for a (BLOCK_TILE, C) slab of basic blocks."""
+    counts = counts_ref[...]            # (TB, C)
+    ports = ports_ref[...]              # (C, P)
+    lat = lat_ref[...]                  # (C,)
+    ilp = ilp_ref[...]                  # (TB,)
+
+    # Throughput bound: busiest port. MXU contraction + VPU max-reduce.
+    pressure = jnp.dot(counts, ports, preferred_element_type=jnp.float32)
+    tput = jnp.max(pressure, axis=1)    # (TB,)
+
+    # Latency bound: latency-weighted ops / exploitable ILP.
+    chain = jnp.dot(counts, lat, preferred_element_type=jnp.float32)
+    chain = chain / jnp.maximum(ilp, 1.0)
+
+    out_ref[...] = jnp.maximum(tput, chain)
+
+
+@partial(jax.jit, static_argnames=())
+def port_pressure_cpiter(counts, ports, lat, ilp):
+    """Batched CPIter estimate.
+
+    Args:
+      counts: f32[B, C] instruction-class counts per basic block.
+      ports:  f32[C, P] per-class port pressure (cycles on port p).
+      lat:    f32[C]    per-class result latency (cycles).
+      ilp:    f32[B]    per-block exploitable ILP (>= 1).
+
+    Returns:
+      f32[B] cycles-per-iteration estimates.
+
+    B must be a multiple of BLOCK_TILE (the AOT entry points export fixed
+    shapes; the Rust batcher pads to the tile).
+    """
+    b, c = counts.shape
+    p = ports.shape[1]
+    assert b % BLOCK_TILE == 0, f"B={b} must be a multiple of {BLOCK_TILE}"
+
+    grid = (b // BLOCK_TILE,)
+    return pl.pallas_call(
+        _cpiter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_TILE, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, p), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(counts, ports, lat, ilp)

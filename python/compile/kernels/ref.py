@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+The pytest suite asserts `assert_allclose(kernel(...), ref(...))` over
+hypothesis-generated shape/value sweeps; the Rust integration tests compare
+PJRT-executed artifacts against values precomputed from these oracles.
+"""
+
+import jax.numpy as jnp
+
+
+def port_pressure_cpiter_ref(counts, ports, lat, ilp):
+    """Oracle for kernels.port_pressure.port_pressure_cpiter."""
+    pressure = counts @ ports                      # (B, P)
+    tput = jnp.max(pressure, axis=1)               # (B,)
+    chain = (counts @ lat) / jnp.maximum(ilp, 1.0)  # (B,)
+    return jnp.maximum(tput, chain)
+
+
+def triad_ref(s, b, c):
+    """Oracle for kernels.triad.triad."""
+    return b + s[0] * c
+
+
+def stencil27_ref(w, x):
+    """Oracle for kernels.stencil.stencil27."""
+    nz, ny, nx = x.shape
+    acc = jnp.zeros((nz - 2, ny - 2, nx - 2), dtype=x.dtype)
+    k = 0
+    for dz in range(3):
+        for dy in range(3):
+            for dx in range(3):
+                acc = acc + w[k] * x[dz:dz + nz - 2, dy:dy + ny - 2, dx:dx + nx - 2]
+                k += 1
+    return acc

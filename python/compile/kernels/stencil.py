@@ -1,0 +1,64 @@
+"""Pallas kernel: 27-point 3D stencil relaxation step (MiniFE/MG-class).
+
+The cache-sensitive workloads that dominate the paper's results (MiniFE,
+MG-OMP, HPCG, FFB) are stencil/SpMV relaxations.  The end-to-end driver
+runs this kernel's numerics through the AOT artifact so the campaign's
+figure-of-merit (residual norm of a relaxation sweep) is a real computation.
+
+Implementation: grid over z-planes.  Pallas blocks are non-overlapping
+(block index * block shape = element offset), so the three z-planes a step
+needs are expressed as three single-plane views of the same padded input
+with shifted index maps -- the BlockSpec does the halo staging a GPU kernel
+would do with shared memory, per the hardware-adaptation rule.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(w_ref, x0_ref, x1_ref, x2_ref, o_ref):
+    """x{0,1,2}_ref: (1, NY, NX) consecutive padded planes."""
+    w = w_ref[...]  # (27,)
+    planes = (x0_ref[...][0], x1_ref[...][0], x2_ref[...][0])
+    ny, nx = planes[0].shape
+    acc = jnp.zeros((ny - 2, nx - 2), dtype=jnp.float32)
+    k = 0
+    for dz in range(3):
+        p = planes[dz]
+        for dy in range(3):
+            for dx in range(3):
+                acc = acc + w[k] * p[dy:dy + ny - 2, dx:dx + nx - 2]
+                k += 1
+    o_ref[...] = acc[None, :, :]
+
+
+@partial(jax.jit, static_argnames=())
+def stencil27(w, x):
+    """One 27-point stencil sweep.
+
+    Args:
+      w: f32[27] stencil weights (z-major, then y, then x offsets).
+      x: f32[NZ, NY, NX] padded grid (one halo cell on each face).
+
+    Returns:
+      f32[NZ-2, NY-2, NX-2] interior result.
+    """
+    nz, ny, nx = x.shape
+    grid = (nz - 2,)
+    plane = lambda dz: pl.BlockSpec((1, ny, nx), lambda i, dz=dz: (i + dz, 0, 0))
+    return pl.pallas_call(
+        _stencil_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((27,), lambda i: (0,)),
+            plane(0),
+            plane(1),
+            plane(2),
+        ],
+        out_specs=pl.BlockSpec((1, ny - 2, nx - 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz - 2, ny - 2, nx - 2), jnp.float32),
+        interpret=True,
+    )(w, x, x, x)

@@ -1,0 +1,44 @@
+"""Pallas kernel: STREAM Triad (a[i] = b[i] + s * c[i]).
+
+Figure 7 of the paper validates the simulated LARC L2 bandwidth with a
+STREAM Triad sweep; the end-to-end driver executes the *numerics* of that
+workload through this kernel (via the AOT artifact) while the Rust cachesim
+models its timing.  Keeping real arithmetic on the PJRT path means the
+figure-of-merit checks in examples/ are genuine computations, not stubs.
+
+The grid tiles the vector; each step streams one VMEM-resident tile of b
+and c and writes one tile of a -- the BlockSpec expresses the HBM<->VMEM
+schedule that a CPU would express through its hardware prefetcher.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VEC_TILE = 1024
+
+
+def _triad_kernel(s_ref, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + s_ref[0] * c_ref[...]
+
+
+@partial(jax.jit, static_argnames=())
+def triad(s, b, c):
+    """a = b + s*c elementwise.  s: f32[1]; b, c: f32[N], N % VEC_TILE == 0."""
+    (n,) = b.shape
+    assert n % VEC_TILE == 0, f"N={n} must be a multiple of {VEC_TILE}"
+    grid = (n // VEC_TILE,)
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((VEC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((VEC_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((VEC_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(s, b, c)

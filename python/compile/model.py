@@ -1,0 +1,61 @@
+"""Layer-2 JAX compute graphs for the LARC reproduction.
+
+The paper's "model" is not a neural network but the MCA cost model
+(Section 3.1) plus the figure-of-merit numerics of the workloads the
+simulator times.  Each public function here is a pure jax function that
+calls the Layer-1 Pallas kernels and is AOT-lowered by :mod:`compile.aot`
+into an HLO-text artifact that the Rust runtime loads once and executes on
+the request path.
+
+Entry points (all return 1-tuples; the rust side unwraps with to_tuple1):
+
+* ``mca_block_cost``     -- batched CPIter bounds for B basic blocks.
+* ``mca_workload_cycles`` -- Eq.(1) numerator for one thread: weighted sum
+  of per-edge CPIter * calls, evaluated fused with the block cost so the
+  coordinator gets a single scalar back per (rank, thread) batch.
+* ``triad_fom``          -- STREAM-triad + checksum (Fig. 7 numerics).
+* ``stencil_fom``        -- 27-pt stencil sweep + residual norm (MiniFE/MG
+  class numerics for the end-to-end driver).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.port_pressure import port_pressure_cpiter
+from compile.kernels.stencil import stencil27
+from compile.kernels.triad import triad
+
+
+def mca_block_cost(counts, ports, lat, ilp):
+    """CPIter estimates for a padded batch of basic blocks.
+
+    counts: f32[B, C]; ports: f32[C, P]; lat: f32[C]; ilp: f32[B].
+    Returns (f32[B],).
+    """
+    return (port_pressure_cpiter(counts, ports, lat, ilp),)
+
+
+def mca_workload_cycles(counts, ports, lat, ilp, calls):
+    """Fused Eq.(1) numerator for one instruction stream.
+
+    ``calls[b]`` is the invocation count of the CFG edge whose callee block
+    is row ``b`` (padding rows carry calls = 0, so they cannot contribute).
+    Returns (f32[] total cycles, f32[B] per-block CPIter).
+    """
+    cpiter = port_pressure_cpiter(counts, ports, lat, ilp)
+    total = jnp.sum(cpiter * calls)
+    return (total, cpiter)
+
+
+def triad_fom(s, b, c):
+    """Triad + figure of merit: (a, sum(a)) -- Fig. 7's workload numerics."""
+    a = triad(s, b, c)
+    return (a, jnp.sum(a))
+
+
+def stencil_fom(w, x):
+    """One stencil sweep + residual L2 norm against the input interior."""
+    y = stencil27(w, x)
+    interior = x[1:-1, 1:-1, 1:-1]
+    residual = jnp.sqrt(jnp.sum((y - interior) ** 2))
+    return (y, residual)

@@ -1,0 +1,153 @@
+# pytest: kernel vs ref allclose -- the CORE correctness signal.
+"""Layer-1 Pallas kernels vs. pure-jnp oracles.
+
+Fixed-shape smoke tests plus hypothesis sweeps over shapes/values.  All
+kernels run under interpret=True, so these tests exercise exactly the HLO
+that the AOT path exports for the Rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.port_pressure import BLOCK_TILE, port_pressure_cpiter
+from compile.kernels.stencil import stencil27
+from compile.kernels.triad import VEC_TILE, triad
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _pp_inputs(b, c, p, seed=0):
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, 20, size=(b, c)).astype(np.float32))
+    ports = jnp.asarray(rng.uniform(0.0, 2.0, size=(c, p)).astype(np.float32))
+    lat = jnp.asarray(rng.uniform(1.0, 8.0, size=(c,)).astype(np.float32))
+    ilp = jnp.asarray(rng.uniform(1.0, 6.0, size=(b,)).astype(np.float32))
+    return counts, ports, lat, ilp
+
+
+class TestPortPressure:
+    def test_single_tile(self):
+        args = _pp_inputs(BLOCK_TILE, 16, 8)
+        assert_allclose(port_pressure_cpiter(*args),
+                        ref.port_pressure_cpiter_ref(*args), rtol=1e-5)
+
+    def test_multi_tile(self):
+        args = _pp_inputs(4 * BLOCK_TILE, 16, 8, seed=1)
+        assert_allclose(port_pressure_cpiter(*args),
+                        ref.port_pressure_cpiter_ref(*args), rtol=1e-5)
+
+    def test_zero_counts_zero_cost(self):
+        counts = jnp.zeros((BLOCK_TILE, 16), jnp.float32)
+        _, ports, lat, ilp = _pp_inputs(BLOCK_TILE, 16, 8)
+        out = port_pressure_cpiter(counts, ports, lat, ilp)
+        assert_allclose(np.asarray(out), np.zeros(BLOCK_TILE), atol=0)
+
+    def test_ilp_below_one_clamped(self):
+        counts, ports, lat, _ = _pp_inputs(BLOCK_TILE, 16, 8)
+        ilp_half = jnp.full((BLOCK_TILE,), 0.5, jnp.float32)
+        ilp_one = jnp.ones((BLOCK_TILE,), jnp.float32)
+        assert_allclose(
+            np.asarray(port_pressure_cpiter(counts, ports, lat, ilp_half)),
+            np.asarray(port_pressure_cpiter(counts, ports, lat, ilp_one)),
+            rtol=1e-6,
+        )
+
+    def test_throughput_bound_dominates_when_latency_cheap(self):
+        # lat == 0 -> chain bound is 0 -> result equals busiest port.
+        counts, ports, _, ilp = _pp_inputs(BLOCK_TILE, 16, 8, seed=3)
+        lat = jnp.zeros((16,), jnp.float32)
+        out = np.asarray(port_pressure_cpiter(counts, ports, lat, ilp))
+        expect = np.max(np.asarray(counts) @ np.asarray(ports), axis=1)
+        assert_allclose(out, expect, rtol=1e-5)
+
+    def test_rejects_unaligned_batch(self):
+        args = _pp_inputs(BLOCK_TILE + 1, 16, 8)
+        with pytest.raises(AssertionError):
+            port_pressure_cpiter(*args)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        c=st.integers(1, 24),
+        p=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, tiles, c, p, seed):
+        args = _pp_inputs(tiles * BLOCK_TILE, c, p, seed=seed)
+        assert_allclose(port_pressure_cpiter(*args),
+                        ref.port_pressure_cpiter_ref(*args), rtol=1e-4)
+
+
+class TestTriad:
+    def test_basic(self):
+        n = 4 * VEC_TILE
+        s = jnp.asarray([3.0], jnp.float32)
+        b = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+        c = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+        assert_allclose(triad(s, b, c), ref.triad_ref(s, b, c),
+                        rtol=1e-4, atol=1e-6)
+
+    def test_zero_scale(self):
+        n = VEC_TILE
+        s = jnp.asarray([0.0], jnp.float32)
+        b = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+        c = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+        assert_allclose(np.asarray(triad(s, b, c)), np.asarray(b))
+
+    def test_rejects_unaligned(self):
+        s = jnp.asarray([1.0], jnp.float32)
+        v = jnp.ones((VEC_TILE + 3,), jnp.float32)
+        with pytest.raises(AssertionError):
+            triad(s, v, v)
+
+    @settings(max_examples=10, deadline=None)
+    @given(tiles=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(-10, 10, allow_nan=False))
+    def test_hypothesis(self, tiles, seed, scale):
+        rng = np.random.default_rng(seed)
+        n = tiles * VEC_TILE
+        s = jnp.asarray([scale], jnp.float32)
+        b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        c = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        assert_allclose(triad(s, b, c), ref.triad_ref(s, b, c),
+                        rtol=1e-4, atol=1e-5)
+
+
+class TestStencil:
+    def test_identity_weights(self):
+        # Center weight 1, rest 0 -> output equals the interior.
+        w = np.zeros(27, np.float32)
+        w[13] = 1.0  # (dz, dy, dx) = (1, 1, 1)
+        x = jnp.asarray(RNG.standard_normal((10, 10, 10)), jnp.float32)
+        out = stencil27(jnp.asarray(w), x)
+        assert_allclose(np.asarray(out), np.asarray(x)[1:-1, 1:-1, 1:-1],
+                        rtol=1e-6)
+
+    def test_vs_ref(self):
+        w = jnp.asarray(RNG.standard_normal(27), jnp.float32)
+        x = jnp.asarray(RNG.standard_normal((12, 9, 11)), jnp.float32)
+        assert_allclose(stencil27(w, x), ref.stencil27_ref(w, x),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_constant_field(self):
+        # Constant input -> every output point = sum(w) * const.
+        w = jnp.asarray(RNG.uniform(size=27), jnp.float32)
+        x = jnp.full((8, 8, 8), 2.5, jnp.float32)
+        out = np.asarray(stencil27(w, x))
+        assert_allclose(out, np.full_like(out, 2.5 * float(jnp.sum(w))),
+                        rtol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(nz=st.integers(3, 12), ny=st.integers(3, 12),
+           nx=st.integers(3, 12), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, nz, ny, nx, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.standard_normal(27), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((nz, ny, nx)), jnp.float32)
+        assert_allclose(stencil27(w, x), ref.stencil27_ref(w, x),
+                        rtol=1e-4, atol=1e-5)

@@ -1,0 +1,62 @@
+"""Layer-2 model graphs: fused Eq.(1) reduction + FoM wrappers."""
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.port_pressure import BLOCK_TILE
+
+RNG = np.random.default_rng(42)
+
+
+def _inputs(b=BLOCK_TILE, c=16, p=8):
+    counts = jnp.asarray(RNG.integers(0, 20, (b, c)).astype(np.float32))
+    ports = jnp.asarray(RNG.uniform(0, 2, (c, p)).astype(np.float32))
+    lat = jnp.asarray(RNG.uniform(1, 8, (c,)).astype(np.float32))
+    ilp = jnp.asarray(RNG.uniform(1, 6, (b,)).astype(np.float32))
+    calls = jnp.asarray(RNG.integers(0, 1000, (b,)).astype(np.float32))
+    return counts, ports, lat, ilp, calls
+
+
+def test_mca_block_cost_matches_ref():
+    counts, ports, lat, ilp, _ = _inputs()
+    (out,) = model.mca_block_cost(counts, ports, lat, ilp)
+    assert_allclose(out, ref.port_pressure_cpiter_ref(counts, ports, lat, ilp),
+                    rtol=1e-5)
+
+
+def test_workload_cycles_is_weighted_sum():
+    counts, ports, lat, ilp, calls = _inputs()
+    total, cpiter = model.mca_workload_cycles(counts, ports, lat, ilp, calls)
+    assert_allclose(float(total), float(jnp.sum(cpiter * calls)), rtol=1e-6)
+
+
+def test_workload_cycles_padding_rows_are_free():
+    counts, ports, lat, ilp, calls = _inputs()
+    total_a, _ = model.mca_workload_cycles(counts, ports, lat, ilp, calls)
+    # Doubling the batch with calls=0 padding must not change the total.
+    counts2 = jnp.concatenate([counts, counts])
+    ilp2 = jnp.concatenate([ilp, ilp])
+    calls2 = jnp.concatenate([calls, jnp.zeros_like(calls)])
+    total_b, _ = model.mca_workload_cycles(counts2, ports, lat, ilp2, calls2)
+    assert_allclose(float(total_a), float(total_b), rtol=1e-6)
+
+
+def test_triad_fom_checksum():
+    s = jnp.asarray([2.0], jnp.float32)
+    b = jnp.ones((4096,), jnp.float32)
+    c = jnp.full((4096,), 3.0, jnp.float32)
+    a, checksum = model.triad_fom(s, b, c)
+    assert_allclose(np.asarray(a), np.full(4096, 7.0), rtol=1e-6)
+    assert_allclose(float(checksum), 7.0 * 4096, rtol=1e-6)
+
+
+def test_stencil_fom_zero_residual_for_identity():
+    w = np.zeros(27, np.float32)
+    w[13] = 1.0
+    x = jnp.asarray(RNG.standard_normal((10, 10, 10)), jnp.float32)
+    y, residual = model.stencil_fom(jnp.asarray(w), x)
+    assert_allclose(float(residual), 0.0, atol=1e-5)
+    assert y.shape == (8, 8, 8)

@@ -1,0 +1,65 @@
+//! Batcher benchmarks: PJRT-batched port-pressure evaluation vs. the
+//! native path, across batch sizes — quantifies the dispatch-amortization
+//! the coordinator's dynamic batching buys (DESIGN.md §7).
+//!
+//! Run: `cargo bench --bench bench_batcher` (requires `make artifacts`).
+
+use std::sync::Arc;
+
+use larc::coordinator::McaBatcher;
+use larc::isa::{BasicBlock, InstrClass, InstrMix, ALL_CLASSES};
+use larc::mca::{analyzers, PortArch, PortModel};
+use larc::runtime::{Manifest, Runtime};
+use larc::util::bench::{bench, black_box};
+use larc::util::prng::Rng;
+
+fn random_blocks(n: usize) -> Vec<BasicBlock> {
+    let mut rng = Rng::new(0xBA7C);
+    (0..n)
+        .map(|i| {
+            let mut mix = InstrMix::new();
+            for c in ALL_CLASSES {
+                if c != InstrClass::Nop {
+                    mix.add(c, rng.below(16) as f32);
+                }
+            }
+            BasicBlock::new(i as u32, "b", mix, 1.0 + rng.f64() as f32 * 7.0, true)
+        })
+        .collect()
+}
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("bench_batcher: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Arc::new(Runtime::new().expect("pjrt runtime"));
+    let pm = PortModel::get(PortArch::A64fxLike);
+
+    // warm the executable cache outside the timed region
+    {
+        let mut warm = McaBatcher::new(rt.clone(), &pm);
+        let _ = warm.eval(&random_blocks(8192));
+    }
+
+    for n in [128usize, 2048, 8192, 32768] {
+        let blocks = random_blocks(n);
+
+        let r = bench(&format!("pjrt_batched_{n}_blocks"), 5, || {
+            let mut batcher = McaBatcher::new(rt.clone(), &pm);
+            let out = batcher.eval(&blocks).expect("eval");
+            black_box(out.len() as u64)
+        });
+        println!("{}", r.report());
+
+        let r = bench(&format!("native_{n}_blocks"), 5, || {
+            let mut acc = 0f32;
+            for blk in &blocks {
+                acc += analyzers::port_pressure_native(blk, &pm);
+            }
+            black_box(acc);
+            n as u64
+        });
+        println!("{}", r.report());
+    }
+}

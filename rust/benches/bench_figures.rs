@@ -1,0 +1,34 @@
+//! Per-figure campaign benchmarks: wall-clock cost of regenerating each
+//! paper table/figure at Tiny scale (the CI-sized sanity loop).  The data
+//! itself comes from `larc figure <id>` / `examples/full_campaign`.
+//!
+//! Run: `cargo bench --bench bench_figures`
+
+use larc::experiments::{self, ExpOptions};
+use larc::trace::Scale;
+use larc::util::bench::{bench, black_box};
+
+fn main() {
+    let mut opts = ExpOptions::default();
+    opts.scale = Scale::Tiny;
+    opts.workers = 1;
+
+    // cheap, closed-form figures: several iterations
+    for id in ["fig2", "table2", "model"] {
+        let r = bench(&format!("figure_{id}"), 5, || {
+            let reports = experiments::run(id, &opts).expect(id);
+            black_box(reports.len() as u64);
+            reports.iter().map(|r| r.len() as u64).sum()
+        });
+        println!("{}", r.report());
+    }
+    // simulation-backed figures: one timed run each at Tiny scale
+    for id in ["fig1", "fig5", "fig7a", "fig8"] {
+        let r = bench(&format!("figure_{id}"), 1, || {
+            let reports = experiments::run(id, &opts).expect(id);
+            black_box(reports.len() as u64);
+            reports.iter().map(|r| r.len() as u64).sum()
+        });
+        println!("{}", r.report());
+    }
+}

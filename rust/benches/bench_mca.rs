@@ -1,0 +1,63 @@
+//! MCA pipeline micro-benchmarks: analyzer throughput (blocks/s) and full
+//! Eq.(1) estimation latency over the whole workload library.
+//!
+//! Run: `cargo bench --bench bench_mca`
+
+use larc::isa::{BasicBlock, InstrClass, InstrMix, ALL_CLASSES};
+use larc::mca::{self, analyzers, PortArch, PortModel};
+use larc::trace::{workloads, Scale};
+use larc::util::bench::{bench, black_box};
+use larc::util::prng::Rng;
+
+fn random_blocks(n: usize) -> Vec<BasicBlock> {
+    let mut rng = Rng::new(0xB10C);
+    (0..n)
+        .map(|i| {
+            let mut mix = InstrMix::new();
+            for c in ALL_CLASSES {
+                if c != InstrClass::Nop {
+                    mix.add(c, rng.below(16) as f32);
+                }
+            }
+            BasicBlock::new(i as u32, "b", mix, 1.0 + rng.f64() as f32 * 7.0, true)
+        })
+        .collect()
+}
+
+fn main() {
+    let pm = PortModel::get(PortArch::A64fxLike);
+    let blocks = random_blocks(100_000);
+
+    let r = bench("port_pressure_native_100k_blocks", 10, || {
+        let mut acc = 0f32;
+        for b in &blocks {
+            acc += analyzers::port_pressure_native(b, &pm);
+        }
+        black_box(acc);
+        blocks.len() as u64
+    });
+    println!("{}", r.report());
+
+    let r = bench("median_of_four_100k_blocks", 5, || {
+        let mut acc = 0f32;
+        for b in &blocks {
+            acc += analyzers::median_cpiter(b, &pm, None);
+        }
+        black_box(acc);
+        blocks.len() as u64
+    });
+    println!("{}", r.report());
+
+    // full Eq.(1) estimation over the whole workload library
+    let specs = workloads::all(Scale::Small);
+    let n = specs.len() as u64;
+    let r = bench("estimate_runtime_full_library", 3, || {
+        let mut acc = 0f64;
+        for s in &specs {
+            acc += mca::estimate_runtime(s, &pm, 2.2, 7).cycles;
+        }
+        black_box(acc);
+        n
+    });
+    println!("{}", r.report());
+}

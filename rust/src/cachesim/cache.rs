@@ -1,0 +1,364 @@
+//! Set-associative cache with LRU replacement, dirty bits, and per-line
+//! sharer masks (the L2 doubles as a MESI-lite directory for the
+//! inclusive hierarchy).
+
+/// Result of a lookup/access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessOutcome {
+    Hit,
+    Miss,
+}
+
+/// A line evicted by a fill.
+#[derive(Clone, Copy, Debug)]
+pub struct Evicted {
+    pub addr: u64,
+    pub dirty: bool,
+    /// L1 sharer mask at eviction time (L2 only; back-invalidation set).
+    pub sharers: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Line {
+    tag: u64,
+    lru: u64,
+    sharers: u64,
+    valid: bool,
+    dirty: bool,
+}
+
+/// Set-associative cache. Addresses are byte addresses; the cache indexes
+/// by `line_bytes` blocks.
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    line_shift: u32,
+    /// Fast path for power-of-two set counts.
+    set_mask: Option<usize>,
+    lines: Vec<Line>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// `size` bytes, `ways`-associative, `line_bytes` blocks.  Power-of-two
+    /// set counts index with a mask; others (e.g. Milan-X's 96 MiB L3)
+    /// fall back to modulo indexing.
+    pub fn new(size: u64, ways: u32, line_bytes: u32) -> Self {
+        assert!(line_bytes.is_power_of_two());
+        let ways = ways as usize;
+        let sets = (size / (ways as u64 * line_bytes as u64)) as usize;
+        assert!(sets > 0, "cache too small: {size} B / {ways} ways / {line_bytes} B lines");
+        Cache {
+            sets,
+            ways,
+            line_shift: line_bytes.trailing_zeros(),
+            set_mask: if sets.is_power_of_two() { Some(sets - 1) } else { None },
+            lines: vec![Line::default(); sets * ways],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    pub fn line_bytes(&self) -> u64 {
+        1 << self.line_shift
+    }
+
+    #[inline]
+    pub fn line_addr(&self, addr: u64) -> u64 {
+        addr >> self.line_shift << self.line_shift
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        let idx = (addr >> self.line_shift) as usize;
+        match self.set_mask {
+            Some(m) => idx & m,
+            None => idx % self.sets,
+        }
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    /// Probe without updating stats or LRU (directory-style lookup).
+    pub fn probe(&self, addr: u64) -> bool {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        self.lines[set * self.ways..(set + 1) * self.ways]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+    }
+
+    /// Demand access: updates LRU + hit/miss counters; sets dirty on write
+    /// hits.  Does NOT allocate — callers decide fill policy.
+    pub fn access(&mut self, addr: u64, write: bool) -> AccessOutcome {
+        self.tick += 1;
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.ways;
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                l.lru = self.tick;
+                if write {
+                    l.dirty = true;
+                }
+                self.hits += 1;
+                return AccessOutcome::Hit;
+            }
+        }
+        self.misses += 1;
+        AccessOutcome::Miss
+    }
+
+    /// Install `addr`, evicting the LRU way if needed. Returns the victim.
+    pub fn fill(&mut self, addr: u64, write: bool) -> Option<Evicted> {
+        self.tick += 1;
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.ways;
+
+        // already present (racing fill): refresh
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                l.lru = self.tick;
+                if write {
+                    l.dirty = true;
+                }
+                return None;
+            }
+        }
+
+        // choose victim: invalid way first, else LRU
+        let mut victim = base;
+        let mut oldest = u64::MAX;
+        for (i, l) in self.lines[base..base + self.ways].iter().enumerate() {
+            if !l.valid {
+                victim = base + i;
+                break;
+            }
+            if l.lru < oldest {
+                oldest = l.lru;
+                victim = base + i;
+            }
+        }
+
+        let v = self.lines[victim];
+        let evicted = if v.valid {
+            if v.dirty {
+                self.writebacks += 1;
+            }
+            Some(Evicted {
+                addr: v.tag << self.line_shift,
+                dirty: v.dirty,
+                sharers: v.sharers,
+            })
+        } else {
+            None
+        };
+
+        self.lines[victim] = Line {
+            tag,
+            lru: self.tick,
+            sharers: 0,
+            valid: true,
+            dirty: write,
+        };
+        evicted
+    }
+
+    /// Invalidate a line (coherence back-invalidation). Returns whether it
+    /// was present and dirty.
+    pub fn invalidate(&mut self, addr: u64) -> (bool, bool) {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.ways;
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                let dirty = l.dirty;
+                l.valid = false;
+                l.dirty = false;
+                l.sharers = 0;
+                return (true, dirty);
+            }
+        }
+        (false, false)
+    }
+
+    /// Directory ops on the sharer mask (used when this cache is the
+    /// inclusive L2).
+    pub fn set_sharer(&mut self, addr: u64, core: usize) {
+        if let Some(l) = self.find_mut(addr) {
+            l.sharers |= 1 << core;
+        }
+    }
+
+    pub fn clear_sharer(&mut self, addr: u64, core: usize) {
+        if let Some(l) = self.find_mut(addr) {
+            l.sharers &= !(1 << core);
+        }
+    }
+
+    pub fn sharers(&self, addr: u64) -> u64 {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        self.lines[set * self.ways..(set + 1) * self.ways]
+            .iter()
+            .find(|l| l.valid && l.tag == tag)
+            .map(|l| l.sharers)
+            .unwrap_or(0)
+    }
+
+    fn find_mut(&mut self, addr: u64) -> Option<&mut Line> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.ways;
+        self.lines[base..base + self.ways]
+            .iter_mut()
+            .find(|l| l.valid && l.tag == tag)
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = Cache::new(1024, 4, 64);
+        assert_eq!(c.access(0x100, false), AccessOutcome::Miss);
+        c.fill(0x100, false);
+        assert_eq!(c.access(0x100, false), AccessOutcome::Hit);
+        // same line, different byte
+        assert_eq!(c.access(0x13F, false), AccessOutcome::Hit);
+        // different line
+        assert_eq!(c.access(0x140, false), AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 1 set x 2 ways x 64B lines
+        let mut c = Cache::new(128, 2, 64);
+        c.fill(0 << 6, false);
+        c.fill(1 << 6, false);
+        c.access(0, false); // touch line 0 -> line 1 becomes LRU
+        let ev = c.fill(2 << 6, false).unwrap();
+        assert_eq!(ev.addr, 1 << 6);
+        assert!(c.probe(0));
+        assert!(!c.probe(1 << 6));
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        let mut c = Cache::new(128, 1, 64);
+        c.fill(0, true);
+        let ev = c.fill(1 << 12, false).unwrap();
+        assert!(ev.dirty);
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut c = Cache::new(1024, 4, 64);
+        c.fill(0x80, true);
+        let (present, dirty) = c.invalidate(0x80);
+        assert!(present && dirty);
+        assert_eq!(c.access(0x80, false), AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn sharer_mask_tracks_cores() {
+        let mut c = Cache::new(1024, 4, 64);
+        c.fill(0x40, false);
+        c.set_sharer(0x40, 3);
+        c.set_sharer(0x40, 5);
+        assert_eq!(c.sharers(0x40), (1 << 3) | (1 << 5));
+        c.clear_sharer(0x40, 3);
+        assert_eq!(c.sharers(0x40), 1 << 5);
+    }
+
+    #[test]
+    fn prop_bigger_cache_never_misses_more() {
+        // LRU inclusion property: for the same trace, a cache with more
+        // ways (same sets via doubled size) has <= misses.
+        check("lru inclusion", 20, |rng: &mut Rng| {
+            let mut small = Cache::new(4096, 2, 64);
+            let mut big = Cache::new(8192, 4, 64);
+            for _ in 0..2000 {
+                let addr = rng.below(1 << 14);
+                if small.access(addr, false) == AccessOutcome::Miss {
+                    small.fill(addr, false);
+                }
+                if big.access(addr, false) == AccessOutcome::Miss {
+                    big.fill(addr, false);
+                }
+            }
+            if big.misses <= small.misses {
+                Ok(())
+            } else {
+                Err(format!("big {} > small {}", big.misses, small.misses))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_miss_rate_in_unit_interval() {
+        check("miss rate bounds", 10, |rng: &mut Rng| {
+            let mut c = Cache::new(2048, 4, 64);
+            for _ in 0..500 {
+                let addr = rng.below(1 << 16);
+                if c.access(addr, rng.below(2) == 1) == AccessOutcome::Miss {
+                    c.fill(addr, false);
+                }
+            }
+            let mr = c.miss_rate();
+            if (0.0..=1.0).contains(&mr) {
+                Ok(())
+            } else {
+                Err(format!("{mr}"))
+            }
+        });
+    }
+
+    #[test]
+    fn non_pow2_sets_work_with_modulo_indexing() {
+        // Milan-X-like: 96 MiB is not a power-of-two set count
+        let mut c = Cache::new(3 * 64 * 4, 4, 64); // 3 sets x 4 ways
+        for i in 0..12u64 {
+            c.fill(i * 64, false);
+        }
+        assert_eq!(c.hits + c.misses, 0); // fill() doesn't count stats
+        assert!(c.probe(0));
+        assert_eq!(c.access(0, false), AccessOutcome::Hit);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_sets() {
+        Cache::new(64, 4, 64);
+    }
+}

@@ -1,0 +1,550 @@
+//! The CMG simulation loop: multicore timing over a shared banked L2 and
+//! DRAM channels, with per-core OoO-window overlap modelling.
+//!
+//! ## Core timing model
+//!
+//! Each thread executes its access stream in program order.  An access
+//! issues at
+//!
+//! `issue = max(local_cycle + gap, dep_completion, rob_head, mshr_free)`
+//!
+//! where `gap` is the phase's compute cost per chunk (priced from the
+//! workload's instruction mix against the machine's port model — the SAME
+//! mix the MCA pipeline analyzes, keeping the two pipelines consistent),
+//! `dep_completion` serializes pointer-chasing loads, `rob_head` models
+//! the reorder-buffer window (an access cannot issue until the access
+//! `window` chunks earlier has completed), and `mshr_free` bounds
+//! outstanding misses.  Miss latency is therefore overlappable up to the
+//! configured memory-level parallelism, which is what makes streaming
+//! workloads bandwidth-bound and chasing workloads latency-bound.
+//!
+//! ## Shared resources
+//!
+//! L2 banks and DRAM channels are bandwidth servers (next-free-cycle per
+//! bank/channel); queueing behind them is how bandwidth saturation and the
+//! Fig. 7 plateaus emerge.  Thread interleaving picks the thread with the
+//! smallest local clock each step (a causally-ordered merge).
+
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+use super::cache::{AccessOutcome, Cache};
+use super::configs::MachineConfig;
+use super::dram::Dram;
+use super::stats::SimStats;
+use crate::mca::analyzers::port_pressure_native;
+use crate::mca::port_model::PortModel;
+use crate::trace::{AccessIter, Spec};
+
+/// Result of one CMG simulation.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub workload: String,
+    pub config: String,
+    pub threads: usize,
+    /// Total simulated cycles (slowest thread).
+    pub cycles: f64,
+    /// Wall-clock seconds at the config's frequency.
+    pub runtime_s: f64,
+    pub stats: SimStats,
+}
+
+impl SimResult {
+    /// Achieved DRAM bandwidth in GB/s.
+    pub fn dram_bw_gbs(&self, cfg: &MachineConfig) -> f64 {
+        if self.cycles == 0.0 {
+            return 0.0;
+        }
+        self.stats.dram_bytes as f64 / (self.cycles / (cfg.freq_ghz * 1e9)) / 1e9
+    }
+}
+
+struct ThreadState {
+    stream: AccessIter,
+    cycle: f64,
+    last_completion: f64,
+    /// Completion times of in-flight chunks (ring for the ROB window).
+    inflight: Vec<f64>,
+    inflight_head: usize,
+    /// Completion times of outstanding misses (MSHR bound).
+    outstanding: Vec<f64>,
+    done: bool,
+    finish: f64,
+}
+
+/// Per-phase derived costs.
+struct PhaseCost {
+    /// Compute cycles per chunk (port-pressure price of the phase mix).
+    gap: f64,
+    /// ROB window in chunks.
+    window: usize,
+}
+
+/// Simulate `spec` on `cfg` with `threads` threads. Single-OS-thread
+/// implementation (the host has one core; determinism is a feature).
+pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
+    let threads = threads.max(1).min(cfg.cores).min(64);
+    let pm = PortModel::get(cfg.port_arch);
+    let blocks = spec.blocks(threads);
+
+    // Per-phase compute gap + ROB window (blocks[0] is the prologue).
+    let phase_costs: Vec<PhaseCost> = blocks
+        .iter()
+        .skip(1)
+        .map(|(bb, _)| {
+            let gap = port_pressure_native(bb, &pm) as f64;
+            let instr = bb.mix.total().max(1.0);
+            let window = ((cfg.rob_entries as f32 / instr).floor() as usize).max(1);
+            PhaseCost { gap, window }
+        })
+        .collect();
+
+    let mut l1s: Vec<Cache> = (0..threads)
+        .map(|_| Cache::new(cfg.l1.size, cfg.l1.ways, cfg.l1.line_bytes))
+        .collect();
+    let mut l2 = Cache::new(cfg.l2.size, cfg.l2.ways, cfg.l2.line_bytes);
+    let mut l2_banks = vec![0f64; cfg.l2.banks as usize];
+    let mut dram = Dram::new(
+        cfg.dram_channels,
+        cfg.dram_bytes_per_cycle(),
+        cfg.dram_latency_cycles,
+        256,
+    );
+    let mut stats = SimStats::default();
+
+    let max_window = phase_costs.iter().map(|p| p.window).max().unwrap_or(1);
+    let mut states: Vec<ThreadState> = (0..threads)
+        .map(|t| ThreadState {
+            stream: spec.stream(t, threads),
+            cycle: 0.0,
+            last_completion: 0.0,
+            inflight: vec![0.0; max_window],
+            inflight_head: 0,
+            outstanding: Vec::with_capacity(cfg.mshrs as usize),
+            done: false,
+            finish: 0.0,
+        })
+        .collect();
+
+    // Earliest-thread-first merge over per-thread local clocks.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..threads)
+        .map(|t| Reverse((0u64, t)))
+        .collect();
+
+    let l1_line = cfg.l1.line_bytes as u64;
+    let l2_line = cfg.l2.line_bytes as u64;
+    let l2_bank_mask = (cfg.l2.banks as u64).next_power_of_two() - 1;
+    let l1_issue = |bytes: u64| bytes as f64 / cfg.l1_bytes_per_cycle;
+
+    'sched: while let Some(Reverse((_, t))) = heap.pop() {
+        // Causally exact, heap-amortized scheduling: keep processing the
+        // popped thread while its local clock stays <= every other
+        // thread's (fixed-size batches break causality across threads — a
+        // thread that runs ahead ratchets the shared bank/channel servers
+        // into the future and serializes everyone else; measured 7x
+        // bandwidth loss at a 32-access batch).  For single-threaded
+        // workloads this degenerates to zero heap traffic.
+        loop {
+            let access = {
+                let st = &mut states[t];
+                match st.stream.next() {
+                    Some(a) => a,
+                    None => {
+                        // this thread's stream is exhausted; others go on
+                        st.done = true;
+                        st.finish = st.finish.max(st.cycle).max(st.last_completion);
+                        continue 'sched;
+                    }
+                }
+            };
+            stats.accesses += 1;
+
+            let phase = access.phase as usize;
+            let (gap, window) = phase_costs
+                .get(phase)
+                .map(|p| (p.gap, p.window))
+                .unwrap_or((1.0, 8));
+
+            // ---- issue-time constraints ----
+            let st = &mut states[t];
+            let mut issue = st.cycle + gap;
+            if access.dep {
+                issue = issue.max(st.last_completion);
+            }
+            // ROB window: the access `window` chunks ago must be complete.
+            let idx = st.inflight_head % window.min(st.inflight.len());
+            issue = issue.max(st.inflight[idx]);
+
+            // ---- walk the lines this chunk covers ----
+            let first = access.addr & !(l1_line - 1);
+            let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+            let mut completion = issue;
+            let mut line = first;
+            while line <= last {
+                stats.line_touches += 1;
+                let this_done;
+                match l1s[t].access(line, access.write) {
+                    AccessOutcome::Hit => {
+                        stats.l1_hits += 1;
+                        this_done = issue + cfg.l1.latency;
+                    }
+                    AccessOutcome::Miss => {
+                        stats.l1_misses += 1;
+                        // MSHR bound
+                        if st.outstanding.len() >= cfg.mshrs as usize {
+                            let mut earliest_i = 0;
+                            for (i, &c) in st.outstanding.iter().enumerate() {
+                                if c < st.outstanding[earliest_i] {
+                                    earliest_i = i;
+                                }
+                            }
+                            let earliest = st.outstanding.swap_remove(earliest_i);
+                            issue = issue.max(earliest);
+                        }
+                        let fill_done = fetch_line(
+                            line,
+                            access.write,
+                            issue,
+                            t,
+                            &mut l1s,
+                            &mut l2,
+                            &mut l2_banks,
+                            l2_bank_mask,
+                            l2_line,
+                            &mut dram,
+                            cfg,
+                            &mut stats,
+                        );
+                        st.outstanding.push(fill_done);
+                        this_done = fill_done;
+
+                        // adjacent-line prefetch into L1 (L2-hit only)
+                        if cfg.adjacent_prefetch {
+                            let next = line + l1_line;
+                            if !l1s[t].probe(next) && l2.probe(next) {
+                                stats.prefetches += 1;
+                                stats.l2_bytes += l1_line;
+                                let bank =
+                                    ((next / l2_line) & l2_bank_mask) as usize % l2_banks.len();
+                                let occ = l1_line as f64 / cfg.l2.bank_bytes_per_cycle;
+                                let start = issue.max(l2_banks[bank]);
+                                l2_banks[bank] = start + occ;
+                                install_l1(next, false, t, &mut l1s, &mut l2, &mut stats);
+                            }
+                        }
+                    }
+                }
+                completion = completion.max(this_done);
+                line += l1_line;
+            }
+
+            // retire bookkeeping
+            let w = window.min(st.inflight.len());
+            let idx = st.inflight_head % w;
+            st.inflight[idx] = completion;
+            st.inflight_head = st.inflight_head.wrapping_add(1);
+            st.last_completion = completion;
+
+            // local clock: issue occupancy (L1 port) or compute gap
+            st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+            st.finish = st.finish.max(completion);
+
+            // yield only when another thread's clock is now earlier
+            let clock = st.cycle as u64;
+            if let Some(&Reverse((next_min, _))) = heap.peek() {
+                if clock > next_min {
+                    heap.push(Reverse((clock, t)));
+                    continue 'sched;
+                }
+            }
+        }
+    }
+
+    let cycles = states
+        .iter()
+        .map(|s| s.finish)
+        .fold(0f64, f64::max);
+
+    stats.l2_hits = l2.hits;
+    stats.l2_misses = l2.misses;
+    stats.l2_writebacks = l2.writebacks;
+
+    SimResult {
+        workload: spec.name.clone(),
+        config: cfg.name.clone(),
+        threads,
+        cycles,
+        runtime_s: cycles / (cfg.freq_ghz * 1e9),
+        stats,
+    }
+}
+
+/// Fetch one L1 line through L2 (and DRAM on L2 miss); returns completion
+/// time. Handles inclusive back-invalidation and MESI-lite stores.
+#[allow(clippy::too_many_arguments)]
+fn fetch_line(
+    line: u64,
+    write: bool,
+    issue: f64,
+    t: usize,
+    l1s: &mut [Cache],
+    l2: &mut Cache,
+    l2_banks: &mut [f64],
+    l2_bank_mask: u64,
+    l2_line: u64,
+    dram: &mut Dram,
+    cfg: &MachineConfig,
+    stats: &mut SimStats,
+) -> f64 {
+    // L2 bank occupancy (bandwidth server)
+    let bank = ((line / l2_line) & l2_bank_mask) as usize % l2_banks.len();
+    let occ = cfg.l1.line_bytes as f64 / cfg.l2.bank_bytes_per_cycle;
+    let start = issue.max(l2_banks[bank]);
+    l2_banks[bank] = start + occ;
+    stats.l2_bytes += cfg.l1.line_bytes as u64;
+
+    let l2_addr = line & !(l2_line - 1);
+    let mut done = start + occ + cfg.l2.latency;
+
+    match l2.access(l2_addr, write) {
+        AccessOutcome::Hit => {
+            // MESI-lite: a store to a line shared by other L1s invalidates
+            // their copies (directory = L2 sharer mask).
+            if write {
+                let sharers = l2.sharers(l2_addr) & !(1u64 << t);
+                if sharers != 0 {
+                    for (o, l1o) in l1s.iter_mut().enumerate() {
+                        if o != t && sharers & (1 << o) != 0 {
+                            let (present, _) = l1o.invalidate(line);
+                            if present {
+                                stats.coherence_invalidations += 1;
+                            }
+                        }
+                    }
+                    done += cfg.l2.latency; // invalidation round-trip
+                }
+            }
+        }
+        AccessOutcome::Miss => {
+            // DRAM fetch of the L2 line
+            let dram_done = dram.transfer(l2_addr, l2_line, start + occ);
+            stats.dram_bytes += l2_line;
+            done = dram_done + cfg.l2.latency;
+            // install in L2; inclusive => back-invalidate victim's sharers
+            if let Some(ev) = l2.fill(l2_addr, write) {
+                if ev.sharers != 0 {
+                    for (o, l1o) in l1s.iter_mut().enumerate() {
+                        if ev.sharers & (1 << o) != 0 {
+                            let mut a = ev.addr;
+                            while a < ev.addr + l2_line {
+                                let (present, _) = l1o.invalidate(a);
+                                if present {
+                                    stats.coherence_invalidations += 1;
+                                }
+                                a += cfg.l1.line_bytes as u64;
+                            }
+                        }
+                    }
+                }
+                if ev.dirty {
+                    // writeback to DRAM consumes channel bandwidth
+                    dram.transfer(ev.addr, l2_line, start + occ);
+                    stats.dram_bytes += l2_line;
+                }
+            }
+        }
+    }
+
+    install_l1(line, write, t, l1s, l2, stats);
+    done
+}
+
+/// Install a line in thread `t`'s L1 and maintain the L2 sharer mask.
+fn install_l1(line: u64, write: bool, t: usize, l1s: &mut [Cache], l2: &mut Cache, stats: &mut SimStats) {
+    if let Some(ev) = l1s[t].fill(line, write) {
+        l2.clear_sharer(ev.addr, t);
+        if ev.dirty {
+            // L1 writeback to L2: mark the L2 copy dirty
+            l2.access(ev.addr, true);
+            // don't count this directory access in hit/miss stats
+            if l2.hits > 0 {
+                l2.hits -= 1;
+            }
+            stats.l2_bytes += l1s[t].line_bytes();
+        }
+    }
+    l2.set_sharer(line, t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+    use crate::isa::{InstrClass, InstrMix};
+    use crate::trace::patterns::Pattern;
+    use crate::trace::{BoundClass, Phase, Suite};
+    use crate::util::units::MIB;
+
+    fn stream_spec(bytes: u64, passes: u32, mix: InstrMix, ilp: f32) -> Spec {
+        Spec {
+            name: "s".into(),
+            suite: Suite::Top500,
+            class: BoundClass::Bandwidth,
+            threads: 4,
+            max_threads: usize::MAX,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "stream",
+                pattern: Pattern::Stream {
+                    bytes,
+                    passes,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix,
+                ilp,
+            }],
+        }
+    }
+
+    fn light_mix() -> InstrMix {
+        InstrMix::new()
+            .with(InstrClass::VecFma, 2.0)
+            .with(InstrClass::Load, 2.0)
+            .with(InstrClass::Store, 1.0)
+            .with(InstrClass::AddrGen, 1.0)
+    }
+
+    #[test]
+    fn cache_resident_faster_than_dram_resident() {
+        let cfg = configs::a64fx_s();
+        // 1 MiB fits the 8 MiB L2; 64 MiB does not.
+        let fits = simulate(&stream_spec(MIB, 4, light_mix(), 8.0), &cfg, 4);
+        let spills = simulate(&stream_spec(64 * MIB, 4, light_mix(), 8.0), &cfg, 4);
+        let t_fit = fits.runtime_s / (MIB * 4 * 3) as f64;
+        let t_spill = spills.runtime_s / (64 * MIB * 4 * 3) as f64;
+        assert!(
+            t_spill > 1.5 * t_fit,
+            "per-byte time: spill {t_spill:.3e} vs fit {t_fit:.3e}"
+        );
+    }
+
+    #[test]
+    fn larger_l2_removes_misses() {
+        let small = configs::a64fx_s();
+        let big = configs::larc_c();
+        // 63 MiB working set: misses on 8 MiB L2, fits in 256 MiB. With 8
+        // passes, the compulsory (cold) misses are 1/8 of traffic; the
+        // adjacent-line prefetcher halves demand accesses, so the floor on
+        // the L2 miss rate is ~0.25 even when everything fits.
+        let spec = stream_spec(21 * MIB, 8, light_mix(), 8.0);
+        let a = simulate(&spec, &small, 12);
+        let b = simulate(&spec, &big, 12);
+        assert!(a.stats.l2_miss_rate() > 0.5, "{}", a.stats.l2_miss_rate());
+        assert!(b.stats.l2_miss_rate() < 0.3, "{}", b.stats.l2_miss_rate());
+        assert!(b.runtime_s < a.runtime_s);
+    }
+
+    #[test]
+    fn compute_bound_insensitive_to_cache() {
+        // heavy per-chunk compute: gap dominates memory entirely
+        let heavy = InstrMix::new().with(InstrClass::VecFma, 400.0);
+        let spec = stream_spec(32 * MIB, 2, heavy, 2.0);
+        let a = simulate(&spec, &configs::a64fx_s(), 12);
+        let b = simulate(&spec, &configs::larc_c(), 12);
+        let ratio = a.runtime_s / b.runtime_s;
+        assert!((0.9..=1.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn dram_bandwidth_capped_at_config() {
+        let cfg = configs::a64fx_s();
+        let spec = stream_spec(128 * MIB, 2, light_mix(), 8.0);
+        let r = simulate(&spec, &cfg, 12);
+        let bw = r.dram_bw_gbs(&cfg);
+        assert!(bw <= cfg.dram_bw_gbs * 1.05, "bw {bw} exceeds config");
+        assert!(bw > cfg.dram_bw_gbs * 0.3, "bw {bw} suspiciously low");
+    }
+
+    #[test]
+    fn more_threads_scale_cache_resident_work() {
+        let cfg = configs::larc_c();
+        let spec = stream_spec(16 * MIB, 8, light_mix(), 8.0);
+        let t1 = simulate(&spec, &cfg, 4);
+        let t4 = simulate(&spec, &cfg, 16);
+        let speedup = t1.runtime_s / t4.runtime_s;
+        assert!(speedup > 2.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn pointer_chase_is_latency_bound() {
+        let chase = Spec {
+            name: "chase".into(),
+            suite: Suite::Ecp,
+            class: BoundClass::Latency,
+            threads: 1,
+            max_threads: 1,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "chase",
+                pattern: Pattern::RandomLookup {
+                    table_bytes: 64 * MIB,
+                    lookups: 20_000,
+                    chase: true,
+                    seed: 5,
+                },
+                mix: InstrMix::new().with(InstrClass::Load, 1.0),
+                ilp: 1.0,
+            }],
+        };
+        let cfg = configs::a64fx_s();
+        let r = simulate(&chase, &cfg, 1);
+        let cycles_per_access = r.cycles / 20_000.0;
+        // each chase should pay roughly the DRAM latency
+        assert!(
+            cycles_per_access > cfg.dram_latency_cycles * 0.5,
+            "cycles/access {cycles_per_access}"
+        );
+    }
+
+    #[test]
+    fn coherence_invalidates_shared_stores() {
+        // two threads ping-pong writes to the same small buffer
+        let spec = Spec {
+            name: "pingpong".into(),
+            suite: Suite::SpecOmp,
+            class: BoundClass::Mixed,
+            threads: 2,
+            max_threads: 2,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "shared",
+                pattern: Pattern::Stream {
+                    bytes: 8 * 1024,
+                    passes: 50,
+                    streams: 1,
+                    write_fraction: 1.0,
+                },
+                mix: light_mix(),
+                ilp: 4.0,
+            }],
+        };
+        // NOTE: Stream partitions across threads, so overlap only at the
+        // boundary; use 1 thread vs 2 to check the counter exists & fires
+        // at least when threads share lines.
+        let r = simulate(&spec, &configs::a64fx_s(), 2);
+        // partitioned streams shouldn't invalidate much, but the counter
+        // must be consistent (no underflow / absurd values)
+        assert!(r.stats.coherence_invalidations < r.stats.line_touches);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let spec = stream_spec(4 * MIB, 2, light_mix(), 8.0);
+        let cfg = configs::a64fx_s();
+        let a = simulate(&spec, &cfg, 4);
+        let b = simulate(&spec, &cfg, 4);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.stats.dram_bytes, b.stats.dram_bytes);
+    }
+}

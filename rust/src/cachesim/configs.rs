@@ -1,0 +1,310 @@
+//! Simulated machine configurations (paper Tables 1 and 2, plus the
+//! Fig. 8 sensitivity variants).
+//!
+//! All four gem5 configurations from Table 2 — A64FX_S, A64FX^32, LARC_C,
+//! LARC^A — plus the pilot-study machines (Milan / Milan-X CCD slices,
+//! Fig. 1) and the MCA-validation baseline (Broadwell E5-2650v4, Figs. 5/6).
+
+use crate::mca::port_model::PortArch;
+use crate::util::units::{GB, KIB, MIB};
+
+/// Parameters of one cache level.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheParams {
+    pub size: u64,
+    pub ways: u32,
+    pub line_bytes: u32,
+    /// Load-to-use latency in cycles.
+    pub latency: f64,
+    /// Number of banks (L2): bandwidth = banks * bytes_per_cycle_per_bank.
+    pub banks: u32,
+    /// Bytes one bank serves per cycle.
+    pub bank_bytes_per_cycle: f64,
+}
+
+impl CacheParams {
+    /// Aggregate bandwidth in bytes/cycle.
+    pub fn bw_bytes_per_cycle(&self) -> f64 {
+        self.banks as f64 * self.bank_bytes_per_cycle
+    }
+
+    /// Aggregate bandwidth in GB/s at `freq_ghz`.
+    pub fn bw_gbs(&self, freq_ghz: f64) -> f64 {
+        self.bw_bytes_per_cycle() * freq_ghz * 1e9 / GB
+    }
+}
+
+/// One simulated CMG / socket-slice.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    pub name: String,
+    pub cores: usize,
+    pub freq_ghz: f64,
+    pub l1: CacheParams,
+    pub l2: CacheParams,
+    /// DRAM: channels and aggregate bandwidth.
+    pub dram_channels: usize,
+    pub dram_bw_gbs: f64,
+    pub dram_latency_cycles: f64,
+    /// Out-of-order window (ROB entries).
+    pub rob_entries: u32,
+    /// Max outstanding L1 misses per core (MSHRs).
+    pub mshrs: u32,
+    /// L1 bytes movable per cycle per core (issue occupancy floor).
+    pub l1_bytes_per_cycle: f64,
+    /// Adjacent-line (next-line) prefetcher on L1 misses.
+    pub adjacent_prefetch: bool,
+    /// Port/latency tables used for compute-gap pricing.
+    pub port_arch: PortArch,
+}
+
+impl MachineConfig {
+    /// DRAM aggregate bytes per core-cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bw_gbs * GB / (self.freq_ghz * 1e9)
+    }
+}
+
+/// A64FX_S — the baseline simulated A64FX CMG (Table 2): 12 cores, 8 MiB
+/// 16-way L2 at 37 cycles, ~800 GB/s L2, 256 GB/s HBM2.
+pub fn a64fx_s() -> MachineConfig {
+    MachineConfig {
+        name: "a64fx_s".into(),
+        cores: 12,
+        freq_ghz: 2.2,
+        l1: CacheParams {
+            size: 64 * KIB,
+            ways: 4,
+            line_bytes: 256,
+            latency: 8.0,
+            banks: 1,
+            bank_bytes_per_cycle: 128.0,
+        },
+        l2: CacheParams {
+            size: 8 * MIB,
+            ways: 16,
+            line_bytes: 256,
+            latency: 37.0,
+            banks: 4, // 2 bankbits
+            bank_bytes_per_cycle: 91.0, // ~364 B/cyc total = ~800 GB/s @2.2GHz
+        },
+        dram_channels: 4,
+        dram_bw_gbs: 256.0,
+        dram_latency_cycles: 180.0,
+        rob_entries: 128,
+        mshrs: 12,
+        l1_bytes_per_cycle: 128.0,
+        adjacent_prefetch: true,
+        port_arch: PortArch::A64fxLike,
+    }
+}
+
+/// A64FX^32 — baseline cache, 32 cores (isolates the core-count effect).
+pub fn a64fx_32() -> MachineConfig {
+    let mut c = a64fx_s();
+    c.name = "a64fx_32".into();
+    c.cores = 32;
+    c
+}
+
+/// LARC_C — conservative LARC CMG: 32 cores, 256 MiB L2 @ ~800 GB/s.
+pub fn larc_c() -> MachineConfig {
+    let mut c = a64fx_s();
+    c.name = "larc_c".into();
+    c.cores = 32;
+    c.l2.size = 256 * MIB;
+    c
+}
+
+/// LARC^A — aggressive LARC CMG: 32 cores, 512 MiB L2 @ ~1.6 TB/s.
+pub fn larc_a() -> MachineConfig {
+    let mut c = a64fx_s();
+    c.name = "larc_a".into();
+    c.cores = 32;
+    c.l2.size = 512 * MIB;
+    c.l2.banks = 8; // 3 bankbits: doubles aggregate L2 bandwidth
+    c
+}
+
+/// Broadwell-like E5-2650v4 slice (the paper's MCA baseline): 12 cores,
+/// 30 MiB shared LLC, DDR4.  (The private 256 KiB L2 is folded into the
+/// LLC latency — documented fidelity trade.)
+pub fn broadwell() -> MachineConfig {
+    MachineConfig {
+        name: "broadwell".into(),
+        cores: 12,
+        freq_ghz: 2.2,
+        l1: CacheParams {
+            size: 32 * KIB,
+            ways: 8,
+            line_bytes: 64,
+            latency: 4.0,
+            banks: 1,
+            bank_bytes_per_cycle: 64.0,
+        },
+        l2: CacheParams {
+            size: 32 * MIB, // 30 MiB rounded to pow2 sets
+            ways: 16,
+            line_bytes: 64,
+            latency: 34.0,
+            banks: 8,
+            bank_bytes_per_cycle: 16.0,
+        },
+        dram_channels: 4,
+        dram_bw_gbs: 76.8,
+        dram_latency_cycles: 200.0,
+        rob_entries: 192,
+        mshrs: 10,
+        l1_bytes_per_cycle: 64.0,
+        adjacent_prefetch: true,
+        port_arch: PortArch::BroadwellLike,
+    }
+}
+
+/// Milan CCD slice (Fig. 1 pilot): 8 Zen3 cores, 32 MiB L3 slice.
+pub fn milan() -> MachineConfig {
+    MachineConfig {
+        name: "milan".into(),
+        cores: 8,
+        freq_ghz: 2.45,
+        l1: CacheParams {
+            size: 32 * KIB,
+            ways: 8,
+            line_bytes: 64,
+            latency: 4.0,
+            banks: 1,
+            bank_bytes_per_cycle: 64.0,
+        },
+        l2: CacheParams {
+            size: 32 * MIB,
+            ways: 16,
+            line_bytes: 64,
+            latency: 46.0,
+            banks: 8,
+            bank_bytes_per_cycle: 16.0,
+        },
+        dram_channels: 2, // 16 channels / 8 CCDs
+        dram_bw_gbs: 51.2, // 409.6 GB/s / 8 CCDs
+        dram_latency_cycles: 220.0,
+        rob_entries: 256,
+        mshrs: 12,
+        l1_bytes_per_cycle: 64.0,
+        adjacent_prefetch: true,
+        port_arch: PortArch::Zen3Like,
+    }
+}
+
+/// Milan-X CCD slice (Fig. 1 pilot): same, with 3x stacked L3 (96 MiB)
+/// and the V-cache's extra ~4 cycles of L3 latency.
+pub fn milan_x() -> MachineConfig {
+    let mut c = milan();
+    c.name = "milan_x".into();
+    c.freq_ghz = 2.2; // 7773X clocks lower at iso-TDP
+    c.l2.size = 96 * MIB;
+    c.l2.latency = 50.0;
+    c
+}
+
+/// Fig. 8 sensitivity variants: one parameter varied against LARC_C.
+pub fn larc_c_with_latency(latency: f64) -> MachineConfig {
+    let mut c = larc_c();
+    c.name = format!("larc_c_lat{latency}");
+    c.l2.latency = latency;
+    c
+}
+
+pub fn larc_c_with_l2_size(mib: u64) -> MachineConfig {
+    let mut c = larc_c();
+    c.name = format!("larc_c_{mib}mib");
+    c.l2.size = mib * MIB;
+    c
+}
+
+pub fn larc_c_with_bankbits(bankbits: u32) -> MachineConfig {
+    let mut c = larc_c();
+    c.name = format!("larc_c_bb{bankbits}");
+    c.l2.banks = 1 << bankbits;
+    c
+}
+
+/// All Table-2 configurations in presentation order.
+pub fn table2_configs() -> Vec<MachineConfig> {
+    vec![a64fx_s(), a64fx_32(), larc_c(), larc_a()]
+}
+
+/// Look up a config by name (CLI).
+pub fn by_name(name: &str) -> Option<MachineConfig> {
+    match name {
+        "a64fx_s" => Some(a64fx_s()),
+        "a64fx_32" => Some(a64fx_32()),
+        "larc_c" => Some(larc_c()),
+        "larc_a" => Some(larc_a()),
+        "broadwell" => Some(broadwell()),
+        "milan" => Some(milan()),
+        "milan_x" => Some(milan_x()),
+        _ => None,
+    }
+}
+
+pub const CONFIG_NAMES: [&str; 7] = [
+    "a64fx_s", "a64fx_32", "larc_c", "larc_a", "broadwell", "milan", "milan_x",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_l2_sizes_match_paper() {
+        assert_eq!(a64fx_s().l2.size, 8 * MIB);
+        assert_eq!(a64fx_32().l2.size, 8 * MIB);
+        assert_eq!(larc_c().l2.size, 256 * MIB);
+        assert_eq!(larc_a().l2.size, 512 * MIB);
+    }
+
+    #[test]
+    fn table2_core_counts_match_paper() {
+        assert_eq!(a64fx_s().cores, 12);
+        assert_eq!(a64fx_32().cores, 32);
+        assert_eq!(larc_c().cores, 32);
+        assert_eq!(larc_a().cores, 32);
+    }
+
+    #[test]
+    fn l2_bandwidths_match_table2() {
+        // ~800 GB/s for A64FX_S / LARC_C, ~1.6 TB/s for LARC_A
+        let bw_c = larc_c().l2.bw_gbs(2.2);
+        let bw_a = larc_a().l2.bw_gbs(2.2);
+        assert!((750.0..=850.0).contains(&bw_c), "{bw_c}");
+        assert!((1500.0..=1700.0).contains(&bw_a), "{bw_a}");
+    }
+
+    #[test]
+    fn hbm_bandwidth_is_256_gbs() {
+        let c = a64fx_s();
+        assert_eq!(c.dram_bw_gbs, 256.0);
+        let bpc = c.dram_bytes_per_cycle();
+        assert!((bpc - 256e9 / 2.2e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn milan_x_has_3x_l3() {
+        assert_eq!(milan_x().l2.size, 3 * milan().l2.size);
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for name in CONFIG_NAMES {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gib_scale_l2_still_pow2_sets() {
+        // 1 GiB fig8 variant must construct a valid cache
+        let c = larc_c_with_l2_size(1024);
+        assert_eq!(c.l2.size, crate::util::units::GIB);
+        crate::cachesim::cache::Cache::new(c.l2.size, c.l2.ways, c.l2.line_bytes);
+    }
+}

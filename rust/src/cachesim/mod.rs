@@ -1,0 +1,23 @@
+//! Cycle-approximate multicore cache-hierarchy simulator — the gem5
+//! substitute (paper Section 3.2).
+//!
+//! Models exactly the parameters the paper's gem5 study varies (Table 2,
+//! Fig. 8): per-core L1D with adjacent-line prefetch, a shared, banked,
+//! inclusive L2 with configurable size/latency/bank count, an HBM2/DDR
+//! channel model, MESI-lite coherence, and an out-of-order-window core
+//! timing model (ROB-limited memory-level parallelism, MSHR-limited
+//! outstanding misses).
+//!
+//! Fidelity envelope: the simulator is *timing-approximate* (it reproduces
+//! capacity/bandwidth/latency effects on miss traffic and overlap), not
+//! microarchitecturally exact — see DESIGN.md §1 for why this preserves
+//! the paper's conclusions.
+
+pub mod cache;
+pub mod cmg;
+pub mod configs;
+pub mod dram;
+pub mod stats;
+
+pub use cmg::{simulate, SimResult};
+pub use configs::{CacheParams, MachineConfig};

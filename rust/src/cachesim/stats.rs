@@ -1,0 +1,62 @@
+//! Aggregated counters of one simulation run.
+
+/// Counters collected by [`crate::cachesim::simulate`].
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub accesses: u64,
+    pub line_touches: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub l2_writebacks: u64,
+    pub dram_bytes: u64,
+    pub l2_bytes: u64,
+    pub coherence_invalidations: u64,
+    pub prefetches: u64,
+}
+
+impl SimStats {
+    pub fn l1_miss_rate(&self) -> f64 {
+        rate(self.l1_misses, self.l1_hits + self.l1_misses)
+    }
+
+    /// L2 miss rate over L2 *accesses* (i.e. L1 misses) — this is what the
+    /// paper's Table 3 reports.
+    pub fn l2_miss_rate(&self) -> f64 {
+        rate(self.l2_misses, self.l2_hits + self.l2_misses)
+    }
+}
+
+fn rate(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_handle_zero() {
+        let s = SimStats::default();
+        assert_eq!(s.l1_miss_rate(), 0.0);
+        assert_eq!(s.l2_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn rates_divide_correctly() {
+        let s = SimStats {
+            l1_hits: 75,
+            l1_misses: 25,
+            l2_hits: 20,
+            l2_misses: 5,
+            ..Default::default()
+        };
+        assert_eq!(s.l1_miss_rate(), 0.25);
+        assert_eq!(s.l2_miss_rate(), 0.2);
+    }
+}

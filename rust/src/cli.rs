@@ -1,0 +1,139 @@
+//! Hand-rolled CLI (the vendored crate set has no clap — DESIGN.md §5).
+//!
+//! ```text
+//! larc list [workloads|configs|experiments]
+//! larc run --workload <name> [--config <name>] [--threads N] [--scale s]
+//! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
+//! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|table2|table3|headline|model>
+//! larc campaign [--scale small|paper|tiny] [--pjrt]   # all experiments
+//! larc model                                           # section-2 tables
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse args (excluding argv[0]).  `--flag value` and `--flag=value`
+    /// are both accepted; bare `--flag` stores "true".
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut command = String::new();
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(stripped.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if command.is_empty() {
+                command = a.clone();
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if command.is_empty() {
+            return Err("no command given (try `larc list`)".into());
+        }
+        Ok(Cli {
+            command,
+            positional,
+            flags,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn scale(&self) -> Result<crate::trace::Scale, String> {
+        match self.flag_or("scale", "small").as_str() {
+            "tiny" => Ok(crate::trace::Scale::Tiny),
+            "small" => Ok(crate::trace::Scale::Small),
+            "paper" => Ok(crate::trace::Scale::Paper),
+            other => Err(format!("--scale must be tiny|small|paper, got {other:?}")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+larc — LARC (3D-stacked cache) reproduction toolkit
+
+USAGE:
+  larc list [workloads|configs|experiments]
+  larc run --workload <name> [--config <cfg>] [--threads N] [--scale tiny|small|paper]
+  larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
+  larc figure <id> [--scale ...] [--pjrt] [--verbose] [--csv]
+  larc campaign [--scale ...] [--pjrt] [--csv]
+  larc model
+
+EXPERIMENT IDS:
+  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 table2 table3 headline model
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Cli {
+        Cli::parse(&words.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = parse(&["run", "--workload", "minife", "--threads", "8"]);
+        assert_eq!(c.command, "run");
+        assert_eq!(c.flag("workload"), Some("minife"));
+        assert_eq!(c.usize_flag("threads", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn equals_form_and_bare_flags() {
+        let c = parse(&["figure", "fig9", "--scale=paper", "--verbose"]);
+        assert_eq!(c.positional, vec!["fig9"]);
+        assert_eq!(c.flag("scale"), Some("paper"));
+        assert!(c.has("verbose"));
+    }
+
+    #[test]
+    fn scale_parsing() {
+        assert_eq!(parse(&["x", "--scale", "paper"]).scale().unwrap(), crate::trace::Scale::Paper);
+        assert!(parse(&["x", "--scale", "huge"]).scale().is_err());
+        assert_eq!(parse(&["x"]).scale().unwrap(), crate::trace::Scale::Small);
+    }
+
+    #[test]
+    fn empty_args_error() {
+        assert!(Cli::parse(&[]).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Dynamic batching of MCA port-pressure requests onto the fixed-shape
+//! PJRT executables.
+//!
+//! PJRT executables are shape-specialized, so `aot.py` exports the
+//! `mca_block_cost` entry at batch sizes {128, 512, 2048, 8192}.  The
+//! batcher accumulates blocks from many concurrent estimation jobs, routes
+//! each flush to the smallest executable that fits (padding with zero-count
+//! rows, which provably cost zero — tested in `pjrt.rs`), splits oversize
+//! batches, and scatters results back to requesters in order.
+//!
+//! This is the serving-system part of the L3 coordinator: request
+//! coalescing amortizes PJRT dispatch overhead over thousands of blocks.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::isa::{BasicBlock, NUM_CLASSES, NUM_PORTS};
+use crate::mca::port_model::PortModel;
+use crate::runtime::Runtime;
+
+/// Batching MCA evaluator bound to one port model.
+pub struct McaBatcher {
+    runtime: Arc<Runtime>,
+    ports_flat: Vec<f32>,
+    lat: Vec<f32>,
+    /// Pending rows: (counts row, ilp).
+    pending: Vec<([f32; NUM_CLASSES], f32)>,
+    /// Stats: PJRT executions and total rows evaluated.
+    pub executions: u64,
+    pub rows_evaluated: u64,
+    pub rows_padded: u64,
+}
+
+impl McaBatcher {
+    pub fn new(runtime: Arc<Runtime>, pm: &PortModel) -> Self {
+        McaBatcher {
+            runtime,
+            ports_flat: pm.ports_flat(),
+            lat: pm.lat_vec(),
+            pending: Vec::new(),
+            executions: 0,
+            rows_evaluated: 0,
+            rows_padded: 0,
+        }
+    }
+
+    /// Queue blocks for evaluation; returns the index of the first block.
+    pub fn enqueue(&mut self, blocks: &[BasicBlock]) -> usize {
+        let start = self.pending.len();
+        for b in blocks {
+            self.pending.push((b.mix.counts, b.ilp));
+        }
+        start
+    }
+
+    /// Flush all pending rows through the PJRT artifacts; returns CPIter
+    /// per pending row, in enqueue order, and clears the queue.
+    pub fn flush(&mut self) -> Result<Vec<f32>> {
+        let rows = std::mem::take(&mut self.pending);
+        let mut out = Vec::with_capacity(rows.len());
+        let mut cursor = 0usize;
+        while cursor < rows.len() {
+            let remaining = rows.len() - cursor;
+            let entry = self
+                .runtime
+                .manifest()
+                .batch_for("mca_block_cost", remaining)
+                .ok_or_else(|| anyhow::anyhow!("no mca_block_cost artifact"))?;
+            let batch = entry.batch.unwrap_or(128);
+            let take = remaining.min(batch);
+            let chunk = &rows[cursor..cursor + take];
+
+            let mut counts = vec![0f32; batch * NUM_CLASSES];
+            let mut ilp = vec![1f32; batch];
+            for (i, (c, v)) in chunk.iter().enumerate() {
+                counts[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].copy_from_slice(c);
+                ilp[i] = *v;
+            }
+
+            let name = entry.name.clone();
+            let model = self.runtime.model(&name)?;
+            let result = model.run_f32(&[
+                (&counts, &[batch as i64, NUM_CLASSES as i64]),
+                (&self.ports_flat, &[NUM_CLASSES as i64, NUM_PORTS as i64]),
+                (&self.lat, &[NUM_CLASSES as i64]),
+                (&ilp, &[batch as i64]),
+            ])?;
+            out.extend_from_slice(&result[0][..take]);
+
+            self.executions += 1;
+            self.rows_evaluated += take as u64;
+            self.rows_padded += (batch - take) as u64;
+            cursor += take;
+        }
+        Ok(out)
+    }
+
+    /// Convenience: evaluate one slice of blocks immediately.
+    pub fn eval(&mut self, blocks: &[BasicBlock]) -> Result<Vec<f32>> {
+        assert!(self.pending.is_empty(), "eval with non-empty queue");
+        self.enqueue(blocks);
+        self.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{InstrClass, InstrMix};
+    use crate::mca::analyzers::port_pressure_native;
+    use crate::mca::port_model::{PortArch, PortModel};
+    use crate::runtime::Manifest;
+    use crate::util::prng::Rng;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Arc::new(Runtime::new().unwrap()))
+    }
+
+    fn random_blocks(n: usize, seed: u64) -> Vec<BasicBlock> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut mix = InstrMix::new();
+                for c in crate::isa::ALL_CLASSES {
+                    if c != InstrClass::Nop {
+                        mix.add(c, rng.below(12) as f32);
+                    }
+                }
+                BasicBlock::new(i as u32, "r", mix, 1.0 + rng.f64() as f32 * 7.0, true)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_matches_native_for_odd_sizes() {
+        let Some(rt) = runtime() else { return };
+        let pm = PortModel::get(PortArch::A64fxLike);
+        let mut b = McaBatcher::new(rt, &pm);
+        // 700 rows: routes to the 2048 artifact with padding
+        let blocks = random_blocks(700, 9);
+        let got = b.eval(&blocks).unwrap();
+        assert_eq!(got.len(), 700);
+        for (i, blk) in blocks.iter().enumerate() {
+            let want = port_pressure_native(blk, &pm);
+            assert!(
+                (got[i] - want).abs() < 1e-3 * want.max(1.0),
+                "row {i}: {} vs {}",
+                got[i],
+                want
+            );
+        }
+        assert_eq!(b.executions, 1);
+        assert_eq!(b.rows_padded, 2048 - 700);
+    }
+
+    #[test]
+    fn oversize_batches_split() {
+        let Some(rt) = runtime() else { return };
+        let pm = PortModel::get(PortArch::BroadwellLike);
+        let mut b = McaBatcher::new(rt, &pm);
+        let blocks = random_blocks(9000, 3);
+        let got = b.eval(&blocks).unwrap();
+        assert_eq!(got.len(), 9000);
+        assert!(b.executions >= 2, "executions {}", b.executions);
+    }
+
+    #[test]
+    fn multi_enqueue_preserves_order() {
+        let Some(rt) = runtime() else { return };
+        let pm = PortModel::get(PortArch::A64fxLike);
+        let mut b = McaBatcher::new(rt, &pm);
+        let b1 = random_blocks(10, 1);
+        let b2 = random_blocks(10, 2);
+        let i1 = b.enqueue(&b1);
+        let i2 = b.enqueue(&b2);
+        assert_eq!((i1, i2), (0, 10));
+        let all = b.flush().unwrap();
+        let direct1 = port_pressure_native(&b1[3], &pm);
+        assert!((all[3] - direct1).abs() < 1e-3 * direct1.max(1.0));
+        let direct2 = port_pressure_native(&b2[7], &pm);
+        assert!((all[17] - direct2).abs() < 1e-3 * direct2.max(1.0));
+    }
+}

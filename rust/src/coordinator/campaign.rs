@@ -1,0 +1,197 @@
+//! Campaign scheduler: run many (workload × machine) simulation jobs on a
+//! worker pool with deterministic result ordering.
+//!
+//! The vendored crate set has no tokio, so the pool is std::thread scoped
+//! threads over a lock-free-enough work queue (an atomic cursor into a
+//! frozen job vector).  Results are collected per-index so the output
+//! order is independent of scheduling — campaigns must be reproducible.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cachesim::{self, MachineConfig, SimResult};
+use crate::mca::{self, McaEstimate, PortModel};
+use crate::trace::Spec;
+
+/// One schedulable unit of the campaign.
+#[derive(Clone)]
+pub enum Job {
+    /// Cycle-level cachesim run (the gem5-substitute pipeline).
+    CacheSim {
+        spec: Spec,
+        config: MachineConfig,
+        threads: usize,
+    },
+    /// MCA upper-bound estimate (Eq. 1 pipeline).
+    Mca {
+        spec: Spec,
+        arch: crate::mca::PortArch,
+        freq_ghz: f64,
+        seed: u64,
+    },
+}
+
+impl Job {
+    pub fn label(&self) -> String {
+        match self {
+            Job::CacheSim { spec, config, threads } => {
+                format!("sim:{}@{}x{}", spec.name, config.name, threads)
+            }
+            Job::Mca { spec, arch, .. } => format!("mca:{}@{arch:?}", spec.name),
+        }
+    }
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    Sim(SimResult),
+    Mca(McaEstimate),
+}
+
+impl JobOutput {
+    pub fn runtime_s(&self) -> f64 {
+        match self {
+            JobOutput::Sim(r) => r.runtime_s,
+            JobOutput::Mca(e) => e.runtime_s,
+        }
+    }
+
+    pub fn as_sim(&self) -> Option<&SimResult> {
+        match self {
+            JobOutput::Sim(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_mca(&self) -> Option<&McaEstimate> {
+        match self {
+            JobOutput::Mca(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// A frozen set of jobs plus executor configuration.
+pub struct Campaign {
+    pub jobs: Vec<Job>,
+    pub workers: usize,
+    pub verbose: bool,
+}
+
+impl Campaign {
+    pub fn new(jobs: Vec<Job>) -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Campaign {
+            jobs,
+            workers,
+            verbose: false,
+        }
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn verbose(mut self, v: bool) -> Self {
+        self.verbose = v;
+        self
+    }
+
+    /// Execute all jobs; results are positionally aligned with `self.jobs`.
+    pub fn run(&self) -> Vec<JobOutput> {
+        let n = self.jobs.len();
+        let cursor = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n.max(1)) {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = run_job(&self.jobs[i]);
+                    if self.verbose {
+                        eprintln!(
+                            "  [{}/{}] {} -> {:.4}s",
+                            i + 1,
+                            n,
+                            self.jobs[i].label(),
+                            out.runtime_s()
+                        );
+                    }
+                    *results[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job not executed"))
+            .collect()
+    }
+}
+
+fn run_job(job: &Job) -> JobOutput {
+    match job {
+        Job::CacheSim { spec, config, threads } => {
+            JobOutput::Sim(cachesim::simulate(spec, config, *threads))
+        }
+        Job::Mca { spec, arch, freq_ghz, seed } => {
+            let pm = PortModel::get(*arch);
+            JobOutput::Mca(mca::estimate_runtime(spec, &pm, *freq_ghz, *seed))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+    use crate::mca::PortArch;
+    use crate::trace::workloads;
+    use crate::trace::Scale;
+
+    fn tiny_jobs() -> Vec<Job> {
+        let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        vec![
+            Job::CacheSim {
+                spec: spec.clone(),
+                config: configs::a64fx_s(),
+                threads: 4,
+            },
+            Job::Mca {
+                spec,
+                arch: PortArch::A64fxLike,
+                freq_ghz: 2.2,
+                seed: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn results_align_with_jobs() {
+        let c = Campaign::new(tiny_jobs()).with_workers(2);
+        let out = c.run();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].as_sim().is_some());
+        assert!(out[1].as_mca().is_some());
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let a = Campaign::new(tiny_jobs()).with_workers(1).run();
+        let b = Campaign::new(tiny_jobs()).with_workers(4).run();
+        assert_eq!(a[0].runtime_s(), b[0].runtime_s());
+        assert_eq!(a[1].runtime_s(), b[1].runtime_s());
+    }
+
+    #[test]
+    fn empty_campaign_is_fine() {
+        assert!(Campaign::new(vec![]).run().is_empty());
+    }
+}

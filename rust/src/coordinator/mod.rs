@@ -1,0 +1,18 @@
+//! L3 coordinator: the simulation-campaign scheduler.
+//!
+//! The paper's experimental campaign is "run hundreds of (workload,
+//! machine) simulations, batch the MCA block-pricing through the analyzer
+//! backend, and aggregate per-figure results".  This module owns that:
+//!
+//! * [`campaign`] — a worker-pool job scheduler over simulation jobs with
+//!   deterministic result collection;
+//! * [`batcher`] — dynamic batching of MCA port-pressure requests into the
+//!   fixed-shape PJRT executables (pad-to-batch, route-to-size);
+//! * [`report`] — CSV/markdown emission for the experiment drivers.
+
+pub mod batcher;
+pub mod campaign;
+pub mod report;
+
+pub use batcher::McaBatcher;
+pub use campaign::{Campaign, Job, JobOutput};

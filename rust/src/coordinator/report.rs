@@ -1,0 +1,80 @@
+//! Experiment result emission: CSV files under `results/` plus markdown
+//! tables for the CLI and EXPERIMENTS.md.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Destination + rendering for one experiment's output.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    csv: Csv,
+    table: Table,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            csv: Csv::new(header),
+            table: Table::new(header),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.csv.row(cells);
+        self.table.row(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.csv.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.csv.is_empty()
+    }
+
+    /// Render title + markdown table.
+    pub fn render(&self) -> String {
+        format!("## {} — {}\n\n{}", self.id, self.title, self.table.render())
+    }
+
+    /// Write `results/<id>.csv`; returns the path.
+    pub fn write_csv(&self, results_dir: &Path) -> std::io::Result<PathBuf> {
+        let path = results_dir.join(format!("{}.csv", self.id));
+        self.csv.write_to(&path)?;
+        Ok(path)
+    }
+}
+
+/// Default results directory (`$LARC_RESULTS` or `<repo>/results`).
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("LARC_RESULTS") {
+        return PathBuf::from(d);
+    }
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("results");
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_writes() {
+        let mut r = Report::new("figX", "test fig", &["wl", "speedup"]);
+        r.row(&["minife".into(), "3.40".into()]);
+        let s = r.render();
+        assert!(s.contains("## figX"));
+        assert!(s.contains("minife"));
+
+        let dir = std::env::temp_dir().join("larc_report_test");
+        let p = r.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.starts_with("wl,speedup\n"));
+    }
+}

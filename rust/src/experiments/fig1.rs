@@ -1,0 +1,68 @@
+//! Fig. 1 — the pilot study: MiniFE on AMD Milan vs. Milan-X across grid
+//! sizes 100³ → 400³.
+//!
+//! Paper shape: the relative improvement of Milan-X (3× L3) over Milan
+//! peaks (≈3.4x) at the input size whose working set exceeds Milan's L3
+//! but still fits Milan-X's (160³ in the paper), and tapers toward 1 for
+//! much smaller (both fit) and much larger (neither fits) inputs.
+
+use super::ExpOptions;
+use crate::cachesim::configs;
+use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads::ecp;
+use crate::util::csv;
+
+/// Grid sizes swept (the paper: 100..400 step 20; we step 30 by default
+/// to keep the campaign tractable — pass Paper scale for the full sweep).
+pub fn sizes(opts: &ExpOptions) -> Vec<u32> {
+    match opts.scale {
+        crate::trace::Scale::Paper => (100..=400).step_by(20).collect(),
+        crate::trace::Scale::Small => (100..=400).step_by(30).collect(),
+        crate::trace::Scale::Tiny => vec![60, 100, 140, 180],
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Report {
+    let milan = configs::milan();
+    let milan_x = configs::milan_x();
+
+    let ns = sizes(opts);
+    let mut jobs = Vec::new();
+    for &n in &ns {
+        // per-rank share: the paper ran 16 MPI ranks across 16 CCDs
+        let spec = ecp::minife_rank_share(n, 16);
+        let threads = spec.effective_threads(milan.cores);
+        jobs.push(Job::CacheSim {
+            spec: spec.clone(),
+            config: milan.clone(),
+            threads,
+        });
+        jobs.push(Job::CacheSim {
+            spec,
+            config: milan_x.clone(),
+            threads,
+        });
+    }
+    let out = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+
+    let mut report = Report::new(
+        "fig1",
+        "MiniFE: Milan-X improvement over Milan (pilot study)",
+        &["grid", "milan_s", "milanx_s", "improvement", "fom_ratio"],
+    );
+    for (i, &n) in ns.iter().enumerate() {
+        let a = out[2 * i].as_sim().unwrap();
+        let b = out[2 * i + 1].as_sim().unwrap();
+        let imp = a.runtime_s / b.runtime_s;
+        // figure of merit ~ work/runtime; work identical => FoM ratio = imp
+        report.row(&[
+            format!("{n}^3"),
+            csv::f(a.runtime_s),
+            csv::f(b.runtime_s),
+            csv::f(imp),
+            csv::f(imp),
+        ]);
+    }
+    report
+}

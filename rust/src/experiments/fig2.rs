@@ -1,0 +1,86 @@
+//! Fig. 2 — last-level-cache capacity trend of representative server CPUs
+//! vs. the two LARC points (total GiB and per-core MiB).
+//!
+//! This is a data figure: the CPU survey is static (release year, total
+//! LLC, cores), and the LARC points come from the §2 analytical model.
+
+use crate::coordinator::report::Report;
+use crate::model;
+use crate::util::csv;
+
+/// (name, year, total LLC MiB, cores) — representative server CPUs per
+/// generation (paper Fig. 2's sample).
+pub fn cpu_survey() -> Vec<(&'static str, u32, f64, u32)> {
+    vec![
+        ("UltraSPARC III", 2001, 8.0, 1),
+        ("POWER5", 2004, 36.0, 2),
+        ("Opteron 8360SE", 2008, 2.0, 4),
+        ("Xeon X7560", 2010, 24.0, 8),
+        ("SPARC64 X", 2013, 24.0, 16),
+        ("Xeon E5-2699v3", 2014, 45.0, 18),
+        ("POWER8", 2014, 96.0, 12),
+        ("Xeon E5-2699v4", 2016, 55.0, 22),
+        ("Epyc 7601", 2017, 64.0, 32),
+        ("POWER9", 2018, 120.0, 24),
+        ("A64FX", 2019, 32.0, 48),
+        ("Xeon 8280", 2019, 38.5, 28),
+        ("Epyc 7763 Milan", 2021, 256.0, 64),
+        ("Epyc 7773X Milan-X", 2022, 768.0, 64),
+    ]
+}
+
+pub fn run() -> Report {
+    let mut report = Report::new(
+        "fig2",
+        "LLC capacity trend vs LARC (total GiB / per-core MiB)",
+        &["cpu", "year", "llc_total_gib", "llc_per_core_mib"],
+    );
+    for (name, year, mib, cores) in cpu_survey() {
+        report.row(&[
+            name.to_string(),
+            year.to_string(),
+            csv::f(mib / 1024.0),
+            csv::f(mib / cores as f64),
+        ]);
+    }
+    // LARC points from the analytical model (§2.4/§2.5)
+    let cache = model::stacked_cache();
+    let cmg = model::larc_cmg();
+    let larc_total_mib = (cache.capacity_bytes() * cmg.cmgs as u64) as f64 / (1 << 20) as f64;
+    let larc_cores = cmg.total_cores;
+    // conservative variant: half the stacked capacity (LARC_C analog)
+    report.row(&[
+        "LARC-C (2028)".to_string(),
+        "2028".to_string(),
+        csv::f(larc_total_mib / 2.0 / 1024.0),
+        csv::f(larc_total_mib / 2.0 / larc_cores as f64),
+    ]);
+    report.row(&[
+        "LARC-A (2028)".to_string(),
+        "2028".to_string(),
+        csv::f(larc_total_mib / 1024.0),
+        csv::f(larc_total_mib / larc_cores as f64),
+    ]);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn larc_is_order_of_magnitude_above_trend() {
+        let r = run();
+        assert!(r.len() >= 15);
+        // rendered table contains both LARC rows
+        let text = r.render();
+        assert!(text.contains("LARC-A"));
+        assert!(text.contains("LARC-C"));
+    }
+
+    #[test]
+    fn survey_is_chronological_enough() {
+        let s = cpu_survey();
+        assert!(s.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 6 — MCA upper-bound speedups with unrestricted locality, for the
+//! whole suite, against the dual-socket Broadwell baseline.
+//!
+//! Paper shape anchors: PolyBench GM ≈ 2.9x (ludcmp peak 8.4x; 2mm/3mm/
+//! doitgen/trisolv ≈ 1x); TAPP GM ≈ 2.6x with kernel 20 (SpMV) at 20x and
+//! two kernels (5, 9) showing an apparent ~0.5x slowdown; NPB GM ≈ 3x with
+//! CG-OMP at 13.1x; HPL ≈ 1x (compute-bound); XSBench 7.3x, miniAMR 7.4x;
+//! SPEC overall the slimmest at GM ≈ 1.9x (outliers lbm, ilbdc, swim).
+//!
+//! When `opts.use_pjrt` is set, the port-pressure analyzer runs through
+//! the Pallas/PJRT artifact via the coordinator's batcher — the production
+//! configuration; the native path is the fallback.
+
+use std::collections::BTreeMap;
+
+use super::ExpOptions;
+use crate::cachesim::{self, configs};
+use crate::coordinator::report::Report;
+use crate::coordinator::McaBatcher;
+use crate::mca::{self, PortModel};
+use crate::runtime::Runtime;
+use crate::trace::workloads;
+use crate::util::{csv, stats};
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let cfg = configs::broadwell();
+    let pm = PortModel::get(cfg.port_arch);
+
+    let mut batcher = if opts.use_pjrt {
+        match Runtime::new() {
+            Ok(rt) => Some(McaBatcher::new(std::sync::Arc::new(rt), &pm)),
+            Err(e) => {
+                eprintln!("fig6: PJRT unavailable ({e}); falling back to native");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let mut report = Report::new(
+        "fig6",
+        "MCA upper-bound speedup (all data in L1D) vs Broadwell baseline",
+        &["suite", "workload", "measured_s", "mca_s", "speedup"],
+    );
+
+    let mut per_suite: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    for spec in workloads::all(opts.scale) {
+        let threads = spec.effective_threads(cfg.cores);
+        let measured = cachesim::simulate(&spec, &cfg, threads).runtime_s;
+        let est = match batcher.as_mut() {
+            Some(b) => {
+                let mut eval = |blocks: &[crate::isa::BasicBlock]| -> Vec<f32> {
+                    b.eval(blocks).expect("pjrt eval")
+                };
+                mca::estimate::estimate_runtime_with(&spec, &pm, cfg.freq_ghz, 7, &mut eval)
+                    .runtime_s
+            }
+            None => mca::estimate_runtime(&spec, &pm, cfg.freq_ghz, 7).runtime_s,
+        };
+        let speedup = measured / est;
+        per_suite.entry(spec.suite.label()).or_default().push(speedup);
+        report.row(&[
+            spec.suite.label().to_string(),
+            spec.name.clone(),
+            csv::f(measured),
+            csv::f(est),
+            csv::f(speedup),
+        ]);
+        if opts.verbose {
+            eprintln!("  fig6 {}: {speedup:.2}x", spec.name);
+        }
+    }
+
+    // per-suite geometric means (the numbers the paper quotes)
+    for (suite, vals) in &per_suite {
+        report.row(&[
+            suite.to_string(),
+            format!("GM({suite})"),
+            String::new(),
+            String::new(),
+            csv::f(stats::geomean(vals)),
+        ]);
+    }
+    if let Some(b) = &batcher {
+        eprintln!(
+            "fig6: PJRT batcher: {} executions, {} rows ({} padded)",
+            b.executions, b.rows_evaluated, b.rows_padded
+        );
+    }
+    Ok(report)
+}

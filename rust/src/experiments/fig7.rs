@@ -1,0 +1,158 @@
+//! Fig. 7 — STREAM Triad validation of the simulated L2.
+//!
+//! 7a: per-core 128 KiB vectors (working set scales with threads, always
+//! L2-resident) — achieved L2 bandwidth vs. thread count.  Paper: LARC_C
+//! peaks at ~792 GB/s, LARC^A at ~1450 GB/s; A64FX_S matches the real
+//! A64FX (~800 GB/s at 12 cores).
+//!
+//! 7b: fixed thread count, total vector size swept from KiB to 1 GiB —
+//! bandwidth cliffs at each capacity boundary (L1 → L2 → HBM), with the
+//! LARC configs holding L2 bandwidth out to 256/512 MiB.
+
+use super::ExpOptions;
+use crate::cachesim::{self, configs, MachineConfig};
+use crate::coordinator::report::Report;
+use crate::trace::patterns::Pattern;
+use crate::trace::workloads::mixes;
+use crate::trace::{BoundClass, Phase, Spec, Suite};
+use crate::util::csv;
+use crate::util::units::{GIB, KIB};
+
+/// Triad with per-thread-private vectors (7a).
+fn triad_private(bytes_per_thread_per_vec: u64, passes: u32) -> Spec {
+    let (mix, ilp) = mixes::stream();
+    Spec {
+        name: format!("triad-priv-{}k", bytes_per_thread_per_vec / KIB),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 32,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "triad",
+            pattern: Pattern::PrivateStream {
+                bytes_per_thread: bytes_per_thread_per_vec,
+                passes,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            mix,
+            ilp,
+        }],
+    }
+}
+
+/// Triad over shared vectors of `total_bytes` per vector (7b).
+fn triad_shared(total_bytes_per_vec: u64, passes: u32) -> Spec {
+    let (mix, ilp) = mixes::stream();
+    Spec {
+        name: format!("triad-{}k", total_bytes_per_vec / KIB),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 32,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "triad",
+            pattern: Pattern::Stream {
+                bytes: total_bytes_per_vec,
+                passes,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            mix,
+            ilp,
+        }],
+    }
+}
+
+fn achieved_bw_gbs(spec: &Spec, cfg: &MachineConfig, threads: usize) -> f64 {
+    let r = cachesim::simulate(spec, cfg, threads);
+    // triad moves 3 vectors x passes worth of bytes
+    let bytes: u64 = spec.phases[0].pattern.total_chunks()
+        * crate::trace::CHUNK
+        * if matches!(spec.phases[0].pattern, Pattern::PrivateStream { .. }) {
+            threads as u64
+        } else {
+            1
+        };
+    bytes as f64 / r.runtime_s / 1e9
+}
+
+/// 7a: thread-count sweep with 128 KiB per-core vectors.
+pub fn run_7a(opts: &ExpOptions) -> Report {
+    let mut report = Report::new(
+        "fig7a",
+        "STREAM Triad, 128 KiB vectors per core: achieved bandwidth (GB/s)",
+        &["config", "threads", "bw_gbs"],
+    );
+    let passes = match opts.scale {
+        crate::trace::Scale::Tiny => 4,
+        _ => 12,
+    };
+    for cfg in [configs::a64fx_s(), configs::larc_c(), configs::larc_a()] {
+        let max_t = cfg.cores;
+        let mut t = 1usize;
+        while t <= max_t {
+            let spec = triad_private(128 * KIB, passes);
+            let bw = achieved_bw_gbs(&spec, &cfg, t);
+            report.row(&[cfg.name.clone(), t.to_string(), csv::f(bw)]);
+            t = if t < 4 { t + 1 } else { t + 4 };
+        }
+    }
+    report
+}
+
+/// 7b: vector-size sweep at full thread count.
+pub fn run_7b(opts: &ExpOptions) -> Report {
+    let mut report = Report::new(
+        "fig7b",
+        "STREAM Triad, size sweep: bandwidth cliffs at capacity boundaries",
+        &["config", "total_kib_per_vec", "bw_gbs"],
+    );
+    // sweep 64 KiB .. 1 GiB per vector (log2 steps)
+    let max_bytes = match opts.scale {
+        crate::trace::Scale::Tiny => 16 * 1024 * KIB,
+        crate::trace::Scale::Small => GIB / 4,
+        crate::trace::Scale::Paper => GIB / 3,
+    };
+    for cfg in [configs::a64fx_s(), configs::larc_c(), configs::larc_a()] {
+        let threads = cfg.cores;
+        let mut bytes = 64 * KIB;
+        while bytes <= max_bytes {
+            let passes = if bytes <= 16 * 1024 * KIB { 6 } else { 2 };
+            let spec = triad_shared(bytes, passes);
+            let bw = achieved_bw_gbs(&spec, &cfg, threads);
+            report.row(&[cfg.name.clone(), (bytes / KIB).to_string(), csv::f(bw)]);
+            bytes *= 4;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_resident_triad_hits_l2_bandwidth_class() {
+        // LARC_A should sustain roughly 2x the L2 bandwidth of LARC_C
+        let spec = triad_private(128 * KIB, 8);
+        let bw_c = achieved_bw_gbs(&spec, &configs::larc_c(), 32);
+        let bw_a = achieved_bw_gbs(&spec, &configs::larc_a(), 32);
+        let ratio = bw_a / bw_c;
+        assert!((1.4..=2.6).contains(&ratio), "ratio {ratio} (c={bw_c}, a={bw_a})");
+    }
+
+    #[test]
+    fn capacity_cliff_between_l2_and_hbm() {
+        // 1 MiB/vec fits LARC_C's 256 MiB; 128 MiB/vec (384 MiB total) does not
+        let cfg = configs::a64fx_s();
+        let small = achieved_bw_gbs(&triad_shared(1024 * KIB, 6), &cfg, 12);
+        let large = achieved_bw_gbs(&triad_shared(16 * 1024 * KIB, 2), &cfg, 12);
+        assert!(
+            small > 1.5 * large,
+            "no cliff: small {small} GB/s vs large {large} GB/s"
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Fig. 8 — cache-parameter sensitivity on the RIKEN TAPP kernels:
+//! relative runtime vs. the LARC_C baseline while sweeping one of L2
+//! latency {22, 30, 37, 45, 52}, L2 capacity {64..1024 MiB}, and L2
+//! bank bits {0..4}.
+//!
+//! Paper shape: latency has minimal impact (HPC codes are rarely
+//! latency-bound at L2), capacity and bandwidth matter a lot for the
+//! memory-bound kernels, and the small shrunk-down kernels are unaffected.
+
+use super::ExpOptions;
+use crate::cachesim::{configs, MachineConfig};
+use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads::tapp;
+use crate::util::csv;
+
+pub const LATENCIES: [f64; 5] = [22.0, 30.0, 37.0, 45.0, 52.0];
+pub const SIZES_MIB: [u64; 5] = [64, 128, 256, 512, 1024];
+pub const BANKBITS: [u32; 5] = [0, 1, 2, 3, 4];
+
+fn variants() -> Vec<(&'static str, String, MachineConfig)> {
+    let mut v = Vec::new();
+    for lat in LATENCIES {
+        v.push(("latency", format!("{lat}"), configs::larc_c_with_latency(lat)));
+    }
+    for mib in SIZES_MIB {
+        v.push(("capacity", format!("{mib}MiB"), configs::larc_c_with_l2_size(mib)));
+    }
+    for bb in BANKBITS {
+        v.push(("bankbits", format!("{bb}"), configs::larc_c_with_bankbits(bb)));
+    }
+    v
+}
+
+/// Kernels swept (a representative subset on Small scale; all 20 on Paper).
+fn kernels(opts: &ExpOptions) -> Vec<crate::trace::Spec> {
+    let all = tapp::workloads(opts.scale);
+    match opts.scale {
+        crate::trace::Scale::Paper => all,
+        _ => all
+            .into_iter()
+            .filter(|s| {
+                ["tapp07", "tapp09", "tapp12", "tapp17", "tapp18", "tapp20"]
+                    .iter()
+                    .any(|p| s.name.starts_with(p))
+            })
+            .collect(),
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Report {
+    let baseline = configs::larc_c();
+    let specs = kernels(opts);
+    let vars = variants();
+
+    let mut jobs = Vec::new();
+    for spec in &specs {
+        let threads = spec.effective_threads(baseline.cores);
+        jobs.push(Job::CacheSim {
+            spec: spec.clone(),
+            config: baseline.clone(),
+            threads,
+        });
+        for (_, _, cfg) in &vars {
+            jobs.push(Job::CacheSim {
+                spec: spec.clone(),
+                config: cfg.clone(),
+                threads,
+            });
+        }
+    }
+    let out = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+
+    let mut report = Report::new(
+        "fig8",
+        "TAPP sensitivity: relative runtime vs LARC_C (latency / capacity / bankbits sweeps)",
+        &["kernel", "sweep", "value", "rel_runtime"],
+    );
+    let stride = 1 + vars.len();
+    for (i, spec) in specs.iter().enumerate() {
+        let base_rt = out[i * stride].as_sim().unwrap().runtime_s;
+        for (j, (sweep, value, _)) in vars.iter().enumerate() {
+            let rt = out[i * stride + 1 + j].as_sim().unwrap().runtime_s;
+            report.row(&[
+                spec.name.clone(),
+                sweep.to_string(),
+                value.clone(),
+                csv::f(rt / base_rt),
+            ]);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim;
+    use crate::trace::Scale;
+
+    #[test]
+    fn latency_sweep_has_less_impact_than_capacity() {
+        // paper: "The latency change has minimal impact ... L2 cache
+        // capacity and bandwidth can have a significant impact"
+        let specs = tapp::workloads(Scale::Tiny);
+        let k17 = specs.iter().find(|s| s.name.starts_with("tapp17")).unwrap();
+        let t = k17.effective_threads(32);
+        let base = cachesim::simulate(k17, &configs::larc_c(), t).runtime_s;
+        let worst_lat =
+            cachesim::simulate(k17, &configs::larc_c_with_latency(52.0), t).runtime_s;
+        let tiny_cache =
+            cachesim::simulate(k17, &configs::larc_c_with_l2_size(64), t).runtime_s;
+        let lat_delta = (worst_lat / base - 1.0).abs();
+        let cap_delta = (tiny_cache / base - 1.0).abs();
+        assert!(
+            lat_delta <= cap_delta + 0.05,
+            "latency delta {lat_delta} vs capacity delta {cap_delta}"
+        );
+    }
+}

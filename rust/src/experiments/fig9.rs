@@ -1,0 +1,65 @@
+//! Fig. 9 — the main gem5-substitute result: per-workload speedups of
+//! A64FX^32, LARC_C, and LARC^A over the baseline A64FX_S CMG, with the
+//! Fig. 6 MCA upper bound as reference.
+//!
+//! Paper shape anchors: average speedups ≈1.9x (LARC_C) and ≈2.1x
+//! (LARC^A), peaks ≈4.4x / ≈4.6x; MG-OMP's staircase (1.3x cores → 2x
+//! cache → 4.6x cache+bw); contention kernels (TAPP 8, 9, 12–15, FT-OMP)
+//! slow down on A64FX^32 but recover on LARC; compute-bound workloads
+//! (EP-OMP, CoMD) gain only from cores.
+
+use super::{matrix, ExpOptions};
+use crate::cachesim::configs;
+use crate::coordinator::report::Report;
+use crate::mca::{self, PortModel};
+use crate::trace::workloads;
+use crate::util::{csv, stats};
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let rows = matrix::run(opts);
+    let mut report = Report::new(
+        "fig9",
+        "Simulated speedups vs A64FX_S (A64FX^32 / LARC_C / LARC^A) + MCA reference",
+        &["suite", "workload", "a64fx32", "larc_c", "larc_a", "mca_ref"],
+    );
+
+    // MCA reference (vs the A64FX_S baseline runtime, as plotted in Fig. 9)
+    let pm = PortModel::get(configs::a64fx_s().port_arch);
+    let freq = configs::a64fx_s().freq_ghz;
+
+    let mut sp_c = Vec::new();
+    let mut sp_a = Vec::new();
+    for row in &rows {
+        let spec = workloads::by_name(&row.name, opts.scale).expect("matrix workload");
+        let mca_rt = mca::estimate_runtime(&spec, &pm, freq, 7).runtime_s;
+        let mca_ref = row.runtime_s[0] / mca_rt;
+        report.row(&[
+            row.suite.to_string(),
+            row.name.clone(),
+            csv::f(row.speedup[0]),
+            csv::f(row.speedup[1]),
+            csv::f(row.speedup[2]),
+            csv::f(mca_ref),
+        ]);
+        sp_c.push(row.speedup[1]);
+        sp_a.push(row.speedup[2]);
+    }
+
+    report.row(&[
+        "-".into(),
+        "MEAN".into(),
+        String::new(),
+        csv::f(stats::mean(&sp_c)),
+        csv::f(stats::mean(&sp_a)),
+        String::new(),
+    ]);
+    report.row(&[
+        "-".into(),
+        "MAX".into(),
+        String::new(),
+        csv::f(stats::max(&sp_c)),
+        csv::f(stats::max(&sp_a)),
+        String::new(),
+    ]);
+    Ok(report)
+}

@@ -1,0 +1,75 @@
+//! §5.4 summary + §6.1 headline projection.
+//!
+//! Paper anchors: 31 of 52 simulated applications see >= 2x on LARC vs the
+//! baseline CMG; for ~24 of those the gain is attributable to the cache;
+//! ideal full-chip scaling of the cache-responsive subset spans 4.91x (xz)
+//! to 18.57x (MG-OMP) with GM = 9.56x.
+
+use super::{matrix, ExpOptions};
+use crate::coordinator::report::Report;
+use crate::model::projection;
+use crate::util::csv;
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
+    let rows = matrix::run(opts);
+
+    // ---- §5.4 summary ----
+    let mut summary = Report::new(
+        "summary",
+        "Result summary (paper section 5.4)",
+        &["metric", "value", "paper"],
+    );
+    let total = rows.len();
+    let ge2x = rows.iter().filter(|r| r.best_larc_speedup() >= 2.0).count();
+    let cache_attr = rows
+        .iter()
+        .filter(|r| {
+            r.best_larc_speedup() >= 2.0
+                && projection::cache_responsive(r.speedup[0], r.speedup[1], r.speedup[2])
+        })
+        .count();
+    summary.row(&[
+        "apps with >=2x on LARC".into(),
+        format!("{ge2x} / {total}"),
+        "31 / 52".into(),
+    ]);
+    summary.row(&[
+        ">=2x apps attributable to cache".into(),
+        format!("{cache_attr} / {ge2x}"),
+        "24 / 31".into(),
+    ]);
+
+    // ---- §6.1 projection ----
+    let proj_rows: Vec<(String, f64, f64, f64)> = rows
+        .iter()
+        .map(|r| (r.name.clone(), r.speedup[0], r.speedup[1], r.speedup[2]))
+        .collect();
+    let p = projection::project(&proj_rows);
+
+    let mut headline = Report::new(
+        "headline",
+        "Full-chip ideal-scaling projection (paper section 6.1)",
+        &["metric", "value", "paper"],
+    );
+    headline.row(&[
+        "cache-responsive workloads".into(),
+        format!("{} / {}", p.n_responsive, p.n_total),
+        "-".into(),
+    ]);
+    headline.row(&["GM chip-level speedup".into(), csv::f(p.gm), "9.56".into()]);
+    headline.row(&["min".into(), csv::f(p.min), "4.91 (xz)".into()]);
+    headline.row(&["max".into(), csv::f(p.max), "18.57 (mg-omp)".into()]);
+
+    let mut detail = Report::new(
+        "headline_detail",
+        "Chip-level speedups of cache-responsive workloads",
+        &["workload", "chip_speedup"],
+    );
+    let mut sorted = p.chip_speedups.clone();
+    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, v) in sorted {
+        detail.row(&[name, csv::f(v)]);
+    }
+
+    Ok(vec![summary, headline, detail])
+}

@@ -1,0 +1,101 @@
+//! The shared gem5-substitute result matrix: every gem5-feasible workload
+//! simulated on the four Table-2 configurations.
+//!
+//! Fig. 9, Table 3, the §5.4 summary, and the §6.1 headline all consume
+//! this matrix, so it is computed once per invocation and shared.
+
+use crate::cachesim::configs;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads;
+use super::ExpOptions;
+
+/// Per-workload row of the four-config matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixRow {
+    pub name: String,
+    pub suite: &'static str,
+    /// Runtimes (s): [a64fx_s, a64fx_32, larc_c, larc_a].
+    pub runtime_s: [f64; 4],
+    /// L2 miss rates: same order.
+    pub l2_miss: [f64; 4],
+    /// Speedups vs a64fx_s: [a64fx_32, larc_c, larc_a].
+    pub speedup: [f64; 3],
+}
+
+impl MatrixRow {
+    pub fn best_larc_speedup(&self) -> f64 {
+        self.speedup[1].max(self.speedup[2])
+    }
+}
+
+/// Run the full matrix (cached per options by the caller if needed).
+pub fn run(opts: &ExpOptions) -> Vec<MatrixRow> {
+    let specs = workloads::gem5_set(opts.scale);
+    let cfgs = configs::table2_configs();
+
+    let mut jobs = Vec::with_capacity(specs.len() * cfgs.len());
+    for spec in &specs {
+        for cfg in &cfgs {
+            let threads = spec.effective_threads(cfg.cores);
+            jobs.push(Job::CacheSim {
+                spec: spec.clone(),
+                config: cfg.clone(),
+                threads,
+            });
+        }
+    }
+
+    let outputs = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+
+    let mut rows = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let base = i * cfgs.len();
+        let mut runtime = [0f64; 4];
+        let mut miss = [0f64; 4];
+        for j in 0..4 {
+            let sim = outputs[base + j].as_sim().expect("sim output");
+            runtime[j] = sim.runtime_s;
+            miss[j] = sim.stats.l2_miss_rate();
+        }
+        let speedup = [
+            runtime[0] / runtime[1],
+            runtime[0] / runtime[2],
+            runtime[0] / runtime[3],
+        ];
+        rows.push(MatrixRow {
+            name: spec.name.clone(),
+            suite: spec.suite.label(),
+            runtime_s: runtime,
+            l2_miss: miss,
+            speedup,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Scale;
+
+    #[test]
+    fn matrix_has_sane_shape_on_tiny_subset() {
+        // full matrix on Tiny is still heavy; smoke-test two workloads
+        let mut opts = ExpOptions::default();
+        opts.scale = Scale::Tiny;
+        let specs: Vec<_> = workloads::gem5_set(Scale::Tiny)
+            .into_iter()
+            .filter(|s| s.name == "ep-omp" || s.name == "xsbench")
+            .collect();
+        assert_eq!(specs.len(), 2);
+        let cfgs = configs::table2_configs();
+        for spec in &specs {
+            for cfg in &cfgs {
+                let t = spec.effective_threads(cfg.cores);
+                let r = crate::cachesim::simulate(spec, cfg, t);
+                assert!(r.runtime_s > 0.0, "{} on {}", spec.name, cfg.name);
+            }
+        }
+        let _ = opts;
+    }
+}

@@ -1,0 +1,77 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §4 for
+//! the experiment index).
+//!
+//! Every driver builds its workload set, runs the campaign through the
+//! coordinator, and emits a [`Report`] (markdown to the CLI, CSV to
+//! `results/`).  Absolute cycle counts are simulator-specific; the drivers
+//! exist to reproduce the paper's *shapes*: who wins, by what factor, and
+//! where the capacity crossovers fall.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod headline;
+pub mod matrix;
+pub mod table2;
+pub mod table3;
+pub mod table_model;
+
+use crate::coordinator::report::Report;
+use crate::trace::Scale;
+
+/// Options shared by all experiment drivers.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpOptions {
+    /// Workload input scale (Paper reproduces the paper's footprints;
+    /// Small is the tractable default on this host).
+    pub scale: Scale,
+    /// Worker threads for the campaign pool.
+    pub workers: usize,
+    /// Route the MCA port-pressure analyzer through the PJRT artifacts
+    /// (requires `make artifacts`); falls back to the native path if off.
+    pub use_pjrt: bool,
+    /// Progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: Scale::Small,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            use_pjrt: false,
+            verbose: false,
+        }
+    }
+}
+
+/// Experiment registry for the CLI.
+pub const EXPERIMENTS: [&str; 12] = [
+    "fig1", "fig2", "fig5", "fig6", "fig7a", "fig7b", "fig8", "fig9", "table2", "table3",
+    "headline", "model",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
+    match id {
+        "fig1" => Ok(vec![fig1::run(opts)]),
+        "fig2" => Ok(vec![fig2::run()]),
+        "fig5" => Ok(vec![fig5::run(opts)?]),
+        "fig6" => Ok(vec![fig6::run(opts)?]),
+        "fig7a" => Ok(vec![fig7::run_7a(opts)]),
+        "fig7b" => Ok(vec![fig7::run_7b(opts)]),
+        "fig8" => Ok(vec![fig8::run(opts)]),
+        "fig9" => Ok(vec![fig9::run(opts)?]),
+        "table2" => Ok(vec![table2::run()]),
+        "table3" => Ok(vec![table3::run(opts)?]),
+        "headline" => headline::run(opts),
+        "model" => Ok(table_model::run()),
+        other => anyhow::bail!("unknown experiment '{other}' (known: {EXPERIMENTS:?})"),
+    }
+}

@@ -1,0 +1,51 @@
+//! Table 3 — L2 cache-miss rates of representative proxies across the
+//! four configurations.
+//!
+//! Paper anchors: XSBench 32.1 / 36.4 / 0.1 / 0.1 %; MG-OMP 59.8 / 70.9 /
+//! 29.4 / 0.4 %; FT-OMP 11.6 / 48.2 / 6.4 / 3.8 %; NICAM ImplicitVer
+//! (TAPP 12) 36.6 / 47.6 / 10.5 / 9.1 %; MatVecSplit (TAPP 17) stays high
+//! until LARC^A; FrontFlow (TAPP 19) stays high everywhere.
+
+use super::ExpOptions;
+use crate::cachesim::{self, configs};
+use crate::coordinator::report::Report;
+use crate::trace::workloads;
+use crate::util::csv;
+
+/// The paper's representative proxies (Table 3), by workload name.
+pub const PROXIES: [&str; 6] = [
+    "tapp12-implicitver",
+    "tapp17-matvecsplit",
+    "tapp19-frontflow",
+    "ft-omp",
+    "mg-omp",
+    "xsbench",
+];
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let cfgs = configs::table2_configs();
+    let mut report = Report::new(
+        "table3",
+        "L2 cache-miss rate [%] of representative proxies",
+        &["proxy", "a64fx_s", "a64fx_32", "larc_c", "larc_a"],
+    );
+    for name in PROXIES {
+        let spec = workloads::by_name(name, opts.scale)
+            .ok_or_else(|| anyhow::anyhow!("workload {name} missing"))?;
+        let mut cells = vec![name.to_string()];
+        for cfg in &cfgs {
+            let threads = spec.effective_threads(cfg.cores);
+            let r = cachesim::simulate(&spec, cfg, threads);
+            cells.push(csv::f(r.stats.l2_miss_rate() * 100.0));
+            if opts.verbose {
+                eprintln!(
+                    "  table3 {name}@{}: {:.1}%",
+                    cfg.name,
+                    r.stats.l2_miss_rate() * 100.0
+                );
+            }
+        }
+        report.row(&cells);
+    }
+    Ok(report)
+}

@@ -1,0 +1,76 @@
+//! §2 analytical model tables: floorplan, stacked cache, and power —
+//! printed from `crate::model` (every value unit-tested against the paper).
+
+use crate::coordinator::report::Report;
+use crate::model;
+use crate::util::csv;
+use crate::util::units::fmt_bytes;
+
+pub fn run() -> Vec<Report> {
+    let cmg = model::larc_cmg();
+    let cache = model::stacked_cache();
+    let power = model::larc_power();
+
+    let mut fp = Report::new(
+        "model_floorplan",
+        "LARC floorplan (paper section 2.2-2.3)",
+        &["quantity", "value", "paper"],
+    );
+    fp.row(&["CMG area".into(), format!("{:.1} mm^2", cmg.cmg_mm2), "~12 mm^2".into()]);
+    fp.row(&["cores per CMG".into(), cmg.cores_per_cmg.to_string(), "32".into()]);
+    fp.row(&["CMGs per chip".into(), cmg.cmgs.to_string(), "16".into()]);
+    fp.row(&["total cores".into(), cmg.total_cores.to_string(), "512".into()]);
+    fp.row(&["CMG peak".into(), format!("{:.2} Tflop/s", cmg.cmg_tflops), "~2.3".into()]);
+    fp.row(&["chip peak".into(), format!("{:.1} Tflop/s", cmg.chip_tflops), "36".into()]);
+
+    let mut sc = Report::new(
+        "model_cache",
+        "3D-stacked SRAM cache (paper section 2.4)",
+        &["quantity", "value", "paper"],
+    );
+    sc.row(&["channels per die".into(), cache.n_channels.to_string(), "96".into()]);
+    sc.row(&["capacity per CMG".into(), fmt_bytes(cache.capacity_bytes()), "384 MiB".into()]);
+    sc.row(&["bandwidth per CMG".into(), format!("{:.0} GB/s", cache.bandwidth_gbs()), "1536".into()]);
+    sc.row(&["tag array per CMG".into(), fmt_bytes(cache.tag_array_bytes()), "9 MiB".into()]);
+    sc.row(&[
+        "chip capacity".into(),
+        fmt_bytes(16 * cache.capacity_bytes()),
+        "6 GiB".into(),
+    ]);
+    sc.row(&[
+        "chip L2 bandwidth".into(),
+        format!("{:.1} TB/s", 16.0 * cache.bandwidth_gbs() / 1000.0),
+        "24.6".into(),
+    ]);
+
+    let mut pw = Report::new(
+        "model_power",
+        "Power & thermal (paper section 2.6)",
+        &["quantity", "value", "paper"],
+    );
+    pw.row(&["CMG @7nm".into(), csv::f(power.cmg_7nm_w), "67.1 W".into()]);
+    pw.row(&["CMG @5nm".into(), csv::f(power.cmg_5nm_w), "46.98 W".into()]);
+    pw.row(&["CMG @1.5nm".into(), csv::f(power.cmg_1_5nm_w), "27.37 W".into()]);
+    pw.row(&["16 CMGs".into(), csv::f(power.chip_cores_w), "438 W".into()]);
+    pw.row(&["cache static".into(), csv::f(power.cache_static_w), "98.3 W".into()]);
+    pw.row(&["cache total".into(), csv::f(power.cache_total_w), "109.23 W".into()]);
+    pw.row(&["chip TDP".into(), csv::f(power.tdp_w), "547 W".into()]);
+    pw.row(&["stream-adjusted".into(), csv::f(power.stream_w), "420 W".into()]);
+    pw.row(&[
+        "power density".into(),
+        format!("{:.2} W/mm^2", power.density_w_mm2),
+        "2.85".into(),
+    ]);
+
+    vec![fp, sc, pw]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn emits_three_tables() {
+        let reports = super::run();
+        assert_eq!(reports.len(), 3);
+        assert!(reports[2].render().contains("547"));
+    }
+}

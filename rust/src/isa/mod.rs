@@ -1,0 +1,191 @@
+//! Instruction-set abstraction shared by the MCA pipeline and the workload
+//! generators.
+//!
+//! The paper's MCA tooling operates on x86/Arm assembly basic blocks; we
+//! abstract a block into a 16-wide instruction-class count vector (mirrored
+//! by `NUM_CLASSES` in `python/compile/aot.py` — the Pallas port-pressure
+//! kernel contracts over exactly these classes).
+
+/// Number of instruction classes. MUST match `aot.py::NUM_CLASSES`.
+pub const NUM_CLASSES: usize = 16;
+/// Number of execution ports in the port models. MUST match `aot.py::NUM_PORTS`.
+pub const NUM_PORTS: usize = 8;
+
+/// Instruction classes, ordered — the index is the row in the class-count
+/// vector and the port-pressure matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum InstrClass {
+    /// Scalar integer ALU (add/sub/logic/shift).
+    IntAlu = 0,
+    /// Scalar integer multiply.
+    IntMul = 1,
+    /// Scalar integer divide (unpipelined).
+    IntDiv = 2,
+    /// Scalar FP add/sub/compare.
+    FpAdd = 3,
+    /// Scalar FP multiply.
+    FpMul = 4,
+    /// Scalar FP fused multiply-add.
+    FpFma = 5,
+    /// Scalar FP divide / sqrt (unpipelined).
+    FpDiv = 6,
+    /// Vector (SVE/AVX) integer/logic op.
+    VecAlu = 7,
+    /// Vector FP FMA (the Gflop/s carrier).
+    VecFma = 8,
+    /// Vector gather / indexed load (XSBench-class access).
+    VecGather = 9,
+    /// Scalar/vector load.
+    Load = 10,
+    /// Scalar/vector store.
+    Store = 11,
+    /// Branch (conditional + unconditional).
+    Branch = 12,
+    /// Address-generation / index arithmetic.
+    AddrGen = 13,
+    /// Special (CSR, barrier, atomics).
+    Special = 14,
+    /// Nop / fence padding.
+    Nop = 15,
+}
+
+pub const ALL_CLASSES: [InstrClass; NUM_CLASSES] = [
+    InstrClass::IntAlu,
+    InstrClass::IntMul,
+    InstrClass::IntDiv,
+    InstrClass::FpAdd,
+    InstrClass::FpMul,
+    InstrClass::FpFma,
+    InstrClass::FpDiv,
+    InstrClass::VecAlu,
+    InstrClass::VecFma,
+    InstrClass::VecGather,
+    InstrClass::Load,
+    InstrClass::Store,
+    InstrClass::Branch,
+    InstrClass::AddrGen,
+    InstrClass::Special,
+    InstrClass::Nop,
+];
+
+/// Per-class instruction counts of one basic block ("instruction mix").
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InstrMix {
+    pub counts: [f32; NUM_CLASSES],
+}
+
+impl InstrMix {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style: add `n` instructions of class `c`.
+    pub fn with(mut self, c: InstrClass, n: f32) -> Self {
+        self.counts[c as usize] += n;
+        self
+    }
+
+    pub fn add(&mut self, c: InstrClass, n: f32) {
+        self.counts[c as usize] += n;
+    }
+
+    pub fn get(&self, c: InstrClass) -> f32 {
+        self.counts[c as usize]
+    }
+
+    /// Total instruction count.
+    pub fn total(&self) -> f32 {
+        self.counts.iter().sum()
+    }
+
+    /// Memory operations (loads + stores + gathers).
+    pub fn mem_ops(&self) -> f32 {
+        self.get(InstrClass::Load) + self.get(InstrClass::Store) + self.get(InstrClass::VecGather)
+    }
+
+    /// Floating-point "work" ops (used for Gflop/s figures; FMA counts 2).
+    pub fn flops(&self, vec_width: f32) -> f32 {
+        self.get(InstrClass::FpAdd)
+            + self.get(InstrClass::FpMul)
+            + 2.0 * self.get(InstrClass::FpFma)
+            + 2.0 * vec_width * self.get(InstrClass::VecFma)
+            + vec_width * self.get(InstrClass::VecAlu) * 0.0
+    }
+
+    /// Scale every class count.
+    pub fn scaled(mut self, k: f32) -> Self {
+        for c in &mut self.counts {
+            *c *= k;
+        }
+        self
+    }
+}
+
+/// A basic block: an instruction mix plus scheduling hints the analyzers
+/// use (exploitable ILP, whether the block body loops on itself).
+#[derive(Clone, Debug)]
+pub struct BasicBlock {
+    /// Stable id within the workload's CFG.
+    pub id: u32,
+    /// Human-readable label ("minife.spmv.inner").
+    pub label: String,
+    /// Instruction-class counts for ONE iteration of the block.
+    pub mix: InstrMix,
+    /// Exploitable instruction-level parallelism (>= 1.0); divides the
+    /// dependency-chain latency bound.
+    pub ilp: f32,
+    /// True if the block's trip pattern is a self-loop (back-to-back
+    /// iterations overlap in the pipeline; MCA "block looping" assumption).
+    pub looping: bool,
+}
+
+impl BasicBlock {
+    pub fn new(id: u32, label: &str, mix: InstrMix, ilp: f32, looping: bool) -> Self {
+        assert!(ilp >= 1.0, "ilp must be >= 1.0, got {ilp}");
+        BasicBlock {
+            id,
+            label: label.to_string(),
+            mix,
+            ilp,
+            looping,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_indices_are_dense_and_unique() {
+        for (i, c) in ALL_CLASSES.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+        }
+    }
+
+    #[test]
+    fn mix_builder_accumulates() {
+        let m = InstrMix::new()
+            .with(InstrClass::Load, 2.0)
+            .with(InstrClass::Load, 1.0)
+            .with(InstrClass::VecFma, 4.0);
+        assert_eq!(m.get(InstrClass::Load), 3.0);
+        assert_eq!(m.total(), 7.0);
+        assert_eq!(m.mem_ops(), 3.0);
+    }
+
+    #[test]
+    fn flops_counts_fma_twice() {
+        let m = InstrMix::new().with(InstrClass::FpFma, 3.0);
+        assert_eq!(m.flops(1.0), 6.0);
+        let v = InstrMix::new().with(InstrClass::VecFma, 1.0);
+        assert_eq!(v.flops(8.0), 16.0); // 512-bit SVE: 8 f64 lanes * 2
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_rejects_ilp_below_one() {
+        BasicBlock::new(0, "x", InstrMix::new(), 0.5, false);
+    }
+}

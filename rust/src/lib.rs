@@ -1,0 +1,29 @@
+//! # larc — reproduction of the LARC 3D-stacked-cache study
+//!
+//! Library crate reproducing *"At the Locus of Performance: Quantifying the
+//! Effects of Copious 3D-Stacked Cache on HPC Workloads"* (Domke, Vatai,
+//! et al., 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer map:
+//!
+//! * **L3 (this crate)** — the simulation campaign coordinator plus every
+//!   substrate the paper depends on: a cycle-approximate multicore cache
+//!   simulator ([`cachesim`], the gem5 substitute), the MCA upper-bound
+//!   pipeline ([`mca`], the SDE + llvm-mca/IACA/uiCA/OSACA substitute), a
+//!   workload library ([`trace`], the proxy-app suite substitute), the
+//!   analytical LARC hardware model ([`model`], §2 of the paper), and the
+//!   experiment drivers ([`experiments`], one per paper figure/table).
+//! * **L2/L1 (python, build-time only)** — the batched MCA cost model and
+//!   figure-of-merit kernels, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed through [`runtime`] (PJRT CPU client) on the hot path.
+
+pub mod cachesim;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod isa;
+pub mod mca;
+pub mod model;
+pub mod runtime;
+pub mod trace;
+pub mod util;

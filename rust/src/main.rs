@@ -1,0 +1,190 @@
+//! `larc` — leader binary for the LARC reproduction toolkit.
+//!
+//! The rust binary is self-contained after `make artifacts`: it loads the
+//! AOT-compiled HLO artifacts via PJRT and never invokes Python.
+
+use anyhow::{anyhow, bail, Result};
+
+use larc::cachesim::{self, configs};
+use larc::cli::{Cli, USAGE};
+use larc::coordinator::report::{results_dir, Report};
+use larc::experiments::{self, ExpOptions};
+use larc::mca::{self, PortArch, PortModel};
+use larc::trace::workloads;
+use larc::util::units::fmt_bytes;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    match cli.command.as_str() {
+        "list" => cmd_list(&cli),
+        "run" => cmd_run(&cli),
+        "mca" => cmd_mca(&cli),
+        "figure" => cmd_figure(&cli),
+        "campaign" => cmd_campaign(&cli),
+        "model" => emit(&experiments::run("model", &opts(&cli)?)?, &cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn opts(cli: &Cli) -> Result<ExpOptions> {
+    let mut o = ExpOptions::default();
+    o.scale = cli.scale().map_err(|e| anyhow!(e))?;
+    o.use_pjrt = cli.has("pjrt");
+    o.verbose = cli.has("verbose");
+    o.workers = cli.usize_flag("workers", o.workers).map_err(|e| anyhow!(e))?;
+    Ok(o)
+}
+
+fn emit(reports: &[Report], cli: &Cli) -> Result<()> {
+    for r in reports {
+        println!("{}", r.render());
+        if cli.has("csv") {
+            let path = r.write_csv(&results_dir())?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_list(cli: &Cli) -> Result<()> {
+    let what = cli.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale = cli.scale().map_err(|e| anyhow!(e))?;
+    if what == "workloads" || what == "all" {
+        println!("workloads ({}):", workloads::all(scale).len());
+        for s in workloads::all(scale) {
+            println!(
+                "  {:<24} {:<10} threads={:<3} ranks={} footprint={}",
+                s.name,
+                s.suite.label(),
+                s.threads,
+                s.ranks,
+                fmt_bytes(s.footprint())
+            );
+        }
+    }
+    if what == "configs" || what == "all" {
+        println!("configs:");
+        for name in configs::CONFIG_NAMES {
+            let c = configs::by_name(name).unwrap();
+            println!(
+                "  {:<10} cores={:<3} L2={} @ {:.0} GB/s, HBM {:.0} GB/s",
+                c.name,
+                c.cores,
+                fmt_bytes(c.l2.size),
+                c.l2.bw_gbs(c.freq_ghz),
+                c.dram_bw_gbs
+            );
+        }
+    }
+    if what == "experiments" || what == "all" {
+        println!("experiments: {}", experiments::EXPERIMENTS.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let name = cli
+        .flag("workload")
+        .ok_or_else(|| anyhow!("--workload required"))?;
+    let scale = cli.scale().map_err(|e| anyhow!(e))?;
+    let spec = workloads::by_name(name, scale)
+        .ok_or_else(|| anyhow!("unknown workload {name:?} (try `larc list workloads`)"))?;
+    let cfg_name = cli.flag_or("config", "a64fx_s");
+    let cfg = configs::by_name(&cfg_name)
+        .ok_or_else(|| anyhow!("unknown config {cfg_name:?} (try `larc list configs`)"))?;
+    let threads = cli
+        .usize_flag("threads", spec.effective_threads(cfg.cores))
+        .map_err(|e| anyhow!(e))?;
+
+    let r = cachesim::simulate(&spec, &cfg, threads);
+    println!("workload : {} ({})", r.workload, spec.suite.label());
+    println!("config   : {} x{} threads", r.config, r.threads);
+    println!("footprint: {}", fmt_bytes(spec.footprint()));
+    println!("cycles   : {:.3e}", r.cycles);
+    println!("runtime  : {:.6} s", r.runtime_s);
+    println!(
+        "L1 miss  : {:.2}%   L2 miss: {:.2}%",
+        r.stats.l1_miss_rate() * 100.0,
+        r.stats.l2_miss_rate() * 100.0
+    );
+    println!(
+        "DRAM     : {} ({:.1} GB/s achieved)",
+        fmt_bytes(r.stats.dram_bytes),
+        r.dram_bw_gbs(&cfg)
+    );
+    Ok(())
+}
+
+fn cmd_mca(cli: &Cli) -> Result<()> {
+    let name = cli
+        .flag("workload")
+        .ok_or_else(|| anyhow!("--workload required"))?;
+    let scale = cli.scale().map_err(|e| anyhow!(e))?;
+    let spec = workloads::by_name(name, scale)
+        .ok_or_else(|| anyhow!("unknown workload {name:?}"))?;
+    let arch = match cli.flag_or("arch", "broadwell").as_str() {
+        "broadwell" => PortArch::BroadwellLike,
+        "a64fx" => PortArch::A64fxLike,
+        "zen3" => PortArch::Zen3Like,
+        other => bail!("unknown arch {other:?}"),
+    };
+    let pm = PortModel::get(arch);
+    let freq = 2.2;
+
+    let est = if cli.has("pjrt") {
+        let rt = std::sync::Arc::new(larc::runtime::Runtime::new()?);
+        let mut batcher = larc::coordinator::McaBatcher::new(rt, &pm);
+        let mut eval = |blocks: &[larc::isa::BasicBlock]| -> Vec<f32> {
+            batcher.eval(blocks).expect("pjrt eval")
+        };
+        let e = mca::estimate::estimate_runtime_with(&spec, &pm, freq, 7, &mut eval);
+        eprintln!(
+            "pjrt: {} executions, {} rows",
+            batcher.executions, batcher.rows_evaluated
+        );
+        e
+    } else {
+        mca::estimate_runtime(&spec, &pm, freq, 7)
+    };
+    println!("workload : {}", est.workload);
+    println!("arch     : {arch:?} @ {freq} GHz");
+    println!("blocks   : {} (ranks sampled: {})", est.blocks, est.ranks_sampled);
+    println!("cycles   : {:.3e}", est.cycles);
+    println!("runtime  : {:.6} s (all data in L1D)", est.runtime_s);
+    Ok(())
+}
+
+fn cmd_figure(cli: &Cli) -> Result<()> {
+    let id = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("figure id required, e.g. `larc figure fig9`"))?;
+    let reports = experiments::run(id, &opts(cli)?)?;
+    emit(&reports, cli)
+}
+
+fn cmd_campaign(cli: &Cli) -> Result<()> {
+    let o = opts(cli)?;
+    for id in experiments::EXPERIMENTS {
+        eprintln!("=== {id} ===");
+        let reports = experiments::run(id, &o)?;
+        emit(&reports, cli)?;
+    }
+    Ok(())
+}

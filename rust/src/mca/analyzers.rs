@@ -1,0 +1,193 @@
+//! Four analyzer models + median combine (the llvm-mca / IACA / uiCA /
+//! OSACA substitute).
+//!
+//! Each analyzer prices one basic block under the all-data-in-L1D
+//! assumption and returns an estimated cycles-per-iteration (CPIter).  The
+//! paper takes the median of the four tools to suppress per-tool
+//! mis-estimates; we reproduce that.  The port-pressure analyzer is the
+//! expensive one at scale, so it is ALSO exported as a batched kernel: the
+//! Pallas artifact (`mca_block_cost_b*`) computes the identical math on the
+//! PJRT path, and [`port_pressure_native`] is the bit-equivalent Rust
+//! fallback used by tests and by small batches.
+
+use crate::isa::{BasicBlock, InstrClass, NUM_PORTS};
+use crate::mca::port_model::PortModel;
+use crate::util::stats;
+
+/// Analyzer identifiers (mirroring the paper's four MCA tools).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Analyzer {
+    /// Pure port-pressure throughput model (llvm-mca-like). THE PJRT path.
+    PortPressure,
+    /// Dependency-chain / load-latency emphasis (OSACA-like critical path).
+    DepChain,
+    /// Front-end + port hybrid with branch overhead (uiCA-like).
+    Pipeline,
+    /// Throughput + pipeline-bubble smoothing (IACA-like).
+    Smoothed,
+}
+
+pub const ALL_ANALYZERS: [Analyzer; 4] = [
+    Analyzer::PortPressure,
+    Analyzer::DepChain,
+    Analyzer::Pipeline,
+    Analyzer::Smoothed,
+];
+
+/// Port-pressure CPIter for one block — identical math to the Pallas
+/// kernel `port_pressure_cpiter` (throughput bound vs. ILP-scaled chain).
+pub fn port_pressure_native(block: &BasicBlock, m: &PortModel) -> f32 {
+    let mut port = [0f32; NUM_PORTS];
+    let mut chain = 0f32;
+    for (c, &n) in block.mix.counts.iter().enumerate() {
+        if n == 0.0 {
+            continue;
+        }
+        for (p, acc) in port.iter_mut().enumerate() {
+            *acc += n * m.ports[c][p];
+        }
+        chain += n * m.lat[c];
+    }
+    let tput = port.iter().copied().fold(0f32, f32::max);
+    tput.max(chain / block.ilp.max(1.0))
+}
+
+/// Dependency-chain analyzer: latency-weighted chain plus load-port
+/// serialization; pessimistic for long dependency chains (pointer chase).
+pub fn dep_chain(block: &BasicBlock, m: &PortModel) -> f32 {
+    let chain: f32 = block
+        .mix
+        .counts
+        .iter()
+        .enumerate()
+        .map(|(c, &n)| n * m.lat[c])
+        .sum::<f32>()
+        / block.ilp.max(1.0);
+    let mem = block.mix.mem_ops();
+    // loads at best 2/cycle once the chain is primed
+    chain.max(mem * 0.5)
+}
+
+/// uiCA-like: front-end decode bound + port bound + branch overhead for
+/// non-looping blocks (pipeline refill).
+pub fn pipeline(block: &BasicBlock, m: &PortModel) -> f32 {
+    let frontend = block.mix.total() / m.decode_width;
+    let port = port_pressure_native(block, m);
+    let branch_penalty = if block.looping {
+        0.0
+    } else {
+        m.pipeline_depth * 0.5 + block.mix.get(InstrClass::Branch)
+    };
+    frontend.max(port) + branch_penalty
+}
+
+/// IACA-like: throughput bound plus a fraction of the chain as pipeline
+/// bubbles (IACA historically over-weighted resource conflicts).
+pub fn smoothed(block: &BasicBlock, m: &PortModel) -> f32 {
+    let port = port_pressure_native(block, m);
+    let chain: f32 = block
+        .mix
+        .counts
+        .iter()
+        .enumerate()
+        .map(|(c, &n)| n * m.lat[c])
+        .sum::<f32>()
+        / block.ilp.max(1.0);
+    port + 0.15 * chain
+}
+
+pub fn run(analyzer: Analyzer, block: &BasicBlock, m: &PortModel) -> f32 {
+    match analyzer {
+        Analyzer::PortPressure => port_pressure_native(block, m),
+        Analyzer::DepChain => dep_chain(block, m),
+        Analyzer::Pipeline => pipeline(block, m),
+        Analyzer::Smoothed => smoothed(block, m),
+    }
+}
+
+/// Median-of-four CPIter (the paper's combination rule).  Callers that
+/// evaluated the port-pressure analyzer on the PJRT path pass its batched
+/// result through `port_pressure_override`.
+pub fn median_cpiter(block: &BasicBlock, m: &PortModel, port_pressure_override: Option<f32>) -> f32 {
+    let pp = port_pressure_override.unwrap_or_else(|| port_pressure_native(block, m));
+    let xs = [
+        pp as f64,
+        dep_chain(block, m) as f64,
+        pipeline(block, m) as f64,
+        smoothed(block, m) as f64,
+    ];
+    stats::median(&xs) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstrMix;
+    use crate::mca::port_model::PortArch;
+
+    fn fma_block(looping: bool) -> BasicBlock {
+        let mix = InstrMix::new()
+            .with(InstrClass::VecFma, 8.0)
+            .with(InstrClass::Load, 4.0)
+            .with(InstrClass::AddrGen, 2.0)
+            .with(InstrClass::Branch, 1.0);
+        BasicBlock::new(1, "fma", mix, 6.0, looping)
+    }
+
+    #[test]
+    fn port_pressure_matches_hand_computation() {
+        let m = PortModel::get(PortArch::A64fxLike);
+        let b = fma_block(true);
+        // VecFma: 8 * 0.5 on P0 and P1 = 4.0 each; Load: 4 * 0.5 = 2.0 on
+        // P4/P5; AddrGen 2*0.5=1.0 on P2/P3; Branch 1.0 on P6.
+        // tput bound = 4.0. chain = 8*9 + 4*5 + 2*1 + 1*1 = 95; /6 = 15.83.
+        let got = port_pressure_native(&b, &m);
+        assert!((got - 15.833_333).abs() < 1e-3, "got {got}");
+    }
+
+    #[test]
+    fn high_ilp_becomes_throughput_bound() {
+        let m = PortModel::get(PortArch::A64fxLike);
+        let mut b = fma_block(true);
+        b.ilp = 32.0;
+        let got = port_pressure_native(&b, &m);
+        assert!((got - 4.0).abs() < 1e-4, "got {got}");
+    }
+
+    #[test]
+    fn non_looping_blocks_pay_refill() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let looping = pipeline(&fma_block(true), &m);
+        let once = pipeline(&fma_block(false), &m);
+        assert!(once > looping);
+    }
+
+    #[test]
+    fn median_is_between_min_and_max() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let b = fma_block(true);
+        let vals: Vec<f64> = ALL_ANALYZERS
+            .iter()
+            .map(|&a| run(a, &b, &m) as f64)
+            .collect();
+        let med = median_cpiter(&b, &m, None) as f64;
+        assert!(med >= stats::min(&vals) && med <= stats::max(&vals));
+    }
+
+    #[test]
+    fn override_feeds_median() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let b = fma_block(true);
+        let with_native = median_cpiter(&b, &m, None);
+        let pp = port_pressure_native(&b, &m);
+        let with_override = median_cpiter(&b, &m, Some(pp));
+        assert_eq!(with_native, with_override);
+    }
+
+    #[test]
+    fn empty_block_costs_nothing_throughput_wise() {
+        let m = PortModel::get(PortArch::A64fxLike);
+        let b = BasicBlock::new(0, "empty", InstrMix::new(), 1.0, true);
+        assert_eq!(port_pressure_native(&b, &m), 0.0);
+    }
+}

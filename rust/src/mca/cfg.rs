@@ -1,0 +1,160 @@
+//! Weighted directed control-flow graph (the SDE DCFG substitute).
+//!
+//! Nodes are basic blocks; edges carry the number of times the program
+//! counter jumped from caller to callee.  Per the paper's estimation rule,
+//! the estimated cycle count of a thread's execution is the sum over edges
+//! of `CPIter(callee) * #calls(edge)` — summing edges of the weighted CFG
+//! is equivalent to summing per-block costs weighted by execution counts.
+
+use crate::isa::BasicBlock;
+
+/// One CFG edge: `from` jumped to `to` exactly `calls` times.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub from: u32,
+    pub to: u32,
+    pub calls: u64,
+}
+
+/// Weighted control-flow graph of one instruction stream (thread).
+#[derive(Clone, Debug, Default)]
+pub struct Cfg {
+    pub blocks: Vec<BasicBlock>,
+    pub edges: Vec<Edge>,
+}
+
+impl Cfg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a block, returning its id (ids are dense indices).
+    pub fn add_block(&mut self, mut b: BasicBlock) -> u32 {
+        let id = self.blocks.len() as u32;
+        b.id = id;
+        self.blocks.push(b);
+        id
+    }
+
+    pub fn add_edge(&mut self, from: u32, to: u32, calls: u64) {
+        assert!((from as usize) < self.blocks.len(), "bad from");
+        assert!((to as usize) < self.blocks.len(), "bad to");
+        self.edges.push(Edge { from, to, calls });
+    }
+
+    pub fn block(&self, id: u32) -> &BasicBlock {
+        &self.blocks[id as usize]
+    }
+
+    /// Total invocations of each block (sum of incoming edge weights).
+    pub fn block_calls(&self) -> Vec<u64> {
+        let mut calls = vec![0u64; self.blocks.len()];
+        for e in &self.edges {
+            calls[e.to as usize] += e.calls;
+        }
+        // The entry block (id 0) has no incoming edge; it runs once.
+        if !self.blocks.is_empty() && calls[0] == 0 {
+            calls[0] = 1;
+        }
+        calls
+    }
+
+    /// Total cycles: sum over edges of `cpiter[to] * calls` plus the entry
+    /// block (Eq. 1 numerator for one thread).  `cpiter` is indexed by
+    /// block id.
+    pub fn weighted_cycles(&self, cpiter: &[f32]) -> f64 {
+        assert_eq!(cpiter.len(), self.blocks.len());
+        self.block_calls()
+            .iter()
+            .zip(cpiter)
+            .map(|(&calls, &cpi)| calls as f64 * cpi as f64)
+            .sum()
+    }
+
+    /// Structural sanity: every non-entry block is reachable via edges.
+    pub fn validate(&self) -> Result<(), String> {
+        let calls = self.block_calls();
+        for (i, &c) in calls.iter().enumerate().skip(1) {
+            if c == 0 {
+                return Err(format!("block {i} ({}) unreachable", self.blocks[i].label));
+            }
+        }
+        for e in &self.edges {
+            if e.from == e.to && !self.blocks[e.to as usize].looping {
+                return Err(format!(
+                    "self-edge on non-looping block {} ({})",
+                    e.to, self.blocks[e.to as usize].label
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{InstrClass, InstrMix};
+
+    fn bb(label: &str, looping: bool) -> BasicBlock {
+        BasicBlock::new(
+            0,
+            label,
+            InstrMix::new().with(InstrClass::IntAlu, 4.0),
+            2.0,
+            looping,
+        )
+    }
+
+    fn diamond() -> Cfg {
+        // entry -> loop (x100 self) -> exit
+        let mut g = Cfg::new();
+        let entry = g.add_block(bb("entry", false));
+        let body = g.add_block(bb("body", true));
+        let exit = g.add_block(bb("exit", false));
+        g.add_edge(entry, body, 1);
+        g.add_edge(body, body, 99);
+        g.add_edge(body, exit, 1);
+        g
+    }
+
+    #[test]
+    fn block_calls_sum_incoming() {
+        let g = diamond();
+        assert_eq!(g.block_calls(), vec![1, 100, 1]);
+    }
+
+    #[test]
+    fn weighted_cycles_is_dot_product() {
+        let g = diamond();
+        let cycles = g.weighted_cycles(&[10.0, 2.0, 5.0]);
+        assert_eq!(cycles, 10.0 + 200.0 + 5.0);
+    }
+
+    #[test]
+    fn validate_accepts_diamond() {
+        assert!(diamond().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unreachable() {
+        let mut g = diamond();
+        g.add_block(bb("orphan", false));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_self_loop() {
+        let mut g = Cfg::new();
+        let a = g.add_block(bb("a", false));
+        g.add_edge(a, a, 5);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_edge_bounds_checked() {
+        let mut g = Cfg::new();
+        g.add_edge(0, 1, 1);
+    }
+}

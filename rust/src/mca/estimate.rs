@@ -1,0 +1,160 @@
+//! Eq. (1): workload runtime under unrestricted locality.
+//!
+//! `t_app = max_ranks(max_threads(sum_edges CPIter_e * calls_e)) / freq`
+//!
+//! The per-edge CPIter is the median of the four analyzers; the
+//! port-pressure analyzer can be evaluated natively or through the PJRT
+//! artifact (the caller passes a batched evaluator — see
+//! `coordinator::batcher` — so campaigns amortize PJRT executions over
+//! thousands of blocks).
+
+use crate::isa::BasicBlock;
+use crate::mca::analyzers;
+use crate::mca::port_model::PortModel;
+use crate::mca::sde;
+use crate::trace::Spec;
+
+/// Result of an MCA estimation run.
+#[derive(Clone, Debug)]
+pub struct McaEstimate {
+    pub workload: String,
+    /// Estimated cycles of the slowest (rank, thread).
+    pub cycles: f64,
+    /// Estimated runtime in seconds at `freq_ghz`.
+    pub runtime_s: f64,
+    /// Number of CFG blocks priced.
+    pub blocks: usize,
+    /// Ranks sampled.
+    pub ranks_sampled: usize,
+}
+
+/// Batched port-pressure evaluator signature: given blocks, return one
+/// CPIter per block (same math as `analyzers::port_pressure_native`).
+/// The PJRT-backed implementation lives in `coordinator::batcher`.
+pub type PortPressureEval<'a> = dyn FnMut(&[BasicBlock]) -> Vec<f32> + 'a;
+
+/// Estimate with the native (pure-Rust) port-pressure path.
+pub fn estimate_runtime(spec: &Spec, m: &PortModel, freq_ghz: f64, seed: u64) -> McaEstimate {
+    let mut native = |blocks: &[BasicBlock]| -> Vec<f32> {
+        blocks
+            .iter()
+            .map(|b| analyzers::port_pressure_native(b, m))
+            .collect()
+    };
+    estimate_runtime_with(spec, m, freq_ghz, seed, &mut native)
+}
+
+/// Estimate with a caller-supplied batched port-pressure evaluator.
+pub fn estimate_runtime_with(
+    spec: &Spec,
+    m: &PortModel,
+    freq_ghz: f64,
+    seed: u64,
+    port_pressure: &mut PortPressureEval,
+) -> McaEstimate {
+    let nthreads = spec.threads.min(spec.max_threads).max(1);
+    let cfgs = sde::record_ranks(spec, nthreads, seed, 10);
+    let mut worst_cycles = 0f64;
+    let mut blocks_priced = 0usize;
+
+    for cfg in &cfgs {
+        // Threads of one rank execute the same kernel CFG with the same
+        // per-thread weights (spec.blocks already divides by nthreads), so
+        // max over threads equals the single recorded thread stream.
+        let pp = port_pressure(&cfg.blocks);
+        assert_eq!(pp.len(), cfg.blocks.len());
+        let cpiter: Vec<f32> = cfg
+            .blocks
+            .iter()
+            .zip(&pp)
+            .map(|(b, &ppv)| analyzers::median_cpiter(b, m, Some(ppv)))
+            .collect();
+        let cycles = cfg.weighted_cycles(&cpiter);
+        worst_cycles = worst_cycles.max(cycles);
+        blocks_priced += cfg.blocks.len();
+    }
+
+    McaEstimate {
+        workload: spec.name.clone(),
+        cycles: worst_cycles,
+        runtime_s: worst_cycles / (freq_ghz * 1e9),
+        blocks: blocks_priced,
+        ranks_sampled: cfgs.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{InstrClass, InstrMix};
+    use crate::mca::port_model::{PortArch, PortModel};
+    use crate::trace::patterns::Pattern;
+    use crate::trace::{BoundClass, Phase, Suite};
+
+    fn spec(ranks: usize, passes: u32) -> Spec {
+        Spec {
+            name: "est".into(),
+            suite: Suite::Npb,
+            class: BoundClass::Bandwidth,
+            threads: 4,
+            max_threads: usize::MAX,
+            ranks,
+            phases: vec![Phase {
+                label: "sweep",
+                pattern: Pattern::Reduction {
+                    bytes: 1 << 22,
+                    passes,
+                },
+                mix: InstrMix::new()
+                    .with(InstrClass::VecFma, 4.0)
+                    .with(InstrClass::Load, 4.0)
+                    .with(InstrClass::AddrGen, 1.0)
+                    .with(InstrClass::Branch, 1.0),
+                ilp: 4.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn runtime_scales_with_passes() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let e1 = estimate_runtime(&spec(1, 1), &m, 2.2, 0);
+        let e4 = estimate_runtime(&spec(1, 4), &m, 2.2, 0);
+        let ratio = e4.cycles / e1.cycles;
+        assert!((3.5..=4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn runtime_positive_and_consistent() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let e = estimate_runtime(&spec(1, 2), &m, 2.2, 0);
+        assert!(e.runtime_s > 0.0);
+        assert!((e.cycles / (2.2e9 * e.runtime_s) - 1.0).abs() < 1e-9);
+        assert_eq!(e.ranks_sampled, 1);
+    }
+
+    #[test]
+    fn multi_rank_takes_max() {
+        let m = PortModel::get(PortArch::BroadwellLike);
+        let single = estimate_runtime(&spec(1, 2), &m, 2.2, 3);
+        let multi = estimate_runtime(&spec(8, 2), &m, 2.2, 3);
+        // jitter means the max over 8 ranks >= the unjittered single rank
+        assert!(multi.cycles >= single.cycles * 0.99);
+        assert_eq!(multi.ranks_sampled, 8);
+    }
+
+    #[test]
+    fn pjrt_style_override_matches_native() {
+        let m = PortModel::get(PortArch::A64fxLike);
+        let s = spec(1, 2);
+        let native = estimate_runtime(&s, &m, 2.0, 0);
+        let mut fake_batched = |blocks: &[BasicBlock]| -> Vec<f32> {
+            blocks
+                .iter()
+                .map(|b| analyzers::port_pressure_native(b, &m))
+                .collect()
+        };
+        let batched = estimate_runtime_with(&s, &m, 2.0, 0, &mut fake_batched);
+        assert_eq!(native.cycles, batched.cycles);
+    }
+}

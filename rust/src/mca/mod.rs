@@ -1,0 +1,26 @@
+//! MCA pipeline — the paper's "unrestricted locality" upper-bound estimator
+//! (Section 3.1).
+//!
+//! The original flow: Intel SDE records a workload's basic blocks and CFG
+//! edge counts; four Machine Code Analyzers (llvm-mca, IACA, uiCA, OSACA)
+//! price each block under the all-data-in-L1D assumption; Eq. (1) sums
+//! `CPIter_e * #calls_e` over CFG edges and takes the max over threads and
+//! ranks.
+//!
+//! Our substitute keeps the same decomposition:
+//! * [`sde`] — records the weighted CFG from a workload [`crate::trace::Spec`]
+//!   (what SDE's DCFG output provided),
+//! * [`port_model`] — per-microarchitecture port/latency tables,
+//! * [`analyzers`] — four analyzer models + median combine; the batched
+//!   port-pressure analyzer is also exported as the Pallas/PJRT hot path,
+//! * [`estimate`] — Eq. (1) across ranks and threads.
+
+pub mod analyzers;
+pub mod cfg;
+pub mod estimate;
+pub mod port_model;
+pub mod sde;
+
+pub use analyzers::{median_cpiter, Analyzer};
+pub use estimate::{estimate_runtime, McaEstimate};
+pub use port_model::{PortArch, PortModel};

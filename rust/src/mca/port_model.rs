@@ -1,0 +1,203 @@
+//! Per-microarchitecture execution-port and latency tables.
+//!
+//! Mirrors what llvm-mca/IACA/uiCA/OSACA encode in their scheduler models:
+//! each instruction class places some cycles of pressure on each execution
+//! port, and produces its result after a latency.  The same matrices are
+//! fed to the Pallas `port_pressure` kernel (classes × ports = 16 × 8,
+//! matching `aot.py::NUM_CLASSES/NUM_PORTS`).
+
+use crate::isa::{InstrClass, NUM_CLASSES, NUM_PORTS};
+
+/// Which microarchitecture's tables to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PortArch {
+    /// Intel Broadwell-like (E5-2650v4 — the paper's MCA baseline).
+    BroadwellLike,
+    /// Fujitsu A64FX-like (2×SVE FLA/FLB, 2×INT EXA/EXB, 2 AGU).
+    A64fxLike,
+    /// AMD Zen3-like (Milan / Milan-X pilot study).
+    Zen3Like,
+}
+
+/// Port pressure matrix + latency vector for one microarchitecture.
+#[derive(Clone, Debug)]
+pub struct PortModel {
+    pub arch: PortArch,
+    /// `ports[c][p]`: cycles of pressure a class-`c` instruction puts on
+    /// port `p` (reciprocal-throughput style).
+    pub ports: [[f32; NUM_PORTS]; NUM_CLASSES],
+    /// `lat[c]`: result latency in cycles.
+    pub lat: [f32; NUM_CLASSES],
+    /// Front-end decode/rename width (instructions per cycle).
+    pub decode_width: f32,
+    /// Pipeline depth (drain penalty for non-looping blocks).
+    pub pipeline_depth: f32,
+}
+
+impl PortModel {
+    pub fn get(arch: PortArch) -> PortModel {
+        match arch {
+            PortArch::BroadwellLike => broadwell_like(),
+            PortArch::A64fxLike => a64fx_like(),
+            PortArch::Zen3Like => zen3_like(),
+        }
+    }
+
+    /// Flatten the pressure matrix row-major (the PJRT artifact's `ports`
+    /// argument layout).
+    pub fn ports_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(NUM_CLASSES * NUM_PORTS);
+        for row in &self.ports {
+            v.extend_from_slice(row);
+        }
+        v
+    }
+
+    pub fn lat_vec(&self) -> Vec<f32> {
+        self.lat.to_vec()
+    }
+}
+
+fn set(
+    ports: &mut [[f32; NUM_PORTS]; NUM_CLASSES],
+    lat: &mut [f32; NUM_CLASSES],
+    c: InstrClass,
+    pressure: &[(usize, f32)],
+    latency: f32,
+) {
+    for &(p, cyc) in pressure {
+        ports[c as usize][p] = cyc;
+    }
+    lat[c as usize] = latency;
+}
+
+/// Broadwell-like: P0/P1 FP+ALU, P5 ALU/shuffle, P6 ALU/branch,
+/// P2/P3 load AGU, P4 store data, P7 store AGU.
+fn broadwell_like() -> PortModel {
+    let mut ports = [[0.0; NUM_PORTS]; NUM_CLASSES];
+    let mut lat = [0.0; NUM_CLASSES];
+    use InstrClass::*;
+    // class, (port, pressure)*, latency
+    set(&mut ports, &mut lat, IntAlu, &[(0, 0.25), (1, 0.25), (5, 0.25), (6, 0.25)], 1.0);
+    set(&mut ports, &mut lat, IntMul, &[(1, 1.0)], 3.0);
+    set(&mut ports, &mut lat, IntDiv, &[(0, 20.0)], 36.0);
+    set(&mut ports, &mut lat, FpAdd, &[(1, 1.0)], 3.0);
+    set(&mut ports, &mut lat, FpMul, &[(0, 0.5), (1, 0.5)], 3.0);
+    set(&mut ports, &mut lat, FpFma, &[(0, 0.5), (1, 0.5)], 5.0);
+    set(&mut ports, &mut lat, FpDiv, &[(0, 8.0)], 14.0);
+    set(&mut ports, &mut lat, VecAlu, &[(0, 0.4), (1, 0.4), (5, 0.2)], 1.0);
+    set(&mut ports, &mut lat, VecFma, &[(0, 0.5), (1, 0.5)], 5.0);
+    set(&mut ports, &mut lat, VecGather, &[(2, 2.0), (3, 2.0)], 12.0);
+    set(&mut ports, &mut lat, Load, &[(2, 0.5), (3, 0.5)], 4.0);
+    set(&mut ports, &mut lat, Store, &[(4, 1.0), (7, 1.0)], 1.0);
+    set(&mut ports, &mut lat, Branch, &[(6, 1.0)], 1.0);
+    set(&mut ports, &mut lat, AddrGen, &[(0, 0.25), (1, 0.25), (5, 0.25), (6, 0.25)], 1.0);
+    set(&mut ports, &mut lat, Special, &[(5, 4.0)], 10.0);
+    set(&mut ports, &mut lat, Nop, &[], 0.0);
+    PortModel {
+        arch: PortArch::BroadwellLike,
+        ports,
+        lat,
+        decode_width: 4.0,
+        pipeline_depth: 14.0,
+    }
+}
+
+/// A64FX-like: P0/P1 = FLA/FLB (512-bit SVE), P2/P3 = EXA/EXB int,
+/// P4/P5 = AGU/load (P5 shares store), P6 branch, P7 predicate/special.
+fn a64fx_like() -> PortModel {
+    let mut ports = [[0.0; NUM_PORTS]; NUM_CLASSES];
+    let mut lat = [0.0; NUM_CLASSES];
+    use InstrClass::*;
+    set(&mut ports, &mut lat, IntAlu, &[(2, 0.5), (3, 0.5)], 1.0);
+    set(&mut ports, &mut lat, IntMul, &[(2, 1.0)], 5.0);
+    set(&mut ports, &mut lat, IntDiv, &[(2, 24.0)], 41.0);
+    set(&mut ports, &mut lat, FpAdd, &[(0, 0.5), (1, 0.5)], 4.0);
+    set(&mut ports, &mut lat, FpMul, &[(0, 0.5), (1, 0.5)], 4.0);
+    set(&mut ports, &mut lat, FpFma, &[(0, 0.5), (1, 0.5)], 9.0);
+    set(&mut ports, &mut lat, FpDiv, &[(0, 10.0)], 29.0);
+    set(&mut ports, &mut lat, VecAlu, &[(0, 0.5), (1, 0.5)], 4.0);
+    set(&mut ports, &mut lat, VecFma, &[(0, 0.5), (1, 0.5)], 9.0);
+    set(&mut ports, &mut lat, VecGather, &[(4, 4.0), (5, 4.0)], 16.0);
+    set(&mut ports, &mut lat, Load, &[(4, 0.5), (5, 0.5)], 5.0);
+    set(&mut ports, &mut lat, Store, &[(5, 1.0)], 1.0);
+    set(&mut ports, &mut lat, Branch, &[(6, 1.0)], 1.0);
+    set(&mut ports, &mut lat, AddrGen, &[(2, 0.5), (3, 0.5)], 1.0);
+    set(&mut ports, &mut lat, Special, &[(7, 4.0)], 12.0);
+    set(&mut ports, &mut lat, Nop, &[], 0.0);
+    PortModel {
+        arch: PortArch::A64fxLike,
+        ports,
+        lat,
+        decode_width: 4.0,
+        pipeline_depth: 16.0,
+    }
+}
+
+/// Zen3-like: 4 ALU, 2 FMA pipes, 3 AGU, wide decode.
+fn zen3_like() -> PortModel {
+    let mut ports = [[0.0; NUM_PORTS]; NUM_CLASSES];
+    let mut lat = [0.0; NUM_CLASSES];
+    use InstrClass::*;
+    set(&mut ports, &mut lat, IntAlu, &[(0, 0.25), (1, 0.25), (2, 0.25), (3, 0.25)], 1.0);
+    set(&mut ports, &mut lat, IntMul, &[(1, 1.0)], 3.0);
+    set(&mut ports, &mut lat, IntDiv, &[(0, 14.0)], 19.0);
+    set(&mut ports, &mut lat, FpAdd, &[(0, 0.5), (1, 0.5)], 3.0);
+    set(&mut ports, &mut lat, FpMul, &[(0, 0.5), (1, 0.5)], 3.0);
+    set(&mut ports, &mut lat, FpFma, &[(0, 0.5), (1, 0.5)], 4.0);
+    set(&mut ports, &mut lat, FpDiv, &[(0, 6.0)], 13.0);
+    set(&mut ports, &mut lat, VecAlu, &[(0, 0.33), (1, 0.33), (2, 0.33)], 1.0);
+    set(&mut ports, &mut lat, VecFma, &[(0, 0.5), (1, 0.5)], 4.0);
+    set(&mut ports, &mut lat, VecGather, &[(4, 2.5), (5, 2.5)], 14.0);
+    set(&mut ports, &mut lat, Load, &[(4, 0.34), (5, 0.33), (6, 0.33)], 4.0);
+    set(&mut ports, &mut lat, Store, &[(6, 0.5), (7, 0.5)], 1.0);
+    set(&mut ports, &mut lat, Branch, &[(3, 0.5), (7, 0.5)], 1.0);
+    set(&mut ports, &mut lat, AddrGen, &[(0, 0.25), (1, 0.25), (2, 0.25), (3, 0.25)], 1.0);
+    set(&mut ports, &mut lat, Special, &[(7, 4.0)], 10.0);
+    set(&mut ports, &mut lat, Nop, &[], 0.0);
+    PortModel {
+        arch: PortArch::Zen3Like,
+        ports,
+        lat,
+        decode_width: 6.0,
+        pipeline_depth: 19.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ALL_CLASSES;
+
+    #[test]
+    fn all_archs_have_positive_latencies_for_real_classes() {
+        for arch in [PortArch::BroadwellLike, PortArch::A64fxLike, PortArch::Zen3Like] {
+            let m = PortModel::get(arch);
+            for c in ALL_CLASSES {
+                if c != InstrClass::Nop {
+                    assert!(m.lat[c as usize] > 0.0, "{arch:?} {c:?} latency");
+                    assert!(
+                        m.ports[c as usize].iter().any(|&x| x > 0.0),
+                        "{arch:?} {c:?} has no port pressure"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_layout_is_row_major() {
+        let m = PortModel::get(PortArch::A64fxLike);
+        let flat = m.ports_flat();
+        assert_eq!(flat.len(), NUM_CLASSES * NUM_PORTS);
+        assert_eq!(flat[InstrClass::Load as usize * NUM_PORTS + 4], 0.5);
+    }
+
+    #[test]
+    fn div_is_expensive_everywhere() {
+        for arch in [PortArch::BroadwellLike, PortArch::A64fxLike, PortArch::Zen3Like] {
+            let m = PortModel::get(arch);
+            assert!(m.lat[InstrClass::IntDiv as usize] > 10.0);
+        }
+    }
+}

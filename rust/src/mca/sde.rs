@@ -1,0 +1,130 @@
+//! CFG recorder — the Intel SDE substitute.
+//!
+//! SDE's role in the paper is to execute the workload under dynamic
+//! instrumentation and emit the basic blocks plus CFG edge invocation
+//! counts (its DCFG format), once per sampled MPI rank.  Our workloads are
+//! generated from a [`Spec`], so the recorder derives the same structure
+//! directly: one looping body block per phase, chained sequentially, with
+//! edge weights equal to the phase's per-thread chunk count.
+//!
+//! Rank imbalance: the paper samples up to ten ranks because real MPI runs
+//! are imbalanced.  We reproduce that by jittering the per-rank edge
+//! weights by a few percent with a seeded PRNG (max-over-ranks in Eq. (1)
+//! then picks the slowest).
+
+use crate::mca::cfg::Cfg;
+use crate::trace::Spec;
+use crate::util::prng::Rng;
+
+/// Imbalance amplitude across ranks (fraction of the edge weight).
+pub const RANK_JITTER: f64 = 0.05;
+
+/// Record the weighted CFG of one (rank, thread) instruction stream.
+pub fn record(spec: &Spec, rank: usize, nthreads: usize, seed: u64) -> Cfg {
+    let blocks = spec.blocks(nthreads);
+    let mut g = Cfg::new();
+    let mut prev: Option<u32> = None;
+    let mut rng = Rng::new(seed ^ ((rank as u64) << 32) ^ 0x5DE_5DE);
+    for (bb, calls) in blocks {
+        let looping = bb.looping;
+        let id = g.add_block(bb);
+        let jitter = if spec.ranks > 1 {
+            1.0 + RANK_JITTER * (2.0 * rng.f64() - 1.0)
+        } else {
+            1.0
+        };
+        let calls = ((calls as f64 * jitter).round() as u64).max(1);
+        if let Some(p) = prev {
+            // one entry into the block, then (calls-1) self-iterations
+            g.add_edge(p, id, 1);
+            if looping && calls > 1 {
+                g.add_edge(id, id, calls - 1);
+            }
+        }
+        prev = Some(id);
+    }
+    g
+}
+
+/// Sample up to `max_ranks` ranks (the paper samples <= 10 of all ranks to
+/// bound SDE cost); returns one CFG per sampled rank.
+pub fn record_ranks(spec: &Spec, nthreads: usize, seed: u64, max_ranks: usize) -> Vec<Cfg> {
+    let sampled = spec.ranks.min(max_ranks).max(1);
+    (0..sampled)
+        .map(|r| record(spec, r, nthreads, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{InstrClass, InstrMix};
+    use crate::trace::patterns::Pattern;
+    use crate::trace::{BoundClass, Phase, Suite};
+
+    fn spec(ranks: usize) -> Spec {
+        Spec {
+            name: "w".into(),
+            suite: Suite::Npb,
+            class: BoundClass::Bandwidth,
+            threads: 4,
+            max_threads: usize::MAX,
+            ranks,
+            phases: vec![
+                Phase {
+                    label: "a",
+                    pattern: Pattern::Reduction {
+                        bytes: 1 << 20,
+                        passes: 4,
+                    },
+                    mix: InstrMix::new().with(InstrClass::VecFma, 4.0),
+                    ilp: 4.0,
+                },
+                Phase {
+                    label: "b",
+                    pattern: Pattern::Reduction {
+                        bytes: 1 << 18,
+                        passes: 1,
+                    },
+                    mix: InstrMix::new().with(InstrClass::Load, 4.0),
+                    ilp: 2.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn cfg_is_valid_and_chained() {
+        let g = record(&spec(1), 0, 4, 7);
+        g.validate().unwrap();
+        assert_eq!(g.blocks.len(), 3); // prologue + 2 phases
+        let calls = g.block_calls();
+        // phase a: 2^20/256/4 threads * 4 passes = 4096 calls
+        assert_eq!(calls[1], 4096);
+    }
+
+    #[test]
+    fn single_rank_has_no_jitter() {
+        let a = record(&spec(1), 0, 4, 1);
+        let b = record(&spec(1), 0, 4, 2);
+        assert_eq!(a.block_calls(), b.block_calls());
+    }
+
+    #[test]
+    fn multi_rank_jitter_bounded() {
+        let base = record(&spec(1), 0, 4, 7).block_calls();
+        for r in 0..8 {
+            let j = record(&spec(16), r, 4, 7).block_calls();
+            for (b, x) in base.iter().zip(&j) {
+                let ratio = *x as f64 / *b as f64;
+                assert!((1.0 - 1.5 * RANK_JITTER..=1.0 + 1.5 * RANK_JITTER).contains(&ratio));
+            }
+        }
+    }
+
+    #[test]
+    fn rank_sampling_capped() {
+        assert_eq!(record_ranks(&spec(64), 4, 1, 10).len(), 10);
+        assert_eq!(record_ranks(&spec(2), 4, 1, 10).len(), 2);
+    }
+}

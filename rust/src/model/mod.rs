@@ -1,0 +1,18 @@
+//! Analytical LARC hardware model — the closed-form math of paper §2:
+//! floorplan scaling (§2.2–2.3), the 3D-stacked SRAM cache capacity and
+//! bandwidth model (§2.4), power/thermal estimates (§2.6), and the §6.1
+//! full-chip performance projection.
+//!
+//! Every constant is cross-checked against the number printed in the
+//! paper (unit tests assert them), so the experiment drivers can emit the
+//! paper's Table/figure values from first principles.
+
+pub mod floorplan;
+pub mod power;
+pub mod projection;
+pub mod stackedcache;
+
+pub use floorplan::{larc_cmg, A64fxCmg, LarcCmg};
+pub use power::{larc_power, LarcPower};
+pub use projection::full_chip_speedup;
+pub use stackedcache::{stacked_cache, StackedCache};

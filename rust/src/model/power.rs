@@ -1,0 +1,95 @@
+//! Power and thermal model (paper §2.6).
+//!
+//! A64FX peak (DGEMM) is 122 W: 95 W cores + 15 W memory interface →
+//! 1.98 W/core, 3.75 W/MIF.  A 32-core LARC CMG at 7 nm would draw
+//! 67.1 W; TSMC's 7→5 nm shrink saves ~30% (46.98 W) and IRDS 5→1.5 nm a
+//! further compounded 42% (27.37 W).  16 CMGs: 438 W.  The 6 GiB stacked
+//! L2 adds 98.3 W static (64 mW per 4 MiB at 7 nm, scaled) plus dynamic at
+//! a pessimistic 9:1 static:dynamic ratio → 109.23 W.  Chip TDP: 547 W;
+//! Stream-adjusted realistic draw: 420 W.
+
+/// Full power breakdown of the hypothetical LARC chip.
+#[derive(Clone, Copy, Debug)]
+pub struct LarcPower {
+    pub watts_per_core_7nm: f64,
+    pub watts_per_mif_7nm: f64,
+    pub cmg_7nm_w: f64,
+    pub cmg_5nm_w: f64,
+    pub cmg_1_5nm_w: f64,
+    pub chip_cores_w: f64,
+    pub cache_static_w: f64,
+    pub cache_total_w: f64,
+    pub tdp_w: f64,
+    /// Stream-Triad-adjusted realistic draw.
+    pub stream_w: f64,
+    /// Power density at 192 mm² (compute area only), W/mm².
+    pub density_w_mm2: f64,
+}
+
+pub fn larc_power() -> LarcPower {
+    // §2.6 constants
+    let core_w = 95.0 / 48.0; // 1.979 W/core (48 user cores)
+    let mif_w = 15.0 / 4.0; // 3.75 W per memory interface
+    let cmg_7 = 32.0 * core_w + mif_w; // 67.1 W
+    let cmg_5 = cmg_7 * 0.70; // TSMC 7→5 nm: -30%
+    let cmg_15 = cmg_5 * (1.0 - 0.42); // IRDS 5→1.5 nm: -42% compounded
+    let chip_cores = 16.0 * cmg_15; // 438 W
+
+    // cache: 64 mW per 4 MiB at 7 nm, pessimistically unchanged at 1.5 nm
+    let static_per_cmg = 0.064 * (384.0 / 4.0); // 6.144 W per 384 MiB CMG
+    let cache_static = 16.0 * static_per_cmg; // 98.3 W
+    let cache_total = cache_static / 0.9; // 9:1 static:dynamic → 109.23 W
+
+    let tdp = chip_cores + cache_total;
+    LarcPower {
+        watts_per_core_7nm: core_w,
+        watts_per_mif_7nm: mif_w,
+        cmg_7nm_w: cmg_7,
+        cmg_5nm_w: cmg_5,
+        cmg_1_5nm_w: cmg_15,
+        chip_cores_w: chip_cores,
+        cache_static_w: cache_static,
+        cache_total_w: cache_total,
+        tdp_w: tdp,
+        stream_w: 420.0,
+        density_w_mm2: tdp / 192.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmg_power_ladder_matches_paper() {
+        let p = larc_power();
+        assert!((p.cmg_7nm_w - 67.08).abs() < 0.1, "{}", p.cmg_7nm_w);
+        assert!((p.cmg_5nm_w - 46.98).abs() < 0.15, "{}", p.cmg_5nm_w);
+        assert!((p.cmg_1_5nm_w - 27.37).abs() < 0.25, "{}", p.cmg_1_5nm_w);
+    }
+
+    #[test]
+    fn chip_core_power_is_438w() {
+        assert!((larc_power().chip_cores_w - 438.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn cache_power_matches_paper() {
+        let p = larc_power();
+        assert!((p.cache_static_w - 98.3).abs() < 0.1, "{}", p.cache_static_w);
+        assert!((p.cache_total_w - 109.23).abs() < 0.15, "{}", p.cache_total_w);
+    }
+
+    #[test]
+    fn tdp_is_547w() {
+        assert!((larc_power().tdp_w - 547.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn density_below_microfluid_limit() {
+        // §2.6: 2.85 W/mm² at 192 mm², below the 3.5 W/mm² cooling limit
+        let p = larc_power();
+        assert!((p.density_w_mm2 - 2.85).abs() < 0.05, "{}", p.density_w_mm2);
+        assert!(p.density_w_mm2 < 3.5);
+    }
+}

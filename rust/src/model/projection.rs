@@ -1,0 +1,95 @@
+//! Full-chip performance projection (paper §6.1).
+//!
+//! The gem5-substitute pipeline compares single CMGs.  The paper's
+//! headline number comes from ideal scaling to the chip level: an A64FX
+//! chip has 4 CMGs, a LARC chip 16, so the per-chip speedup of a
+//! CMG-level speedup `s` under ideal (linear) scaling is `s · 16/4 = 4s`.
+//! Applied to the cache-responsive subset, the paper reports a range of
+//! 4.91x (xz) to 18.57x (MG-OMP) and a geometric mean of 9.56x.
+
+use crate::util::stats;
+
+/// CMG counts per chip.
+pub const A64FX_CMGS_PER_CHIP: f64 = 4.0;
+pub const LARC_CMGS_PER_CHIP: f64 = 16.0;
+
+/// Chip-level speedup from a CMG-level speedup under ideal scaling.
+pub fn full_chip_speedup(cmg_speedup: f64) -> f64 {
+    cmg_speedup * (LARC_CMGS_PER_CHIP / A64FX_CMGS_PER_CHIP)
+}
+
+/// The §5.4 cache-responsiveness criterion: a workload is "responsive to
+/// larger cache capacity" if either LARC config beats the 32-core baseline
+/// A64FX^32 by at least 10% (i.e. the gain is attributable to cache, not
+/// cores).
+pub fn cache_responsive(a64fx32_speedup: f64, larc_c_speedup: f64, larc_a_speedup: f64) -> bool {
+    larc_c_speedup >= 1.10 * a64fx32_speedup || larc_a_speedup >= 1.10 * a64fx32_speedup
+}
+
+/// Summary of the §6.1 projection over a set of per-workload CMG speedups.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    pub n_total: usize,
+    pub n_responsive: usize,
+    pub chip_speedups: Vec<(String, f64)>,
+    pub gm: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Project chip-level speedups for the cache-responsive workloads.
+/// `rows` = (name, a64fx32, larc_c, larc_a) CMG-level speedups vs A64FX_S.
+pub fn project(rows: &[(String, f64, f64, f64)]) -> Projection {
+    let mut chip = Vec::new();
+    for (name, s32, sc, sa) in rows {
+        if cache_responsive(*s32, *sc, *sa) {
+            let best = sc.max(*sa);
+            chip.push((name.clone(), full_chip_speedup(best)));
+        }
+    }
+    let vals: Vec<f64> = chip.iter().map(|(_, v)| *v).collect();
+    Projection {
+        n_total: rows.len(),
+        n_responsive: chip.len(),
+        gm: if vals.is_empty() { 0.0 } else { stats::geomean(&vals) },
+        min: stats::min(&vals),
+        max: stats::max(&vals),
+        chip_speedups: chip,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_scaling_is_4x() {
+        assert_eq!(full_chip_speedup(1.0), 4.0);
+        // paper anchor: MG-OMP's ≈4.64 CMG speedup → 18.57x chip
+        assert!((full_chip_speedup(4.642) - 18.57).abs() < 0.01);
+    }
+
+    #[test]
+    fn responsiveness_requires_cache_gain() {
+        // pure core-count gain: not responsive
+        assert!(!cache_responsive(2.0, 2.0, 2.05));
+        // cache adds >= 10% over the 32-core baseline: responsive
+        assert!(cache_responsive(2.0, 2.3, 2.4));
+        assert!(cache_responsive(1.0, 1.0, 1.2));
+    }
+
+    #[test]
+    fn projection_filters_and_aggregates() {
+        let rows = vec![
+            ("cachey".to_string(), 1.5, 3.0, 3.2), // responsive
+            ("compute".to_string(), 2.4, 2.4, 2.4), // not
+            ("fit".to_string(), 1.0, 2.0, 2.0),    // responsive
+        ];
+        let p = project(&rows);
+        assert_eq!(p.n_total, 3);
+        assert_eq!(p.n_responsive, 2);
+        assert_eq!(p.chip_speedups[0].1, 12.8); // 3.2 * 4
+        assert_eq!(p.chip_speedups[1].1, 8.0);
+        assert!((p.gm - (12.8f64 * 8.0).sqrt()).abs() < 1e-9);
+    }
+}

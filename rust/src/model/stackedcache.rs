@@ -1,0 +1,98 @@
+//! 3D-stacked SRAM cache model (paper §2.4), after Shiba et al.:
+//! capacity = N_dies · N_ch · N_cap, bandwidth = N_ch · f_clk · W.
+//!
+//! Shiba et al. demonstrated 8-high SRAM stacking with TCI: at 10 nm,
+//! eight stacks give ≈512 MiB in ≈121 mm² with 128 channels × 512 KiB per
+//! die.  Scaling 8x (10 → 1.5 nm) to the 12 mm² LARC CMG yields ≈102
+//! channels, rounded to 96; with 8 dies that is 384 MiB per CMG, and at
+//! 1 GHz with 16 B channels: 1536 GB/s.
+
+#[cfg(test)]
+use crate::util::units::MIB;
+
+/// Parameters + derived capacity/bandwidth of a stacked SRAM cache.
+#[derive(Clone, Copy, Debug)]
+pub struct StackedCache {
+    pub n_dies: u32,
+    pub n_channels: u32,
+    pub channel_cap_kib: u32,
+    pub channel_width_bytes: u32,
+    pub f_clk_ghz: f64,
+    /// Tag bytes per 256 B block.
+    pub tag_bytes: u32,
+    pub block_bytes: u32,
+}
+
+impl StackedCache {
+    /// Total capacity in bytes: N_dies · N_ch · N_cap.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.n_dies as u64 * self.n_channels as u64 * self.channel_cap_kib as u64 * 1024
+    }
+
+    /// Bandwidth in GB/s: N_ch · f_clk · W.
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.n_channels as f64 * self.f_clk_ghz * self.channel_width_bytes as f64
+    }
+
+    /// Total tag-array size in bytes for the whole cache.
+    pub fn tag_array_bytes(&self) -> u64 {
+        self.capacity_bytes() / self.block_bytes as u64 * self.tag_bytes as u64
+    }
+}
+
+/// The paper's LARC per-CMG stacked cache.
+pub fn stacked_cache() -> StackedCache {
+    StackedCache {
+        n_dies: 8,
+        // 128 ch/die at 10nm in 121mm² → ×8 density / ÷10 area ≈ 102 → 96
+        n_channels: 96,
+        channel_cap_kib: 512,
+        channel_width_bytes: 16,
+        f_clk_ghz: 1.0,
+        tag_bytes: 6,
+        block_bytes: 256,
+    }
+}
+
+/// Raw channel-count scaling from Shiba et al. before rounding:
+/// 128 channels × 8 (density) / 10 (area 121 → 12 mm²) ≈ 102.
+pub fn channels_before_rounding() -> f64 {
+    128.0 * 8.0 / 10.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_384_mib_per_cmg() {
+        assert_eq!(stacked_cache().capacity_bytes(), 384 * MIB);
+    }
+
+    #[test]
+    fn bandwidth_is_1536_gbs_per_cmg() {
+        assert_eq!(stacked_cache().bandwidth_gbs(), 1536.0);
+    }
+
+    #[test]
+    fn channel_rounding_matches_paper() {
+        assert!((channels_before_rounding() - 102.4).abs() < 0.1);
+        assert_eq!(stacked_cache().n_channels, 96);
+    }
+
+    #[test]
+    fn tag_array_is_9_mib_per_cmg() {
+        // paper: "the total tag array size for each CMG becomes 9 MiB"
+        assert_eq!(stacked_cache().tag_array_bytes(), 9 * MIB);
+    }
+
+    #[test]
+    fn full_chip_totals_match_section_2_5() {
+        let c = stacked_cache();
+        // 16 CMGs: 6 GiB of L2, 24.6 TB/s L2 bandwidth
+        let chip_capacity = 16 * c.capacity_bytes();
+        assert_eq!(chip_capacity, 6 * 1024 * MIB);
+        let chip_bw_tbs = 16.0 * c.bandwidth_gbs() / 1000.0;
+        assert!((chip_bw_tbs - 24.6).abs() < 0.1, "{chip_bw_tbs}");
+    }
+}

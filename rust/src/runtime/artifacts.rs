@@ -1,0 +1,169 @@
+//! Artifact manifest: which HLO file serves which (entry, shape) pair.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py`; this
+//! module parses it (with the in-tree JSON reader) and resolves entry
+//! points like "mca_block_cost at batch >= 3000" to concrete files.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Manifest key, e.g. "mca_block_cost_b2048".
+    pub name: String,
+    /// File name within the artifacts dir.
+    pub file: String,
+    /// Logical entry point ("mca_block_cost", "triad_fom", ...).
+    pub entry: String,
+    /// Batch size (MCA entries) or element count (triad), if applicable.
+    pub batch: Option<usize>,
+    /// Argument shapes as exported.
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+
+        let mut entries = Vec::new();
+        for (name, v) in obj {
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let entry = v
+                .get("entry")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing entry"))?
+                .to_string();
+            let batch = v
+                .get("batch")
+                .and_then(Json::as_usize)
+                .or_else(|| v.get("n").and_then(Json::as_usize));
+            let arg_shapes = v
+                .get("arg_shapes")
+                .and_then(Json::as_arr)
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.push(ManifestEntry {
+                name: name.clone(),
+                file,
+                entry,
+                batch,
+                arg_shapes,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Default artifacts dir: `$LARC_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("LARC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // crate root = dir containing Cargo.toml
+        let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        p.push("artifacts");
+        p
+    }
+
+    /// All entries with a given logical entry point, sorted by batch size.
+    pub fn by_entry(&self, entry: &str) -> Vec<&ManifestEntry> {
+        let mut v: Vec<&ManifestEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.entry == entry)
+            .collect();
+        v.sort_by_key(|e| e.batch.unwrap_or(0));
+        v
+    }
+
+    /// Smallest exported batch size >= `n` for an entry (or the largest
+    /// available, in which case callers must split).
+    pub fn batch_for(&self, entry: &str, n: usize) -> Option<&ManifestEntry> {
+        let sizes = self.by_entry(entry);
+        sizes
+            .iter()
+            .find(|e| e.batch.unwrap_or(0) >= n)
+            .copied()
+            .or_else(|| sizes.last().copied())
+    }
+
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        assert!(m.entries.len() >= 10);
+        let mca = m.by_entry("mca_block_cost");
+        assert!(mca.len() >= 3);
+        // batches sorted ascending
+        let batches: Vec<usize> = mca.iter().map(|e| e.batch.unwrap()).collect();
+        let mut sorted = batches.clone();
+        sorted.sort_unstable();
+        assert_eq!(batches, sorted);
+    }
+
+    #[test]
+    fn batch_for_picks_next_size_up() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let e = m.batch_for("mca_block_cost", 200).unwrap();
+        assert_eq!(e.batch, Some(512));
+        let e = m.batch_for("mca_block_cost", 100_000).unwrap();
+        assert_eq!(e.batch, Some(8192)); // largest available
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

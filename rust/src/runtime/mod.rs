@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path.  Python never runs at request time — see
+//! `python/compile/aot.py` for the build-time half.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Manifest, ManifestEntry};
+pub use pjrt::{PjrtModel, Runtime};

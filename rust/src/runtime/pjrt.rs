@@ -1,0 +1,206 @@
+//! PJRT CPU client wrapper: load HLO text, compile once, execute many.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids.
+//!
+//! Executables are compiled lazily on first use and cached for the process
+//! lifetime, so the campaign hot path pays compile cost once per
+//! (entry, shape) pair.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{Manifest, ManifestEntry};
+
+/// One compiled executable.
+pub struct PjrtModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Execute with f32 argument buffers; returns the flattened tuple
+    /// elements as f32 vectors.
+    pub fn run_f32(&self, args: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|(data, dims)| {
+                let l = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(l)
+                } else {
+                    l.reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True, so outputs are tuples.
+        let elems = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+        elems
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+            .collect()
+    }
+}
+
+/// Process-wide PJRT runtime: one CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<PjrtModel>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the artifact named `name`.
+    pub fn model(&self, name: &str) -> Result<std::sync::Arc<PjrtModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        let model = self.compile(entry)?;
+        let arc = std::sync::Arc::new(model);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Pick + compile the smallest exported batch >= n for a logical entry.
+    pub fn model_for_batch(&self, entry: &str, n: usize) -> Result<std::sync::Arc<PjrtModel>> {
+        let e = self
+            .manifest
+            .batch_for(entry, n)
+            .ok_or_else(|| anyhow!("no artifact for entry {entry}"))?;
+        let name = e.name.clone();
+        self.model(&name)
+    }
+
+    fn compile(&self, entry: &ManifestEntry) -> Result<PjrtModel> {
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", entry.name))
+            .with_context(|| format!("artifact {}", path.display()))?;
+        Ok(PjrtModel {
+            name: entry.name.clone(),
+            exe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new().unwrap())
+    }
+
+    #[test]
+    fn triad_artifact_computes_b_plus_s_c() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model("triad_fom_n4096").unwrap();
+        let s = [2.0f32];
+        let b = vec![1.0f32; 4096];
+        let c = vec![3.0f32; 4096];
+        let out = m
+            .run_f32(&[(&s, &[1]), (&b, &[4096]), (&c, &[4096])])
+            .unwrap();
+        assert_eq!(out.len(), 2); // (a, checksum)
+        assert!(out[0].iter().all(|&x| (x - 7.0).abs() < 1e-6));
+        assert!((out[1][0] - 7.0 * 4096.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn mca_artifact_matches_native_analyzer() {
+        let Some(rt) = runtime() else { return };
+        use crate::isa::{BasicBlock, InstrClass, InstrMix, NUM_CLASSES, NUM_PORTS};
+        use crate::mca::analyzers::port_pressure_native;
+        use crate::mca::port_model::{PortArch, PortModel};
+
+        let pm = PortModel::get(PortArch::A64fxLike);
+        let block = BasicBlock::new(
+            0,
+            "t",
+            InstrMix::new()
+                .with(InstrClass::VecFma, 8.0)
+                .with(InstrClass::Load, 4.0),
+            4.0,
+            true,
+        );
+        let native = port_pressure_native(&block, &pm);
+
+        let batch = 128usize;
+        let mut counts = vec![0f32; batch * NUM_CLASSES];
+        counts[..NUM_CLASSES].copy_from_slice(&block.mix.counts);
+        let ports = pm.ports_flat();
+        let lat = pm.lat_vec();
+        let ilp = vec![4.0f32; batch];
+
+        let m = rt.model("mca_block_cost_b128").unwrap();
+        let out = m
+            .run_f32(&[
+                (&counts, &[batch as i64, NUM_CLASSES as i64]),
+                (&ports, &[NUM_CLASSES as i64, NUM_PORTS as i64]),
+                (&lat, &[NUM_CLASSES as i64]),
+                (&ilp, &[batch as i64]),
+            ])
+            .unwrap();
+        assert!((out[0][0] - native).abs() < 1e-4, "pjrt {} vs native {}", out[0][0], native);
+        // padding rows (zero counts) must cost zero
+        assert_eq!(out[0][5], 0.0);
+    }
+
+    #[test]
+    fn model_cache_returns_same_instance() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.model("triad_fom_n4096").unwrap();
+        let b = rt.model("triad_fom_n4096").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

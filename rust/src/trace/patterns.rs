@@ -1,0 +1,656 @@
+//! Reusable memory-access pattern generators.
+//!
+//! Every proxy-app in the paper's suite reduces, for cache-behaviour
+//! purposes, to a composition of a small number of archetypes: streaming,
+//! strided streaming, random table lookup (XSBench), pointer chasing,
+//! 3D stencils (MiniFE/MG/FFB), blocked dense linear algebra (HPL/DGEMM),
+//! CSR SpMV (HPCG/CG/TAPP-20), FFT butterflies (FT/SWFFT), reductions, and
+//! AMR-style mixed refinement traffic.  The suite files under
+//! [`crate::trace::workloads`] instantiate these with per-workload
+//! parameters.
+//!
+//! All generators emit [`Access`]es at [`CHUNK`] granularity and partition
+//! their index space contiguously across threads.
+
+use super::{Access, AccessIter, CHUNK};
+use crate::util::prng::Rng;
+
+/// Parameterized access pattern.
+#[derive(Clone, Debug)]
+pub enum Pattern {
+    /// `streams` parallel sequential streams of `bytes` each, `passes`
+    /// sweeps; a `write_fraction` of stream 0's traffic is stores
+    /// (triad: 2 reads + 1 write = streams 3, write_fraction 1/3 of total
+    /// handled via dedicated write stream).
+    Stream {
+        bytes: u64,
+        passes: u32,
+        streams: u32,
+        write_fraction: f32,
+    },
+    /// Sequential but touching every `stride`-th chunk (vector stride
+    /// > line: no spatial reuse).
+    Strided {
+        bytes: u64,
+        stride_chunks: u32,
+        passes: u32,
+    },
+    /// `lookups` uniform-random reads into a `table_bytes` table; `chase`
+    /// serializes each lookup behind the previous one (latency-bound).
+    RandomLookup {
+        table_bytes: u64,
+        lookups: u64,
+        chase: bool,
+        seed: u64,
+    },
+    /// 3D structured-grid sweep: for each interior z-plane, read the three
+    /// z-planes around it and write one output plane; `sweeps` relaxation
+    /// iterations. Captures MiniFE/MG/FFB plane-reuse behaviour (a plane
+    /// read for z is reused for z+1 and z+2 if it fits in cache).
+    Stencil3d {
+        nx: u32,
+        ny: u32,
+        nz: u32,
+        elem_bytes: u32,
+        sweeps: u32,
+    },
+    /// Blocked dense matmul C += A*B with `block`^2-tile reuse; footprint
+    /// 3*n^2*elem. Compute-per-chunk is high (set by the phase mix).
+    BlockedGemm { n: u32, block: u32, elem_bytes: u32 },
+    /// CSR SpMV: stream row pointers + values, gather x with bounded
+    /// spread. `passes` solver iterations (HPCG/CG reuse x each pass).
+    CsrSpmv {
+        rows: u64,
+        nnz_per_row: u32,
+        elem_bytes: u32,
+        passes: u32,
+        col_spread_bytes: u64,
+        seed: u64,
+    },
+    /// FFT-style butterfly: `stages` passes with stride doubling each
+    /// stage over `n` elements.
+    Butterfly {
+        bytes: u64,
+        stages: u32,
+    },
+    /// Reduction: stream once per pass, negligible writes.
+    Reduction { bytes: u64, passes: u32 },
+    /// Thread-PRIVATE streams (weak-scaling working set): every thread owns
+    /// `bytes_per_thread`, so the aggregate footprint grows with the thread
+    /// count — the TAPP-kernel cache-contention scenario (paper §5.3:
+    /// kernels 8, 9, 12–15 slow down on A64FX^32 because 32 private sets
+    /// thrash the 8 MiB L2 that 12 sets fit).
+    PrivateStream {
+        bytes_per_thread: u64,
+        passes: u32,
+        streams: u32,
+        write_fraction: f32,
+    },
+}
+
+impl Pattern {
+    /// Bytes of distinct data the pattern touches (working-set size).
+    pub fn footprint(&self) -> u64 {
+        match *self {
+            Pattern::Stream { bytes, streams, .. } => bytes * streams as u64,
+            Pattern::Strided { bytes, .. } => bytes,
+            Pattern::RandomLookup { table_bytes, .. } => table_bytes,
+            Pattern::Stencil3d {
+                nx,
+                ny,
+                nz,
+                elem_bytes,
+                ..
+            } => 2 * nx as u64 * ny as u64 * nz as u64 * elem_bytes as u64,
+            Pattern::BlockedGemm { n, elem_bytes, .. } => {
+                3 * n as u64 * n as u64 * elem_bytes as u64
+            }
+            Pattern::CsrSpmv {
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                col_spread_bytes,
+                ..
+            } => rows * nnz_per_row as u64 * (elem_bytes as u64 + 4) + col_spread_bytes,
+            Pattern::Butterfly { bytes, .. } => bytes,
+            Pattern::Reduction { bytes, .. } => bytes,
+            // Per-thread footprint; aggregate scales with the thread count
+            // (reported per thread because the spec doesn't know it).
+            Pattern::PrivateStream {
+                bytes_per_thread,
+                streams,
+                ..
+            } => bytes_per_thread * streams as u64,
+        }
+    }
+
+    /// Aggregate footprint on a machine running `nthreads` threads.
+    pub fn footprint_at(&self, nthreads: usize) -> u64 {
+        match *self {
+            Pattern::PrivateStream { .. } => self.footprint() * nthreads as u64,
+            _ => self.footprint(),
+        }
+    }
+
+    /// Chunks one thread of `n` emits (the MCA edge weight).
+    pub fn chunks_per_thread(&self, nthreads: usize) -> u64 {
+        match *self {
+            // private working sets: per-thread work is fixed (weak scaling)
+            Pattern::PrivateStream { .. } => self.total_chunks(),
+            _ => (self.total_chunks() / nthreads as u64).max(1),
+        }
+    }
+
+    /// Total chunks across all threads.
+    pub fn total_chunks(&self) -> u64 {
+        match *self {
+            Pattern::Stream {
+                bytes,
+                passes,
+                streams,
+                ..
+            } => (bytes / CHUNK).max(1) * passes as u64 * streams as u64,
+            Pattern::Strided {
+                bytes,
+                stride_chunks,
+                passes,
+            } => ((bytes / CHUNK / stride_chunks as u64).max(1)) * passes as u64,
+            Pattern::RandomLookup { lookups, .. } => lookups,
+            Pattern::Stencil3d {
+                nx,
+                ny,
+                nz,
+                elem_bytes,
+                sweeps,
+            } => {
+                let row_chunks = chunks_of(nx as u64 * elem_bytes as u64);
+                // 3 read planes + 1 written plane per interior plane
+                4 * row_chunks * ny as u64 * (nz as u64).saturating_sub(2).max(1) * sweeps as u64
+            }
+            Pattern::BlockedGemm { n, block, elem_bytes } => {
+                let nb = (n as u64 / block as u64).max(1);
+                let tile_chunks = chunks_of(block as u64 * block as u64 * elem_bytes as u64);
+                // classic 3-nested tile loop: nb^3 tile-pair passes, 3 tiles each
+                nb * nb * nb * 3 * tile_chunks
+            }
+            Pattern::CsrSpmv {
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                passes,
+                ..
+            } => {
+                let row_bytes = nnz_per_row as u64 * (elem_bytes as u64 + 4);
+                // matrix stream + one gather per nnz group of 8
+                (chunks_of(rows * row_bytes) + rows * (nnz_per_row as u64 / 8).max(1))
+                    * passes as u64
+            }
+            Pattern::Butterfly { bytes, stages } => chunks_of(bytes) * stages as u64,
+            Pattern::Reduction { bytes, passes } => chunks_of(bytes) * passes as u64,
+            // per-thread chunk count (weak scaling)
+            Pattern::PrivateStream {
+                bytes_per_thread,
+                passes,
+                streams,
+                ..
+            } => chunks_of(bytes_per_thread) * passes as u64 * streams as u64,
+        }
+    }
+
+    /// Materialize the per-thread stream. `base` offsets the pattern's
+    /// address space (phases get disjoint bases).
+    pub fn stream(&self, base: u64, thread: usize, nthreads: usize) -> AccessIter {
+        match *self {
+            Pattern::Stream {
+                bytes,
+                passes,
+                streams,
+                write_fraction,
+            } => stream_iter(base, bytes, passes, streams, write_fraction, thread, nthreads),
+            Pattern::Strided {
+                bytes,
+                stride_chunks,
+                passes,
+            } => strided_iter(base, bytes, stride_chunks, passes, thread, nthreads),
+            Pattern::RandomLookup {
+                table_bytes,
+                lookups,
+                chase,
+                seed,
+            } => random_iter(base, table_bytes, lookups, chase, seed, thread, nthreads),
+            Pattern::Stencil3d {
+                nx,
+                ny,
+                nz,
+                elem_bytes,
+                sweeps,
+            } => stencil_iter(base, nx, ny, nz, elem_bytes, sweeps, thread, nthreads),
+            Pattern::BlockedGemm { n, block, elem_bytes } => {
+                gemm_iter(base, n, block, elem_bytes, thread, nthreads)
+            }
+            Pattern::CsrSpmv {
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                passes,
+                col_spread_bytes,
+                seed,
+            } => spmv_iter(
+                base,
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                passes,
+                col_spread_bytes,
+                seed,
+                thread,
+                nthreads,
+            ),
+            Pattern::Butterfly { bytes, stages } => {
+                butterfly_iter(base, bytes, stages, thread, nthreads)
+            }
+            Pattern::Reduction { bytes, passes } => {
+                stream_iter(base, bytes, passes, 1, 0.0, thread, nthreads)
+            }
+            Pattern::PrivateStream {
+                bytes_per_thread,
+                passes,
+                streams,
+                write_fraction,
+            } => {
+                // every thread gets its own full stream set, offset so the
+                // address ranges never overlap
+                let guard = bytes_per_thread * streams as u64 * 2 + (1 << 24);
+                stream_iter(
+                    base + thread as u64 * guard,
+                    bytes_per_thread,
+                    passes,
+                    streams,
+                    write_fraction,
+                    0,
+                    1,
+                )
+            }
+        }
+    }
+}
+
+fn chunks_of(bytes: u64) -> u64 {
+    (bytes / CHUNK).max(1)
+}
+
+/// Split `[0, total)` contiguously and evenly: thread t gets
+/// [total*t/n, total*(t+1)/n), so remainders spread across threads
+/// instead of piling onto the last one.
+fn split(total: u64, thread: usize, nthreads: usize) -> (u64, u64) {
+    let n = nthreads as u64;
+    let lo = total * thread as u64 / n;
+    let hi = total * (thread as u64 + 1) / n;
+    (lo, hi)
+}
+
+fn stream_iter(
+    base: u64,
+    bytes: u64,
+    passes: u32,
+    streams: u32,
+    write_fraction: f32,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let chunks = chunks_of(bytes);
+    let (lo, hi) = split(chunks, thread, nthreads);
+    // The last `write_streams` of the parallel streams are written.
+    let write_streams = (streams as f32 * write_fraction).round() as u32;
+    let iter = (0..passes).flat_map(move |_| {
+        (lo..hi).flat_map(move |c| {
+            (0..streams).map(move |s| Access {
+                addr: base + s as u64 * (chunks + 64) * CHUNK + c * CHUNK,
+                bytes: CHUNK as u32,
+                write: s >= streams - write_streams,
+                dep: false,
+                phase: 0,
+            })
+        })
+    });
+    Box::new(iter)
+}
+
+fn strided_iter(
+    base: u64,
+    bytes: u64,
+    stride_chunks: u32,
+    passes: u32,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let touched = chunks_of(bytes) / stride_chunks as u64;
+    let (lo, hi) = split(touched.max(1), thread, nthreads);
+    let iter = (0..passes).flat_map(move |_| {
+        (lo..hi).map(move |i| Access {
+            addr: base + i * stride_chunks as u64 * CHUNK,
+            // strided loads use only part of the chunk
+            bytes: 64,
+            write: false,
+            dep: false,
+                phase: 0,
+        })
+    });
+    Box::new(iter)
+}
+
+fn random_iter(
+    base: u64,
+    table_bytes: u64,
+    lookups: u64,
+    chase: bool,
+    seed: u64,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let (lo, hi) = split(lookups, thread, nthreads);
+    let mut rng = Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9));
+    let slots = (table_bytes / 64).max(1);
+    let iter = (lo..hi).map(move |_| Access {
+        addr: base + rng.below(slots) * 64,
+        bytes: 64,
+        write: false,
+        dep: chase,
+        phase: 0,
+    });
+    Box::new(iter)
+}
+
+fn stencil_iter(
+    base: u64,
+    nx: u32,
+    ny: u32,
+    nz: u32,
+    elem_bytes: u32,
+    sweeps: u32,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let row_bytes = nx as u64 * elem_bytes as u64;
+    let row_chunks = chunks_of(row_bytes);
+    let plane_bytes = row_bytes * ny as u64;
+    let out_base = base + plane_bytes * nz as u64 + (1 << 30);
+    // Partition interior planes across threads (OpenMP outer-z parallel).
+    let interior = (nz as u64).saturating_sub(2).max(1);
+    let (zlo, zhi) = split(interior, thread, nthreads);
+    let iter = (0..sweeps).flat_map(move |_| {
+        (zlo..zhi).flat_map(move |z| {
+            // read planes z, z+1, z+2; write plane z+1 of the output grid
+            (0..ny as u64).flat_map(move |y| {
+                (0..row_chunks).flat_map(move |c| {
+                    let row_off = y * row_bytes + c * CHUNK;
+                    (0..4u8).map(move |p| {
+                        if p < 3 {
+                            Access {
+                                addr: base + (z + p as u64) * plane_bytes + row_off,
+                                bytes: CHUNK as u32,
+                                write: false,
+                                dep: false,
+                phase: 0,
+                            }
+                        } else {
+                            Access {
+                                addr: out_base + (z + 1) * plane_bytes + row_off,
+                                bytes: CHUNK as u32,
+                                write: true,
+                                dep: false,
+                phase: 0,
+                            }
+                        }
+                    })
+                })
+            })
+        })
+    });
+    Box::new(iter)
+}
+
+fn gemm_iter(base: u64, n: u32, block: u32, elem_bytes: u32, thread: usize, nthreads: usize) -> AccessIter {
+    let nb = (n as u64 / block as u64).max(1);
+    let tile_bytes = block as u64 * block as u64 * elem_bytes as u64;
+    let tile_chunks = chunks_of(tile_bytes);
+    let mat_bytes = n as u64 * n as u64 * elem_bytes as u64;
+    let (ilo, ihi) = split(nb, thread, nthreads);
+    let iter = (ilo..ihi).flat_map(move |bi| {
+        (0..nb).flat_map(move |bj| {
+            (0..nb).flat_map(move |bk| {
+                // tiles: A[bi,bk], B[bk,bj], C[bi,bj]
+                let tiles = [
+                    (0u64, bi * nb + bk, false),
+                    (1, bk * nb + bj, false),
+                    (2, bi * nb + bj, true),
+                ];
+                tiles.into_iter().flat_map(move |(m, t, w)| {
+                    (0..tile_chunks).map(move |c| Access {
+                        addr: base + m * (mat_bytes + (1 << 28)) + t * tile_bytes + c * CHUNK,
+                        bytes: CHUNK as u32,
+                        write: w,
+                        dep: false,
+                phase: 0,
+                    })
+                })
+            })
+        })
+    });
+    Box::new(iter)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spmv_iter(
+    base: u64,
+    rows: u64,
+    nnz_per_row: u32,
+    elem_bytes: u32,
+    passes: u32,
+    col_spread_bytes: u64,
+    seed: u64,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let row_bytes = nnz_per_row as u64 * (elem_bytes as u64 + 4);
+    let (rlo, rhi) = split(rows, thread, nthreads);
+    let x_base = base + rows * row_bytes + (1 << 32);
+    let gathers = (nnz_per_row as u64 / 8).max(1);
+    let spread = col_spread_bytes.max(4096);
+    let mut rng = Rng::new(seed ^ (thread as u64).wrapping_mul(0xA5A5_5A5A));
+    let iter = (0..passes).flat_map(move |_| {
+        let mut local_rng = Rng::new(rng.next_u64());
+        (rlo..rhi).flat_map(move |r| {
+            let row_start = base + r * row_bytes;
+            let row_chunks = chunks_of(row_bytes);
+            // matrix stream (values + col indices), then x gathers around
+            // the row's diagonal neighbourhood (banded sparsity)
+            let diag = x_base + (r * elem_bytes as u64) & !63;
+            let mut g = Rng::new(local_rng.next_u64());
+            (0..row_chunks)
+                .map(move |c| Access {
+                    addr: row_start + c * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                phase: 0,
+                })
+                .chain((0..gathers).map(move |_| {
+                    let off = g.below(spread);
+                    Access {
+                        addr: diag.wrapping_add(off) & !63,
+                        bytes: 64,
+                        write: false,
+                        dep: false,
+                phase: 0,
+                    }
+                }))
+        })
+    });
+    Box::new(iter)
+}
+
+fn butterfly_iter(base: u64, bytes: u64, stages: u32, thread: usize, nthreads: usize) -> AccessIter {
+    let chunks = chunks_of(bytes);
+    let (lo, hi) = split(chunks, thread, nthreads);
+    let iter = (0..stages).flat_map(move |s| {
+        // stride doubles each stage; partner index = i XOR 2^s (in chunks)
+        let stride = 1u64 << (s % 24);
+        (lo..hi).flat_map(move |i| {
+            let partner = (i ^ stride) % chunks;
+            [
+                Access {
+                    addr: base + i * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                phase: 0,
+                },
+                Access {
+                    addr: base + partner * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: true,
+                    dep: false,
+                phase: 0,
+                },
+            ]
+            .into_iter()
+        })
+    });
+    Box::new(iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_chunk_count_matches_total() {
+        let p = Pattern::Stream {
+            bytes: 1024 * CHUNK,
+            passes: 2,
+            streams: 3,
+            write_fraction: 1.0 / 3.0,
+        };
+        let n: usize = p.stream(0, 0, 1).count();
+        assert_eq!(n as u64, p.total_chunks());
+    }
+
+    #[test]
+    fn stream_writes_one_of_three_streams() {
+        let p = Pattern::Stream {
+            bytes: 16 * CHUNK,
+            passes: 1,
+            streams: 3,
+            write_fraction: 1.0 / 3.0,
+        };
+        let accesses: Vec<_> = p.stream(0, 0, 1).collect();
+        let writes = accesses.iter().filter(|a| a.write).count();
+        assert_eq!(writes * 3, accesses.len());
+    }
+
+    #[test]
+    fn threads_cover_whole_index_space() {
+        let p = Pattern::Stream {
+            bytes: 100 * CHUNK,
+            passes: 1,
+            streams: 1,
+            write_fraction: 0.0,
+        };
+        let mut all: Vec<u64> = (0..4)
+            .flat_map(|t| p.stream(0, t, 4).map(|a| a.addr).collect::<Vec<_>>())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn random_lookup_within_table() {
+        let p = Pattern::RandomLookup {
+            table_bytes: 1 << 20,
+            lookups: 1000,
+            chase: false,
+            seed: 7,
+        };
+        for a in p.stream(0, 0, 1) {
+            assert!(a.addr < (1 << 20));
+            assert!(!a.write);
+        }
+    }
+
+    #[test]
+    fn chase_marks_dependencies() {
+        let p = Pattern::RandomLookup {
+            table_bytes: 1 << 16,
+            lookups: 10,
+            chase: true,
+            seed: 1,
+        };
+        assert!(p.stream(0, 0, 1).all(|a| a.dep));
+    }
+
+    #[test]
+    fn stencil_reads_three_planes_writes_one() {
+        let p = Pattern::Stencil3d {
+            nx: 8,
+            ny: 4,
+            nz: 6,
+            elem_bytes: 8,
+            sweeps: 1,
+        };
+        let acc: Vec<_> = p.stream(0, 0, 1).collect();
+        let writes = acc.iter().filter(|a| a.write).count();
+        assert_eq!(writes * 4, acc.len());
+    }
+
+    #[test]
+    fn gemm_footprint_is_three_matrices() {
+        let p = Pattern::BlockedGemm {
+            n: 64,
+            block: 16,
+            elem_bytes: 8,
+        };
+        assert_eq!(p.footprint(), 3 * 64 * 64 * 8);
+        assert!(p.stream(0, 0, 1).count() > 0);
+    }
+
+    #[test]
+    fn spmv_emits_matrix_and_gathers() {
+        let p = Pattern::CsrSpmv {
+            rows: 64,
+            nnz_per_row: 16,
+            elem_bytes: 8,
+            passes: 1,
+            col_spread_bytes: 1 << 16,
+            seed: 3,
+        };
+        let acc: Vec<_> = p.stream(0, 0, 1).collect();
+        assert!(acc.len() >= 64); // at least one access per row
+        assert!(acc.iter().any(|a| a.bytes == 64)); // gathers present
+    }
+
+    #[test]
+    fn butterfly_partner_in_range() {
+        let p = Pattern::Butterfly {
+            bytes: 64 * CHUNK,
+            stages: 6,
+        };
+        for a in p.stream(0, 0, 1) {
+            assert!(a.addr < 64 * CHUNK);
+        }
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let p = Pattern::RandomLookup {
+            table_bytes: 1 << 20,
+            lookups: 100,
+            chase: false,
+            seed: 42,
+        };
+        let a: Vec<_> = p.stream(0, 0, 2).collect();
+        let b: Vec<_> = p.stream(0, 0, 2).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,425 @@
+//! ECP proxy applications (paper §3.3): AMG, CoMD, Laghos, MACSio,
+//! MiniAMR, MiniFE, MiniTri, Nekbone, SW4lite, SWFFT, XSBench.
+//!
+//! Paper calibration anchors: XSBench (7.3x MCA; Table 3 L2 miss
+//! 32.1% → 0.1% on LARC_C — the table fits 256 MiB), miniAMR (7.4x MCA),
+//! CoMD compute-bound (cores-only gain), MiniFE is the Fig. 1 pilot app
+//! (sweep 100³..400³, Milan-X peak ≈3.4x at 160³).
+
+use super::{mixes, sb, sd};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::{GIB, MIB};
+
+fn ecp(name: &str, class: BoundClass, threads: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Ecp,
+        class,
+        threads,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases,
+    }
+}
+
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    vec![
+        amg(scale),
+        comd(scale),
+        laghos(scale),
+        macsio(scale),
+        miniamr(scale),
+        minife(128, scale),
+        minitri(scale),
+        nekbone(scale),
+        sw4lite(scale),
+        swfft(scale),
+        xsbench(scale),
+    ]
+}
+
+/// AMG: algebraic multigrid V-cycles — SpMV at several matrix sizes.
+pub fn amg(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::spmv();
+    let lvl = |rows: u64, passes: u32, seed: u64| Phase {
+        label: "vcycle",
+        pattern: Pattern::CsrSpmv {
+            rows: sb(rows * 256, scale) / 256,
+            nnz_per_row: 27,
+            elem_bytes: 8,
+            passes,
+            col_spread_bytes: sb(24 * MIB, scale),
+            seed,
+        },
+        mix,
+        ilp,
+    };
+    ecp(
+        "amg",
+        BoundClass::Bandwidth,
+        12,
+        vec![lvl(1_200_000, 4, 1), lvl(300_000, 8, 2), lvl(75_000, 16, 3)],
+    )
+}
+
+/// CoMD: 256k-atom MD — neighbour gathers + heavy force compute.
+pub fn comd(scale: Scale) -> Spec {
+    let (cmix, cilp) = mixes::compute();
+    let (gmix, gilp) = mixes::lookup();
+    ecp(
+        "comd",
+        BoundClass::Compute,
+        12,
+        vec![
+            Phase {
+                label: "neigh",
+                pattern: Pattern::RandomLookup {
+                    table_bytes: sb(24 * MIB, scale),
+                    lookups: 400_000,
+                    chase: false,
+                    seed: 0xC0,
+                },
+                mix: gmix,
+                ilp: gilp,
+            },
+            Phase {
+                label: "force",
+                pattern: Pattern::Reduction {
+                    bytes: sb(24 * MIB, scale),
+                    passes: 8,
+                },
+                mix: cmix.scaled(2.0),
+                ilp: cilp,
+            },
+        ],
+    )
+}
+
+/// Laghos: high-order Lagrangian hydro — small dense kernels + streams.
+pub fn laghos(scale: Scale) -> Spec {
+    let (gmix, gilp) = mixes::gemm_moderate();
+    let (smix, silp) = mixes::stream();
+    ecp(
+        "laghos",
+        BoundClass::Mixed,
+        12,
+        vec![
+            Phase {
+                label: "elemforce",
+                pattern: Pattern::BlockedGemm {
+                    n: 768,
+                    block: 32,
+                    elem_bytes: 8,
+                },
+                mix: gmix,
+                ilp: gilp,
+            },
+            Phase {
+                label: "update",
+                pattern: Pattern::Stream {
+                    bytes: sb(96 * MIB, scale),
+                    passes: 3,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: smix,
+                ilp: silp,
+            },
+        ],
+    )
+}
+
+/// MACSio: I/O proxy — ~1.14 GiB dump, write-dominated streaming.
+pub fn macsio(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::stream();
+    ecp(
+        "macsio",
+        BoundClass::Bandwidth,
+        12,
+        vec![Phase {
+            label: "dump",
+            pattern: Pattern::Stream {
+                bytes: sb(GIB + GIB / 8, scale) / 2,
+                passes: 1,
+                streams: 2,
+                write_fraction: 1.0,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// MiniAMR: adaptive mesh refinement — stencils over refined blocks.
+pub fn miniamr(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::stencil();
+    let level = |n: u32, sweeps: u32| Phase {
+        label: "amr-level",
+        pattern: Pattern::Stencil3d {
+            nx: sd(n, scale),
+            ny: sd(n, scale),
+            nz: sd(n, scale),
+            elem_bytes: 8,
+            sweeps,
+        },
+        mix,
+        ilp,
+    };
+    ecp(
+        "miniamr",
+        BoundClass::Bandwidth,
+        12,
+        vec![level(192, 4), level(96, 8), level(48, 16)],
+    )
+}
+
+/// MiniFE(n): implicit FE solve on an n³ grid — the Fig. 1 pilot workload.
+/// CG iterations = 27-pt SpMV + vector ops; footprint ≈ n³·27·12 B matrix.
+pub fn minife(n: u32, scale: Scale) -> Spec {
+    let (smix, silp) = mixes::spmv();
+    let (vmix, vilp) = mixes::stream();
+    let n = sd(n, scale) as u64;
+    let rows = n * n * n;
+    Spec {
+        name: if n == sd(128, scale) as u64 {
+            "minife".into()
+        } else {
+            format!("minife-{n}")
+        },
+        suite: Suite::Ecp,
+        class: BoundClass::Bandwidth,
+        threads: 8,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![
+            Phase {
+                label: "spmv",
+                pattern: Pattern::CsrSpmv {
+                    rows,
+                    nnz_per_row: 27,
+                    elem_bytes: 8,
+                    passes: 6,
+                    col_spread_bytes: (rows * 8 / 16).max(4096),
+                    seed: 0xFE,
+                },
+                mix: smix,
+                ilp: silp,
+            },
+            Phase {
+                label: "axpy",
+                pattern: Pattern::Stream {
+                    bytes: rows * 8,
+                    passes: 12,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: vmix,
+                ilp: vilp,
+            },
+        ],
+    }
+}
+
+/// Raw MiniFE at an exact grid size (no Scale shrink) — used by the Fig. 1
+/// sweep where the x-axis IS the grid size.
+pub fn minife_exact(n: u32) -> Spec {
+    let mut s = minife(n, Scale::Paper);
+    s.name = format!("minife-{n}");
+    s
+}
+
+/// The per-rank share of an n³ MiniFE problem distributed over `ranks`
+/// MPI ranks — the Fig. 1 pilot ran 16 ranks x 8 threads on 16 CCDs, so
+/// each CCD-slice simulation sees 1/16 of the global working set.  This is
+/// what makes the Milan-X improvement peak at 160³ in the paper: the
+/// per-CCD share (~83 MB) exceeds Milan's 32 MiB L3 slice but fits
+/// Milan-X's 96 MiB.
+pub fn minife_rank_share(n: u32, ranks: u32) -> Spec {
+    let (smix, silp) = mixes::spmv();
+    let (vmix, vilp) = mixes::stream();
+    let rows = (n as u64 * n as u64 * n as u64 / ranks as u64).max(512);
+    Spec {
+        name: format!("minife-{n}r{ranks}"),
+        suite: Suite::Ecp,
+        class: BoundClass::Bandwidth,
+        threads: 8,
+        max_threads: usize::MAX,
+        ranks: 1, // the share itself is simulated single-rank
+        phases: vec![
+            Phase {
+                label: "spmv",
+                pattern: Pattern::CsrSpmv {
+                    rows,
+                    nnz_per_row: 27,
+                    elem_bytes: 8,
+                    passes: 6,
+                    col_spread_bytes: (rows * 8 / 16).max(4096),
+                    seed: 0xFE,
+                },
+                mix: smix,
+                ilp: silp,
+            },
+            Phase {
+                label: "axpy",
+                pattern: Pattern::Stream {
+                    bytes: rows * 8,
+                    passes: 12,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: vmix,
+                ilp: vilp,
+            },
+        ],
+    }
+}
+
+/// MiniTri: triangle counting on BCSSTK30 — irregular graph gathers.
+pub fn minitri(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::lookup();
+    ecp(
+        "minitri",
+        BoundClass::Latency,
+        12,
+        vec![Phase {
+            label: "tricount",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(48 * MIB, scale),
+                lookups: 2_000_000,
+                chase: false,
+                seed: 0x731,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// Nekbone: spectral-element Poisson — small dense matrices + CG vectors.
+pub fn nekbone(scale: Scale) -> Spec {
+    let (gmix, gilp) = mixes::gemm();
+    let (vmix, vilp) = mixes::stream();
+    ecp(
+        "nekbone",
+        BoundClass::Mixed,
+        12,
+        vec![
+            Phase {
+                label: "local-grad",
+                pattern: Pattern::BlockedGemm {
+                    n: 512,
+                    block: 16,
+                    elem_bytes: 8,
+                },
+                mix: gmix,
+                ilp: gilp,
+            },
+            Phase {
+                label: "cg-vec",
+                pattern: Pattern::Stream {
+                    bytes: sb(36 * MIB, scale),
+                    passes: 8,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: vmix,
+                ilp: vilp,
+            },
+        ],
+    )
+}
+
+/// SW4lite: 4th-order seismic stencil, pointsource workload.
+pub fn sw4lite(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::stencil();
+    ecp(
+        "sw4lite",
+        BoundClass::Bandwidth,
+        12,
+        vec![Phase {
+            label: "rhs4",
+            pattern: Pattern::Stencil3d {
+                nx: sd(160, scale),
+                ny: sd(160, scale),
+                nz: sd(160, scale),
+                elem_bytes: 8,
+                sweeps: 6,
+            },
+            mix: mix.scaled(1.5), // 4th order: more FMAs per point
+            ilp,
+        }],
+    )
+}
+
+/// SWFFT: 128³ distributed FFT, 32 forward+backward pairs.
+pub fn swfft(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::fft();
+    ecp(
+        "swfft",
+        BoundClass::Bandwidth,
+        12,
+        vec![Phase {
+            label: "fft3d",
+            pattern: Pattern::Butterfly {
+                bytes: sb(2 * 128 * 128 * 128 * 16, scale),
+                stages: 21,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// XSBench: Monte-Carlo cross-section lookups — 15M random lookups into a
+/// ~120 MiB nuclide grid (small problem).  The canonical cache-capacity
+/// workload: misses everywhere until the table fits (LARC_C: 0.1%).
+pub fn xsbench(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::lookup();
+    ecp(
+        "xsbench",
+        BoundClass::CacheFit,
+        12,
+        vec![Phase {
+            label: "xs-lookup",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(120 * MIB, scale),
+                lookups: ((15_000_000.0 * scale.factor()) as u64).max(100_000),
+                chase: false,
+                seed: 0x5BE,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_proxies() {
+        assert_eq!(workloads(Scale::Small).len(), 11);
+    }
+
+    #[test]
+    fn xsbench_table_between_a64fx_and_larc_capacity() {
+        // the Table 3 anchor: misses at 8 MiB, fits at 256 MiB
+        let fp = xsbench(Scale::Paper).footprint();
+        assert!(fp > 8 * MIB && fp <= 256 * MIB, "{fp}");
+    }
+
+    #[test]
+    fn minife_footprint_grows_cubically() {
+        let small = minife_exact(100).footprint() as f64;
+        let large = minife_exact(200).footprint() as f64;
+        let ratio = large / small;
+        assert!((6.0..=10.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn minife_names_unique_per_size() {
+        assert_ne!(minife_exact(100).name, minife_exact(160).name);
+    }
+}

@@ -1,0 +1,150 @@
+//! RIKEN Fiber mini-apps (paper §3.3): FFB, FFVC, MODYLAS, mVMC, NICAM,
+//! NTChem, QCD.
+//!
+//! MODYLAS, NICAM, and NTChem require multi-rank MPI and are therefore
+//! excluded from the gem5-substitute runs (paper §5.3 does the same);
+//! they still appear in the MCA upper-bound study (Fig. 6).
+
+use super::{mixes, sb, sd};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::MIB;
+
+fn fiber(name: &str, class: BoundClass, threads: usize, ranks: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Fiber,
+        class,
+        threads,
+        max_threads: usize::MAX,
+        ranks,
+        phases,
+    }
+}
+
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    let (stream_mix, stream_ilp) = mixes::stream();
+    let (stencil_mix, stencil_ilp) = mixes::stencil();
+    let (spmv_mix, spmv_ilp) = mixes::spmv();
+    let (compute_mix, compute_ilp) = mixes::compute();
+    let (gemm_mix, gemm_ilp) = mixes::gemm();
+
+    vec![
+        // FFB: unstructured-grid CFD, 50^3 subregions — gather-heavy SpMV
+        fiber("ffb", BoundClass::Bandwidth, 12, 1, vec![Phase {
+            label: "frontflow",
+            pattern: Pattern::CsrSpmv {
+                rows: sb(250 * MIB, scale) / 256,
+                nnz_per_row: 8,
+                elem_bytes: 8,
+                passes: 3,
+                col_spread_bytes: sb(64 * MIB, scale),
+                seed: 0xFFB,
+            },
+            mix: spmv_mix,
+            ilp: spmv_ilp,
+        }]),
+        // FFVC: structured-grid CFD, 144^3 cuboids
+        fiber("ffvc", BoundClass::Bandwidth, 12, 1, vec![Phase {
+            label: "poisson",
+            pattern: Pattern::Stencil3d {
+                nx: sd(144, scale),
+                ny: sd(144, scale),
+                nz: sd(144, scale),
+                elem_bytes: 4,
+                sweeps: 10,
+            },
+            mix: stencil_mix,
+            ilp: stencil_ilp,
+        }]),
+        // MODYLAS: FMM molecular dynamics, wat222 — multi-rank MPI
+        fiber("modylas", BoundClass::Compute, 4, 4, vec![
+            Phase {
+                label: "p2p",
+                pattern: Pattern::RandomLookup {
+                    table_bytes: sb(16 * MIB, scale),
+                    lookups: 800_000,
+                    chase: false,
+                    seed: 0x30D,
+                },
+                mix: compute_mix,
+                ilp: compute_ilp,
+            },
+            Phase {
+                label: "fmm-m2l",
+                pattern: Pattern::Reduction {
+                    bytes: sb(8 * MIB, scale),
+                    passes: 16,
+                },
+                mix: compute_mix.scaled(1.5),
+                ilp: compute_ilp,
+            },
+        ]),
+        // mVMC: variational Monte Carlo — dense linear algebra (Pfaffians)
+        fiber("mvmc", BoundClass::Compute, 12, 1, vec![Phase {
+            label: "pfaffian",
+            pattern: Pattern::BlockedGemm {
+                n: 1024,
+                block: 64,
+                elem_bytes: 8,
+            },
+            mix: gemm_mix,
+            ilp: gemm_ilp,
+        }]),
+        // NICAM: global atmospheric dynamics, 1 simulated day — multi-rank
+        fiber("nicam", BoundClass::Bandwidth, 4, 4, vec![Phase {
+            label: "dyn-step",
+            pattern: Pattern::Stream {
+                bytes: sb(512 * MIB, scale),
+                passes: 3,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            mix: stream_mix,
+            ilp: stream_ilp,
+        }]),
+        // NTChem: quantum chemistry (H2O) — dense tensor contractions
+        fiber("ntchem", BoundClass::Compute, 4, 4, vec![Phase {
+            label: "eri",
+            pattern: Pattern::BlockedGemm {
+                n: 768,
+                block: 64,
+                elem_bytes: 8,
+            },
+            mix: gemm_mix,
+            ilp: gemm_ilp,
+        }]),
+        // QCD: class-2 lattice — Wilson-Dirac stencil streaming
+        fiber("qcd", BoundClass::Bandwidth, 12, 1, vec![Phase {
+            label: "wilson",
+            pattern: Pattern::Stream {
+                bytes: sb(96 * MIB, scale),
+                passes: 8,
+                streams: 2,
+                write_fraction: 0.5,
+            },
+            mix: stencil_mix.scaled(1.3),
+            ilp: stencil_ilp,
+        }]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_apps() {
+        assert_eq!(workloads(Scale::Small).len(), 7);
+    }
+
+    #[test]
+    fn mpi_apps_are_multirank() {
+        for s in workloads(Scale::Small) {
+            match s.name.as_str() {
+                "modylas" | "nicam" | "ntchem" => assert!(s.ranks > 1, "{}", s.name),
+                _ => assert_eq!(s.ranks, 1, "{}", s.name),
+            }
+        }
+    }
+}

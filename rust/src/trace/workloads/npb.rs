@@ -1,0 +1,248 @@
+//! NAS Parallel Benchmarks (class B), OpenMP and MPI variants (paper §3.3).
+//!
+//! Paper calibration anchors: CG-OMP has the largest MCA upper-bound
+//! (13.1x, SpMV latency/bandwidth bound); NPB overall GM ≈ 3x (OMP 4x,
+//! MPI 2.3x).  In gem5: MG-OMP is the headline (≈1.3x from cores, ≈2x
+//! from cache, ≈4.6x on LARC^A; L2 miss 59.8% → 0.4%); FT-OMP suffers
+//! cache contention on A64FX^32 (miss 11.6% → 48.2%); EP-OMP is
+//! compute-bound (cores-only speedup).
+
+use super::{mixes, sb, sd};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::MIB;
+
+fn omp(name: &str, class: BoundClass, threads: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Npb,
+        class,
+        threads,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases,
+    }
+}
+
+fn mpi(name: &str, class: BoundClass, ranks: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Npb,
+        class,
+        threads: 1,
+        max_threads: 1,
+        ranks,
+        phases,
+    }
+}
+
+fn cg_phase(scale: Scale, passes: u32) -> Phase {
+    let (mix, ilp) = mixes::spmv();
+    Phase {
+        label: "spmv",
+        pattern: Pattern::CsrSpmv {
+            // class B: 75k rows, ~13M nnz
+            rows: sb(75_000 * 256, scale) / 256,
+            nnz_per_row: 120,
+            elem_bytes: 8,
+            passes,
+            col_spread_bytes: sb(32 * MIB, scale),
+            seed: 0xC6,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn mg_phase(scale: Scale, level_shift: u32, sweeps: u32) -> Phase {
+    let (mix, ilp) = mixes::stencil();
+    let n = sd(256, scale) >> level_shift;
+    Phase {
+        label: "relax",
+        pattern: Pattern::Stencil3d {
+            nx: n.max(8),
+            ny: n.max(8),
+            nz: n.max(8),
+            elem_bytes: 8,
+            sweeps,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn ft_phase(scale: Scale) -> Phase {
+    let (mix, ilp) = mixes::fft();
+    Phase {
+        label: "fft",
+        pattern: Pattern::Butterfly {
+            // class B: 512x256x256 complex (~536 MiB); partially fits LARC
+            bytes: sb(384 * MIB, scale),
+            stages: 9,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn sweep3d_phases(scale: Scale, sweeps: u32) -> Vec<Phase> {
+    let (mix, ilp) = mixes::stencil();
+    vec![Phase {
+        label: "sweep",
+        pattern: Pattern::Stencil3d {
+            nx: sd(162, scale),
+            ny: sd(162, scale),
+            nz: sd(162, scale),
+            elem_bytes: 8,
+            sweeps,
+        },
+        mix,
+        ilp,
+    }]
+}
+
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    let mut v = Vec::new();
+
+    // ---------------- OpenMP variants ----------------
+    v.push(omp("cg-omp", BoundClass::Latency, 12, vec![cg_phase(scale, 8)]));
+    v.push(omp(
+        "mg-omp",
+        BoundClass::Bandwidth,
+        12,
+        vec![
+            mg_phase(scale, 0, 4),
+            mg_phase(scale, 1, 4),
+            mg_phase(scale, 2, 4),
+        ],
+    ));
+    v.push(omp("ft-omp", BoundClass::Bandwidth, 12, vec![ft_phase(scale)]));
+    v.push(omp("ep-omp", BoundClass::Compute, 12, vec![{
+        let (mix, ilp) = mixes::compute();
+        Phase {
+            label: "gauss",
+            pattern: Pattern::Reduction {
+                bytes: sb(2 * MIB, scale),
+                passes: 64,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(omp("is-omp", BoundClass::Bandwidth, 12, vec![{
+        let (mix, ilp) = mixes::lookup();
+        Phase {
+            label: "rank",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(128 * MIB, scale),
+                lookups: (sb(128 * MIB, scale) / 64) * 2,
+                chase: false,
+                seed: 0x15,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(omp("bt-omp", BoundClass::Mixed, 12, sweep3d_phases(scale, 6)));
+    v.push(omp("sp-omp", BoundClass::Bandwidth, 12, sweep3d_phases(scale, 8)));
+    v.push(omp("lu-omp", BoundClass::Mixed, 12, sweep3d_phases(scale, 6)));
+    v.push(omp("ua-omp", BoundClass::Mixed, 12, {
+        let (gmix, gilp) = mixes::gemm_moderate();
+        let mut p = sweep3d_phases(scale, 2);
+        p.push(Phase {
+            label: "adapt",
+            pattern: Pattern::BlockedGemm {
+                n: 512,
+                block: 32,
+                elem_bytes: 8,
+            },
+            mix: gmix,
+            ilp: gilp,
+        });
+        p
+    }));
+    v.push(omp("mg-omp-small", BoundClass::CacheFit, 12, vec![mg_phase(scale, 2, 16)]));
+
+    // ---------------- MPI variants (Fig. 6 only; gem5 skips them) -------
+    v.push(mpi("cg-mpi", BoundClass::Latency, 8, vec![cg_phase(scale, 8)]));
+    v.push(mpi(
+        "mg-mpi",
+        BoundClass::Bandwidth,
+        8,
+        vec![mg_phase(scale, 0, 4), mg_phase(scale, 1, 4)],
+    ));
+    v.push(mpi("ft-mpi", BoundClass::Bandwidth, 8, vec![ft_phase(scale)]));
+    v.push(mpi("ep-mpi", BoundClass::Compute, 8, vec![{
+        let (mix, ilp) = mixes::compute();
+        Phase {
+            label: "gauss",
+            pattern: Pattern::Reduction {
+                bytes: sb(2 * MIB, scale),
+                passes: 64,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(mpi("is-mpi", BoundClass::Bandwidth, 8, vec![{
+        let (mix, ilp) = mixes::lookup();
+        Phase {
+            label: "rank",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(128 * MIB, scale),
+                lookups: sb(128 * MIB, scale) / 64,
+                chase: false,
+                seed: 0x16,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(mpi("bt-mpi", BoundClass::Mixed, 8, sweep3d_phases(scale, 6)));
+    v.push(mpi("sp-mpi", BoundClass::Bandwidth, 8, sweep3d_phases(scale, 8)));
+    v.push(mpi("lu-mpi", BoundClass::Mixed, 8, sweep3d_phases(scale, 6)));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_omp_and_mpi_variants() {
+        let specs = workloads(Scale::Small);
+        let omp = specs.iter().filter(|s| s.name.ends_with("-omp") || s.name.contains("-omp-")).count();
+        let mpi = specs.iter().filter(|s| s.name.ends_with("-mpi")).count();
+        assert!(omp >= 9, "{omp}");
+        assert_eq!(mpi, 8);
+    }
+
+    #[test]
+    fn mpi_variants_are_multirank() {
+        for s in workloads(Scale::Small) {
+            if s.name.ends_with("-mpi") {
+                assert!(s.ranks > 1, "{}", s.name);
+            } else {
+                assert_eq!(s.ranks, 1, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mg_footprint_straddles_larc_capacities() {
+        // paper: MG-OMP misses at 256 MiB (29.4%) but fits 512 MiB (0.4%)
+        let specs = workloads(Scale::Paper);
+        let mg = specs.iter().find(|s| s.name == "mg-omp").unwrap();
+        let fp = mg.footprint();
+        assert!(fp > 200 * MIB, "mg footprint {fp}");
+        assert!(fp < 600 * MIB, "mg footprint {fp}");
+    }
+
+    #[test]
+    fn ep_is_small_footprint() {
+        let specs = workloads(Scale::Paper);
+        let ep = specs.iter().find(|s| s.name == "ep-omp").unwrap();
+        assert!(ep.footprint() < 8 * MIB);
+    }
+}

@@ -1,0 +1,246 @@
+//! SPEC CPU 2017[speed] and SPEC OMP 2012 (train inputs, non-compliant —
+//! paper §3.3.1).
+//!
+//! Paper calibration anchors: SPEC has the slimmest MCA potential overall
+//! (GM ≈ 1.9x) with outliers lbm, ilbdc, and especially swim; xz is the
+//! LOW end of the §6.1 full-chip projection (4.91x); imagick scales
+//! negatively past 8 threads on real A64FX (paper caps it; we set
+//! max_threads = 8); roms and imagick(OMP) gain on LARC in gem5.
+
+use super::{mixes, sb, sd};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::MIB;
+
+fn cpu(name: &str, class: BoundClass, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::SpecCpu,
+        class,
+        threads: 1,
+        max_threads: 1,
+        ranks: 1,
+        phases,
+    }
+}
+
+fn cpu_omp(name: &str, class: BoundClass, threads: usize, max: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::SpecCpu,
+        class,
+        threads,
+        max_threads: max,
+        ranks: 1,
+        phases,
+    }
+}
+
+fn omp12(name: &str, class: BoundClass, threads: usize, max: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::SpecOmp,
+        class,
+        threads,
+        max_threads: max,
+        ranks: 1,
+        phases,
+    }
+}
+
+fn int_phase(label: &'static str, table_mib: u64, lookups: u64, scale: Scale) -> Phase {
+    let (mix, ilp) = mixes::int_compute();
+    Phase {
+        label,
+        pattern: Pattern::RandomLookup {
+            table_bytes: sb(table_mib * MIB, scale),
+            lookups,
+            chase: false,
+            seed: table_mib ^ 0x57EC,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn stream_phase(label: &'static str, mib: u64, passes: u32, scale: Scale) -> Phase {
+    let (mix, ilp) = mixes::stream();
+    Phase {
+        label,
+        pattern: Pattern::Stream {
+            bytes: sb(mib * MIB, scale),
+            passes,
+            streams: 3,
+            write_fraction: 1.0 / 3.0,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn stencil_phase(label: &'static str, n: u32, sweeps: u32, scale: Scale) -> Phase {
+    let (mix, ilp) = mixes::stencil();
+    Phase {
+        label,
+        pattern: Pattern::Stencil3d {
+            nx: sd(n, scale),
+            ny: sd(n, scale),
+            nz: sd(n, scale),
+            elem_bytes: 8,
+            sweeps,
+        },
+        mix,
+        ilp,
+    }
+}
+
+fn compute_phase(label: &'static str, mib: u64, passes: u32, scale: Scale) -> Phase {
+    let (mix, ilp) = mixes::compute();
+    Phase {
+        label,
+        pattern: Pattern::Reduction {
+            bytes: sb(mib * MIB, scale),
+            passes,
+        },
+        mix,
+        ilp,
+    }
+}
+
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    let mut v = Vec::new();
+
+    // ---- SPEC CPU 2017 int/speed (single-threaded) ----
+    v.push(cpu("perlbench", BoundClass::Compute, vec![int_phase("interp", 2, 3_000_000, scale)]));
+    v.push(cpu("gcc", BoundClass::Mixed, vec![int_phase("compile", 24, 2_000_000, scale)]));
+    v.push(cpu("mcf", BoundClass::Latency, vec![{
+        let (mix, ilp) = mixes::latency();
+        Phase {
+            label: "simplex",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(96 * MIB, scale),
+                lookups: 1_500_000,
+                chase: true,
+                seed: 0x3CF,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(cpu("omnetpp", BoundClass::Latency, vec![int_phase("events", 64, 2_000_000, scale)]));
+    v.push(cpu("xalancbmk", BoundClass::Mixed, vec![int_phase("xslt", 32, 2_000_000, scale)]));
+    v.push(cpu("x264", BoundClass::Compute, vec![compute_phase("encode", 16, 8, scale)]));
+    v.push(cpu("deepsjeng", BoundClass::Compute, vec![int_phase("search", 4, 4_000_000, scale)]));
+    v.push(cpu("leela", BoundClass::Compute, vec![int_phase("mcts", 2, 4_000_000, scale)]));
+    v.push(cpu("exchange2", BoundClass::Compute, vec![int_phase("sudoku", 1, 6_000_000, scale)]));
+    v.push(cpu("xz", BoundClass::Latency, vec![int_phase("lzma", 48, 2_500_000, scale)]));
+
+    // ---- SPEC CPU 2017 fp/speed (OpenMP) ----
+    v.push(cpu_omp("bwaves", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("flux", 384, 4, scale)]));
+    v.push(cpu_omp("cactubssn", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stencil_phase("bssn", 128, 6, scale)]));
+    v.push(cpu_omp("lbm", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("collide", 320, 6, scale)]));
+    v.push(cpu_omp("wrf", BoundClass::Mixed, 12, usize::MAX,
+        vec![stencil_phase("physics", 96, 4, scale), compute_phase("micro", 8, 8, scale)]));
+    v.push(cpu_omp("cam4", BoundClass::Mixed, 12, usize::MAX,
+        vec![stream_phase("dyn", 128, 3, scale), compute_phase("rad", 8, 8, scale)]));
+    v.push(cpu_omp("pop2", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("baro", 192, 4, scale)]));
+    v.push(cpu_omp("imagick-s", BoundClass::Compute, 8, 8,
+        vec![compute_phase("convolve", 48, 12, scale)]));
+    v.push(cpu_omp("nab-s", BoundClass::Compute, 12, usize::MAX,
+        vec![compute_phase("md", 12, 16, scale)]));
+    v.push(cpu_omp("fotonik3d", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stencil_phase("fdtd", 120, 6, scale)]));
+    v.push(cpu_omp("roms", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("step", 160, 5, scale)]));
+
+    // ---- SPEC OMP 2012 ----
+    v.push(omp12("md-omp", BoundClass::Compute, 12, usize::MAX,
+        vec![compute_phase("force", 8, 24, scale)]));
+    v.push(omp12("bwaves-omp", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("flux", 256, 4, scale)]));
+    v.push(omp12("nab-omp", BoundClass::Compute, 12, usize::MAX,
+        vec![compute_phase("md", 12, 16, scale)]));
+    v.push(omp12("botsalgn", BoundClass::Compute, 12, usize::MAX,
+        vec![int_phase("align", 8, 3_000_000, scale)]));
+    v.push(omp12("botsspar", BoundClass::Mixed, 12, usize::MAX, vec![{
+        let (mix, ilp) = mixes::gemm_moderate();
+        Phase {
+            label: "lu-sparse",
+            pattern: Pattern::BlockedGemm { n: 1024, block: 64, elem_bytes: 8 },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(omp12("ilbdc", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("lbm-col", 288, 6, scale)]));
+    v.push(omp12("fma3d", BoundClass::Mixed, 12, usize::MAX,
+        vec![stencil_phase("elem", 96, 4, scale), compute_phase("mat", 8, 6, scale)]));
+    v.push(omp12("swim", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stream_phase("shallow", 448, 8, scale)]));
+    v.push(omp12("imagick-omp", BoundClass::Compute, 8, 8,
+        vec![compute_phase("convolve", 48, 12, scale)]));
+    v.push(omp12("mgrid331", BoundClass::Bandwidth, 12, usize::MAX,
+        vec![stencil_phase("relax", 160, 6, scale)]));
+    v.push(omp12("applu331", BoundClass::Mixed, 12, usize::MAX,
+        vec![stencil_phase("ssor", 128, 5, scale)]));
+    v.push(omp12("smithwa", BoundClass::Compute, 12, usize::MAX,
+        vec![int_phase("sw-dp", 16, 3_000_000, scale)]));
+    v.push(omp12("kdtree", BoundClass::Latency, 12, usize::MAX, vec![{
+        let (mix, ilp) = mixes::latency();
+        Phase {
+            label: "traverse",
+            pattern: Pattern::RandomLookup {
+                table_bytes: sb(64 * MIB, scale),
+                lookups: 2_000_000,
+                chase: true,
+                seed: 0x6B_D7,
+            },
+            mix,
+            ilp,
+        }
+    }]));
+    v.push(omp12("bt331", BoundClass::Mixed, 12, usize::MAX,
+        vec![stencil_phase("bt", 120, 5, scale)]));
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirty_four_spec_workloads() {
+        assert_eq!(workloads(Scale::Small).len(), 34);
+    }
+
+    #[test]
+    fn imagick_capped_at_8_threads() {
+        for s in workloads(Scale::Small) {
+            if s.name.starts_with("imagick") {
+                assert_eq!(s.max_threads, 8, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn swim_is_the_big_stream() {
+        let specs = workloads(Scale::Paper);
+        let swim = specs.iter().find(|s| s.name == "swim").unwrap();
+        assert!(swim.footprint() > 512 * MIB);
+        assert_eq!(swim.class, BoundClass::Bandwidth);
+    }
+
+    #[test]
+    fn int_suite_is_single_threaded() {
+        let specs = workloads(Scale::Small);
+        for name in ["perlbench", "gcc", "mcf", "xz", "leela"] {
+            let s = specs.iter().find(|s| s.name == name).unwrap();
+            assert_eq!(s.threads, 1, "{name}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! TOP500, STREAM, and deep-learning benchmarks (paper §3.3): HPL, HPCG,
+//! BabelStream, and the DLproxy SGEMM micro-benchmark.
+//!
+//! Paper calibration anchors: HPL is compute-bound (MCA predicts a small
+//! -11% "slowdown", i.e. ≈1x); HPCG is SpMV-dominated; BabelStream's
+//! unoptimized baseline underperforms per-core and hence profits from the
+//! 32-core configs; DLproxy's tall/skinny SGEMM (m=1577088, n=27, k=32)
+//! cannot reach peak and benefits from large L1/L2.
+
+use super::{mixes, sb};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::{GIB, MIB};
+
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    vec![hpl(scale), hpcg(scale), babelstream(scale), dlproxy(scale)]
+}
+
+/// HPL: dense LU on a 36864^2 matrix — blocked DGEMM, compute-bound.
+pub fn hpl(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::gemm();
+    let n = ((2048.0 * scale.factor().sqrt()) as u32).max(256);
+    Spec {
+        name: "hpl".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Compute,
+        threads: 12,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "dgemm",
+            pattern: Pattern::BlockedGemm {
+                n,
+                block: 128,
+                elem_bytes: 8,
+            },
+            mix,
+            ilp,
+        }],
+    }
+}
+
+/// HPCG: conjugate gradient with a 27-point sparse operator, 120^3 global.
+pub fn hpcg(scale: Scale) -> Spec {
+    let (smix, silp) = mixes::spmv();
+    let (vmix, vilp) = mixes::stream();
+    let rows = sb(120 * 120 * 120 * 256, scale) / 256;
+    Spec {
+        name: "hpcg".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 12,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![
+            Phase {
+                label: "spmv",
+                pattern: Pattern::CsrSpmv {
+                    rows,
+                    nnz_per_row: 27,
+                    elem_bytes: 8,
+                    passes: 8,
+                    col_spread_bytes: sb(16 * MIB, scale),
+                    seed: 0x4C6,
+                },
+                mix: smix,
+                ilp: silp,
+            },
+            Phase {
+                label: "waxpby",
+                pattern: Pattern::Stream {
+                    bytes: rows * 8,
+                    passes: 16,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: vmix,
+                ilp: vilp,
+            },
+        ],
+    }
+}
+
+/// BabelStream: 2 GiB vectors, pure triad.
+pub fn babelstream(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::stream();
+    Spec {
+        name: "babelstream".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 12,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "triad",
+            pattern: Pattern::Stream {
+                bytes: sb(2 * GIB / 3, scale), // three 2/3-GiB vectors (2 GiB total)
+                passes: 2,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            mix,
+            ilp,
+        }],
+    }
+}
+
+/// DLproxy: SGEMM m=1577088, n=27, k=32 — tall/skinny, bandwidth-starved.
+pub fn dlproxy(scale: Scale) -> Spec {
+    // A (m x k) streams at 1577088*32*4 B ≈ 192 MiB; B (k x n) is tiny and
+    // L1-resident; C ≈ 162 MiB. Effectively a stream with moderate FMA.
+    let (mut mix, ilp) = mixes::stream();
+    mix.add(crate::isa::InstrClass::VecFma, 4.0);
+    Spec {
+        name: "dlproxy".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 12,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "sgemm-ts",
+            pattern: Pattern::Stream {
+                bytes: sb(192 * MIB, scale),
+                passes: 2,
+                streams: 2,
+                write_fraction: 0.5,
+            },
+            mix,
+            ilp,
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_workloads() {
+        assert_eq!(workloads(Scale::Small).len(), 4);
+    }
+
+    #[test]
+    fn hpl_is_compute_bound_class() {
+        assert_eq!(hpl(Scale::Small).class, BoundClass::Compute);
+    }
+
+    #[test]
+    fn babelstream_exceeds_every_l2_at_paper_scale() {
+        assert!(babelstream(Scale::Paper).footprint() > 512 * MIB);
+    }
+}

@@ -1,0 +1,89 @@
+//! Micro-bench harness (criterion substitute; see DESIGN.md §5).
+//!
+//! `cargo bench` runs the `[[bench]] harness = false` binaries under
+//! `rust/benches/`; each uses this harness: warmup, N timed iterations,
+//! median ± MAD reporting, and an optional throughput figure.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub iters: usize,
+    /// Optional items-per-second figure (items supplied by the caller).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>12} +- {:<10} ({} iters)",
+            self.name,
+            crate::util::units::fmt_seconds(self.median_s),
+            crate::util::units::fmt_seconds(self.mad_s),
+            self.iters
+        );
+        if let Some((rate, unit)) = self.throughput {
+            line.push_str(&format!("  [{rate:.2e} {unit}/s]"));
+        }
+        line
+    }
+}
+
+/// Run `f` with warmup and timing; `items` is the per-iteration work amount
+/// for throughput reporting (pass 0 to omit).
+pub fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    // Warmup (also primes caches/JIT-free but page-faults matter).
+    let mut items = f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        items = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let median_s = stats::median(&times);
+    let throughput = if items > 0 && median_s > 0.0 {
+        Some((items as f64 / median_s, "items"))
+    } else {
+        None
+    };
+    BenchResult {
+        name: name.to_string(),
+        median_s,
+        mad_s: stats::mad(&times),
+        iters,
+        throughput,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("spin", 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+            10_000
+        });
+        assert!(r.median_s >= 0.0);
+        assert!(r.throughput.is_some());
+        assert!(r.report().contains("spin"));
+    }
+}

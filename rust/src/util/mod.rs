@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! The build image is offline and the vendored crate set is minimal, so the
+//! usual ecosystem crates are substituted here (documented in DESIGN.md §5):
+//! [`prng`] replaces `rand`, [`prop`] replaces `proptest`, [`bench`]
+//! replaces `criterion`, [`json`]/[`csv`] replace `serde`.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,55 @@
+//! Mini property-test harness (proptest substitute; see DESIGN.md §5).
+//!
+//! Usage:
+//! ```
+//! use larc::util::prop::check;
+//! check("sum is commutative", 100, |rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic RNG (seeded by case index), so a
+//! failing case prints a seed that reproduces it exactly.  No shrinking —
+//! generators should keep cases small instead.
+
+use crate::util::prng::Rng;
+
+/// Run `cases` random cases of `prop`; panics with seed + message on the
+/// first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("below bound", 50, |rng| {
+            let b = 1 + rng.below(100);
+            let x = rng.below(b);
+            if x < b {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_name() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+}

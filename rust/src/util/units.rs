@@ -1,0 +1,59 @@
+//! Byte / bandwidth / frequency units and formatting.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// 1 GB/s in bytes per second (decimal, matching the paper's GB/s).
+pub const GB: f64 = 1e9;
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB && b % GIB == 0 {
+        format!("{} GiB", b / GIB)
+    } else if b >= MIB && b % MIB == 0 {
+        format!("{} MiB", b / MIB)
+    } else if b >= KIB && b % KIB == 0 {
+        format!("{} KiB", b / KIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e12 {
+        format!("{:.1} TB/s", bytes_per_sec / 1e12)
+    } else if bytes_per_sec >= 1e9 {
+        format!("{:.1} GB/s", bytes_per_sec / 1e9)
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    }
+}
+
+pub fn fmt_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_round_units() {
+        assert_eq!(fmt_bytes(64 * KIB), "64 KiB");
+        assert_eq!(fmt_bytes(384 * MIB), "384 MiB");
+        assert_eq!(fmt_bytes(6 * GIB), "6 GiB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+
+    #[test]
+    fn formats_bandwidth() {
+        assert_eq!(fmt_bw(1536.0 * GB), "1.5 TB/s");
+        assert_eq!(fmt_bw(256.0 * GB), "256.0 GB/s");
+    }
+}

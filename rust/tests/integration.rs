@@ -1,0 +1,214 @@
+//! Integration tests: the full three-layer stack plus cross-module shape
+//! checks against the paper's calibration anchors.
+//!
+//! PJRT-backed tests skip (with a notice) when `make artifacts` hasn't
+//! run; everything else is self-contained.
+
+use larc::cachesim::{self, configs};
+use larc::coordinator::{Campaign, Job, McaBatcher};
+use larc::mca::{self, PortArch, PortModel};
+use larc::runtime::{Manifest, Runtime};
+use larc::trace::{workloads, Scale};
+use larc::util::stats;
+
+fn artifacts() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+// ---------------------------------------------------------------- L3+L1/L2
+
+#[test]
+fn pjrt_end_to_end_mca_estimate_matches_native() {
+    if !artifacts() {
+        eprintln!("skip: artifacts not built");
+        return;
+    }
+    let rt = std::sync::Arc::new(Runtime::new().unwrap());
+    let pm = PortModel::get(PortArch::BroadwellLike);
+    let spec = workloads::by_name("xsbench", Scale::Tiny).unwrap();
+
+    let native = mca::estimate_runtime(&spec, &pm, 2.2, 3);
+    let mut batcher = McaBatcher::new(rt, &pm);
+    let mut eval = |blocks: &[larc::isa::BasicBlock]| -> Vec<f32> {
+        batcher.eval(blocks).expect("pjrt")
+    };
+    let pjrt = mca::estimate::estimate_runtime_with(&spec, &pm, 2.2, 3, &mut eval);
+
+    let rel = (native.cycles - pjrt.cycles).abs() / native.cycles;
+    assert!(rel < 1e-4, "native {} vs pjrt {}", native.cycles, pjrt.cycles);
+}
+
+#[test]
+fn pjrt_triad_and_stencil_artifacts_compute_real_numerics() {
+    if !artifacts() {
+        eprintln!("skip: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+
+    let m = rt.model("triad_fom_n65536").unwrap();
+    let s = [0.5f32];
+    let b = vec![2.0f32; 65536];
+    let c = vec![4.0f32; 65536];
+    let out = m.run_f32(&[(&s, &[1]), (&b, &[65536]), (&c, &[65536])]).unwrap();
+    assert!(out[0].iter().all(|&x| (x - 4.0).abs() < 1e-6));
+    assert!((out[1][0] - 4.0 * 65536.0).abs() < 16.0);
+
+    let m = rt.model("stencil_fom_34x34x34").unwrap();
+    let w = vec![1.0f32 / 27.0; 27]; // averaging stencil on a constant field
+    let x = vec![3.0f32; 34 * 34 * 34];
+    let out = m.run_f32(&[(&w, &[27]), (&x, &[34, 34, 34])]).unwrap();
+    assert!(out[0].iter().all(|&v| (v - 3.0).abs() < 1e-4));
+    assert!(out[1][0].abs() < 1e-2); // averaging a constant: zero residual
+}
+
+// ------------------------------------------------------------ shape anchors
+
+#[test]
+fn xsbench_cache_capacity_anchor() {
+    // Table 3: XSBench misses badly at 8 MiB, barely at 256 MiB.
+    let spec = workloads::by_name("xsbench", Scale::Small).unwrap();
+    let a = cachesim::simulate(&spec, &configs::a64fx_s(), 12);
+    let c = cachesim::simulate(&spec, &configs::larc_c(), 32);
+    assert!(
+        a.stats.l2_miss_rate() > 0.25,
+        "a64fx_s miss {}",
+        a.stats.l2_miss_rate()
+    );
+    assert!(
+        c.stats.l2_miss_rate() < 0.1,
+        "larc_c miss {}",
+        c.stats.l2_miss_rate()
+    );
+    assert!(a.runtime_s / c.runtime_s > 1.7, "{}", a.runtime_s / c.runtime_s);
+}
+
+#[test]
+fn compute_bound_gains_come_from_cores_not_cache() {
+    // EP-OMP: the A64FX^32 and LARC_C speedups should be close (paper:
+    // "EP-OMP, CoMD, and other compute-bound benchmarks benefit only from
+    // the higher core count").
+    let spec = workloads::by_name("ep-omp", Scale::Small).unwrap();
+    let base = cachesim::simulate(&spec, &configs::a64fx_s(), 12);
+    let cores = cachesim::simulate(&spec, &configs::a64fx_32(), 32);
+    let larc = cachesim::simulate(&spec, &configs::larc_c(), 32);
+    let s_cores = base.runtime_s / cores.runtime_s;
+    let s_larc = base.runtime_s / larc.runtime_s;
+    assert!(s_cores > 1.5, "core scaling too weak: {s_cores}");
+    assert!(
+        (s_larc / s_cores - 1.0).abs() < 0.15,
+        "cache added {s_larc} vs cores {s_cores} for compute-bound workload"
+    );
+}
+
+#[test]
+fn contention_kernel_slows_on_32_cores_recovers_on_larc() {
+    // Paper §5.3: TAPP kernels 8/9/12-15 suffer L2 contention on A64FX^32.
+    let spec = workloads::by_name("tapp13-private", Scale::Paper).unwrap();
+    let base = cachesim::simulate(&spec, &configs::a64fx_s(), 12);
+    let b32 = cachesim::simulate(&spec, &configs::a64fx_32(), 32);
+    let larc = cachesim::simulate(&spec, &configs::larc_c(), 32);
+    // contention: per-thread working sets thrash the 8 MiB L2 at 32 threads
+    assert!(
+        b32.stats.l2_miss_rate() > base.stats.l2_miss_rate() + 0.05,
+        "no contention: base {} vs 32c {}",
+        base.stats.l2_miss_rate(),
+        b32.stats.l2_miss_rate()
+    );
+    // LARC's 256 MiB absorbs all 32 private sets
+    assert!(larc.stats.l2_miss_rate() < 0.1, "{}", larc.stats.l2_miss_rate());
+    assert!(larc.runtime_s < b32.runtime_s);
+}
+
+#[test]
+fn mca_upper_bound_exceeds_simulated_speedups() {
+    // Fig. 9 plots the MCA estimate as the upper-bound reference: for
+    // memory-bound workloads it should dominate the simulated speedups.
+    let pm = PortModel::get(PortArch::A64fxLike);
+    for name in ["mg-omp", "xsbench"] {
+        let mut spec = workloads::by_name(name, Scale::Tiny).unwrap();
+        let base = cachesim::simulate(&spec, &configs::a64fx_s(), 12);
+        let larc = cachesim::simulate(&spec, &configs::larc_a(), 32);
+        // the upper bound assumes the same parallelism as the LARC run
+        spec.threads = 32;
+        let mca_rt = mca::estimate_runtime(&spec, &pm, 2.2, 7).runtime_s;
+        let sim_speedup = base.runtime_s / larc.runtime_s;
+        let mca_speedup = base.runtime_s / mca_rt;
+        // both are approximations; the bound should be in the same band
+        // or above, never far below
+        assert!(
+            mca_speedup > 0.6 * sim_speedup,
+            "{name}: mca {mca_speedup} vs sim {sim_speedup}"
+        );
+    }
+}
+
+#[test]
+fn campaign_over_config_matrix_is_consistent() {
+    // mini-matrix: one workload x 4 configs through the campaign scheduler
+    let spec = workloads::by_name("minife", Scale::Tiny).unwrap();
+    let jobs: Vec<Job> = configs::table2_configs()
+        .into_iter()
+        .map(|cfg| {
+            let threads = spec.effective_threads(cfg.cores);
+            Job::CacheSim {
+                spec: spec.clone(),
+                config: cfg,
+                threads,
+            }
+        })
+        .collect();
+    let out = Campaign::new(jobs.clone()).with_workers(2).run();
+    assert_eq!(out.len(), 4);
+    let rts: Vec<f64> = out.iter().map(|o| o.runtime_s()).collect();
+    // baseline should be slowest or tied; larc_a fastest or tied
+    assert!(rts[0] >= rts[2] * 0.99, "baseline {} vs larc_c {}", rts[0], rts[2]);
+    assert!(rts[3] <= rts[1] * 1.01, "larc_a {} vs a64fx32 {}", rts[3], rts[1]);
+
+    // re-running yields identical numbers (determinism across pools)
+    let again = Campaign::new(jobs).with_workers(4).run();
+    for (a, b) in out.iter().zip(&again) {
+        assert_eq!(a.runtime_s(), b.runtime_s());
+    }
+}
+
+#[test]
+fn minife_capacity_sweep_has_a_peak() {
+    // Fig. 1 shape: Milan-X improvement peaks at the grid size whose
+    // per-rank share exceeds Milan's L3 slice but fits Milan-X's (the
+    // paper's peak is at 160^3 with 16 ranks).
+    let milan = configs::milan();
+    let milan_x = configs::milan_x();
+    let mut imps = Vec::new();
+    let ns = [100u32, 160, 240];
+    for n in ns {
+        let spec = larc::trace::workloads::ecp::minife_rank_share(n, 16);
+        let t = spec.effective_threads(milan.cores);
+        let a = cachesim::simulate(&spec, &milan, t);
+        let b = cachesim::simulate(&spec, &milan_x, t);
+        imps.push(a.runtime_s / b.runtime_s);
+    }
+    // interior peak: 160^3 beats both 100^3 (fits both) and 240^3 (fits
+    // neither)
+    assert!(
+        imps[1] > imps[0] + 0.1 && imps[1] > imps[2] + 0.1,
+        "no interior capacity peak: {imps:?}"
+    );
+    assert!(imps[1] > 1.3, "peak too small: {imps:?}");
+    let _ = stats::max(&imps);
+}
+
+#[test]
+fn headline_projection_is_in_papers_ballpark() {
+    // §6.1: cache-responsive GM chip-level speedup 9.56x. At Tiny scale
+    // footprints shrink, so accept a broad band — the assertion is about
+    // order of magnitude and sign, not the exact value.
+    let rows = vec![
+        ("a".to_string(), 1.8, 3.1, 3.4),
+        ("b".to_string(), 1.2, 2.4, 2.6),
+        ("c".to_string(), 2.5, 2.5, 2.5), // compute-bound: filtered out
+    ];
+    let p = larc::model::projection::project(&rows);
+    assert_eq!(p.n_responsive, 2);
+    assert!(p.gm > 8.0 && p.gm < 16.0, "gm {}", p.gm);
+}

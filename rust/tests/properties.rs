@@ -1,0 +1,178 @@
+//! Cross-module property tests (via the in-tree `util::prop` harness —
+//! the offline vendor set has no proptest; DESIGN.md §5).
+
+use larc::cachesim::{self, configs};
+use larc::isa::{BasicBlock, InstrClass, InstrMix, ALL_CLASSES};
+use larc::mca::{self, analyzers, cfg::Cfg, PortArch, PortModel};
+use larc::trace::patterns::Pattern;
+use larc::trace::{BoundClass, Phase, Spec, Suite};
+use larc::util::prng::Rng;
+use larc::util::prop::check;
+use larc::util::stats;
+
+fn random_mix(rng: &mut Rng) -> InstrMix {
+    let mut mix = InstrMix::new();
+    for c in ALL_CLASSES {
+        if c != InstrClass::Nop {
+            mix.add(c, rng.below(12) as f32);
+        }
+    }
+    mix
+}
+
+fn random_stream_spec(rng: &mut Rng) -> Spec {
+    let bytes = 64 * 1024 + rng.below(4 * 1024 * 1024);
+    Spec {
+        name: "prop".into(),
+        suite: Suite::Ecp,
+        class: BoundClass::Mixed,
+        threads: 1 + rng.below(8) as usize,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "p",
+            pattern: Pattern::Stream {
+                bytes,
+                passes: 1 + rng.below(3) as u32,
+                streams: 1 + rng.below(3) as u32,
+                write_fraction: rng.f64() as f32,
+            },
+            mix: random_mix(rng),
+            ilp: 1.0 + rng.f64() as f32 * 7.0,
+        }],
+    }
+}
+
+#[test]
+fn prop_analyzers_are_nonnegative_and_median_bounded() {
+    let pm = PortModel::get(PortArch::BroadwellLike);
+    check("analyzer bounds", 200, |rng| {
+        let b = BasicBlock::new(0, "p", random_mix(rng), 1.0 + rng.f64() as f32 * 9.0, rng.below(2) == 0);
+        let vals: Vec<f64> = analyzers::ALL_ANALYZERS
+            .iter()
+            .map(|&a| analyzers::run(a, &b, &pm) as f64)
+            .collect();
+        if vals.iter().any(|v| *v < 0.0 || !v.is_finite()) {
+            return Err(format!("negative/NaN analyzer value: {vals:?}"));
+        }
+        let med = analyzers::median_cpiter(&b, &pm, None) as f64;
+        if med < stats::min(&vals) - 1e-6 || med > stats::max(&vals) + 1e-6 {
+            return Err(format!("median {med} outside {vals:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq1_cycles_monotone_in_edge_weights() {
+    // Adding calls to any CFG edge can only increase Eq.(1) cycles.
+    let pm = PortModel::get(PortArch::A64fxLike);
+    check("eq1 monotone", 50, |rng| {
+        let mut g = Cfg::new();
+        let n = 2 + rng.below(6) as usize;
+        for i in 0..n {
+            let looping = i > 0;
+            g.add_block(BasicBlock::new(
+                0,
+                &format!("b{i}"),
+                random_mix(rng),
+                1.0 + rng.f64() as f32 * 4.0,
+                looping,
+            ));
+        }
+        for i in 1..n as u32 {
+            g.add_edge(i - 1, i, 1 + rng.below(100));
+            if rng.below(2) == 0 {
+                g.add_edge(i, i, rng.below(1000));
+            }
+        }
+        let cpiter: Vec<f32> = g
+            .blocks
+            .iter()
+            .map(|b| analyzers::port_pressure_native(b, &pm))
+            .collect();
+        let before = g.weighted_cycles(&cpiter);
+        // bump one random edge
+        let e = rng.below(g.edges.len() as u64) as usize;
+        g.edges[e].calls += 1 + rng.below(50);
+        let after = g.weighted_cycles(&cpiter);
+        if after + 1e-9 < before {
+            return Err(format!("cycles decreased: {before} -> {after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bigger_l2_never_much_slower() {
+    // For any stream workload, quadrupling L2 capacity must not slow the
+    // simulation down beyond noise (LRU inclusion at the machine level).
+    check("bigger L2 not slower", 8, |rng| {
+        let spec = random_stream_spec(rng);
+        let t = spec.threads;
+        let small = cachesim::simulate(&spec, &configs::a64fx_s(), t);
+        let big = cachesim::simulate(&spec, &configs::larc_c(), t);
+        // larc_c also has more cores, but we pass the same thread count;
+        // identical except L2 capacity.
+        if big.runtime_s > small.runtime_s * 1.02 {
+            return Err(format!(
+                "bigger L2 slower: {} vs {} ({} threads, {} B)",
+                big.runtime_s,
+                small.runtime_s,
+                t,
+                spec.footprint()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_deterministic_for_any_spec() {
+    check("sim deterministic", 6, |rng| {
+        let spec = random_stream_spec(rng);
+        let a = cachesim::simulate(&spec, &configs::a64fx_s(), spec.threads);
+        let b = cachesim::simulate(&spec, &configs::a64fx_s(), spec.threads);
+        if a.cycles != b.cycles || a.stats.dram_bytes != b.stats.dram_bytes {
+            return Err("non-deterministic simulation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mca_estimate_scales_with_rank_sampling() {
+    // Eq.(1) is a max over ranks: sampling more ranks can only raise it.
+    let pm = PortModel::get(PortArch::BroadwellLike);
+    check("rank max monotone", 20, |rng| {
+        let mut spec = random_stream_spec(rng);
+        spec.ranks = 2 + rng.below(14) as usize;
+        let few = {
+            let mut s = spec.clone();
+            s.ranks = 2;
+            mca::estimate_runtime(&s, &pm, 2.2, 11).cycles
+        };
+        let many = mca::estimate_runtime(&spec, &pm, 2.2, 11).cycles;
+        // same seed => rank 0..1 jitters identical; max over superset >= subset
+        if many + 1e-6 < few {
+            return Err(format!("max over more ranks decreased: {few} -> {many}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_miss_rates_always_in_unit_interval() {
+    check("miss rate bounds", 6, |rng| {
+        let spec = random_stream_spec(rng);
+        let r = cachesim::simulate(&spec, &configs::broadwell(), spec.threads);
+        let (l1, l2) = (r.stats.l1_miss_rate(), r.stats.l2_miss_rate());
+        if !(0.0..=1.0).contains(&l1) || !(0.0..=1.0).contains(&l2) {
+            return Err(format!("rates out of range: l1={l1} l2={l2}"));
+        }
+        if r.cycles <= 0.0 {
+            return Err("non-positive cycles".into());
+        }
+        Ok(())
+    });
+}
