@@ -15,8 +15,9 @@ use std::time::Instant;
 
 use larc::coordinator::report::results_dir;
 use larc::experiments::{self, ExpOptions};
-use larc::runtime::{Manifest, Runtime};
+use larc::runtime::Runtime;
 use larc::trace::Scale;
+use larc::util::artifacts::artifacts_available;
 
 fn main() -> anyhow::Result<()> {
     let scale = match std::env::args().nth(1).as_deref() {
@@ -24,9 +25,7 @@ fn main() -> anyhow::Result<()> {
         Some("paper") => Scale::Paper,
         _ => Scale::Small,
     };
-    let mut opts = ExpOptions::default();
-    opts.scale = scale;
-    opts.use_pjrt = Manifest::default_dir().join("manifest.json").exists();
+    let opts = ExpOptions { scale, use_pjrt: artifacts_available(), ..Default::default() };
     eprintln!(
         "campaign at {scale:?} scale; PJRT artifacts {}",
         if opts.use_pjrt { "ON" } else { "OFF (run `make artifacts`)" }

@@ -9,7 +9,8 @@ use std::sync::Arc;
 use larc::coordinator::McaBatcher;
 use larc::isa::{BasicBlock, InstrClass, InstrMix, ALL_CLASSES};
 use larc::mca::{analyzers, PortArch, PortModel};
-use larc::runtime::{Manifest, Runtime};
+use larc::runtime::Runtime;
+use larc::util::artifacts::artifacts_available;
 use larc::util::bench::{bench, black_box};
 use larc::util::prng::Rng;
 
@@ -29,8 +30,8 @@ fn random_blocks(n: usize) -> Vec<BasicBlock> {
 }
 
 fn main() {
-    if !Manifest::default_dir().join("manifest.json").exists() {
-        println!("bench_batcher: artifacts not built (run `make artifacts`); skipping");
+    if !artifacts_available() {
+        println!("bench_batcher: PJRT artifacts unavailable; skipping");
         return;
     }
     let rt = Arc::new(Runtime::new().expect("pjrt runtime"));

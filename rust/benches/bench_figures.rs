@@ -9,9 +9,7 @@ use larc::trace::Scale;
 use larc::util::bench::{bench, black_box};
 
 fn main() {
-    let mut opts = ExpOptions::default();
-    opts.scale = Scale::Tiny;
-    opts.workers = 1;
+    let opts = ExpOptions { scale: Scale::Tiny, workers: 1, ..Default::default() };
 
     // cheap, closed-form figures: several iterations
     for id in ["fig2", "table2", "model"] {

@@ -360,7 +360,14 @@ fn fetch_line(
 }
 
 /// Install a line in thread `t`'s L1 and maintain the L2 sharer mask.
-fn install_l1(line: u64, write: bool, t: usize, l1s: &mut [Cache], l2: &mut Cache, stats: &mut SimStats) {
+fn install_l1(
+    line: u64,
+    write: bool,
+    t: usize,
+    l1s: &mut [Cache],
+    l2: &mut Cache,
+    stats: &mut SimStats,
+) {
     if let Some(ev) = l1s[t].fill(line, write) {
         l2.clear_sharer(ev.addr, t);
         if ev.dirty {

@@ -25,7 +25,12 @@ pub struct Dram {
 impl Dram {
     /// `total_bw_bytes_per_cycle` is the aggregate bandwidth across all
     /// channels, in bytes per core cycle.
-    pub fn new(channels: usize, total_bw_bytes_per_cycle: f64, latency: f64, interleave: u64) -> Self {
+    pub fn new(
+        channels: usize,
+        total_bw_bytes_per_cycle: f64,
+        latency: f64,
+        interleave: u64,
+    ) -> Self {
         assert!(channels > 0);
         Dram {
             next_free: vec![0.0; channels],

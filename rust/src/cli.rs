@@ -5,7 +5,8 @@
 //! larc run --workload <name> [--config <name>] [--threads N] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|table2|table3|headline|model>
-//! larc campaign [--scale small|paper|tiny] [--pjrt]   # all experiments
+//! larc campaign [--scale small|paper|tiny] [--pjrt] [--store DIR] [--resume]
+//! larc store <ls|verify|gc> --store DIR                # inspect the store
 //! larc model                                           # section-2 tables
 //! ```
 
@@ -93,9 +94,16 @@ USAGE:
   larc list [workloads|configs|experiments]
   larc run --workload <name> [--config <cfg>] [--threads N] [--scale tiny|small|paper]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
-  larc figure <id> [--scale ...] [--pjrt] [--verbose] [--csv]
-  larc campaign [--scale ...] [--pjrt] [--csv]
+  larc figure <id> [--scale ...] [--pjrt] [--verbose] [--csv] [--store DIR] [--resume]
+  larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
+  larc store <ls|verify|gc> --store DIR
   larc model
+
+STORE:
+  --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
+  --resume      reuse valid store entries; only missing/invalid keys recompute
+  (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 headline; other
+   experiments are closed-form or direct and note that the flags are ignored)
 
 EXPERIMENT IDS:
   fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 table2 table3 headline model
@@ -135,5 +143,17 @@ mod tests {
     #[test]
     fn empty_args_error() {
         assert!(Cli::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn store_flags_parse() {
+        let c = parse(&["campaign", "--store", "/tmp/s", "--resume"]);
+        assert_eq!(c.flag("store"), Some("/tmp/s"));
+        assert!(c.has("resume"));
+
+        let c = parse(&["store", "verify", "--store=/tmp/s"]);
+        assert_eq!(c.command, "store");
+        assert_eq!(c.positional, vec!["verify"]);
+        assert_eq!(c.flag("store"), Some("/tmp/s"));
     }
 }

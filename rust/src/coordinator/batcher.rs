@@ -110,12 +110,11 @@ mod tests {
     use crate::isa::{InstrClass, InstrMix};
     use crate::mca::analyzers::port_pressure_native;
     use crate::mca::port_model::{PortArch, PortModel};
-    use crate::runtime::Manifest;
+    use crate::util::artifacts::artifacts_available;
     use crate::util::prng::Rng;
 
     fn runtime() -> Option<Arc<Runtime>> {
-        if !Manifest::default_dir().join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+        if !artifacts_available() {
             return None;
         }
         Some(Arc::new(Runtime::new().unwrap()))

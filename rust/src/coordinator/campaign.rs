@@ -6,7 +6,8 @@
 //! frozen job vector).  Results are collected per-index so the output
 //! order is independent of scheduling — campaigns must be reproducible.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cachesim::{self, MachineConfig, SimResult};
@@ -104,39 +105,78 @@ impl Campaign {
     /// Execute all jobs; results are positionally aligned with `self.jobs`.
     pub fn run(&self) -> Vec<JobOutput> {
         let n = self.jobs.len();
-        let cursor = AtomicUsize::new(0);
+        let todo: Vec<usize> = (0..n).collect();
         let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_indices(&todo, &results, &|_, _| Ok(()))
+            .expect("no-op completion hook cannot fail");
+        collect_results(results)
+    }
 
+    /// Shared worker pool: execute `self.jobs[i]` for each `i` in `todo`,
+    /// storing outputs into `results[i]`.  `on_done` runs on the worker
+    /// thread after each job (the store-backed executor persists the
+    /// entry there); its first error aborts the remaining queue and is
+    /// returned.
+    pub(crate) fn run_indices(
+        &self,
+        todo: &[usize],
+        results: &[Mutex<Option<JobOutput>>],
+        on_done: &(dyn Fn(usize, &JobOutput) -> io::Result<()> + Sync),
+    ) -> io::Result<()> {
+        let cursor = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
         std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n.max(1)) {
+            for _ in 0..self.workers.min(todo.len().max(1)) {
                 scope.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    if abort.load(Ordering::Relaxed) {
                         break;
                     }
+                    let t = cursor.fetch_add(1, Ordering::Relaxed);
+                    if t >= todo.len() {
+                        break;
+                    }
+                    let i = todo[t];
                     let out = run_job(&self.jobs[i]);
                     if self.verbose {
                         eprintln!(
                             "  [{}/{}] {} -> {:.4}s",
-                            i + 1,
-                            n,
+                            t + 1,
+                            todo.len(),
                             self.jobs[i].label(),
                             out.runtime_s()
                         );
+                    }
+                    if let Err(e) = on_done(i, &out) {
+                        abort.store(true, Ordering::Relaxed);
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        break;
                     }
                     *results[i].lock().unwrap() = Some(out);
                 });
             }
         });
-
-        results
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("job not executed"))
-            .collect()
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
-fn run_job(job: &Job) -> JobOutput {
+/// Unwrap the per-index result slots after a successful pool run.
+pub(crate) fn collect_results(results: Vec<Mutex<Option<JobOutput>>>) -> Vec<JobOutput> {
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job not executed"))
+        .collect()
+}
+
+/// Execute one job synchronously (the worker-pool body; also used by the
+/// store tests to produce reference outputs).
+pub(crate) fn run_job(job: &Job) -> JobOutput {
     match job {
         Job::CacheSim { spec, config, threads } => {
             JobOutput::Sim(cachesim::simulate(spec, config, *threads))

@@ -8,11 +8,15 @@
 //!   deterministic result collection;
 //! * [`batcher`] — dynamic batching of MCA port-pressure requests into the
 //!   fixed-shape PJRT executables (pad-to-batch, route-to-size);
+//! * [`store`] — persistent content-addressed result store making
+//!   campaigns resumable (skip already-computed jobs across invocations);
 //! * [`report`] — CSV/markdown emission for the experiment drivers.
 
 pub mod batcher;
 pub mod campaign;
 pub mod report;
+pub mod store;
 
 pub use batcher::McaBatcher;
 pub use campaign::{Campaign, Job, JobOutput};
+pub use store::{job_key, JobKey, Store, StoreRunStats};

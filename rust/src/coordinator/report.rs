@@ -42,6 +42,11 @@ impl Report {
         format!("## {} — {}\n\n{}", self.id, self.title, self.table.render())
     }
 
+    /// The CSV text exactly as [`Report::write_csv`] writes it.
+    pub fn csv_text(&self) -> String {
+        self.csv.to_string()
+    }
+
     /// Write `results/<id>.csv`; returns the path.
     pub fn write_csv(&self, results_dir: &Path) -> std::io::Result<PathBuf> {
         let path = results_dir.join(format!("{}.csv", self.id));

@@ -1,0 +1,741 @@
+//! Persistent, content-addressed campaign result store with resumable
+//! execution.
+//!
+//! The paper's campaign is hundreds of (workload × machine) runs, and the
+//! authors note the sweep took weeks of compute; design-space exploration
+//! is only tractable when partial results survive across invocations.
+//! This module gives every [`Job`] a stable [`JobKey`] — an FNV-1a hash
+//! over the canonicalized job description plus a schema-version tag — and
+//! persists completed [`JobOutput`]s as `store/<key>.json`, written with
+//! the in-tree JSON writer (the vendored crate set has no serde).
+//!
+//! Guarantees:
+//!
+//! * **Content addressing** — the key covers the workload spec, the machine
+//!   config, the executor parameters (threads / port arch / frequency /
+//!   seed) and [`SCHEMA_VERSION`]; any change to the simulated inputs
+//!   changes the key, so stale results are never reused.
+//! * **Crash safety** — entries are written to a unique temp file and
+//!   renamed into place, so a killed campaign loses at most its in-flight
+//!   jobs; everything already renamed is valid.
+//! * **Self-validation** — entries embed their schema version and key;
+//!   [`Store::scan`] flags corrupt or stale files, and [`Store::gc`]
+//!   removes them.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::cachesim::stats::SimStats;
+use crate::cachesim::SimResult;
+use crate::coordinator::campaign::{collect_results, Campaign, Job, JobOutput};
+use crate::mca::McaEstimate;
+use crate::util::json::{self, Json};
+
+/// Bump when the meaning of a stored result changes (simulator semantics,
+/// serialization layout, ...). Old entries stop matching both by key and
+/// by the embedded schema field.
+pub const SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------- job keys
+
+/// Stable content hash identifying one campaign job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobKey(pub u64);
+
+impl JobKey {
+    /// Fixed-width lowercase hex form — also the store file stem.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Strict inverse of [`JobKey::hex`]: exactly 16 *lowercase* hex
+    /// digits.  Anything looser (uppercase, signs) is not a name this
+    /// store ever writes, and must read as foreign so gc never touches it.
+    pub fn from_hex(s: &str) -> Option<JobKey> {
+        if s.len() != 16 || !s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')) {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(JobKey)
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical description of a job: everything that determines its output.
+/// `Debug` formatting of the spec/config types is deterministic for a
+/// given value, and the derives cover every field, so a change to any
+/// simulated parameter changes this string (and therefore the key).
+fn canonical(job: &Job) -> String {
+    match job {
+        Job::CacheSim { spec, config, threads } => {
+            format!("v{SCHEMA_VERSION};sim;threads={threads};{spec:?};{config:?}")
+        }
+        Job::Mca { spec, arch, freq_ghz, seed } => {
+            format!("v{SCHEMA_VERSION};mca;arch={arch:?};freq={freq_ghz:?};seed={seed};{spec:?}")
+        }
+    }
+}
+
+/// Content hash of one job (schema-versioned FNV-1a).
+pub fn job_key(job: &Job) -> JobKey {
+    JobKey(fnv1a(canonical(job).as_bytes()))
+}
+
+// ------------------------------------------------------- (de)serialization
+
+fn sim_to_json(r: &SimResult) -> Json {
+    let s = &r.stats;
+    let stats = json::obj(vec![
+        ("accesses", json::num(s.accesses as f64)),
+        ("line_touches", json::num(s.line_touches as f64)),
+        ("l1_hits", json::num(s.l1_hits as f64)),
+        ("l1_misses", json::num(s.l1_misses as f64)),
+        ("l2_hits", json::num(s.l2_hits as f64)),
+        ("l2_misses", json::num(s.l2_misses as f64)),
+        ("l2_writebacks", json::num(s.l2_writebacks as f64)),
+        ("dram_bytes", json::num(s.dram_bytes as f64)),
+        ("l2_bytes", json::num(s.l2_bytes as f64)),
+        ("coherence_invalidations", json::num(s.coherence_invalidations as f64)),
+        ("prefetches", json::num(s.prefetches as f64)),
+    ]);
+    json::obj(vec![
+        ("kind", json::s("sim")),
+        ("workload", json::s(&r.workload)),
+        ("config", json::s(&r.config)),
+        ("threads", json::num(r.threads as f64)),
+        ("cycles", json::num(r.cycles)),
+        ("runtime_s", json::num(r.runtime_s)),
+        ("stats", stats),
+    ])
+}
+
+fn mca_to_json(e: &McaEstimate) -> Json {
+    json::obj(vec![
+        ("kind", json::s("mca")),
+        ("workload", json::s(&e.workload)),
+        ("cycles", json::num(e.cycles)),
+        ("runtime_s", json::num(e.runtime_s)),
+        ("blocks", json::num(e.blocks as f64)),
+        ("ranks_sampled", json::num(e.ranks_sampled as f64)),
+    ])
+}
+
+/// Serialize one job output (the `"output"` field of a store entry).
+pub fn output_to_json(out: &JobOutput) -> Json {
+    match out {
+        JobOutput::Sim(r) => sim_to_json(r),
+        JobOutput::Mca(e) => mca_to_json(e),
+    }
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing numeric field {key:?}"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
+    Ok(req_f64(v, key)? as u64)
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field {key:?}"))
+}
+
+fn stats_from_json(v: &Json) -> Result<SimStats, String> {
+    Ok(SimStats {
+        accesses: req_u64(v, "accesses")?,
+        line_touches: req_u64(v, "line_touches")?,
+        l1_hits: req_u64(v, "l1_hits")?,
+        l1_misses: req_u64(v, "l1_misses")?,
+        l2_hits: req_u64(v, "l2_hits")?,
+        l2_misses: req_u64(v, "l2_misses")?,
+        l2_writebacks: req_u64(v, "l2_writebacks")?,
+        dram_bytes: req_u64(v, "dram_bytes")?,
+        l2_bytes: req_u64(v, "l2_bytes")?,
+        coherence_invalidations: req_u64(v, "coherence_invalidations")?,
+        prefetches: req_u64(v, "prefetches")?,
+    })
+}
+
+/// Parse one job output back from its JSON form.
+pub fn output_from_json(v: &Json) -> Result<JobOutput, String> {
+    match req_str(v, "kind")?.as_str() {
+        "sim" => Ok(JobOutput::Sim(SimResult {
+            workload: req_str(v, "workload")?,
+            config: req_str(v, "config")?,
+            threads: req_u64(v, "threads")? as usize,
+            cycles: req_f64(v, "cycles")?,
+            runtime_s: req_f64(v, "runtime_s")?,
+            stats: stats_from_json(v.get("stats").ok_or("missing stats object")?)?,
+        })),
+        "mca" => Ok(JobOutput::Mca(McaEstimate {
+            workload: req_str(v, "workload")?,
+            cycles: req_f64(v, "cycles")?,
+            runtime_s: req_f64(v, "runtime_s")?,
+            blocks: req_u64(v, "blocks")? as usize,
+            ranks_sampled: req_u64(v, "ranks_sampled")? as usize,
+        })),
+        other => Err(format!("unknown output kind {other:?}")),
+    }
+}
+
+fn entry_json(key: JobKey, label: &str, out: &JobOutput) -> Json {
+    json::obj(vec![
+        ("schema", json::num(SCHEMA_VERSION as f64)),
+        ("key", json::s(&key.hex())),
+        ("label", json::s(label)),
+        ("output", output_to_json(out)),
+    ])
+}
+
+fn parse_entry(text: &str, expect: JobKey) -> Result<(JobOutput, String), String> {
+    let v = json::parse(text)?;
+    let schema = req_u64(&v, "schema")? as u32;
+    if schema != SCHEMA_VERSION {
+        return Err(format!("stale schema {schema} (current {SCHEMA_VERSION})"));
+    }
+    let key = req_str(&v, "key")?;
+    if key != expect.hex() {
+        return Err(format!("key field {key:?} does not match file name"));
+    }
+    let label = req_str(&v, "label")?;
+    let out = output_from_json(v.get("output").ok_or("missing output object")?)?;
+    Ok((out, label))
+}
+
+// ---------------------------------------------------------------- the store
+
+/// Result of looking one key up in the store.
+#[derive(Debug)]
+pub enum Lookup {
+    /// Valid entry with the current schema.
+    Hit(JobOutput),
+    /// No entry on disk.
+    Miss,
+    /// Entry exists but is corrupt or schema-stale; callers recompute.
+    Invalid,
+}
+
+/// Validation state of one file found in the store directory.
+#[derive(Debug)]
+pub enum EntryState {
+    Valid {
+        key: JobKey,
+        label: String,
+        kind: &'static str,
+        runtime_s: f64,
+    },
+    /// A store-named entry (`<16-hex>.json`) that fails validation.
+    Corrupt {
+        reason: String,
+    },
+    /// Temp file (`<16-hex>.tmpN`) left behind by a killed writer.
+    TmpLeftover,
+    /// Not a store file at all (unrecognized name).  Reported for
+    /// visibility but never touched by [`Store::gc`] — the directory may
+    /// be shared with files the store does not own.
+    Foreign,
+}
+
+/// One scanned file.
+#[derive(Debug)]
+pub struct ScanEntry {
+    pub path: PathBuf,
+    pub state: EntryState,
+}
+
+/// Counts from [`Store::gc`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Corrupt entries and stale temp litter deleted.
+    pub removed: usize,
+    /// Valid entries kept.
+    pub kept: usize,
+    /// Unrecognized files left untouched.
+    pub foreign: usize,
+    /// Fresh temp files assumed to belong to a live writer and left alone.
+    pub in_flight: usize,
+}
+
+/// On-disk store: one `<key>.json` per completed job.
+pub struct Store {
+    dir: PathBuf,
+    tmp_seq: AtomicU64,
+}
+
+impl Store {
+    /// Open (creating if needed) a store directory.
+    pub fn open(dir: &Path) -> io::Result<Store> {
+        fs::create_dir_all(dir)?;
+        Ok(Store {
+            dir: dir.to_path_buf(),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the entry file for `key`.
+    pub fn path_for(&self, key: JobKey) -> PathBuf {
+        self.dir.join(format!("{}.json", key.hex()))
+    }
+
+    /// Look up one key; corrupt or stale entries read as [`Lookup::Invalid`].
+    pub fn load(&self, key: JobKey) -> Lookup {
+        let text = match fs::read_to_string(self.path_for(key)) {
+            Ok(t) => t,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Lookup::Miss,
+            Err(_) => return Lookup::Invalid,
+        };
+        match parse_entry(&text, key) {
+            Ok((out, _)) => Lookup::Hit(out),
+            Err(_) => Lookup::Invalid,
+        }
+    }
+
+    /// Persist one result atomically: write to a unique temp file in the
+    /// same directory, then rename over the final path.  A killed process
+    /// leaves at most `*.tmp*` litter (removed by [`Store::gc`]), never a
+    /// truncated entry.  The temp name embeds the process id plus a
+    /// per-process sequence number, so concurrent `larc` invocations
+    /// sharing one store never collide on the same temp path.
+    pub fn save(&self, key: JobKey, label: &str, out: &JobOutput) -> io::Result<()> {
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let tmp = self.dir.join(format!("{}.tmp{pid}-{seq}", key.hex()));
+        fs::write(&tmp, entry_json(key, label, out).to_string())?;
+        fs::rename(&tmp, self.path_for(key))
+    }
+
+    /// Validate every file in the store directory.
+    pub fn scan(&self) -> io::Result<Vec<ScanEntry>> {
+        let mut entries = Vec::new();
+        for dirent in fs::read_dir(&self.dir)? {
+            let path = dirent?.path();
+            if path.is_dir() {
+                continue;
+            }
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("")
+                .to_string();
+            let state = if is_tmp_name(&name) {
+                EntryState::TmpLeftover
+            } else {
+                scan_file(&path, &name)
+            };
+            entries.push(ScanEntry { path, state });
+        }
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(entries)
+    }
+
+    /// Remove corrupt entries and stale temp litter.  Only files the
+    /// store owns (`<16-hex>.json` / `<16-hex>.tmp*`) are ever deleted;
+    /// anything else in the directory is left untouched, and temp files
+    /// younger than one hour are assumed to belong to a campaign that is
+    /// still running (concurrent invocations may share a store).
+    pub fn gc(&self) -> io::Result<GcReport> {
+        self.gc_with_max_tmp_age(Duration::from_secs(3600))
+    }
+
+    /// [`Store::gc`] with an explicit staleness threshold for temp files.
+    pub fn gc_with_max_tmp_age(&self, max_tmp_age: Duration) -> io::Result<GcReport> {
+        let mut report = GcReport::default();
+        for e in self.scan()? {
+            match e.state {
+                EntryState::Valid { .. } => report.kept += 1,
+                EntryState::Foreign => report.foreign += 1,
+                EntryState::Corrupt { .. } => {
+                    fs::remove_file(&e.path)?;
+                    report.removed += 1;
+                }
+                EntryState::TmpLeftover => {
+                    if tmp_at_least(&e.path, max_tmp_age) {
+                        // best effort: a live writer may rename it away
+                        // between scan and removal
+                        if fs::remove_file(&e.path).is_ok() {
+                            report.removed += 1;
+                        }
+                    } else {
+                        report.in_flight += 1;
+                    }
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Whether a temp file's last modification is at least `age` old.
+/// Unreadable metadata reads as stale (the file is usually already
+/// renamed or deleted); a future mtime reads as fresh.
+fn tmp_at_least(path: &Path, age: Duration) -> bool {
+    if age.is_zero() {
+        return true;
+    }
+    match fs::metadata(path).and_then(|m| m.modified()) {
+        Ok(modified) => modified.elapsed().map(|d| d >= age).unwrap_or(false),
+        Err(_) => true,
+    }
+}
+
+/// `<16-hex>.tmp<pid>-<seq>` — an in-flight write the store owns.
+fn is_tmp_name(name: &str) -> bool {
+    let Some((stem, seq)) = name.split_once(".tmp") else {
+        return false;
+    };
+    JobKey::from_hex(stem).is_some() && seq.chars().all(|c| c.is_ascii_digit() || c == '-')
+}
+
+fn scan_file(path: &Path, name: &str) -> EntryState {
+    let key = match name.strip_suffix(".json").and_then(JobKey::from_hex) {
+        Some(k) => k,
+        None => return EntryState::Foreign,
+    };
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            return EntryState::Corrupt {
+                reason: format!("unreadable: {e}"),
+            }
+        }
+    };
+    match parse_entry(&text, key) {
+        Ok((out, label)) => EntryState::Valid {
+            key,
+            label,
+            kind: match out {
+                JobOutput::Sim(_) => "sim",
+                JobOutput::Mca(_) => "mca",
+            },
+            runtime_s: out.runtime_s(),
+        },
+        Err(reason) => EntryState::Corrupt { reason },
+    }
+}
+
+// ------------------------------------------------------ resumable execution
+
+/// Hit/miss accounting of one [`Campaign::run_with_store`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreRunStats {
+    /// Jobs served from the store without recomputation.
+    pub hits: usize,
+    /// Jobs with no store entry (computed and written).
+    pub misses: usize,
+    /// Jobs whose entry existed but was corrupt, schema-stale, or ignored
+    /// because resume was off (computed and rewritten).
+    pub recomputed: usize,
+}
+
+impl Campaign {
+    /// Execute the campaign through a result store.
+    ///
+    /// With `resume` set, jobs whose key has a valid store entry are
+    /// served from disk; everything else is computed on the worker pool
+    /// and written to the store as each worker finishes (atomically, so a
+    /// killed run loses only in-flight jobs).  With `resume` off, every
+    /// job is recomputed and its entry rewritten, but the store is still
+    /// populated for future resumable runs.
+    ///
+    /// Results are positionally aligned with `self.jobs`, exactly like
+    /// [`Campaign::run`], and bitwise-identical to an uninterrupted run:
+    /// the JSON round-trip preserves every finite `f64` exactly (and
+    /// simulator outputs are always finite).
+    pub fn run_with_store(
+        &self,
+        store: &Store,
+        resume: bool,
+    ) -> io::Result<(Vec<JobOutput>, StoreRunStats)> {
+        let n = self.jobs.len();
+        let keys: Vec<JobKey> = self.jobs.iter().map(job_key).collect();
+        let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+        let mut stats = StoreRunStats::default();
+        let mut todo: Vec<usize> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            if !resume {
+                // everything recomputes; a cheap existence probe is enough
+                // to tell overwrites from first-time computes
+                if store.path_for(*key).exists() {
+                    stats.recomputed += 1;
+                } else {
+                    stats.misses += 1;
+                }
+                todo.push(i);
+                continue;
+            }
+            match store.load(*key) {
+                Lookup::Hit(out) => {
+                    stats.hits += 1;
+                    *results[i].lock().unwrap() = Some(out);
+                }
+                Lookup::Invalid => {
+                    stats.recomputed += 1;
+                    todo.push(i);
+                }
+                Lookup::Miss => {
+                    stats.misses += 1;
+                    todo.push(i);
+                }
+            }
+        }
+
+        let save = |i: usize, out: &JobOutput| store.save(keys[i], &self.jobs[i].label(), out);
+        self.run_indices(&todo, &results, &save)?;
+        Ok((collect_results(results), stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+    use crate::coordinator::campaign::run_job;
+    use crate::mca::PortArch;
+    use crate::trace::workloads;
+    use crate::trace::Scale;
+
+    fn tmp_store(name: &str) -> Store {
+        let dir = std::env::temp_dir().join(format!("larc_store_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        Store::open(&dir).unwrap()
+    }
+
+    fn tiny_jobs() -> Vec<Job> {
+        let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        vec![
+            Job::CacheSim {
+                spec: spec.clone(),
+                config: configs::a64fx_s(),
+                threads: 4,
+            },
+            Job::Mca {
+                spec,
+                arch: PortArch::A64fxLike,
+                freq_ghz: 2.2,
+                seed: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn keys_are_stable_and_content_sensitive() {
+        let jobs = tiny_jobs();
+        // stable: same job, same key — including across clones
+        assert_eq!(job_key(&jobs[0]), job_key(&jobs[0].clone()));
+        // distinct jobs hash apart
+        assert_ne!(job_key(&jobs[0]), job_key(&jobs[1]));
+        // any executor parameter participates in the key
+        if let Job::CacheSim { spec, config, .. } = &jobs[0] {
+            let other = Job::CacheSim {
+                spec: spec.clone(),
+                config: config.clone(),
+                threads: 8,
+            };
+            assert_ne!(job_key(&jobs[0]), job_key(&other));
+            let other_cfg = Job::CacheSim {
+                spec: spec.clone(),
+                config: configs::larc_c(),
+                threads: 4,
+            };
+            assert_ne!(job_key(&jobs[0]), job_key(&other_cfg));
+        }
+        if let Job::Mca { spec, arch, freq_ghz, .. } = &jobs[1] {
+            let other = Job::Mca {
+                spec: spec.clone(),
+                arch: *arch,
+                freq_ghz: *freq_ghz,
+                seed: 2,
+            };
+            assert_ne!(job_key(&jobs[1]), job_key(&other));
+        }
+    }
+
+    #[test]
+    fn outputs_round_trip_exactly_through_json() {
+        let jobs = tiny_jobs();
+        for job in &jobs {
+            let out = run_job(job);
+            let text = output_to_json(&out).to_string();
+            let back = output_from_json(&json::parse(&text).unwrap()).unwrap();
+            // Debug formatting covers every field of both variants, and
+            // f64 Display/parse round-trips exactly.
+            assert_eq!(format!("{out:?}"), format!("{back:?}"));
+        }
+    }
+
+    #[test]
+    fn save_load_and_key_mismatch_detection() {
+        let store = tmp_store("save_load");
+        let job = &tiny_jobs()[0];
+        let key = job_key(job);
+        assert!(matches!(store.load(key), Lookup::Miss));
+
+        let out = run_job(job);
+        store.save(key, &job.label(), &out).unwrap();
+        match store.load(key) {
+            Lookup::Hit(back) => assert_eq!(format!("{out:?}"), format!("{back:?}")),
+            other => panic!("expected hit, got {other:?}"),
+        }
+
+        // copying an entry to a different key must read as Invalid
+        let wrong = JobKey(key.0 ^ 1);
+        fs::copy(store.path_for(key), store.path_for(wrong)).unwrap();
+        assert!(matches!(store.load(wrong), Lookup::Invalid));
+    }
+
+    #[test]
+    fn schema_bump_invalidates_stale_entries() {
+        let store = tmp_store("schema");
+        let job = &tiny_jobs()[0];
+        let key = job_key(job);
+        store.save(key, &job.label(), &run_job(job)).unwrap();
+
+        // rewrite the entry as if produced by an older schema
+        let path = store.path_for(key);
+        let stale = fs::read_to_string(&path)
+            .unwrap()
+            .replace(&format!("\"schema\":{SCHEMA_VERSION}"), "\"schema\":0");
+        fs::write(&path, stale).unwrap();
+        assert!(matches!(store.load(key), Lookup::Invalid));
+
+        // a resumed campaign recomputes it rather than trusting it
+        let c = Campaign::new(vec![job.clone()]).with_workers(1);
+        let (_, stats) = c.run_with_store(&store, true).unwrap();
+        assert_eq!(stats, StoreRunStats { hits: 0, misses: 0, recomputed: 1 });
+        assert!(matches!(store.load(key), Lookup::Hit(_)));
+    }
+
+    #[test]
+    fn scan_flags_and_gc_removes_corruption() {
+        let store = tmp_store("gc");
+        let jobs = tiny_jobs();
+        for job in &jobs {
+            store.save(job_key(job), &job.label(), &run_job(job)).unwrap();
+        }
+        // corrupt entry under a well-formed name + tmp litter + foreign files
+        fs::write(store.dir().join(format!("{:016x}.json", 0u64)), "{ nope").unwrap();
+        fs::write(store.dir().join("0123456789abcdef.tmp7"), "partial").unwrap();
+        fs::write(store.dir().join("README.txt"), "not an entry").unwrap();
+        fs::write(store.dir().join("notes.tmp1"), "not ours either").unwrap();
+
+        let scan = store.scan().unwrap();
+        let count = |f: fn(&EntryState) -> bool| scan.iter().filter(|e| f(&e.state)).count();
+        assert_eq!(count(|s| matches!(s, EntryState::Valid { .. })), 2);
+        assert_eq!(count(|s| matches!(s, EntryState::Corrupt { .. })), 1);
+        assert_eq!(count(|s| matches!(s, EntryState::TmpLeftover)), 1);
+        assert_eq!(count(|s| matches!(s, EntryState::Foreign)), 2);
+
+        // default gc removes the corrupt entry but spares the fresh temp
+        // file (it could belong to a campaign that is still running) and
+        // everything the store does not own
+        let gc = store.gc().unwrap();
+        assert_eq!(gc, GcReport { removed: 1, kept: 2, foreign: 2, in_flight: 1 });
+        assert!(store.dir().join("README.txt").exists());
+        assert!(store.dir().join("notes.tmp1").exists());
+        assert!(store.dir().join("0123456789abcdef.tmp7").exists());
+
+        // zero staleness tolerance: the temp litter goes too
+        let gc = store.gc_with_max_tmp_age(Duration::ZERO).unwrap();
+        assert_eq!(gc, GcReport { removed: 1, kept: 2, foreign: 2, in_flight: 0 });
+        assert!(!store.dir().join("0123456789abcdef.tmp7").exists());
+        assert!(store.dir().join("notes.tmp1").exists());
+        for job in &jobs {
+            assert!(matches!(store.load(job_key(job)), Lookup::Hit(_)));
+        }
+    }
+
+    #[test]
+    fn foreign_looking_hex_names_are_never_store_owned() {
+        // uppercase / signed variants parse with from_str_radix but are
+        // not names this store writes — they must read as foreign
+        assert!(JobKey::from_hex("ABCDEF0123456789").is_none());
+        assert!(JobKey::from_hex("+23456789abcdef0").is_none());
+        assert!(JobKey::from_hex("0123456789abcdef").is_some());
+
+        let store = tmp_store("foreign_hex");
+        fs::write(store.dir().join("ABCDEF0123456789.json"), "{ junk").unwrap();
+        let gc = store.gc().unwrap();
+        assert_eq!(gc, GcReport { removed: 0, kept: 0, foreign: 1, in_flight: 0 });
+        assert!(store.dir().join("ABCDEF0123456789.json").exists());
+    }
+
+    #[test]
+    fn resume_after_partial_run_computes_only_the_remainder() {
+        let store = tmp_store("resume");
+        let jobs = tiny_jobs();
+        let reference = Campaign::new(jobs.clone()).with_workers(2).run();
+
+        // phase 1: "killed" run that only completed the first job
+        let partial = Campaign::new(vec![jobs[0].clone()]).with_workers(1);
+        let (_, s1) = partial.run_with_store(&store, true).unwrap();
+        assert_eq!(s1.misses, 1);
+
+        // phase 2: full campaign resumes — one hit, one fresh compute
+        let full = Campaign::new(jobs.clone()).with_workers(2);
+        let (out, s2) = full.run_with_store(&store, true).unwrap();
+        assert_eq!(s2, StoreRunStats { hits: 1, misses: 1, recomputed: 0 });
+        for (a, b) in reference.iter().zip(&out) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+
+        // phase 3: everything hits; results identical across worker counts
+        let warm = Campaign::new(jobs).with_workers(4);
+        let (again, s3) = warm.run_with_store(&store, true).unwrap();
+        assert_eq!(s3.hits, 2);
+        assert_eq!(s3.misses + s3.recomputed, 0);
+        for (a, b) in reference.iter().zip(&again) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+
+    #[test]
+    fn resume_off_recomputes_but_repopulates() {
+        let store = tmp_store("no_resume");
+        let jobs = tiny_jobs();
+        let c = Campaign::new(jobs).with_workers(2);
+        let (_, s1) = c.run_with_store(&store, false).unwrap();
+        assert_eq!(s1.misses, 2);
+        let (_, s2) = c.run_with_store(&store, false).unwrap();
+        assert_eq!(s2.recomputed, 2);
+        let (_, s3) = c.run_with_store(&store, true).unwrap();
+        assert_eq!(s3.hits, 2);
+    }
+
+    #[test]
+    fn no_tmp_litter_after_successful_runs() {
+        let store = tmp_store("litter");
+        let c = Campaign::new(tiny_jobs()).with_workers(2);
+        c.run_with_store(&store, true).unwrap();
+        let leftover = store
+            .scan()
+            .unwrap()
+            .into_iter()
+            .filter(|e| matches!(e.state, EntryState::TmpLeftover))
+            .count();
+        assert_eq!(leftover, 0);
+    }
+}

@@ -23,7 +23,7 @@ pub fn sizes(opts: &ExpOptions) -> Vec<u32> {
     }
 }
 
-pub fn run(opts: &ExpOptions) -> Report {
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let milan = configs::milan();
     let milan_x = configs::milan_x();
 
@@ -44,7 +44,8 @@ pub fn run(opts: &ExpOptions) -> Report {
             threads,
         });
     }
-    let out = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let out = super::run_campaign(&campaign, opts)?;
 
     let mut report = Report::new(
         "fig1",
@@ -64,5 +65,5 @@ pub fn run(opts: &ExpOptions) -> Report {
             csv::f(imp),
         ]);
     }
-    report
+    Ok(report)
 }

@@ -10,8 +10,9 @@
 //! LARC configs holding L2 bandwidth out to 256/512 MiB.
 
 use super::ExpOptions;
-use crate::cachesim::{self, configs, MachineConfig};
+use crate::cachesim::{configs, MachineConfig};
 use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
 use crate::trace::patterns::Pattern;
 use crate::trace::workloads::mixes;
 use crate::trace::{BoundClass, Phase, Spec, Suite};
@@ -66,21 +67,53 @@ fn triad_shared(total_bytes_per_vec: u64, passes: u32) -> Spec {
     }
 }
 
-fn achieved_bw_gbs(spec: &Spec, cfg: &MachineConfig, threads: usize) -> f64 {
-    let r = cachesim::simulate(spec, cfg, threads);
-    // triad moves 3 vectors x passes worth of bytes
-    let bytes: u64 = spec.phases[0].pattern.total_chunks()
+/// Bytes the triad spec moves at `threads` (3 vectors x passes).
+fn moved_bytes(spec: &Spec, threads: usize) -> u64 {
+    spec.phases[0].pattern.total_chunks()
         * crate::trace::CHUNK
         * if matches!(spec.phases[0].pattern, Pattern::PrivateStream { .. }) {
             threads as u64
         } else {
             1
-        };
-    bytes as f64 / r.runtime_s / 1e9
+        }
+}
+
+/// Direct (store-less) bandwidth of one cell — kept for the shape tests.
+#[cfg(test)]
+fn achieved_bw_gbs(spec: &Spec, cfg: &MachineConfig, threads: usize) -> f64 {
+    let r = crate::cachesim::simulate(spec, cfg, threads);
+    moved_bytes(spec, threads) as f64 / r.runtime_s / 1e9
+}
+
+/// One sweep cell: (triad spec, machine, thread count).
+type SweepCase = (Spec, MachineConfig, usize);
+
+/// Run the sweep cells through the campaign scheduler — and therefore
+/// through the result store when configured — then reduce each cell to
+/// achieved bandwidth.
+fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> {
+    let jobs: Vec<Job> = cases
+        .iter()
+        .map(|(spec, cfg, threads)| Job::CacheSim {
+            spec: spec.clone(),
+            config: cfg.clone(),
+            threads: *threads,
+        })
+        .collect();
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let out = super::run_campaign(&campaign, opts)?;
+    Ok(cases
+        .iter()
+        .zip(&out)
+        .map(|((spec, _, threads), o)| {
+            let r = o.as_sim().expect("sim output");
+            moved_bytes(spec, *threads) as f64 / r.runtime_s / 1e9
+        })
+        .collect())
 }
 
 /// 7a: thread-count sweep with 128 KiB per-core vectors.
-pub fn run_7a(opts: &ExpOptions) -> Report {
+pub fn run_7a(opts: &ExpOptions) -> anyhow::Result<Report> {
     let mut report = Report::new(
         "fig7a",
         "STREAM Triad, 128 KiB vectors per core: achieved bandwidth (GB/s)",
@@ -90,21 +123,24 @@ pub fn run_7a(opts: &ExpOptions) -> Report {
         crate::trace::Scale::Tiny => 4,
         _ => 12,
     };
+    let mut cases = Vec::new();
     for cfg in [configs::a64fx_s(), configs::larc_c(), configs::larc_a()] {
         let max_t = cfg.cores;
         let mut t = 1usize;
         while t <= max_t {
-            let spec = triad_private(128 * KIB, passes);
-            let bw = achieved_bw_gbs(&spec, &cfg, t);
-            report.row(&[cfg.name.clone(), t.to_string(), csv::f(bw)]);
+            cases.push((triad_private(128 * KIB, passes), cfg.clone(), t));
             t = if t < 4 { t + 1 } else { t + 4 };
         }
     }
-    report
+    let bws = sweep_bw(&cases, opts)?;
+    for ((_, cfg, t), bw) in cases.iter().zip(bws) {
+        report.row(&[cfg.name.clone(), t.to_string(), csv::f(bw)]);
+    }
+    Ok(report)
 }
 
 /// 7b: vector-size sweep at full thread count.
-pub fn run_7b(opts: &ExpOptions) -> Report {
+pub fn run_7b(opts: &ExpOptions) -> anyhow::Result<Report> {
     let mut report = Report::new(
         "fig7b",
         "STREAM Triad, size sweep: bandwidth cliffs at capacity boundaries",
@@ -116,18 +152,22 @@ pub fn run_7b(opts: &ExpOptions) -> Report {
         crate::trace::Scale::Small => GIB / 4,
         crate::trace::Scale::Paper => GIB / 3,
     };
+    let mut cases = Vec::new();
     for cfg in [configs::a64fx_s(), configs::larc_c(), configs::larc_a()] {
         let threads = cfg.cores;
         let mut bytes = 64 * KIB;
         while bytes <= max_bytes {
             let passes = if bytes <= 16 * 1024 * KIB { 6 } else { 2 };
-            let spec = triad_shared(bytes, passes);
-            let bw = achieved_bw_gbs(&spec, &cfg, threads);
-            report.row(&[cfg.name.clone(), (bytes / KIB).to_string(), csv::f(bw)]);
+            cases.push((triad_shared(bytes, passes), cfg.clone(), threads));
             bytes *= 4;
         }
     }
-    report
+    let bws = sweep_bw(&cases, opts)?;
+    for ((spec, cfg, _), bw) in cases.iter().zip(bws) {
+        let kib = spec.phases[0].pattern.footprint() / 3 / KIB;
+        report.row(&[cfg.name.clone(), kib.to_string(), csv::f(bw)]);
+    }
+    Ok(report)
 }
 
 #[cfg(test)]

@@ -48,7 +48,7 @@ fn kernels(opts: &ExpOptions) -> Vec<crate::trace::Spec> {
     }
 }
 
-pub fn run(opts: &ExpOptions) -> Report {
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let baseline = configs::larc_c();
     let specs = kernels(opts);
     let vars = variants();
@@ -69,7 +69,8 @@ pub fn run(opts: &ExpOptions) -> Report {
             });
         }
     }
-    let out = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let out = super::run_campaign(&campaign, opts)?;
 
     let mut report = Report::new(
         "fig8",
@@ -89,7 +90,7 @@ pub fn run(opts: &ExpOptions) -> Report {
             ]);
         }
     }
-    report
+    Ok(report)
 }
 
 #[cfg(test)]

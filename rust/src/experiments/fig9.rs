@@ -16,7 +16,7 @@ use crate::trace::workloads;
 use crate::util::{csv, stats};
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
-    let rows = matrix::run(opts);
+    let rows = matrix::run(opts)?;
     let mut report = Report::new(
         "fig9",
         "Simulated speedups vs A64FX_S (A64FX^32 / LARC_C / LARC^A) + MCA reference",

@@ -11,7 +11,7 @@ use crate::model::projection;
 use crate::util::csv;
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
-    let rows = matrix::run(opts);
+    let rows = matrix::run(opts)?;
 
     // ---- §5.4 summary ----
     let mut summary = Report::new(

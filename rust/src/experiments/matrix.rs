@@ -29,7 +29,10 @@ impl MatrixRow {
 }
 
 /// Run the full matrix (cached per options by the caller if needed).
-pub fn run(opts: &ExpOptions) -> Vec<MatrixRow> {
+/// With `opts.store` set, completed cells are read from / written to the
+/// content-addressed store, so re-running any consumer figure after a
+/// tweak only recomputes invalidated cells.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
     let specs = workloads::gem5_set(opts.scale);
     let cfgs = configs::table2_configs();
 
@@ -45,7 +48,8 @@ pub fn run(opts: &ExpOptions) -> Vec<MatrixRow> {
         }
     }
 
-    let outputs = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose).run();
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let outputs = super::run_campaign(&campaign, opts)?;
 
     let mut rows = Vec::with_capacity(specs.len());
     for (i, spec) in specs.iter().enumerate() {
@@ -70,7 +74,7 @@ pub fn run(opts: &ExpOptions) -> Vec<MatrixRow> {
             speedup,
         });
     }
-    rows
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -81,8 +85,7 @@ mod tests {
     #[test]
     fn matrix_has_sane_shape_on_tiny_subset() {
         // full matrix on Tiny is still heavy; smoke-test two workloads
-        let mut opts = ExpOptions::default();
-        opts.scale = Scale::Tiny;
+        let opts = ExpOptions { scale: Scale::Tiny, ..Default::default() };
         let specs: Vec<_> = workloads::gem5_set(Scale::Tiny)
             .into_iter()
             .filter(|s| s.name == "ep-omp" || s.name == "xsbench")

@@ -30,7 +30,11 @@ pub fn run() -> Vec<Report> {
     );
     sc.row(&["channels per die".into(), cache.n_channels.to_string(), "96".into()]);
     sc.row(&["capacity per CMG".into(), fmt_bytes(cache.capacity_bytes()), "384 MiB".into()]);
-    sc.row(&["bandwidth per CMG".into(), format!("{:.0} GB/s", cache.bandwidth_gbs()), "1536".into()]);
+    sc.row(&[
+        "bandwidth per CMG".into(),
+        format!("{:.0} GB/s", cache.bandwidth_gbs()),
+        "1536".into(),
+    ]);
     sc.row(&["tag array per CMG".into(), fmt_bytes(cache.tag_array_bytes()), "9 MiB".into()]);
     sc.row(&[
         "chip capacity".into(),

@@ -3,11 +3,14 @@
 //! The rust binary is self-contained after `make artifacts`: it loads the
 //! AOT-compiled HLO artifacts via PJRT and never invokes Python.
 
+use std::path::{Path, PathBuf};
+
 use anyhow::{anyhow, bail, Result};
 
 use larc::cachesim::{self, configs};
 use larc::cli::{Cli, USAGE};
 use larc::coordinator::report::{results_dir, Report};
+use larc::coordinator::store::{EntryState, Store};
 use larc::experiments::{self, ExpOptions};
 use larc::mca::{self, PortArch, PortModel};
 use larc::trace::workloads;
@@ -33,6 +36,7 @@ fn run(args: &[String]) -> Result<()> {
         "mca" => cmd_mca(&cli),
         "figure" => cmd_figure(&cli),
         "campaign" => cmd_campaign(&cli),
+        "store" => cmd_store(&cli),
         "model" => emit(&experiments::run("model", &opts(&cli)?)?, &cli),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -43,12 +47,15 @@ fn run(args: &[String]) -> Result<()> {
 }
 
 fn opts(cli: &Cli) -> Result<ExpOptions> {
-    let mut o = ExpOptions::default();
-    o.scale = cli.scale().map_err(|e| anyhow!(e))?;
-    o.use_pjrt = cli.has("pjrt");
-    o.verbose = cli.has("verbose");
-    o.workers = cli.usize_flag("workers", o.workers).map_err(|e| anyhow!(e))?;
-    Ok(o)
+    let defaults = ExpOptions::default();
+    Ok(ExpOptions {
+        scale: cli.scale().map_err(|e| anyhow!(e))?,
+        workers: cli.usize_flag("workers", defaults.workers).map_err(|e| anyhow!(e))?,
+        use_pjrt: cli.has("pjrt"),
+        verbose: cli.has("verbose"),
+        store: cli.flag("store").map(PathBuf::from),
+        resume: cli.has("resume"),
+    })
 }
 
 fn emit(reports: &[Report], cli: &Cli) -> Result<()> {
@@ -187,4 +194,68 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         emit(&reports, cli)?;
     }
     Ok(())
+}
+
+fn cmd_store(cli: &Cli) -> Result<()> {
+    let op = cli
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("store subcommand required: ls | verify | gc"))?;
+    let dir = cli
+        .flag("store")
+        .ok_or_else(|| anyhow!("--store DIR required"))?;
+    let store = Store::open(Path::new(dir))?;
+    match op {
+        "ls" => {
+            for e in store.scan()? {
+                match e.state {
+                    EntryState::Valid { key, label, kind, runtime_s } => {
+                        println!("{}  {:<4} {:<40} {:.6}s", key.hex(), kind, label, runtime_s);
+                    }
+                    EntryState::Corrupt { reason } => {
+                        println!("CORRUPT  {} ({reason})", e.path.display());
+                    }
+                    EntryState::TmpLeftover => {
+                        println!("TMP      {} (interrupted write)", e.path.display());
+                    }
+                    EntryState::Foreign => {
+                        println!("FOREIGN  {} (not a store file; ignored)", e.path.display());
+                    }
+                }
+            }
+            Ok(())
+        }
+        "verify" => {
+            let scan = store.scan()?;
+            let count = |f: fn(&EntryState) -> bool| scan.iter().filter(|e| f(&e.state)).count();
+            let valid = count(|s| matches!(s, EntryState::Valid { .. }));
+            let foreign = count(|s| matches!(s, EntryState::Foreign));
+            let tmp = count(|s| matches!(s, EntryState::TmpLeftover));
+            let bad = count(|s| matches!(s, EntryState::Corrupt { .. }));
+            for e in &scan {
+                if let EntryState::Corrupt { reason } = &e.state {
+                    eprintln!("corrupt: {} ({reason})", e.path.display());
+                }
+            }
+            if tmp > 0 {
+                // not corruption: an interrupted (or still running) writer
+                eprintln!("note: {tmp} temp files present (interrupted or in-flight writes)");
+            }
+            if bad > 0 {
+                bail!("{bad} corrupt entries in {} ({valid} valid); run `larc store gc`", dir);
+            }
+            println!("{valid} entries OK in {dir} ({foreign} foreign files ignored)");
+            Ok(())
+        }
+        "gc" => {
+            let r = store.gc()?;
+            println!(
+                "removed {} invalid files, kept {} entries in {dir} ({} foreign, {} in-flight temps untouched)",
+                r.removed, r.kept, r.foreign, r.in_flight
+            );
+            Ok(())
+        }
+        other => bail!("unknown store subcommand {other:?} (ls | verify | gc)"),
+    }
 }

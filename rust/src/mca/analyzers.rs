@@ -108,7 +108,11 @@ pub fn run(analyzer: Analyzer, block: &BasicBlock, m: &PortModel) -> f32 {
 /// Median-of-four CPIter (the paper's combination rule).  Callers that
 /// evaluated the port-pressure analyzer on the PJRT path pass its batched
 /// result through `port_pressure_override`.
-pub fn median_cpiter(block: &BasicBlock, m: &PortModel, port_pressure_override: Option<f32>) -> f32 {
+pub fn median_cpiter(
+    block: &BasicBlock,
+    m: &PortModel,
+    port_pressure_override: Option<f32>,
+) -> f32 {
     let pp = port_pressure_override.unwrap_or_else(|| port_pressure_native(block, m));
     let xs = [
         pp as f64,

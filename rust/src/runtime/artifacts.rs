@@ -86,15 +86,10 @@ impl Manifest {
         })
     }
 
-    /// Default artifacts dir: `$LARC_ARTIFACTS` or `<repo>/artifacts`.
+    /// Default artifacts dir: `$LARC_ARTIFACTS` or `<crate root>/artifacts`
+    /// (resolved by the shared [`crate::util::artifacts`] probe).
     pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("LARC_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        // crate root = dir containing Cargo.toml
-        let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-        p.push("artifacts");
-        p
+        crate::util::artifacts::artifacts_dir()
     }
 
     /// All entries with a given logical entry point, sorted by batch size.
@@ -128,6 +123,10 @@ impl Manifest {
 mod tests {
     use super::*;
 
+    /// Manifest parsing needs only the files, not the PJRT backend, so
+    /// this probes the manifest directly rather than via the shared
+    /// `util::artifacts::artifacts_available` (which also requires the
+    /// `pjrt-backend` feature).
     fn artifacts_available() -> bool {
         Manifest::default_dir().join("manifest.json").exists()
     }

@@ -410,7 +410,14 @@ fn stencil_iter(
     Box::new(iter)
 }
 
-fn gemm_iter(base: u64, n: u32, block: u32, elem_bytes: u32, thread: usize, nthreads: usize) -> AccessIter {
+fn gemm_iter(
+    base: u64,
+    n: u32,
+    block: u32,
+    elem_bytes: u32,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
     let nb = (n as u64 / block as u64).max(1);
     let tile_bytes = block as u64 * block as u64 * elem_bytes as u64;
     let tile_chunks = chunks_of(tile_bytes);
@@ -490,7 +497,13 @@ fn spmv_iter(
     Box::new(iter)
 }
 
-fn butterfly_iter(base: u64, bytes: u64, stages: u32, thread: usize, nthreads: usize) -> AccessIter {
+fn butterfly_iter(
+    base: u64,
+    bytes: u64,
+    stages: u32,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
     let chunks = chunks_of(bytes);
     let (lo, hi) = split(chunks, thread, nthreads);
     let iter = (0..stages).flat_map(move |s| {

@@ -212,7 +212,10 @@ mod tests {
     #[test]
     fn has_omp_and_mpi_variants() {
         let specs = workloads(Scale::Small);
-        let omp = specs.iter().filter(|s| s.name.ends_with("-omp") || s.name.contains("-omp-")).count();
+        let omp = specs
+            .iter()
+            .filter(|s| s.name.ends_with("-omp") || s.name.contains("-omp-"))
+            .count();
         let mpi = specs.iter().filter(|s| s.name.ends_with("-mpi")).count();
         assert!(omp >= 9, "{omp}");
         assert_eq!(mpi, 8);

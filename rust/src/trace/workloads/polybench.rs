@@ -74,8 +74,20 @@ pub fn workloads(scale: Scale) -> Vec<Spec> {
     let dim = |n: u32| ((n as f64 * scale.factor().sqrt()) as u32).max(64);
     vec![
         // --- dense compute-bound (paper: no MCA gain) ---
-        single("2mm", BoundClass::Compute, vec![gemm_phase("mm1", dim(1600), true), gemm_phase("mm2", dim(1600), true)]),
-        single("3mm", BoundClass::Compute, vec![gemm_phase("mm1", dim(1600), true), gemm_phase("mm2", dim(1600), true), gemm_phase("mm3", dim(1600), true)]),
+        single(
+            "2mm",
+            BoundClass::Compute,
+            vec![gemm_phase("mm1", dim(1600), true), gemm_phase("mm2", dim(1600), true)],
+        ),
+        single(
+            "3mm",
+            BoundClass::Compute,
+            vec![
+                gemm_phase("mm1", dim(1600), true),
+                gemm_phase("mm2", dim(1600), true),
+                gemm_phase("mm3", dim(1600), true),
+            ],
+        ),
         single("gemm", BoundClass::Compute, vec![gemm_phase("gemm", dim(2000), true)]),
         single("doitgen", BoundClass::Compute, vec![gemm_phase("doitgen", dim(1024), true)]),
         single("trmm", BoundClass::Compute, vec![gemm_phase("trmm", dim(1600), true)]),

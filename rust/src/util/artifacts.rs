@@ -1,0 +1,63 @@
+//! Shared probe for the optional AOT/PJRT artifacts.
+//!
+//! CI and fresh checkouts have no `artifacts/` directory (it is produced
+//! by `python/compile/aot.py`), and the default build compiles the
+//! stubbed PJRT backend (see `runtime::pjrt`).  Every artifact-dependent
+//! test and bench gates on this one helper, so the skip decision — and
+//! the log line explaining it — lives in exactly one place.
+
+use std::path::PathBuf;
+use std::sync::Once;
+
+/// Artifact directory: `$LARC_ARTIFACTS`, or `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("LARC_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+/// True when PJRT-backed paths can actually run: the `pjrt-backend`
+/// feature is compiled in AND `artifacts/manifest.json` exists.  When
+/// either is missing, the reason is logged once per process and callers
+/// are expected to skip.
+pub fn artifacts_available() -> bool {
+    let backend = cfg!(feature = "pjrt-backend");
+    let manifest = artifacts_dir().join("manifest.json").exists();
+    if !(backend && manifest) {
+        static LOGGED: Once = Once::new();
+        LOGGED.call_once(|| {
+            let why = if !backend {
+                "built without the `pjrt-backend` feature"
+            } else {
+                "artifacts not built (run python/compile/aot.py)"
+            };
+            eprintln!("larc: PJRT artifacts unavailable ({why}); dependent tests and benches skip");
+        });
+    }
+    backend && manifest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dir_resolves_somewhere_sane() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("LARC_ARTIFACTS").is_ok());
+    }
+
+    #[test]
+    fn availability_requires_backend_and_manifest() {
+        let available = artifacts_available();
+        if !cfg!(feature = "pjrt-backend") {
+            assert!(!available, "stub backend must report unavailable");
+        }
+        if !artifacts_dir().join("manifest.json").exists() {
+            assert!(!available, "missing manifest must report unavailable");
+        }
+    }
+}

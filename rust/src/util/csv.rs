@@ -1,6 +1,5 @@
 //! Tiny CSV writer for experiment result files.
 
-use std::fmt::Write as _;
 use std::fs;
 use std::io;
 use std::path::Path;
@@ -39,20 +38,23 @@ impl Csv {
         self.rows.is_empty()
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        let _ = writeln!(out, "{}", self.header.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
-        for row in &self.rows {
-            let _ = writeln!(out, "{}", row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
-        }
-        out
-    }
-
     pub fn write_to(&self, path: &Path) -> io::Result<()> {
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
         }
         fs::write(path, self.to_string())
+    }
+}
+
+/// CSV text form (`csv.to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Csv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let cells = |row: &[String]| row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",");
+        writeln!(f, "{}", cells(&self.header))?;
+        for row in &self.rows {
+            writeln!(f, "{}", cells(row))?;
+        }
+        Ok(())
     }
 }
 

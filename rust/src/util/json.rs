@@ -57,19 +57,14 @@ impl Json {
         }
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // integer-valued floats print as integers, except -0.0
+                // (whose sign bit must survive the round trip)
+                if n.fract() == 0.0 && n.abs() < 1e15 && (*n != 0.0 || n.is_sign_positive()) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -99,6 +94,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`value.to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -363,5 +367,13 @@ mod tests {
     #[test]
     fn negative_and_exponent_numbers() {
         assert_eq!(parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
+    }
+
+    #[test]
+    fn finite_floats_round_trip_bit_exactly() {
+        for x in [0.0f64, -0.0, 0.1, -2.5e-7, 1e16, 123456789.0, f64::MIN_POSITIVE] {
+            let back = parse(&Json::Num(x).to_string()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
     }
 }

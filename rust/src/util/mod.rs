@@ -5,6 +5,7 @@
 //! [`prng`] replaces `rand`, [`prop`] replaces `proptest`, [`bench`]
 //! replaces `criterion`, [`json`]/[`csv`] replace `serde`.
 
+pub mod artifacts;
 pub mod bench;
 pub mod csv;
 pub mod json;

@@ -7,12 +7,13 @@
 use larc::cachesim::{self, configs};
 use larc::coordinator::{Campaign, Job, McaBatcher};
 use larc::mca::{self, PortArch, PortModel};
-use larc::runtime::{Manifest, Runtime};
+use larc::runtime::Runtime;
 use larc::trace::{workloads, Scale};
+use larc::util::artifacts::artifacts_available;
 use larc::util::stats;
 
 fn artifacts() -> bool {
-    Manifest::default_dir().join("manifest.json").exists()
+    artifacts_available()
 }
 
 // ---------------------------------------------------------------- L3+L1/L2

@@ -47,7 +47,13 @@ fn random_stream_spec(rng: &mut Rng) -> Spec {
 fn prop_analyzers_are_nonnegative_and_median_bounded() {
     let pm = PortModel::get(PortArch::BroadwellLike);
     check("analyzer bounds", 200, |rng| {
-        let b = BasicBlock::new(0, "p", random_mix(rng), 1.0 + rng.f64() as f32 * 9.0, rng.below(2) == 0);
+        let b = BasicBlock::new(
+            0,
+            "p",
+            random_mix(rng),
+            1.0 + rng.f64() as f32 * 9.0,
+            rng.below(2) == 0,
+        );
         let vals: Vec<f64> = analyzers::ALL_ANALYZERS
             .iter()
             .map(|&a| analyzers::run(a, &b, &pm) as f64)

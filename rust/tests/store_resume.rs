@@ -1,0 +1,135 @@
+//! Integration tests for the content-addressed campaign store: the
+//! "kill it midway, re-run, get byte-identical figures" acceptance demo
+//! from the PR, in test form.
+
+use std::fs;
+use std::path::PathBuf;
+
+use larc::cachesim::configs;
+use larc::coordinator::store::{job_key, Store, StoreRunStats};
+use larc::coordinator::{Campaign, Job};
+use larc::experiments::{fig7, ExpOptions};
+use larc::trace::{workloads, Scale};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("larc_store_it_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn mini_matrix_jobs() -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for name in ["minife", "ep-omp"] {
+        let spec = workloads::by_name(name, Scale::Tiny).unwrap();
+        for cfg in configs::table2_configs() {
+            let threads = spec.effective_threads(cfg.cores);
+            jobs.push(Job::CacheSim {
+                spec: spec.clone(),
+                config: cfg,
+                threads,
+            });
+        }
+    }
+    jobs
+}
+
+#[test]
+fn killed_campaign_resumes_with_only_the_remainder_computed() {
+    let dir = tmpdir("killed");
+    let store = Store::open(&dir).unwrap();
+    let jobs = mini_matrix_jobs();
+    let reference = Campaign::new(jobs.clone()).with_workers(2).run();
+
+    // phase 1: the "killed" run — only the first half of the jobs ever
+    // finished (a real kill loses in-flight jobs; completed entries were
+    // renamed into place atomically and survive)
+    let half = Campaign::new(jobs[..jobs.len() / 2].to_vec()).with_workers(2);
+    let (_, s1) = half.run_with_store(&store, true).unwrap();
+    assert_eq!(s1.misses, jobs.len() / 2);
+
+    // phase 2: re-run the full campaign with --resume
+    let full = Campaign::new(jobs.clone()).with_workers(2);
+    let (out, s2) = full.run_with_store(&store, true).unwrap();
+    assert!(s2.hits >= 1, "expected store hits, got {s2:?}");
+    assert_eq!(s2.hits, jobs.len() / 2);
+    assert_eq!(s2.misses, jobs.len() - jobs.len() / 2);
+    assert_eq!(s2.recomputed, 0);
+
+    // resumed outputs are identical to an uninterrupted run
+    assert_eq!(out.len(), reference.len());
+    for (a, b) in reference.iter().zip(&out) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    // phase 3: a third run is all hits, regardless of worker count
+    let third = Campaign::new(jobs.clone()).with_workers(1);
+    let (_, s3) = third.run_with_store(&store, true).unwrap();
+    assert_eq!(s3, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+}
+
+#[test]
+fn job_keys_do_not_depend_on_worker_count_or_job_order() {
+    let jobs = mini_matrix_jobs();
+    let keys: Vec<_> = jobs.iter().map(job_key).collect();
+
+    // keys are a pure function of the job content
+    let mut reversed = jobs.clone();
+    reversed.reverse();
+    let mut rev_keys: Vec<_> = reversed.iter().map(job_key).collect();
+    rev_keys.reverse();
+    assert_eq!(keys, rev_keys);
+
+    // all distinct jobs map to distinct keys
+    let mut uniq = keys.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), keys.len());
+
+    // and the store files written by different pool widths are the same set
+    let d1 = tmpdir("w1");
+    let d4 = tmpdir("w4");
+    let c1 = Campaign::new(jobs.clone()).with_workers(1);
+    c1.run_with_store(&Store::open(&d1).unwrap(), true).unwrap();
+    let c4 = Campaign::new(jobs).with_workers(4);
+    c4.run_with_store(&Store::open(&d4).unwrap(), true).unwrap();
+    let names = |d: &PathBuf| -> Vec<String> {
+        let mut v: Vec<String> = fs::read_dir(d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(names(&d1), names(&d4));
+}
+
+#[test]
+fn fig7a_report_is_byte_identical_with_and_without_the_store() {
+    let dir = tmpdir("fig7a");
+    let base = ExpOptions { scale: Scale::Tiny, workers: 2, ..Default::default() };
+
+    // no store: the reference rendering
+    let reference = fig7::run_7a(&base).unwrap();
+
+    // cold store, then warm (all-hit) store
+    let stored = ExpOptions { store: Some(dir), resume: true, ..base.clone() };
+    let cold = fig7::run_7a(&stored).unwrap();
+    let warm = fig7::run_7a(&stored).unwrap();
+
+    assert_eq!(reference.render(), cold.render());
+    assert_eq!(reference.render(), warm.render());
+    assert_eq!(reference.csv_text(), warm.csv_text());
+}
+
+#[test]
+fn corrupting_one_entry_only_recomputes_that_cell() {
+    let dir = tmpdir("corrupt_cell");
+    let store = Store::open(&dir).unwrap();
+    let jobs = mini_matrix_jobs();
+    let c = Campaign::new(jobs.clone()).with_workers(2);
+    c.run_with_store(&store, true).unwrap();
+
+    fs::write(store.path_for(job_key(&jobs[3])), "{ truncated").unwrap();
+    let (_, stats) = c.run_with_store(&store, true).unwrap();
+    assert_eq!(stats, StoreRunStats { hits: jobs.len() - 1, misses: 0, recomputed: 1 });
+}
