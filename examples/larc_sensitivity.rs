@@ -1,9 +1,11 @@
 //! Cache-parameter sensitivity (the paper's Fig. 8) on a chosen TAPP
-//! kernel: sweep L2 latency, capacity, and bank count against LARC_C.
+//! kernel: sweep L2 latency, capacity, bank count, and — beyond the
+//! paper — the hierarchy's level count (stacked-L3 slabs) against LARC_C.
 //!
 //! Run: `cargo run --release --example larc_sensitivity [kernel-prefix]`
 //! (default kernel: tapp17-matvecsplit)
 
+use larc::cachesim::configs::LarcParam;
 use larc::cachesim::{self, configs};
 use larc::trace::workloads::tapp;
 use larc::trace::Scale;
@@ -28,19 +30,29 @@ fn main() {
 
     println!("L2 latency sweep (rel. runtime; 1.0 = baseline 37 cycles):");
     for lat in [22.0, 30.0, 37.0, 45.0, 52.0] {
-        let r = cachesim::simulate(spec, &configs::larc_c_with_latency(lat), threads);
+        let cfg = configs::larc_c_variant(LarcParam::Latency(lat));
+        let r = cachesim::simulate(spec, &cfg, threads);
         println!("  {lat:>4} cyc : {:.3}", r.runtime_s / base);
     }
 
     println!("L2 capacity sweep:");
     for mib in [64u64, 128, 256, 512, 1024] {
-        let r = cachesim::simulate(spec, &configs::larc_c_with_l2_size(mib), threads);
+        let cfg = configs::larc_c_variant(LarcParam::CapacityMib(mib));
+        let r = cachesim::simulate(spec, &cfg, threads);
         println!("  {mib:>4} MiB : {:.3}", r.runtime_s / base);
     }
 
     println!("L2 bankbits sweep (banks = 2^x; bandwidth scales with banks):");
     for bb in [0u32, 1, 2, 3, 4] {
-        let r = cachesim::simulate(spec, &configs::larc_c_with_bankbits(bb), threads);
+        let cfg = configs::larc_c_variant(LarcParam::BankBits(bb));
+        let r = cachesim::simulate(spec, &cfg, threads);
         println!("  {bb:>4}     : {:.3}", r.runtime_s / base);
+    }
+
+    println!("stacked-L3 sweep (8 MiB near-L2 + 3D SRAM slab, DRRIP):");
+    for mib in [128u64, 256, 512, 1024] {
+        let cfg = configs::larc_c_variant(LarcParam::StackedL3Mib(mib));
+        let r = cachesim::simulate(spec, &cfg, threads);
+        println!("  {mib:>4} MiB : {:.3}", r.runtime_s / base);
     }
 }

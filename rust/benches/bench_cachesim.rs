@@ -93,4 +93,23 @@ fn main() {
         });
         println!("{}", r.report());
     }
+
+    // the same streaming case through a three-level hierarchy, for a
+    // quick flat-vs-stacked walk-cost comparison (bench_hierarchy has
+    // the full suite)
+    let cfg3 = configs::milan_x();
+    let s3 = spec(
+        Pattern::Stream {
+            bytes: 32 * MIB,
+            passes: 2,
+            streams: 3,
+            write_fraction: 1.0 / 3.0,
+        },
+        "stream-3level",
+    );
+    let r = bench("stream_8t_three_level", 3, || {
+        let out = cachesim::simulate(&s3, &cfg3, 8);
+        black_box(out.stats.line_touches)
+    });
+    println!("{}", r.report());
 }

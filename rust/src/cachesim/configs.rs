@@ -3,8 +3,16 @@
 //!
 //! All four gem5 configurations from Table 2 — A64FX_S, A64FX^32, LARC_C,
 //! LARC^A — plus the pilot-study machines (Milan / Milan-X CCD slices,
-//! Fig. 1) and the MCA-validation baseline (Broadwell E5-2650v4, Figs. 5/6).
+//! Fig. 1, now modelled as true L1+L2+L3 hierarchies), the MCA-validation
+//! baseline (Broadwell E5-2650v4, Figs. 5/6), and LARC_C^3D: a
+//! level-count variant with the A64FX 8 MiB near-L2 plus a 3D-stacked
+//! SRAM L3 slab.
+//!
+//! A machine's cache system is an ordered list of [`LevelConfig`]s (L1 at
+//! index 0) terminated by DRAM; the [`crate::cachesim::Hierarchy`] walks
+//! it generically, so any level count works.
 
+use super::cache::ReplacementPolicy;
 use crate::mca::port_model::PortArch;
 use crate::util::units::{GB, KIB, MIB};
 
@@ -16,7 +24,7 @@ pub struct CacheParams {
     pub line_bytes: u32,
     /// Load-to-use latency in cycles.
     pub latency: f64,
-    /// Number of banks (L2): bandwidth = banks * bytes_per_cycle_per_bank.
+    /// Number of banks: bandwidth = banks * bytes_per_cycle_per_bank.
     pub banks: u32,
     /// Bytes one bank serves per cycle.
     pub bank_bytes_per_cycle: f64,
@@ -34,14 +42,56 @@ impl CacheParams {
     }
 }
 
+/// Whether a level is replicated per core or shared (and banked) by the
+/// whole CMG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scope {
+    Private,
+    SharedBanked,
+}
+
+/// One level of the cache hierarchy (L1 at index 0; DRAM terminates the
+/// list).
+#[derive(Clone, Copy, Debug)]
+pub struct LevelConfig {
+    pub params: CacheParams,
+    pub scope: Scope,
+    /// Inclusive of the private levels above it.  The *first* shared
+    /// inclusive level hosts the MESI-lite coherence directory (sharer
+    /// masks + back-invalidation on eviction).
+    pub inclusive: bool,
+    pub policy: ReplacementPolicy,
+}
+
+/// A per-core private level (LRU, not a directory home).
+fn private(params: CacheParams) -> LevelConfig {
+    LevelConfig {
+        params,
+        scope: Scope::Private,
+        inclusive: false,
+        policy: ReplacementPolicy::Lru,
+    }
+}
+
+/// A shared banked inclusive level (the directory home when it is the
+/// first such level).
+fn shared_inclusive(params: CacheParams) -> LevelConfig {
+    LevelConfig {
+        params,
+        scope: Scope::SharedBanked,
+        inclusive: true,
+        policy: ReplacementPolicy::Lru,
+    }
+}
+
 /// One simulated CMG / socket-slice.
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
     pub name: String,
     pub cores: usize,
     pub freq_ghz: f64,
-    pub l1: CacheParams,
-    pub l2: CacheParams,
+    /// Cache levels, L1 first, LLC last; DRAM sits behind the last level.
+    pub levels: Vec<LevelConfig>,
     /// DRAM: channels and aggregate bandwidth.
     pub dram_channels: usize,
     pub dram_bw_gbs: f64,
@@ -63,6 +113,32 @@ impl MachineConfig {
     pub fn dram_bytes_per_cycle(&self) -> f64 {
         self.dram_bw_gbs * GB / (self.freq_ghz * 1e9)
     }
+
+    /// The per-core L1 (level 0).
+    pub fn l1(&self) -> &CacheParams {
+        &self.levels[0].params
+    }
+
+    /// Index of the first shared inclusive level — the coherence
+    /// directory, "the L2" of the two-level machines.  `None` when no
+    /// level qualifies (then reporting falls back to the LLC).
+    pub fn directory_level(&self) -> Option<usize> {
+        self.levels
+            .iter()
+            .position(|l| l.scope == Scope::SharedBanked && l.inclusive)
+    }
+
+    /// Parameters of the directory level (the legacy `cfg.l2`), falling
+    /// back to the LLC.
+    pub fn shared(&self) -> &CacheParams {
+        let i = self.directory_level().unwrap_or(self.levels.len() - 1);
+        &self.levels[i].params
+    }
+
+    /// Parameters of the last cache level before DRAM.
+    pub fn llc(&self) -> &CacheParams {
+        &self.levels.last().expect("at least one cache level").params
+    }
 }
 
 /// A64FX_S — the baseline simulated A64FX CMG (Table 2): 12 cores, 8 MiB
@@ -72,22 +148,24 @@ pub fn a64fx_s() -> MachineConfig {
         name: "a64fx_s".into(),
         cores: 12,
         freq_ghz: 2.2,
-        l1: CacheParams {
-            size: 64 * KIB,
-            ways: 4,
-            line_bytes: 256,
-            latency: 8.0,
-            banks: 1,
-            bank_bytes_per_cycle: 128.0,
-        },
-        l2: CacheParams {
-            size: 8 * MIB,
-            ways: 16,
-            line_bytes: 256,
-            latency: 37.0,
-            banks: 4, // 2 bankbits
-            bank_bytes_per_cycle: 91.0, // ~364 B/cyc total = ~800 GB/s @2.2GHz
-        },
+        levels: vec![
+            private(CacheParams {
+                size: 64 * KIB,
+                ways: 4,
+                line_bytes: 256,
+                latency: 8.0,
+                banks: 1,
+                bank_bytes_per_cycle: 128.0,
+            }),
+            shared_inclusive(CacheParams {
+                size: 8 * MIB,
+                ways: 16,
+                line_bytes: 256,
+                latency: 37.0,
+                banks: 4,                   // 2 bankbits
+                bank_bytes_per_cycle: 91.0, // ~364 B/cyc total = ~800 GB/s @2.2GHz
+            }),
+        ],
         dram_channels: 4,
         dram_bw_gbs: 256.0,
         dram_latency_cycles: 180.0,
@@ -112,7 +190,7 @@ pub fn larc_c() -> MachineConfig {
     let mut c = a64fx_s();
     c.name = "larc_c".into();
     c.cores = 32;
-    c.l2.size = 256 * MIB;
+    c.levels[1].params.size = 256 * MIB;
     c
 }
 
@@ -121,8 +199,8 @@ pub fn larc_a() -> MachineConfig {
     let mut c = a64fx_s();
     c.name = "larc_a".into();
     c.cores = 32;
-    c.l2.size = 512 * MIB;
-    c.l2.banks = 8; // 3 bankbits: doubles aggregate L2 bandwidth
+    c.levels[1].params.size = 512 * MIB;
+    c.levels[1].params.banks = 8; // 3 bankbits: doubles aggregate L2 bandwidth
     c
 }
 
@@ -134,22 +212,24 @@ pub fn broadwell() -> MachineConfig {
         name: "broadwell".into(),
         cores: 12,
         freq_ghz: 2.2,
-        l1: CacheParams {
-            size: 32 * KIB,
-            ways: 8,
-            line_bytes: 64,
-            latency: 4.0,
-            banks: 1,
-            bank_bytes_per_cycle: 64.0,
-        },
-        l2: CacheParams {
-            size: 32 * MIB, // 30 MiB rounded to pow2 sets
-            ways: 16,
-            line_bytes: 64,
-            latency: 34.0,
-            banks: 8,
-            bank_bytes_per_cycle: 16.0,
-        },
+        levels: vec![
+            private(CacheParams {
+                size: 32 * KIB,
+                ways: 8,
+                line_bytes: 64,
+                latency: 4.0,
+                banks: 1,
+                bank_bytes_per_cycle: 64.0,
+            }),
+            shared_inclusive(CacheParams {
+                size: 32 * MIB, // 30 MiB rounded to pow2 sets
+                ways: 16,
+                line_bytes: 64,
+                latency: 34.0,
+                banks: 8,
+                bank_bytes_per_cycle: 16.0,
+            }),
+        ],
         dram_channels: 4,
         dram_bw_gbs: 76.8,
         dram_latency_cycles: 200.0,
@@ -161,29 +241,41 @@ pub fn broadwell() -> MachineConfig {
     }
 }
 
-/// Milan CCD slice (Fig. 1 pilot): 8 Zen3 cores, 32 MiB L3 slice.
+/// Milan CCD slice (Fig. 1 pilot), a genuine three-level hierarchy: 8
+/// Zen3 cores with private 32 KiB L1D and 512 KiB L2, sharing a 32 MiB
+/// L3 slice (the directory level).
 pub fn milan() -> MachineConfig {
     MachineConfig {
         name: "milan".into(),
         cores: 8,
         freq_ghz: 2.45,
-        l1: CacheParams {
-            size: 32 * KIB,
-            ways: 8,
-            line_bytes: 64,
-            latency: 4.0,
-            banks: 1,
-            bank_bytes_per_cycle: 64.0,
-        },
-        l2: CacheParams {
-            size: 32 * MIB,
-            ways: 16,
-            line_bytes: 64,
-            latency: 46.0,
-            banks: 8,
-            bank_bytes_per_cycle: 16.0,
-        },
-        dram_channels: 2, // 16 channels / 8 CCDs
+        levels: vec![
+            private(CacheParams {
+                size: 32 * KIB,
+                ways: 8,
+                line_bytes: 64,
+                latency: 4.0,
+                banks: 1,
+                bank_bytes_per_cycle: 64.0,
+            }),
+            private(CacheParams {
+                size: 512 * KIB,
+                ways: 8,
+                line_bytes: 64,
+                latency: 12.0,
+                banks: 1,
+                bank_bytes_per_cycle: 32.0,
+            }),
+            shared_inclusive(CacheParams {
+                size: 32 * MIB,
+                ways: 16,
+                line_bytes: 64,
+                latency: 46.0,
+                banks: 8,
+                bank_bytes_per_cycle: 16.0,
+            }),
+        ],
+        dram_channels: 2,  // 16 channels / 8 CCDs
         dram_bw_gbs: 51.2, // 409.6 GB/s / 8 CCDs
         dram_latency_cycles: 220.0,
         rob_entries: 256,
@@ -200,30 +292,71 @@ pub fn milan_x() -> MachineConfig {
     let mut c = milan();
     c.name = "milan_x".into();
     c.freq_ghz = 2.2; // 7773X clocks lower at iso-TDP
-    c.l2.size = 96 * MIB;
-    c.l2.latency = 50.0;
+    c.levels[2].params.size = 96 * MIB;
+    c.levels[2].params.latency = 50.0;
     c
 }
 
-/// Fig. 8 sensitivity variants: one parameter varied against LARC_C.
-pub fn larc_c_with_latency(latency: f64) -> MachineConfig {
+/// The one parameter a LARC_C variant changes (Fig. 8 sensitivity sweeps
+/// plus the stacked-L3 level-count sweep).
+#[derive(Clone, Copy, Debug)]
+pub enum LarcParam {
+    /// Shared-L2 load-to-use latency in cycles.
+    Latency(f64),
+    /// Shared-L2 capacity in MiB.
+    CapacityMib(u64),
+    /// log2 of the shared-L2 bank count.
+    BankBits(u32),
+    /// Level-count variant: revert the CMG to the A64FX 8 MiB near-L2
+    /// and stack a DRRIP-managed 3D SRAM L3 slab of this many MiB
+    /// behind it.
+    StackedL3Mib(u64),
+}
+
+/// One-parameter LARC_C variants: the single builder behind the Fig. 8
+/// sweeps and the `larc_c_3d` level-count family.
+pub fn larc_c_variant(p: LarcParam) -> MachineConfig {
     let mut c = larc_c();
-    c.name = format!("larc_c_lat{latency}");
-    c.l2.latency = latency;
+    match p {
+        LarcParam::Latency(latency) => {
+            c.name = format!("larc_c_lat{latency}");
+            c.levels[1].params.latency = latency;
+        }
+        LarcParam::CapacityMib(mib) => {
+            c.name = format!("larc_c_{mib}mib");
+            c.levels[1].params.size = mib * MIB;
+        }
+        LarcParam::BankBits(bankbits) => {
+            c.name = format!("larc_c_bb{bankbits}");
+            c.levels[1].params.banks = 1 << bankbits;
+        }
+        LarcParam::StackedL3Mib(mib) => {
+            c.name = format!("larc_c_3d_{mib}mib");
+            c.levels[1].params = *a64fx_s().shared(); // 8 MiB near-L2
+            c.levels.push(LevelConfig {
+                params: CacheParams {
+                    size: mib * MIB,
+                    ways: 16,
+                    line_bytes: 256,
+                    latency: 60.0,
+                    banks: 8,
+                    bank_bytes_per_cycle: 91.0,
+                },
+                scope: Scope::SharedBanked,
+                inclusive: false,
+                policy: ReplacementPolicy::Drrip,
+            });
+        }
+    }
     c
 }
 
-pub fn larc_c_with_l2_size(mib: u64) -> MachineConfig {
-    let mut c = larc_c();
-    c.name = format!("larc_c_{mib}mib");
-    c.l2.size = mib * MIB;
-    c
-}
-
-pub fn larc_c_with_bankbits(bankbits: u32) -> MachineConfig {
-    let mut c = larc_c();
-    c.name = format!("larc_c_bb{bankbits}");
-    c.l2.banks = 1 << bankbits;
+/// LARC_C^3D — the default stacked variant: A64FX 8 MiB near-L2 plus a
+/// 256 MiB 3D SRAM L3 slab (same total capacity as LARC_C, one more
+/// level).
+pub fn larc_c_3d() -> MachineConfig {
+    let mut c = larc_c_variant(LarcParam::StackedL3Mib(256));
+    c.name = "larc_c_3d".into();
     c
 }
 
@@ -239,6 +372,7 @@ pub fn by_name(name: &str) -> Option<MachineConfig> {
         "a64fx_32" => Some(a64fx_32()),
         "larc_c" => Some(larc_c()),
         "larc_a" => Some(larc_a()),
+        "larc_c_3d" => Some(larc_c_3d()),
         "broadwell" => Some(broadwell()),
         "milan" => Some(milan()),
         "milan_x" => Some(milan_x()),
@@ -246,8 +380,8 @@ pub fn by_name(name: &str) -> Option<MachineConfig> {
     }
 }
 
-pub const CONFIG_NAMES: [&str; 7] = [
-    "a64fx_s", "a64fx_32", "larc_c", "larc_a", "broadwell", "milan", "milan_x",
+pub const CONFIG_NAMES: [&str; 8] = [
+    "a64fx_s", "a64fx_32", "larc_c", "larc_a", "larc_c_3d", "broadwell", "milan", "milan_x",
 ];
 
 #[cfg(test)]
@@ -256,10 +390,10 @@ mod tests {
 
     #[test]
     fn table2_l2_sizes_match_paper() {
-        assert_eq!(a64fx_s().l2.size, 8 * MIB);
-        assert_eq!(a64fx_32().l2.size, 8 * MIB);
-        assert_eq!(larc_c().l2.size, 256 * MIB);
-        assert_eq!(larc_a().l2.size, 512 * MIB);
+        assert_eq!(a64fx_s().shared().size, 8 * MIB);
+        assert_eq!(a64fx_32().shared().size, 8 * MIB);
+        assert_eq!(larc_c().shared().size, 256 * MIB);
+        assert_eq!(larc_a().shared().size, 512 * MIB);
     }
 
     #[test]
@@ -273,8 +407,8 @@ mod tests {
     #[test]
     fn l2_bandwidths_match_table2() {
         // ~800 GB/s for A64FX_S / LARC_C, ~1.6 TB/s for LARC_A
-        let bw_c = larc_c().l2.bw_gbs(2.2);
-        let bw_a = larc_a().l2.bw_gbs(2.2);
+        let bw_c = larc_c().shared().bw_gbs(2.2);
+        let bw_a = larc_a().shared().bw_gbs(2.2);
         assert!((750.0..=850.0).contains(&bw_c), "{bw_c}");
         assert!((1500.0..=1700.0).contains(&bw_a), "{bw_a}");
     }
@@ -288,8 +422,47 @@ mod tests {
     }
 
     #[test]
+    fn two_level_machines_have_the_directory_at_l2() {
+        for cfg in [a64fx_s(), a64fx_32(), larc_c(), larc_a(), broadwell()] {
+            assert_eq!(cfg.levels.len(), 2, "{}", cfg.name);
+            assert_eq!(cfg.directory_level(), Some(1), "{}", cfg.name);
+            assert_eq!(cfg.levels[0].scope, Scope::Private, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn milan_is_a_true_three_level_machine() {
+        for cfg in [milan(), milan_x()] {
+            assert_eq!(cfg.levels.len(), 3, "{}", cfg.name);
+            assert_eq!(cfg.levels[1].scope, Scope::Private, "{}", cfg.name);
+            assert_eq!(cfg.directory_level(), Some(2), "{}", cfg.name);
+            assert_eq!(cfg.levels[1].params.size, 512 * KIB, "{}", cfg.name);
+        }
+    }
+
+    #[test]
     fn milan_x_has_3x_l3() {
-        assert_eq!(milan_x().l2.size, 3 * milan().l2.size);
+        assert_eq!(milan_x().llc().size, 3 * milan().llc().size);
+    }
+
+    #[test]
+    fn larc_c_3d_stacks_a_third_level() {
+        let c = larc_c_3d();
+        assert_eq!(c.levels.len(), 3);
+        assert_eq!(c.shared().size, 8 * MIB); // directory = near-L2
+        assert_eq!(c.llc().size, 256 * MIB); // slab = LLC
+        assert_eq!(c.levels[2].policy, ReplacementPolicy::Drrip);
+        assert_eq!(c.directory_level(), Some(1));
+    }
+
+    #[test]
+    fn larc_variants_change_one_parameter() {
+        assert_eq!(larc_c_variant(LarcParam::Latency(52.0)).shared().latency, 52.0);
+        assert_eq!(larc_c_variant(LarcParam::CapacityMib(64)).shared().size, 64 * MIB);
+        assert_eq!(larc_c_variant(LarcParam::BankBits(4)).shared().banks, 16);
+        let l3 = larc_c_variant(LarcParam::StackedL3Mib(512));
+        assert_eq!(l3.llc().size, 512 * MIB);
+        assert_eq!(l3.name, "larc_c_3d_512mib");
     }
 
     #[test]
@@ -303,8 +476,9 @@ mod tests {
     #[test]
     fn gib_scale_l2_still_pow2_sets() {
         // 1 GiB fig8 variant must construct a valid cache
-        let c = larc_c_with_l2_size(1024);
-        assert_eq!(c.l2.size, crate::util::units::GIB);
-        crate::cachesim::cache::Cache::new(c.l2.size, c.l2.ways, c.l2.line_bytes);
+        let c = larc_c_variant(LarcParam::CapacityMib(1024));
+        assert_eq!(c.shared().size, crate::util::units::GIB);
+        let p = c.shared();
+        crate::cachesim::cache::Cache::new(p.size, p.ways, p.line_bytes);
     }
 }

@@ -2,11 +2,17 @@
 //! substitute (paper Section 3.2).
 //!
 //! Models exactly the parameters the paper's gem5 study varies (Table 2,
-//! Fig. 8): per-core L1D with adjacent-line prefetch, a shared, banked,
-//! inclusive L2 with configurable size/latency/bank count, an HBM2/DDR
-//! channel model, MESI-lite coherence, and an out-of-order-window core
-//! timing model (ROB-limited memory-level parallelism, MSHR-limited
-//! outstanding misses).
+//! Fig. 8) and the hierarchy *shapes* its comparison rests on: a generic
+//! N-level cache system ([`Hierarchy`]) of per-core private and
+//! shared-banked inclusive levels with pluggable replacement
+//! (LRU / random / DRRIP), adjacent-line prefetch, an HBM2/DDR channel
+//! model, MESI-lite coherence anchored at the first shared inclusive
+//! level, and an out-of-order-window core timing model (ROB-limited
+//! memory-level parallelism, MSHR-limited outstanding misses).
+//!
+//! Two-level CMGs (A64FX_S, LARC_C/A), three-level CCDs (Milan,
+//! Milan-X), and stacked-slab variants (LARC_C^3D) all run through the
+//! same level walk.
 //!
 //! Fidelity envelope: the simulator is *timing-approximate* (it reproduces
 //! capacity/bandwidth/latency effects on miss traffic and overlap), not
@@ -17,7 +23,10 @@ pub mod cache;
 pub mod cmg;
 pub mod configs;
 pub mod dram;
+pub mod hierarchy;
 pub mod stats;
 
+pub use cache::ReplacementPolicy;
 pub use cmg::{simulate, SimResult};
-pub use configs::{CacheParams, MachineConfig};
+pub use configs::{CacheParams, LevelConfig, MachineConfig, Scope};
+pub use hierarchy::Hierarchy;

@@ -1,6 +1,31 @@
 //! Aggregated counters of one simulation run.
 
+/// Counters of one hierarchy level (index 0 = the L1).  Private levels
+/// are summed across cores.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LevelStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+    /// Bytes this level served: lines delivered upward on demand (hits
+    /// included) and prefetch, plus dirty writebacks landing here — the
+    /// legacy `l2_bytes` semantics, per level.  Level 0 counts its own
+    /// line installs.
+    pub bytes: u64,
+}
+
+impl LevelStats {
+    pub fn miss_rate(&self) -> f64 {
+        rate(self.misses, self.hits + self.misses)
+    }
+}
+
 /// Counters collected by [`crate::cachesim::simulate`].
+///
+/// The legacy `l1_*` fields count level-0 demand traffic; the `l2_*`
+/// fields mirror the *directory* level (the first shared inclusive level
+/// — "the L2" of the two-level machines, the L3 of Milan/Milan-X).  The
+/// full per-level picture lives in `levels`.
 #[derive(Clone, Debug, Default)]
 pub struct SimStats {
     pub accesses: u64,
@@ -12,8 +37,16 @@ pub struct SimStats {
     pub l2_writebacks: u64,
     pub dram_bytes: u64,
     pub l2_bytes: u64,
+    /// Directory-driven invalidations of private copies (store-hit
+    /// invalidates + directory-eviction back-invalidation).
     pub coherence_invalidations: u64,
+    /// Same-core invalidations that keep a private stack inclusive (an
+    /// intermediate private level evicting a line the levels above still
+    /// hold) — capacity events, not coherence traffic.
+    pub inclusion_invalidations: u64,
     pub prefetches: u64,
+    /// Per-level counters, L1 first (filled by the hierarchy walk).
+    pub levels: Vec<LevelStats>,
 }
 
 impl SimStats {
@@ -21,8 +54,9 @@ impl SimStats {
         rate(self.l1_misses, self.l1_hits + self.l1_misses)
     }
 
-    /// L2 miss rate over L2 *accesses* (i.e. L1 misses) — this is what the
-    /// paper's Table 3 reports.
+    /// Directory-level miss rate over its *accesses* (i.e. upper-level
+    /// misses) — this is what the paper's Table 3 reports as the L2 miss
+    /// rate.
     pub fn l2_miss_rate(&self) -> f64 {
         rate(self.l2_misses, self.l2_hits + self.l2_misses)
     }
@@ -45,6 +79,7 @@ mod tests {
         let s = SimStats::default();
         assert_eq!(s.l1_miss_rate(), 0.0);
         assert_eq!(s.l2_miss_rate(), 0.0);
+        assert_eq!(LevelStats::default().miss_rate(), 0.0);
     }
 
     #[test]
@@ -58,5 +93,7 @@ mod tests {
         };
         assert_eq!(s.l1_miss_rate(), 0.25);
         assert_eq!(s.l2_miss_rate(), 0.2);
+        let l = LevelStats { hits: 30, misses: 10, ..Default::default() };
+        assert_eq!(l.miss_rate(), 0.25);
     }
 }

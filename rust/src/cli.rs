@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! larc list [workloads|configs|experiments]
-//! larc run --workload <name> [--config <name>] [--threads N] [--scale s]
+//! larc run --workload <name> [--config <name>] [--threads N] [--levels N] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--store DIR] [--resume]
@@ -92,12 +92,20 @@ larc — LARC (3D-stacked cache) reproduction toolkit
 
 USAGE:
   larc list [workloads|configs|experiments]
-  larc run --workload <name> [--config <cfg>] [--threads N] [--scale tiny|small|paper]
+  larc run --workload <name> [--config <cfg>] [--threads N] [--levels N] [--scale ...]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
-  larc figure <id> [--scale ...] [--pjrt] [--verbose] [--csv] [--store DIR] [--resume]
+  larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
+              [--store DIR] [--resume]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
   larc store <ls|verify|gc> --store DIR
   larc model
+
+HIERARCHY:
+  --levels N    truncate the config's cache hierarchy to its first N levels
+                (DRAM moves up behind level N); e.g. `--config larc_c_3d
+                --levels 2` is the flat near-L2 machine
+  --sweep fam   fig8 sweep family: latency | capacity | bankbits | l3
+                (l3 = stacked-L3 level-count sweep over larc_c_3d slabs)
 
 STORE:
   --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
@@ -143,6 +151,14 @@ mod tests {
     #[test]
     fn empty_args_error() {
         assert!(Cli::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn levels_and_sweep_flags_parse() {
+        let c = parse(&["run", "--workload", "minife", "--config", "milan_x", "--levels", "2"]);
+        assert_eq!(c.flag("levels"), Some("2"));
+        let c = parse(&["figure", "fig8", "--sweep", "l3"]);
+        assert_eq!(c.flag("sweep"), Some("l3"));
     }
 
     #[test]

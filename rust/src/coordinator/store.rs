@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::cachesim::stats::SimStats;
+use crate::cachesim::stats::{LevelStats, SimStats};
 use crate::cachesim::SimResult;
 use crate::coordinator::campaign::{collect_results, Campaign, Job, JobOutput};
 use crate::mca::McaEstimate;
@@ -38,7 +38,12 @@ use crate::util::json::{self, Json};
 /// Bump when the meaning of a stored result changes (simulator semantics,
 /// serialization layout, ...). Old entries stop matching both by key and
 /// by the embedded schema field.
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// v2: the generic N-level hierarchy refactor — `MachineConfig` grew an
+/// ordered level list (whose Debug form feeds the canonical job string)
+/// and `SimStats` gained per-level counters, so every pre-refactor entry
+/// is stale by construction.
+pub const SCHEMA_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------- job keys
 
@@ -97,8 +102,18 @@ pub fn job_key(job: &Job) -> JobKey {
 
 // ------------------------------------------------------- (de)serialization
 
+fn level_to_json(l: &LevelStats) -> Json {
+    json::obj(vec![
+        ("hits", json::num(l.hits as f64)),
+        ("misses", json::num(l.misses as f64)),
+        ("writebacks", json::num(l.writebacks as f64)),
+        ("bytes", json::num(l.bytes as f64)),
+    ])
+}
+
 fn sim_to_json(r: &SimResult) -> Json {
     let s = &r.stats;
+    let levels = json::arr(s.levels.iter().map(level_to_json).collect());
     let stats = json::obj(vec![
         ("accesses", json::num(s.accesses as f64)),
         ("line_touches", json::num(s.line_touches as f64)),
@@ -110,7 +125,9 @@ fn sim_to_json(r: &SimResult) -> Json {
         ("dram_bytes", json::num(s.dram_bytes as f64)),
         ("l2_bytes", json::num(s.l2_bytes as f64)),
         ("coherence_invalidations", json::num(s.coherence_invalidations as f64)),
+        ("inclusion_invalidations", json::num(s.inclusion_invalidations as f64)),
         ("prefetches", json::num(s.prefetches as f64)),
+        ("levels", levels),
     ]);
     json::obj(vec![
         ("kind", json::s("sim")),
@@ -159,7 +176,23 @@ fn req_str(v: &Json, key: &str) -> Result<String, String> {
         .ok_or_else(|| format!("missing string field {key:?}"))
 }
 
+fn level_from_json(v: &Json) -> Result<LevelStats, String> {
+    Ok(LevelStats {
+        hits: req_u64(v, "hits")?,
+        misses: req_u64(v, "misses")?,
+        writebacks: req_u64(v, "writebacks")?,
+        bytes: req_u64(v, "bytes")?,
+    })
+}
+
 fn stats_from_json(v: &Json) -> Result<SimStats, String> {
+    let levels = v
+        .get("levels")
+        .and_then(Json::as_arr)
+        .ok_or("missing levels array")?
+        .iter()
+        .map(level_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
     Ok(SimStats {
         accesses: req_u64(v, "accesses")?,
         line_touches: req_u64(v, "line_touches")?,
@@ -171,7 +204,9 @@ fn stats_from_json(v: &Json) -> Result<SimStats, String> {
         dram_bytes: req_u64(v, "dram_bytes")?,
         l2_bytes: req_u64(v, "l2_bytes")?,
         coherence_invalidations: req_u64(v, "coherence_invalidations")?,
+        inclusion_invalidations: req_u64(v, "inclusion_invalidations")?,
         prefetches: req_u64(v, "prefetches")?,
+        levels,
     })
 }
 

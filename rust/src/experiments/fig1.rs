@@ -1,6 +1,12 @@
 //! Fig. 1 — the pilot study: MiniFE on AMD Milan vs. Milan-X across grid
 //! sizes 100³ → 400³.
 //!
+//! Both machines are genuine three-level hierarchies (private 32 KiB L1D
+//! and 512 KiB L2 per Zen3 core, shared L3 slice); Milan-X stacks the
+//! V-cache, tripling the L3 to 96 MiB.  Before the generic-hierarchy
+//! refactor the L3 was approximated *as* the L2 — the sweep now models
+//! the level the paper actually varies.
+//!
 //! Paper shape: the relative improvement of Milan-X (3× L3) over Milan
 //! peaks (≈3.4x) at the input size whose working set exceeds Milan's L3
 //! but still fits Milan-X's (160³ in the paper), and tapers toward 1 for

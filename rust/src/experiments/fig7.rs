@@ -8,6 +8,11 @@
 //! 7b: fixed thread count, total vector size swept from KiB to 1 GiB —
 //! bandwidth cliffs at each capacity boundary (L1 → L2 → HBM), with the
 //! LARC configs holding L2 bandwidth out to 256/512 MiB.
+//!
+//! The 7a CSV over the two-level machines (a64fx_s / larc_c / larc_a) is
+//! the refactor's bit-identity anchor: the generic hierarchy walk must
+//! reproduce the legacy hard-coded L1+L2 pipeline exactly (see
+//! `tests/hierarchy_equivalence.rs`).
 
 use super::ExpOptions;
 use crate::cachesim::{configs, MachineConfig};

@@ -1,14 +1,18 @@
 //! Fig. 8 — cache-parameter sensitivity on the RIKEN TAPP kernels:
 //! relative runtime vs. the LARC_C baseline while sweeping one of L2
-//! latency {22, 30, 37, 45, 52}, L2 capacity {64..1024 MiB}, and L2
-//! bank bits {0..4}.
+//! latency {22, 30, 37, 45, 52}, L2 capacity {64..1024 MiB}, L2 bank
+//! bits {0..4} — plus, beyond the paper, a hierarchy *level-count* sweep
+//! (`--sweep l3`): the A64FX 8 MiB near-L2 with a 3D-stacked SRAM L3
+//! slab of {128..1024 MiB} behind it, the organization-vs-capacity
+//! question RevaMp3D poses.
 //!
 //! Paper shape: latency has minimal impact (HPC codes are rarely
 //! latency-bound at L2), capacity and bandwidth matter a lot for the
 //! memory-bound kernels, and the small shrunk-down kernels are unaffected.
 
 use super::ExpOptions;
-use crate::cachesim::{configs, MachineConfig};
+use crate::cachesim::configs::{self, LarcParam};
+use crate::cachesim::MachineConfig;
 use crate::coordinator::report::Report;
 use crate::coordinator::{Campaign, Job};
 use crate::trace::workloads::tapp;
@@ -17,19 +21,43 @@ use crate::util::csv;
 pub const LATENCIES: [f64; 5] = [22.0, 30.0, 37.0, 45.0, 52.0];
 pub const SIZES_MIB: [u64; 5] = [64, 128, 256, 512, 1024];
 pub const BANKBITS: [u32; 5] = [0, 1, 2, 3, 4];
+/// Stacked-L3 slab sizes for the `--sweep l3` level-count sweep.
+pub const L3_MIB: [u64; 4] = [128, 256, 512, 1024];
 
-fn variants() -> Vec<(&'static str, String, MachineConfig)> {
+/// The variant set for one invocation.  `None` runs the paper's three
+/// sweeps; `Some("l3")` runs the stacked-L3 level-count sweep; a single
+/// paper sweep can be selected by name.
+fn variants(sweep: Option<&str>) -> anyhow::Result<Vec<(&'static str, String, MachineConfig)>> {
     let mut v = Vec::new();
-    for lat in LATENCIES {
-        v.push(("latency", format!("{lat}"), configs::larc_c_with_latency(lat)));
+    let wants = |key: &str| sweep.is_none() || sweep == Some(key);
+    if wants("latency") {
+        for lat in LATENCIES {
+            let cfg = configs::larc_c_variant(LarcParam::Latency(lat));
+            v.push(("latency", format!("{lat}"), cfg));
+        }
     }
-    for mib in SIZES_MIB {
-        v.push(("capacity", format!("{mib}MiB"), configs::larc_c_with_l2_size(mib)));
+    if wants("capacity") {
+        for mib in SIZES_MIB {
+            let cfg = configs::larc_c_variant(LarcParam::CapacityMib(mib));
+            v.push(("capacity", format!("{mib}MiB"), cfg));
+        }
     }
-    for bb in BANKBITS {
-        v.push(("bankbits", format!("{bb}"), configs::larc_c_with_bankbits(bb)));
+    if wants("bankbits") {
+        for bb in BANKBITS {
+            let cfg = configs::larc_c_variant(LarcParam::BankBits(bb));
+            v.push(("bankbits", format!("{bb}"), cfg));
+        }
     }
-    v
+    if sweep == Some("l3") {
+        for mib in L3_MIB {
+            let cfg = configs::larc_c_variant(LarcParam::StackedL3Mib(mib));
+            v.push(("l3", format!("{mib}MiB"), cfg));
+        }
+    }
+    if v.is_empty() {
+        anyhow::bail!("unknown --sweep {sweep:?} (latency | capacity | bankbits | l3)");
+    }
+    Ok(v)
 }
 
 /// Kernels swept (a representative subset on Small scale; all 20 on Paper).
@@ -51,7 +79,7 @@ fn kernels(opts: &ExpOptions) -> Vec<crate::trace::Spec> {
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let baseline = configs::larc_c();
     let specs = kernels(opts);
-    let vars = variants();
+    let vars = variants(opts.sweep.as_deref())?;
 
     let mut jobs = Vec::new();
     for spec in &specs {
@@ -74,7 +102,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
 
     let mut report = Report::new(
         "fig8",
-        "TAPP sensitivity: relative runtime vs LARC_C (latency / capacity / bankbits sweeps)",
+        "TAPP sensitivity: relative runtime vs LARC_C (latency / capacity / bankbits / l3 sweeps)",
         &["kernel", "sweep", "value", "rel_runtime"],
     );
     let stride = 1 + vars.len();
@@ -107,15 +135,31 @@ mod tests {
         let k17 = specs.iter().find(|s| s.name.starts_with("tapp17")).unwrap();
         let t = k17.effective_threads(32);
         let base = cachesim::simulate(k17, &configs::larc_c(), t).runtime_s;
-        let worst_lat =
-            cachesim::simulate(k17, &configs::larc_c_with_latency(52.0), t).runtime_s;
-        let tiny_cache =
-            cachesim::simulate(k17, &configs::larc_c_with_l2_size(64), t).runtime_s;
+        let slow = configs::larc_c_variant(LarcParam::Latency(52.0));
+        let worst_lat = cachesim::simulate(k17, &slow, t).runtime_s;
+        let tiny = configs::larc_c_variant(LarcParam::CapacityMib(64));
+        let tiny_cache = cachesim::simulate(k17, &tiny, t).runtime_s;
         let lat_delta = (worst_lat / base - 1.0).abs();
         let cap_delta = (tiny_cache / base - 1.0).abs();
         assert!(
             lat_delta <= cap_delta + 0.05,
             "latency delta {lat_delta} vs capacity delta {cap_delta}"
         );
+    }
+
+    #[test]
+    fn sweep_selection_filters_variant_families() {
+        let all = variants(None).unwrap();
+        assert_eq!(all.len(), LATENCIES.len() + SIZES_MIB.len() + BANKBITS.len());
+        assert!(all.iter().all(|(s, _, _)| *s != "l3"));
+
+        let l3 = variants(Some("l3")).unwrap();
+        assert_eq!(l3.len(), L3_MIB.len());
+        assert!(l3.iter().all(|(s, _, c)| *s == "l3" && c.levels.len() == 3));
+
+        let lat = variants(Some("latency")).unwrap();
+        assert_eq!(lat.len(), LATENCIES.len());
+
+        assert!(variants(Some("nope")).is_err());
     }
 }

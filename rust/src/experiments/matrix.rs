@@ -16,7 +16,7 @@ pub struct MatrixRow {
     pub suite: &'static str,
     /// Runtimes (s): [a64fx_s, a64fx_32, larc_c, larc_a].
     pub runtime_s: [f64; 4],
-    /// L2 miss rates: same order.
+    /// Directory-level (shared L2) miss rates: same order.
     pub l2_miss: [f64; 4],
     /// Speedups vs a64fx_s: [a64fx_32, larc_c, larc_a].
     pub speedup: [f64; 3],

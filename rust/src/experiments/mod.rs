@@ -45,6 +45,10 @@ pub struct ExpOptions {
     pub store: Option<PathBuf>,
     /// Reuse valid store entries instead of recomputing (`--resume`).
     pub resume: bool,
+    /// Restrict a sweep experiment to one family (`--sweep`): fig8
+    /// accepts `latency | capacity | bankbits | l3` (the last being the
+    /// stacked-L3 level-count sweep).
+    pub sweep: Option<String>,
 }
 
 impl Default for ExpOptions {
@@ -58,6 +62,7 @@ impl Default for ExpOptions {
             verbose: false,
             store: None,
             resume: false,
+            sweep: None,
         }
     }
 }

@@ -18,10 +18,10 @@ pub fn run() -> Report {
         report.row(&[
             cfg.name.clone(),
             cfg.cores.to_string(),
-            fmt_bytes(cfg.l2.size),
-            csv::f(cfg.l2.bw_gbs(cfg.freq_ghz)),
-            format!("{} cyc", cfg.l2.latency),
-            fmt_bytes(cfg.l1.size),
+            fmt_bytes(cfg.shared().size),
+            csv::f(cfg.shared().bw_gbs(cfg.freq_ghz)),
+            format!("{} cyc", cfg.shared().latency),
+            fmt_bytes(cfg.l1().size),
             csv::f(cfg.dram_bw_gbs),
         ]);
     }

@@ -55,6 +55,7 @@ fn opts(cli: &Cli) -> Result<ExpOptions> {
         verbose: cli.has("verbose"),
         store: cli.flag("store").map(PathBuf::from),
         resume: cli.has("resume"),
+        sweep: cli.flag("sweep").map(str::to_string),
     })
 }
 
@@ -90,11 +91,11 @@ fn cmd_list(cli: &Cli) -> Result<()> {
         for name in configs::CONFIG_NAMES {
             let c = configs::by_name(name).unwrap();
             println!(
-                "  {:<10} cores={:<3} L2={} @ {:.0} GB/s, HBM {:.0} GB/s",
+                "  {:<10} cores={:<3} {} @ {:.0} GB/s shared, HBM {:.0} GB/s",
                 c.name,
                 c.cores,
-                fmt_bytes(c.l2.size),
-                c.l2.bw_gbs(c.freq_ghz),
+                levels_summary(&c),
+                c.shared().bw_gbs(c.freq_ghz),
                 c.dram_bw_gbs
             );
         }
@@ -105,6 +106,16 @@ fn cmd_list(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Compact hierarchy description, e.g. `L1 64 KiB + L2 8 MiB`.
+fn levels_summary(c: &larc::cachesim::MachineConfig) -> String {
+    c.levels
+        .iter()
+        .enumerate()
+        .map(|(i, l)| format!("L{} {}", i + 1, fmt_bytes(l.params.size)))
+        .collect::<Vec<_>>()
+        .join(" + ")
+}
+
 fn cmd_run(cli: &Cli) -> Result<()> {
     let name = cli
         .flag("workload")
@@ -113,8 +124,21 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let spec = workloads::by_name(name, scale)
         .ok_or_else(|| anyhow!("unknown workload {name:?} (try `larc list workloads`)"))?;
     let cfg_name = cli.flag_or("config", "a64fx_s");
-    let cfg = configs::by_name(&cfg_name)
+    let mut cfg = configs::by_name(&cfg_name)
         .ok_or_else(|| anyhow!("unknown config {cfg_name:?} (try `larc list configs`)"))?;
+    if let Some(levels) = cli.flag("levels") {
+        let n: usize = levels
+            .parse()
+            .map_err(|_| anyhow!("--levels expects an integer, got {levels:?}"))?;
+        if n == 0 || n > cfg.levels.len() {
+            bail!("--levels must be 1..={} for {}", cfg.levels.len(), cfg.name);
+        }
+        if n < cfg.levels.len() {
+            // truncate the hierarchy: DRAM moves up behind level n
+            cfg.levels.truncate(n);
+            cfg.name = format!("{}_l{n}", cfg.name);
+        }
+    }
     let threads = cli
         .usize_flag("threads", spec.effective_threads(cfg.cores))
         .map_err(|e| anyhow!(e))?;
@@ -122,6 +146,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let r = cachesim::simulate(&spec, &cfg, threads);
     println!("workload : {} ({})", r.workload, spec.suite.label());
     println!("config   : {} x{} threads", r.config, r.threads);
+    println!("levels   : {}", levels_summary(&cfg));
     println!("footprint: {}", fmt_bytes(spec.footprint()));
     println!("cycles   : {:.3e}", r.cycles);
     println!("runtime  : {:.6} s", r.runtime_s);
@@ -130,6 +155,16 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         r.stats.l1_miss_rate() * 100.0,
         r.stats.l2_miss_rate() * 100.0
     );
+    for (i, l) in r.stats.levels.iter().enumerate() {
+        println!(
+            "  L{}     : {} hits, {} misses ({:.2}% miss), {} in",
+            i + 1,
+            l.hits,
+            l.misses,
+            l.miss_rate() * 100.0,
+            fmt_bytes(l.bytes)
+        );
+    }
     println!(
         "DRAM     : {} ({:.1} GB/s achieved)",
         fmt_bytes(r.stats.dram_bytes),

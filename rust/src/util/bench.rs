@@ -68,6 +68,35 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Serialize bench results as a JSON baseline (`BENCH_<suite>.json`,
+/// consumed by CI as a per-run artifact).
+pub fn results_to_json(results: &[BenchResult]) -> crate::util::json::Json {
+    use crate::util::json;
+    let entries = results
+        .iter()
+        .map(|r| {
+            let (rate, unit) = match r.throughput {
+                Some((rate, unit)) => (json::num(rate), json::s(unit)),
+                None => (json::Json::Null, json::Json::Null),
+            };
+            json::obj(vec![
+                ("name", json::s(&r.name)),
+                ("median_s", json::num(r.median_s)),
+                ("mad_s", json::num(r.mad_s)),
+                ("iters", json::num(r.iters as f64)),
+                ("throughput", rate),
+                ("unit", unit),
+            ])
+        })
+        .collect();
+    json::obj(vec![("results", json::arr(entries))])
+}
+
+/// Write a results baseline to `path`.
+pub fn write_json(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, results_to_json(results).to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +114,17 @@ mod tests {
         assert!(r.median_s >= 0.0);
         assert!(r.throughput.is_some());
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn json_baseline_round_trips() {
+        let r = bench("j", 2, || 42);
+        let v = results_to_json(&[r]);
+        let text = v.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let arr = back.get("results").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").and_then(|n| n.as_str()), Some("j"));
+        assert!(arr[0].get("median_s").and_then(|n| n.as_f64()).is_some());
     }
 }

@@ -1,0 +1,434 @@
+//! The refactor's acceptance gate: the generic N-level hierarchy walk
+//! must be *bit-identical* to the legacy hard-coded L1+L2 pipeline on
+//! every two-level machine.
+//!
+//! `legacy_simulate` below is a verbatim copy of the pre-refactor
+//! `cachesim::cmg::simulate` (same arithmetic, same operation order,
+//! same stats accounting), kept as a golden reference.  Cycles and every
+//! counter must match `cachesim::simulate` exactly — which is what makes
+//! the fig7a CSV byte-identical across the refactor.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use larc::cachesim;
+use larc::cachesim::cache::{AccessOutcome, Cache};
+use larc::cachesim::configs::{self, CacheParams, MachineConfig};
+use larc::cachesim::dram::Dram;
+use larc::cachesim::stats::SimStats;
+use larc::isa::{InstrClass, InstrMix};
+use larc::mca::analyzers::port_pressure_native;
+use larc::mca::PortModel;
+use larc::trace::patterns::Pattern;
+use larc::trace::{AccessIter, BoundClass, Phase, Spec, Suite};
+use larc::util::units::{KIB, MIB};
+
+struct ThreadState {
+    stream: AccessIter,
+    cycle: f64,
+    last_completion: f64,
+    inflight: Vec<f64>,
+    inflight_head: usize,
+    outstanding: Vec<f64>,
+    finish: f64,
+}
+
+struct PhaseCost {
+    gap: f64,
+    window: usize,
+}
+
+/// The pre-refactor two-level simulate(), verbatim (modulo reading the
+/// L1/L2 parameters out of the level list).
+fn legacy_simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> (f64, SimStats) {
+    assert_eq!(cfg.levels.len(), 2, "legacy reference is two-level only");
+    let l1p: CacheParams = cfg.levels[0].params;
+    let l2p: CacheParams = cfg.levels[1].params;
+
+    let threads = threads.max(1).min(cfg.cores).min(64);
+    let pm = PortModel::get(cfg.port_arch);
+    let blocks = spec.blocks(threads);
+
+    let phase_costs: Vec<PhaseCost> = blocks
+        .iter()
+        .skip(1)
+        .map(|(bb, _)| {
+            let gap = port_pressure_native(bb, &pm) as f64;
+            let instr = bb.mix.total().max(1.0);
+            let window = ((cfg.rob_entries as f32 / instr).floor() as usize).max(1);
+            PhaseCost { gap, window }
+        })
+        .collect();
+
+    let mut l1s: Vec<Cache> = (0..threads)
+        .map(|_| Cache::new(l1p.size, l1p.ways, l1p.line_bytes))
+        .collect();
+    let mut l2 = Cache::new(l2p.size, l2p.ways, l2p.line_bytes);
+    let mut l2_banks = vec![0f64; l2p.banks as usize];
+    let mut dram = Dram::new(
+        cfg.dram_channels,
+        cfg.dram_bytes_per_cycle(),
+        cfg.dram_latency_cycles,
+        256,
+    );
+    let mut stats = SimStats::default();
+
+    let max_window = phase_costs.iter().map(|p| p.window).max().unwrap_or(1);
+    let mut states: Vec<ThreadState> = (0..threads)
+        .map(|t| ThreadState {
+            stream: spec.stream(t, threads),
+            cycle: 0.0,
+            last_completion: 0.0,
+            inflight: vec![0.0; max_window],
+            inflight_head: 0,
+            outstanding: Vec::with_capacity(cfg.mshrs as usize),
+            finish: 0.0,
+        })
+        .collect();
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..threads).map(|t| Reverse((0u64, t))).collect();
+
+    let l1_line = l1p.line_bytes as u64;
+    let l2_line = l2p.line_bytes as u64;
+    let l2_bank_mask = (l2p.banks as u64).next_power_of_two() - 1;
+    let l1_issue = |bytes: u64| bytes as f64 / cfg.l1_bytes_per_cycle;
+
+    'sched: while let Some(Reverse((_, t))) = heap.pop() {
+        loop {
+            let access = {
+                let st = &mut states[t];
+                match st.stream.next() {
+                    Some(a) => a,
+                    None => {
+                        st.finish = st.finish.max(st.cycle).max(st.last_completion);
+                        continue 'sched;
+                    }
+                }
+            };
+            stats.accesses += 1;
+
+            let phase = access.phase as usize;
+            let (gap, window) = phase_costs
+                .get(phase)
+                .map(|p| (p.gap, p.window))
+                .unwrap_or((1.0, 8));
+
+            let st = &mut states[t];
+            let mut issue = st.cycle + gap;
+            if access.dep {
+                issue = issue.max(st.last_completion);
+            }
+            let idx = st.inflight_head % window.min(st.inflight.len());
+            issue = issue.max(st.inflight[idx]);
+
+            let first = access.addr & !(l1_line - 1);
+            let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+            let mut completion = issue;
+            let mut line = first;
+            while line <= last {
+                stats.line_touches += 1;
+                let this_done;
+                match l1s[t].access(line, access.write) {
+                    AccessOutcome::Hit => {
+                        stats.l1_hits += 1;
+                        this_done = issue + l1p.latency;
+                    }
+                    AccessOutcome::Miss => {
+                        stats.l1_misses += 1;
+                        if st.outstanding.len() >= cfg.mshrs as usize {
+                            let mut earliest_i = 0;
+                            for (i, &c) in st.outstanding.iter().enumerate() {
+                                if c < st.outstanding[earliest_i] {
+                                    earliest_i = i;
+                                }
+                            }
+                            let earliest = st.outstanding.swap_remove(earliest_i);
+                            issue = issue.max(earliest);
+                        }
+                        let fill_done = fetch_line(
+                            line,
+                            access.write,
+                            issue,
+                            t,
+                            &mut l1s,
+                            &mut l2,
+                            &mut l2_banks,
+                            l2_bank_mask,
+                            &l1p,
+                            &l2p,
+                            &mut dram,
+                            &mut stats,
+                        );
+                        st.outstanding.push(fill_done);
+                        this_done = fill_done;
+
+                        if cfg.adjacent_prefetch {
+                            let next = line + l1_line;
+                            if !l1s[t].probe(next) && l2.probe(next) {
+                                stats.prefetches += 1;
+                                stats.l2_bytes += l1_line;
+                                let bank =
+                                    ((next / l2_line) & l2_bank_mask) as usize % l2_banks.len();
+                                let occ = l1_line as f64 / l2p.bank_bytes_per_cycle;
+                                let start = issue.max(l2_banks[bank]);
+                                l2_banks[bank] = start + occ;
+                                install_l1(next, false, t, &mut l1s, &mut l2, &mut stats);
+                            }
+                        }
+                    }
+                }
+                completion = completion.max(this_done);
+                line += l1_line;
+            }
+
+            let w = window.min(st.inflight.len());
+            let idx = st.inflight_head % w;
+            st.inflight[idx] = completion;
+            st.inflight_head = st.inflight_head.wrapping_add(1);
+            st.last_completion = completion;
+
+            st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+            st.finish = st.finish.max(completion);
+
+            let clock = st.cycle as u64;
+            if let Some(&Reverse((next_min, _))) = heap.peek() {
+                if clock > next_min {
+                    heap.push(Reverse((clock, t)));
+                    continue 'sched;
+                }
+            }
+        }
+    }
+
+    let cycles = states.iter().map(|s| s.finish).fold(0f64, f64::max);
+
+    stats.l2_hits = l2.hits;
+    stats.l2_misses = l2.misses;
+    stats.l2_writebacks = l2.writebacks;
+
+    (cycles, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fetch_line(
+    line: u64,
+    write: bool,
+    issue: f64,
+    t: usize,
+    l1s: &mut [Cache],
+    l2: &mut Cache,
+    l2_banks: &mut [f64],
+    l2_bank_mask: u64,
+    l1p: &CacheParams,
+    l2p: &CacheParams,
+    dram: &mut Dram,
+    stats: &mut SimStats,
+) -> f64 {
+    let l2_line = l2p.line_bytes as u64;
+    let bank = ((line / l2_line) & l2_bank_mask) as usize % l2_banks.len();
+    let occ = l1p.line_bytes as f64 / l2p.bank_bytes_per_cycle;
+    let start = issue.max(l2_banks[bank]);
+    l2_banks[bank] = start + occ;
+    stats.l2_bytes += l1p.line_bytes as u64;
+
+    let l2_addr = line & !(l2_line - 1);
+    let mut done = start + occ + l2p.latency;
+
+    match l2.access(l2_addr, write) {
+        AccessOutcome::Hit => {
+            if write {
+                let sharers = l2.sharers(l2_addr) & !(1u64 << t);
+                if sharers != 0 {
+                    for (o, l1o) in l1s.iter_mut().enumerate() {
+                        if o != t && sharers & (1 << o) != 0 {
+                            let (present, _) = l1o.invalidate(line);
+                            if present {
+                                stats.coherence_invalidations += 1;
+                            }
+                        }
+                    }
+                    done += l2p.latency;
+                }
+            }
+        }
+        AccessOutcome::Miss => {
+            let dram_done = dram.transfer(l2_addr, l2_line, start + occ);
+            stats.dram_bytes += l2_line;
+            done = dram_done + l2p.latency;
+            if let Some(ev) = l2.fill(l2_addr, write) {
+                if ev.sharers != 0 {
+                    for (o, l1o) in l1s.iter_mut().enumerate() {
+                        if ev.sharers & (1 << o) != 0 {
+                            let mut a = ev.addr;
+                            while a < ev.addr + l2_line {
+                                let (present, _) = l1o.invalidate(a);
+                                if present {
+                                    stats.coherence_invalidations += 1;
+                                }
+                                a += l1p.line_bytes as u64;
+                            }
+                        }
+                    }
+                }
+                if ev.dirty {
+                    dram.transfer(ev.addr, l2_line, start + occ);
+                    stats.dram_bytes += l2_line;
+                }
+            }
+        }
+    }
+
+    install_l1(line, write, t, l1s, l2, stats);
+    done
+}
+
+fn install_l1(
+    line: u64,
+    write: bool,
+    t: usize,
+    l1s: &mut [Cache],
+    l2: &mut Cache,
+    stats: &mut SimStats,
+) {
+    if let Some(ev) = l1s[t].fill(line, write) {
+        l2.clear_sharer(ev.addr, t);
+        if ev.dirty {
+            l2.access(ev.addr, true);
+            if l2.hits > 0 {
+                l2.hits -= 1;
+            }
+            stats.l2_bytes += l1s[t].line_bytes();
+        }
+    }
+    l2.set_sharer(line, t);
+}
+
+// ------------------------------------------------------------ the gate
+
+fn stream_spec(bytes: u64, passes: u32, write_fraction: f32, ilp: f32) -> Spec {
+    Spec {
+        name: "equiv-stream".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 8,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "stream",
+            pattern: Pattern::Stream {
+                bytes,
+                passes,
+                streams: 3,
+                write_fraction,
+            },
+            mix: InstrMix::new()
+                .with(InstrClass::VecFma, 2.0)
+                .with(InstrClass::Load, 2.0)
+                .with(InstrClass::Store, 1.0)
+                .with(InstrClass::AddrGen, 1.0),
+            ilp,
+        }],
+    }
+}
+
+fn random_spec(table_bytes: u64, lookups: u64, chase: bool) -> Spec {
+    Spec {
+        name: "equiv-random".into(),
+        suite: Suite::Ecp,
+        class: BoundClass::Latency,
+        threads: 4,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "lookup",
+            pattern: Pattern::RandomLookup {
+                table_bytes,
+                lookups,
+                chase,
+                seed: 11,
+            },
+            mix: InstrMix::new()
+                .with(InstrClass::Load, 2.0)
+                .with(InstrClass::AddrGen, 1.0),
+            ilp: 2.0,
+        }],
+    }
+}
+
+fn assert_identical(spec: &Spec, cfg: &MachineConfig, threads: usize) {
+    let (legacy_cycles, l) = legacy_simulate(spec, cfg, threads);
+    let r = cachesim::simulate(spec, cfg, threads);
+    let n = &r.stats;
+    assert_eq!(legacy_cycles.to_bits(), r.cycles.to_bits(), "cycles diverged on {}", cfg.name);
+    assert_eq!(l.accesses, n.accesses, "accesses ({})", cfg.name);
+    assert_eq!(l.line_touches, n.line_touches, "line_touches ({})", cfg.name);
+    assert_eq!(l.l1_hits, n.l1_hits, "l1_hits ({})", cfg.name);
+    assert_eq!(l.l1_misses, n.l1_misses, "l1_misses ({})", cfg.name);
+    assert_eq!(l.l2_hits, n.l2_hits, "l2_hits ({})", cfg.name);
+    assert_eq!(l.l2_misses, n.l2_misses, "l2_misses ({})", cfg.name);
+    assert_eq!(l.l2_writebacks, n.l2_writebacks, "l2_writebacks ({})", cfg.name);
+    assert_eq!(l.dram_bytes, n.dram_bytes, "dram_bytes ({})", cfg.name);
+    assert_eq!(l.l2_bytes, n.l2_bytes, "l2_bytes ({})", cfg.name);
+    assert_eq!(
+        l.coherence_invalidations, n.coherence_invalidations,
+        "coherence_invalidations ({})",
+        cfg.name
+    );
+    assert_eq!(l.prefetches, n.prefetches, "prefetches ({})", cfg.name);
+    // and the per-level view is consistent with the legacy totals
+    assert_eq!(n.levels.len(), 2, "{}", cfg.name);
+    assert_eq!(n.levels[1].misses, n.l2_misses, "{}", cfg.name);
+    // two-level machines have no intermediate private levels, so the
+    // inclusion counter (a post-legacy addition) must stay zero
+    assert_eq!(n.inclusion_invalidations, 0, "{}", cfg.name);
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_l2_resident_stream() {
+    for cfg in [configs::a64fx_s(), configs::larc_c(), configs::larc_a()] {
+        let spec = stream_spec(MIB, 3, 1.0 / 3.0, 8.0);
+        let threads = cfg.cores.min(8);
+        assert_identical(&spec, &cfg, threads);
+    }
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_dram_spilling_stream() {
+    for cfg in [configs::a64fx_s(), configs::larc_c()] {
+        let spec = stream_spec(12 * MIB, 2, 0.5, 4.0);
+        assert_identical(&spec, &cfg, 12);
+    }
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_single_thread() {
+    let cfg = configs::a64fx_s();
+    let spec = stream_spec(512 * KIB, 4, 1.0 / 3.0, 8.0);
+    assert_identical(&spec, &cfg, 1);
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_random_lookups() {
+    for cfg in [configs::a64fx_s(), configs::broadwell()] {
+        let spec = random_spec(24 * MIB, 60_000, false);
+        assert_identical(&spec, &cfg, 4);
+    }
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_pointer_chase() {
+    let cfg = configs::a64fx_s();
+    let spec = random_spec(16 * MIB, 20_000, true);
+    assert_identical(&spec, &cfg, 1);
+}
+
+#[test]
+fn two_level_walk_is_bit_identical_write_heavy_shared() {
+    // all-write single stream over a small buffer: exercises the
+    // MESI-lite store-invalidate and dirty-writeback paths
+    let spec = stream_spec(256 * KIB, 6, 1.0, 4.0);
+    for cfg in [configs::a64fx_s(), configs::larc_a()] {
+        assert_identical(&spec, &cfg, 8);
+    }
+}
