@@ -1,115 +1,20 @@
-//! Cache-simulator micro-benchmarks: trace-event throughput on the L3 hot
+//! Cache-simulator micro-benchmarks: trace-event throughput on the hot
 //! path (the perf target in DESIGN.md §7 is >= 10 M line-touches/s/core).
 //!
-//! Run: `cargo bench --bench bench_cachesim`
+//! Cases live in `larc::benchsuite` (shared with `larc bench`).
+//!
+//! Run: `cargo bench --bench bench_cachesim` — also writes a
+//! `BENCH_cachesim.json` baseline (bench-runner JSON, throughput in
+//! simulated accesses/s) into the working directory for CI to archive
+//! and gate against `benches/baselines/BENCH_cachesim.json`.
 
-use larc::cachesim::{self, configs};
-use larc::isa::{InstrClass, InstrMix};
-use larc::trace::patterns::Pattern;
-use larc::trace::{BoundClass, Phase, Spec, Suite};
-use larc::util::bench::{bench, black_box};
-use larc::util::units::MIB;
-
-fn spec(pattern: Pattern, name: &str) -> Spec {
-    Spec {
-        name: name.into(),
-        suite: Suite::Top500,
-        class: BoundClass::Bandwidth,
-        threads: 12,
-        max_threads: usize::MAX,
-        ranks: 1,
-        phases: vec![Phase {
-            label: "bench",
-            pattern,
-            mix: InstrMix::new()
-                .with(InstrClass::VecFma, 2.0)
-                .with(InstrClass::Load, 2.0)
-                .with(InstrClass::Store, 1.0)
-                .with(InstrClass::AddrGen, 1.0),
-            ilp: 8.0,
-        }],
-    }
-}
+use larc::benchsuite;
 
 fn main() {
-    let cfg = configs::a64fx_s();
-    let cases = [
-        (
-            "stream_12t_l2_resident",
-            spec(
-                Pattern::Stream {
-                    bytes: MIB,
-                    passes: 8,
-                    streams: 3,
-                    write_fraction: 1.0 / 3.0,
-                },
-                "stream",
-            ),
-        ),
-        (
-            "stream_12t_dram_bound",
-            spec(
-                Pattern::Stream {
-                    bytes: 32 * MIB,
-                    passes: 2,
-                    streams: 3,
-                    write_fraction: 1.0 / 3.0,
-                },
-                "stream-dram",
-            ),
-        ),
-        (
-            "random_lookup_12t",
-            spec(
-                Pattern::RandomLookup {
-                    table_bytes: 16 * MIB,
-                    lookups: 400_000,
-                    chase: false,
-                    seed: 1,
-                },
-                "random",
-            ),
-        ),
-        (
-            "stencil_12t",
-            spec(
-                Pattern::Stencil3d {
-                    nx: 64,
-                    ny: 64,
-                    nz: 64,
-                    elem_bytes: 8,
-                    sweeps: 2,
-                },
-                "stencil",
-            ),
-        ),
-    ];
-
-    println!("# cachesim micro-benchmarks ({} cores simulated)", cfg.cores);
-    for (name, s) in cases {
-        let r = bench(name, 3, || {
-            let out = cachesim::simulate(&s, &cfg, 12);
-            black_box(out.stats.line_touches)
-        });
-        println!("{}", r.report());
+    let cases = benchsuite::cachesim_cases();
+    let results = benchsuite::run_suite("cachesim", &cases, 3);
+    match benchsuite::write_suite_json(std::path::Path::new("."), "cachesim", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_cachesim.json: {e}"),
     }
-
-    // the same streaming case through a three-level hierarchy, for a
-    // quick flat-vs-stacked walk-cost comparison (bench_hierarchy has
-    // the full suite)
-    let cfg3 = configs::milan_x();
-    let s3 = spec(
-        Pattern::Stream {
-            bytes: 32 * MIB,
-            passes: 2,
-            streams: 3,
-            write_fraction: 1.0 / 3.0,
-        },
-        "stream-3level",
-    );
-    let r = bench("stream_8t_three_level", 3, || {
-        let out = cachesim::simulate(&s3, &cfg3, 8);
-        black_box(out.stats.line_touches)
-    });
-    println!("{}", r.report());
 }

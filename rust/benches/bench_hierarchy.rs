@@ -1,112 +1,24 @@
-//! Hierarchy micro-benchmarks: the N-level walk hot path that the
-//! generic refactor must keep fast (the fused `access_or_fill` saves one
-//! tag scan per miss per level).
+//! Hierarchy micro-benchmarks: the N-level walk hot path the engine
+//! overhaul targets (SoA tag scan + batched generation + LineRef
+//! threading; the fused `access_or_fill` already saves one tag scan per
+//! miss per level).
 //!
 //! Cases pit the flat two-level LARC_C against the three-level machines
-//! (Milan-X, LARC_C^3D) on L2/L3-resident and DRAM-spilling streams.
+//! (Milan-X, LARC_C^3D) on cache-resident and DRAM-spilling streams.
+//! They live in `larc::benchsuite` (shared with `larc bench`).
 //!
 //! Run: `cargo bench --bench bench_hierarchy` — also writes a
-//! `BENCH_hierarchy.json` baseline (bench-runner JSON) into the working
-//! directory for CI to archive.
+//! `BENCH_hierarchy.json` baseline (bench-runner JSON, throughput in
+//! simulated accesses/s) into the working directory for CI to archive
+//! and gate against `benches/baselines/BENCH_hierarchy.json`.
 
-use larc::cachesim::{self, configs, MachineConfig};
-use larc::isa::{InstrClass, InstrMix};
-use larc::trace::patterns::Pattern;
-use larc::trace::{BoundClass, Phase, Spec, Suite};
-use larc::util::bench::{bench, black_box, write_json, BenchResult};
-use larc::util::units::MIB;
-
-fn spec(pattern: Pattern, name: &str) -> Spec {
-    Spec {
-        name: name.into(),
-        suite: Suite::Top500,
-        class: BoundClass::Bandwidth,
-        threads: 8,
-        max_threads: usize::MAX,
-        ranks: 1,
-        phases: vec![Phase {
-            label: "bench",
-            pattern,
-            mix: InstrMix::new()
-                .with(InstrClass::VecFma, 2.0)
-                .with(InstrClass::Load, 2.0)
-                .with(InstrClass::Store, 1.0)
-                .with(InstrClass::AddrGen, 1.0),
-            ilp: 8.0,
-        }],
-    }
-}
-
-fn stream(bytes: u64, passes: u32, name: &str) -> Spec {
-    spec(
-        Pattern::Stream {
-            bytes,
-            passes,
-            streams: 3,
-            write_fraction: 1.0 / 3.0,
-        },
-        name,
-    )
-}
+use larc::benchsuite;
 
 fn main() {
-    let cases: Vec<(&str, MachineConfig, Spec, usize)> = vec![
-        (
-            "larc_c_2level_l2_resident",
-            configs::larc_c(),
-            stream(2 * MIB, 4, "flat"),
-            8,
-        ),
-        (
-            // 48 MiB footprint: spills the 8 MiB near-L2, lives in the
-            // 256 MiB slab — the walk terminates at level 2 every pass
-            "larc_c_3d_3level_slab_resident",
-            configs::larc_c_3d(),
-            stream(16 * MIB, 4, "slab"),
-            8,
-        ),
-        (
-            "milan_x_3level_l3_resident",
-            configs::milan_x(),
-            stream(8 * MIB, 3, "milanx"),
-            8,
-        ),
-        (
-            "milan_x_3level_dram_bound",
-            configs::milan_x(),
-            stream(48 * MIB, 1, "milanx-dram"),
-            8,
-        ),
-        (
-            "milan_x_3level_random",
-            configs::milan_x(),
-            spec(
-                Pattern::RandomLookup {
-                    table_bytes: 16 * MIB,
-                    lookups: 200_000,
-                    chase: false,
-                    seed: 1,
-                },
-                "milanx-random",
-            ),
-            8,
-        ),
-    ];
-
-    println!("# hierarchy walk micro-benchmarks");
-    let mut results: Vec<BenchResult> = Vec::new();
-    for (name, cfg, s, threads) in &cases {
-        let r = bench(name, 3, || {
-            let out = cachesim::simulate(s, cfg, *threads);
-            black_box(out.stats.line_touches)
-        });
-        println!("{}", r.report());
-        results.push(r);
-    }
-
-    let path = std::path::Path::new("BENCH_hierarchy.json");
-    match write_json(path, &results) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    let cases = benchsuite::hierarchy_cases();
+    let results = benchsuite::run_suite("hierarchy", &cases, 3);
+    match benchsuite::write_suite_json(std::path::Path::new("."), "hierarchy", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hierarchy.json: {e}"),
     }
 }

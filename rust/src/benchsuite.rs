@@ -1,0 +1,328 @@
+//! The cachesim / hierarchy benchmark suites, shared between the
+//! `cargo bench` binaries (`benches/bench_cachesim.rs`,
+//! `benches/bench_hierarchy.rs`) and the `larc bench` CLI subcommand —
+//! one definition of the cases, two entry points.
+//!
+//! Each suite writes a `BENCH_<suite>.json` baseline (the bench runner's
+//! JSON form, with `throughput` in simulated **accesses per second**).
+//! CI archives the artifacts on every push and fails the build when a
+//! suite's throughput regresses more than 25% against the committed
+//! floors in `rust/benches/baselines/` — see [`compare_to_baseline`].
+
+use std::path::{Path, PathBuf};
+
+use crate::cachesim::{self, configs, MachineConfig};
+use crate::isa::{InstrClass, InstrMix};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Spec, Suite};
+use crate::util::bench::{bench_unit, black_box, write_json, BenchResult};
+use crate::util::json;
+use crate::util::units::MIB;
+
+/// One simulation benchmark case.
+pub struct BenchCase {
+    pub name: &'static str,
+    pub cfg: MachineConfig,
+    pub spec: Spec,
+    pub threads: usize,
+}
+
+fn spec(pattern: Pattern, name: &str, threads: usize) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "bench",
+            pattern,
+            mix: InstrMix::new()
+                .with(InstrClass::VecFma, 2.0)
+                .with(InstrClass::Load, 2.0)
+                .with(InstrClass::Store, 1.0)
+                .with(InstrClass::AddrGen, 1.0),
+            ilp: 8.0,
+        }],
+    }
+}
+
+fn stream(bytes: u64, passes: u32, name: &str, threads: usize) -> Spec {
+    spec(
+        Pattern::Stream {
+            bytes,
+            passes,
+            streams: 3,
+            write_fraction: 1.0 / 3.0,
+        },
+        name,
+        threads,
+    )
+}
+
+/// Trace-event throughput on the two-level A64FX hot path (the perf
+/// target in DESIGN.md §7 is >= 10 M line-touches/s/core).
+pub fn cachesim_cases() -> Vec<BenchCase> {
+    let cfg = configs::a64fx_s();
+    vec![
+        BenchCase {
+            name: "stream_12t_l2_resident",
+            cfg: cfg.clone(),
+            spec: stream(MIB, 8, "stream", 12),
+            threads: 12,
+        },
+        BenchCase {
+            name: "stream_12t_dram_bound",
+            cfg: cfg.clone(),
+            spec: stream(32 * MIB, 2, "stream-dram", 12),
+            threads: 12,
+        },
+        BenchCase {
+            name: "random_lookup_12t",
+            cfg: cfg.clone(),
+            spec: spec(
+                Pattern::RandomLookup {
+                    table_bytes: 16 * MIB,
+                    lookups: 400_000,
+                    chase: false,
+                    seed: 1,
+                },
+                "random",
+                12,
+            ),
+            threads: 12,
+        },
+        BenchCase {
+            name: "stencil_12t",
+            cfg,
+            spec: spec(
+                Pattern::Stencil3d {
+                    nx: 64,
+                    ny: 64,
+                    nz: 64,
+                    elem_bytes: 8,
+                    sweeps: 2,
+                },
+                "stencil",
+                12,
+            ),
+            threads: 12,
+        },
+        BenchCase {
+            name: "stream_8t_three_level",
+            cfg: configs::milan_x(),
+            spec: stream(32 * MIB, 2, "stream-3level", 8),
+            threads: 8,
+        },
+    ]
+}
+
+/// The N-level walk cost: flat two-level LARC_C against the three-level
+/// machines (Milan-X, LARC_C^3D) on cache-resident and DRAM-spilling
+/// streams — the ">= 3x accesses/s on the 3-level walk" target of the
+/// engine overhaul is measured here.
+pub fn hierarchy_cases() -> Vec<BenchCase> {
+    vec![
+        BenchCase {
+            name: "larc_c_2level_l2_resident",
+            cfg: configs::larc_c(),
+            spec: stream(2 * MIB, 4, "flat", 8),
+            threads: 8,
+        },
+        BenchCase {
+            // 48 MiB footprint: spills the 8 MiB near-L2, lives in the
+            // 256 MiB slab — the walk terminates at level 2 every pass
+            name: "larc_c_3d_3level_slab_resident",
+            cfg: configs::larc_c_3d(),
+            spec: stream(16 * MIB, 4, "slab", 8),
+            threads: 8,
+        },
+        BenchCase {
+            name: "milan_x_3level_l3_resident",
+            cfg: configs::milan_x(),
+            spec: stream(8 * MIB, 3, "milanx", 8),
+            threads: 8,
+        },
+        BenchCase {
+            name: "milan_x_3level_dram_bound",
+            cfg: configs::milan_x(),
+            spec: stream(48 * MIB, 1, "milanx-dram", 8),
+            threads: 8,
+        },
+        BenchCase {
+            name: "milan_x_3level_random",
+            cfg: configs::milan_x(),
+            spec: spec(
+                Pattern::RandomLookup {
+                    table_bytes: 16 * MIB,
+                    lookups: 200_000,
+                    chase: false,
+                    seed: 1,
+                },
+                "milanx-random",
+                8,
+            ),
+            threads: 8,
+        },
+    ]
+}
+
+/// Suite names accepted by [`cases_for`] / `larc bench`.
+pub const SUITES: [&str; 2] = ["cachesim", "hierarchy"];
+
+/// Look a suite's cases up by name.
+pub fn cases_for(suite: &str) -> Option<Vec<BenchCase>> {
+    match suite {
+        "cachesim" => Some(cachesim_cases()),
+        "hierarchy" => Some(hierarchy_cases()),
+        _ => None,
+    }
+}
+
+/// Run one suite (printing per-case reports) and return the results.
+/// Throughput is simulated *accesses* per wall-clock second.
+pub fn run_suite(suite: &str, cases: &[BenchCase], iters: usize) -> Vec<BenchResult> {
+    println!("# {suite} micro-benchmarks ({iters} timed iters/case)");
+    let mut results = Vec::with_capacity(cases.len());
+    for case in cases {
+        let r = bench_unit(case.name, iters, "accesses", || {
+            let out = cachesim::simulate(&case.spec, &case.cfg, case.threads);
+            black_box(out.stats.line_touches);
+            out.stats.accesses
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+    results
+}
+
+/// Write a suite's `BENCH_<suite>.json` into `out_dir`; returns the path.
+pub fn write_suite_json(
+    out_dir: &Path,
+    suite: &str,
+    results: &[BenchResult],
+) -> std::io::Result<PathBuf> {
+    let path = out_dir.join(format!("BENCH_{suite}.json"));
+    write_json(&path, results)?;
+    Ok(path)
+}
+
+/// Compare fresh results against a committed baseline file (bench-runner
+/// JSON): every baseline entry with a throughput figure must be matched
+/// by a current result within `tolerance` (0.25 = "fail if more than 25%
+/// slower").  Returns the list of violations (empty = pass).
+///
+/// Committed baselines are conservative *floors*, not measurements of
+/// any particular machine — CI runners vary, so the gate is calibrated
+/// to catch order-of-magnitude engine regressions while staying quiet
+/// across hardware generations.  Re-baseline by copying a CI
+/// `BENCH_*.json` artifact over the committed file (scaled down to
+/// leave headroom).
+pub fn compare_to_baseline(
+    current: &[BenchResult],
+    baseline_text: &str,
+    tolerance: f64,
+) -> Result<Vec<String>, String> {
+    let v = json::parse(baseline_text).map_err(|e| format!("bad baseline JSON: {e}"))?;
+    let entries = v
+        .get("results")
+        .and_then(|a| a.as_arr())
+        .ok_or("baseline has no results array")?;
+    let mut violations = Vec::new();
+    for b in entries {
+        let name = match b.get("name").and_then(|n| n.as_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        let floor = match b.get("throughput").and_then(|t| t.as_f64()) {
+            Some(t) if t > 0.0 => t,
+            _ => continue, // baseline entry without a throughput figure
+        };
+        let cur = current.iter().find(|r| r.name == name);
+        match cur.and_then(|r| r.throughput) {
+            Some((rate, _)) => {
+                let min = floor * (1.0 - tolerance);
+                if rate < min {
+                    violations.push(format!(
+                        "{name}: {rate:.3e} accesses/s < {min:.3e} \
+                         (baseline {floor:.3e} - {:.0}%)",
+                        tolerance * 100.0
+                    ));
+                }
+            }
+            None => violations.push(format!("{name}: present in baseline but not measured")),
+        }
+    }
+    Ok(violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::bench;
+
+    #[test]
+    fn suites_are_named_and_non_empty() {
+        for s in SUITES {
+            let cases = cases_for(s).unwrap();
+            assert!(!cases.is_empty(), "{s}");
+            // names unique within the suite (baseline matching is by name)
+            let mut names: Vec<_> = cases.iter().map(|c| c.name).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), cases.len(), "{s} has duplicate case names");
+        }
+        assert!(cases_for("nope").is_none());
+    }
+
+    #[test]
+    fn baseline_comparison_flags_regressions_and_gaps() {
+        // closures spin long enough that median_s is measurably nonzero
+        let spin = |items: u64| {
+            let mut acc = 0u64;
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(crate::util::bench::black_box(i));
+            }
+            crate::util::bench::black_box(acc);
+            items
+        };
+        let current = vec![bench("fast", 1, || spin(1_000_000)), bench("slow", 1, || spin(1))];
+        let fast = current[0].throughput.unwrap().0;
+        let baseline = format!(
+            r#"{{"results":[
+                {{"name":"fast","median_s":1.0,"mad_s":0.0,"iters":1,"throughput":{},"unit":"accesses"}},
+                {{"name":"slow","median_s":1.0,"mad_s":0.0,"iters":1,"throughput":1e30,"unit":"accesses"}},
+                {{"name":"missing","median_s":1.0,"mad_s":0.0,"iters":1,"throughput":1.0,"unit":"accesses"}},
+                {{"name":"no-figure","median_s":1.0,"mad_s":0.0,"iters":1,"throughput":null,"unit":null}}
+            ]}}"#,
+            fast * 0.9 // current is ~11% above this floor: passes at 25%
+        );
+        let violations = compare_to_baseline(&current, &baseline, 0.25).unwrap();
+        assert_eq!(violations.len(), 2, "{violations:?}");
+        assert!(violations[0].contains("slow"));
+        assert!(violations[1].contains("missing"));
+    }
+
+    #[test]
+    fn baseline_comparison_rejects_garbage() {
+        assert!(compare_to_baseline(&[], "not json", 0.25).is_err());
+        assert!(compare_to_baseline(&[], "{\"x\":1}", 0.25).is_err());
+    }
+
+    #[test]
+    fn a_tiny_suite_run_produces_throughput() {
+        // one minimal case end-to-end through run_suite
+        let cases = vec![BenchCase {
+            name: "tiny",
+            cfg: configs::a64fx_s(),
+            spec: stream(64 * 1024, 1, "tiny", 2),
+            threads: 2,
+        }];
+        let rs = run_suite("tiny", &cases, 1);
+        assert_eq!(rs.len(), 1);
+        let (rate, unit) = rs[0].throughput.unwrap();
+        assert!(rate > 0.0);
+        assert_eq!(unit, "accesses");
+    }
+}

@@ -1,6 +1,24 @@
 //! Set-associative cache with pluggable replacement (LRU / random /
 //! DRRIP), dirty bits, and per-line sharer masks (the first shared
 //! inclusive level doubles as a MESI-lite directory for the hierarchy).
+//!
+//! ## Hot-path layout (structure-of-arrays)
+//!
+//! Line state is stored as parallel arrays packed to their natural
+//! widths — `tags: Vec<u64>` plus `lru`/`rrpv`/`flags`/`sharers` side
+//! arrays — instead of an array of `Line` structs.  The tag scan that
+//! decides hit-vs-miss touches *only* the contiguous tag words (a
+//! LARC-C 256 MiB LLC's hot set is 8 MB of tags instead of ~32 MB of
+//! padded structs), and the side arrays are read only on the matched way
+//! or the miss path.  Invalid slots hold [`INVALID_TAG`] so stale tags
+//! never match; validity is double-checked in `flags` on the (rare)
+//! sentinel collision.  A last-hit memo short-circuits the scan entirely
+//! when consecutive lookups land on the same line — the sequential
+//! chunk-walk case that dominates streaming workloads.
+//!
+//! Callers that already know a line's set/tag (the hierarchy walk
+//! derives them once per level) use the `*_at` methods with a
+//! [`LineRef`]; the address-based methods are thin wrappers.
 
 /// Result of a lookup/access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,27 +61,28 @@ pub struct Evicted {
     pub sharers: u64,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
-struct Line {
-    tag: u64,
-    lru: u64,
-    sharers: u64,
-    /// DRRIP re-reference prediction value (unused by LRU/random).
-    rrpv: u8,
-    valid: bool,
-    dirty: bool,
-}
+/// Sentinel stored in `tags` for invalid ways, so stale tags of
+/// invalidated lines can never match a lookup.  A *valid* line whose real
+/// tag collides with the sentinel (an address in the top line of the
+/// 64-bit space — unreachable for generated traces) is still handled
+/// correctly: matches are confirmed against the `VALID` flag.
+const INVALID_TAG: u64 = u64::MAX;
 
-impl Line {
-    /// Hit-refresh: promote to MRU (and RRPV head); writes set dirty.
-    #[inline]
-    fn touch(&mut self, tick: u64, write: bool) {
-        self.lru = tick;
-        self.rrpv = 0;
-        if write {
-            self.dirty = true;
-        }
-    }
+/// `flags` bits.
+const VALID: u8 = 1;
+const DIRTY: u8 = 2;
+
+/// Memo value meaning "no previous hit".
+const NO_MEMO: usize = usize::MAX;
+
+/// A line's home: set index plus full tag (the line number — `addr >>
+/// line_shift` — so `tag << line_shift` recovers the line address).
+/// Derive once with [`Cache::line_ref`] and reuse across the lookup /
+/// fill / sharer operations of one hierarchy-level step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LineRef {
+    pub set: usize,
+    pub tag: u64,
 }
 
 /// Set-associative cache. Addresses are byte addresses; the cache indexes
@@ -74,7 +93,21 @@ pub struct Cache {
     line_shift: u32,
     /// Fast path for power-of-two set counts.
     set_mask: Option<usize>,
-    lines: Vec<Line>,
+    /// Per-way line tags (`INVALID_TAG` when the way is invalid); the
+    /// only array the hit-path tag scan reads.
+    tags: Vec<u64>,
+    /// Per-way LRU ticks.
+    lru: Vec<u64>,
+    /// Per-way DRRIP re-reference prediction values (unused by LRU/random).
+    rrpv: Vec<u8>,
+    /// Per-way `VALID`/`DIRTY` bits.
+    flags: Vec<u8>,
+    /// Per-way sharer masks — allocated lazily on the first
+    /// [`Cache::set_sharer`], since only the directory level uses them.
+    sharers: Vec<u64>,
+    /// Index of the last way that hit: sequential walks re-touch the same
+    /// line many times and skip the set scan entirely.
+    last_hit: usize,
     tick: u64,
     policy: ReplacementPolicy,
     /// xorshift64 state (random victims, BRRIP insertion coin).
@@ -100,12 +133,18 @@ impl Cache {
         let ways = ways as usize;
         let sets = (size / (ways as u64 * line_bytes as u64)) as usize;
         assert!(sets > 0, "cache too small: {size} B / {ways} ways / {line_bytes} B lines");
+        let n = sets * ways;
         Cache {
             sets,
             ways,
             line_shift: line_bytes.trailing_zeros(),
             set_mask: if sets.is_power_of_two() { Some(sets - 1) } else { None },
-            lines: vec![Line::default(); sets * ways],
+            tags: vec![INVALID_TAG; n],
+            lru: vec![0; n],
+            rrpv: vec![0; n],
+            flags: vec![0; n],
+            sharers: Vec::new(),
+            last_hit: NO_MEMO,
             tick: 0,
             policy,
             rng: (0x9E37_79B9_7F4A_7C15 ^ ((sets as u64) << 8) ^ ways as u64) | 1,
@@ -135,45 +174,72 @@ impl Cache {
         }
     }
 
+    /// Derive `addr`'s set and tag once; the `*_at` methods reuse it so a
+    /// fused lookup + install pays for the index arithmetic a single time.
     #[inline]
-    fn tag_of(&self, addr: u64) -> u64 {
-        addr >> self.line_shift
+    pub fn line_ref(&self, addr: u64) -> LineRef {
+        LineRef {
+            set: self.set_of(addr),
+            tag: addr >> self.line_shift,
+        }
     }
 
-    /// The one tag scan every lookup shares: the valid line holding
-    /// `addr`'s block, if present.
+    /// The one tag scan every lookup shares: index of the valid way
+    /// holding the line, if present.  Checks the last-hit memo first
+    /// (tags are full line numbers, so a tag match identifies the line
+    /// regardless of which set the memo landed in), then scans the set's
+    /// contiguous tag words in way order.  Does not update the memo —
+    /// `&self` callers ([`Cache::probe`], [`Cache::sharers`]) share it.
     #[inline]
-    fn find(&self, addr: u64) -> Option<&Line> {
-        let base = self.set_of(addr) * self.ways;
-        let tag = self.tag_of(addr);
-        self.lines[base..base + self.ways]
-            .iter()
-            .find(|l| l.valid && l.tag == tag)
+    fn find_idx(&self, r: LineRef) -> Option<usize> {
+        let m = self.last_hit;
+        if m != NO_MEMO && self.tags[m] == r.tag && self.flags[m] & VALID != 0 {
+            return Some(m);
+        }
+        let base = r.set * self.ways;
+        for i in base..base + self.ways {
+            if self.tags[i] == r.tag && self.flags[i] & VALID != 0 {
+                return Some(i);
+            }
+        }
+        None
     }
 
-    /// Mutable twin of [`Cache::find`].
+    /// [`Cache::find_idx`] + memo refresh, for the mutating paths.
     #[inline]
-    fn find_mut(&mut self, addr: u64) -> Option<&mut Line> {
-        let base = self.set_of(addr) * self.ways;
-        let tag = self.tag_of(addr);
-        self.lines[base..base + self.ways]
-            .iter_mut()
-            .find(|l| l.valid && l.tag == tag)
+    fn find_idx_mut(&mut self, r: LineRef) -> Option<usize> {
+        let i = self.find_idx(r)?;
+        self.last_hit = i;
+        Some(i)
+    }
+
+    /// Hit-refresh: promote to MRU (and RRPV head); writes set dirty.
+    #[inline]
+    fn touch(&mut self, i: usize, write: bool) {
+        self.lru[i] = self.tick;
+        self.rrpv[i] = 0;
+        if write {
+            self.flags[i] |= DIRTY;
+        }
     }
 
     /// Probe without updating stats or LRU (directory-style lookup).
     pub fn probe(&self, addr: u64) -> bool {
-        self.find(addr).is_some()
+        self.find_idx(self.line_ref(addr)).is_some()
     }
 
     /// Demand access: updates LRU + hit/miss counters; sets dirty on write
     /// hits.  Does NOT allocate — callers decide fill policy.
     pub fn access(&mut self, addr: u64, write: bool) -> AccessOutcome {
+        self.access_at(self.line_ref(addr), write)
+    }
+
+    /// [`Cache::access`] with a precomputed [`LineRef`].
+    pub fn access_at(&mut self, r: LineRef, write: bool) -> AccessOutcome {
         self.tick += 1;
-        let tick = self.tick;
-        match self.find_mut(addr) {
-            Some(l) => {
-                l.touch(tick, write);
+        match self.find_idx_mut(r) {
+            Some(i) => {
+                self.touch(i, write);
                 self.hits += 1;
                 AccessOutcome::Hit
             }
@@ -186,14 +252,18 @@ impl Cache {
 
     /// Install `addr`, evicting a victim if needed. Returns the victim.
     pub fn fill(&mut self, addr: u64, write: bool) -> Option<Evicted> {
+        self.fill_at(self.line_ref(addr), write)
+    }
+
+    /// [`Cache::fill`] with a precomputed [`LineRef`].
+    pub fn fill_at(&mut self, r: LineRef, write: bool) -> Option<Evicted> {
         self.tick += 1;
-        let tick = self.tick;
         // already present (racing fill): refresh via the shared lookup
-        if let Some(l) = self.find_mut(addr) {
-            l.touch(tick, write);
+        if let Some(i) = self.find_idx_mut(r) {
+            self.touch(i, write);
             return None;
         }
-        self.install(addr, write)
+        self.install(r, write)
     }
 
     /// Fused demand access + allocate-on-miss: one tag scan decides hit
@@ -202,43 +272,50 @@ impl Cache {
     /// `access` followed (on a miss) by `fill`; the returned eviction is
     /// the fill's victim.
     pub fn access_or_fill(&mut self, addr: u64, write: bool) -> (AccessOutcome, Option<Evicted>) {
+        self.access_or_fill_at(self.line_ref(addr), write)
+    }
+
+    /// [`Cache::access_or_fill`] with a precomputed [`LineRef`].
+    pub fn access_or_fill_at(
+        &mut self,
+        r: LineRef,
+        write: bool,
+    ) -> (AccessOutcome, Option<Evicted>) {
         self.tick += 1;
-        let tick = self.tick;
-        if let Some(l) = self.find_mut(addr) {
-            l.touch(tick, write);
+        if let Some(i) = self.find_idx_mut(r) {
+            self.touch(i, write);
             self.hits += 1;
             return (AccessOutcome::Hit, None);
         }
         self.misses += 1;
-        (AccessOutcome::Miss, self.install(addr, write))
+        (AccessOutcome::Miss, self.install(r, write))
     }
 
-    /// Evict (if needed) and write the new line; `addr` must be absent.
-    fn install(&mut self, addr: u64, write: bool) -> Option<Evicted> {
-        let set = self.set_of(addr);
-        let victim = set * self.ways + self.choose_victim(set);
-        let v = self.lines[victim];
-        let evicted = if v.valid {
-            if v.dirty {
+    /// Evict (if needed) and write the new line; the line must be absent.
+    fn install(&mut self, r: LineRef, write: bool) -> Option<Evicted> {
+        let victim = r.set * self.ways + self.choose_victim(r.set);
+        let evicted = if self.flags[victim] & VALID != 0 {
+            let dirty = self.flags[victim] & DIRTY != 0;
+            if dirty {
                 self.writebacks += 1;
             }
             Some(Evicted {
-                addr: v.tag << self.line_shift,
-                dirty: v.dirty,
-                sharers: v.sharers,
+                addr: self.tags[victim] << self.line_shift,
+                dirty,
+                sharers: self.sharers.get(victim).copied().unwrap_or(0),
             })
         } else {
             None
         };
 
-        self.lines[victim] = Line {
-            tag: self.tag_of(addr),
-            lru: self.tick,
-            sharers: 0,
-            rrpv: self.insert_rrpv(set),
-            valid: true,
-            dirty: write,
-        };
+        self.tags[victim] = r.tag;
+        self.lru[victim] = self.tick;
+        self.rrpv[victim] = self.insert_rrpv(r.set);
+        self.flags[victim] = VALID | if write { DIRTY } else { 0 };
+        if let Some(s) = self.sharers.get_mut(victim) {
+            *s = 0;
+        }
+        self.last_hit = victim;
         evicted
     }
 
@@ -246,17 +323,19 @@ impl Cache {
     /// one, otherwise per the replacement policy.
     fn choose_victim(&mut self, set: usize) -> usize {
         let base = set * self.ways;
-        let ways = &self.lines[base..base + self.ways];
-        if let Some(i) = ways.iter().position(|l| !l.valid) {
+        if let Some(i) = self.flags[base..base + self.ways]
+            .iter()
+            .position(|&f| f & VALID == 0)
+        {
             return i;
         }
         match self.policy {
             ReplacementPolicy::Lru => {
                 let mut victim = 0;
                 let mut oldest = u64::MAX;
-                for (i, l) in ways.iter().enumerate() {
-                    if l.lru < oldest {
-                        oldest = l.lru;
+                for (i, &l) in self.lru[base..base + self.ways].iter().enumerate() {
+                    if l < oldest {
+                        oldest = l;
                         victim = i;
                     }
                 }
@@ -264,13 +343,13 @@ impl Cache {
             }
             ReplacementPolicy::Random => (self.next_rand() % self.ways as u64) as usize,
             ReplacementPolicy::Drrip => loop {
-                let ways = &mut self.lines[base..base + self.ways];
-                if let Some(i) = ways.iter().position(|l| l.rrpv >= RRPV_MAX) {
+                let ways = &mut self.rrpv[base..base + self.ways];
+                if let Some(i) = ways.iter().position(|&v| v >= RRPV_MAX) {
                     break i;
                 }
                 // age the set and rescan (terminates in <= RRPV_MAX rounds)
-                for l in ways.iter_mut() {
-                    l.rrpv += 1;
+                for v in ways.iter_mut() {
+                    *v += 1;
                 }
             },
         }
@@ -317,10 +396,9 @@ impl Cache {
     /// present (absent means the caller must forward the dirty data on).
     pub fn writeback_touch(&mut self, addr: u64) -> bool {
         self.tick += 1;
-        let tick = self.tick;
-        match self.find_mut(addr) {
-            Some(l) => {
-                l.touch(tick, true);
+        match self.find_idx_mut(self.line_ref(addr)) {
+            Some(i) => {
+                self.touch(i, true);
                 true
             }
             None => false,
@@ -330,12 +408,14 @@ impl Cache {
     /// Invalidate a line (coherence back-invalidation). Returns whether it
     /// was present and dirty.
     pub fn invalidate(&mut self, addr: u64) -> (bool, bool) {
-        match self.find_mut(addr) {
-            Some(l) => {
-                let dirty = l.dirty;
-                l.valid = false;
-                l.dirty = false;
-                l.sharers = 0;
+        match self.find_idx(self.line_ref(addr)) {
+            Some(i) => {
+                let dirty = self.flags[i] & DIRTY != 0;
+                self.flags[i] = 0;
+                self.tags[i] = INVALID_TAG;
+                if let Some(s) = self.sharers.get_mut(i) {
+                    *s = 0;
+                }
                 (true, dirty)
             }
             None => (false, false),
@@ -343,21 +423,36 @@ impl Cache {
     }
 
     /// Directory ops on the sharer mask (used when this cache is the
-    /// first shared inclusive level).
+    /// first shared inclusive level).  The mask array is allocated on
+    /// first use — non-directory caches never pay for it.
     pub fn set_sharer(&mut self, addr: u64, core: usize) {
-        if let Some(l) = self.find_mut(addr) {
-            l.sharers |= 1 << core;
+        if let Some(i) = self.find_idx_mut(self.line_ref(addr)) {
+            if self.sharers.is_empty() {
+                self.sharers = vec![0; self.tags.len()];
+            }
+            self.sharers[i] |= 1 << core;
         }
     }
 
     pub fn clear_sharer(&mut self, addr: u64, core: usize) {
-        if let Some(l) = self.find_mut(addr) {
-            l.sharers &= !(1 << core);
+        if self.sharers.is_empty() {
+            return;
+        }
+        if let Some(i) = self.find_idx_mut(self.line_ref(addr)) {
+            self.sharers[i] &= !(1 << core);
         }
     }
 
     pub fn sharers(&self, addr: u64) -> u64 {
-        self.find(addr).map(|l| l.sharers).unwrap_or(0)
+        self.sharers_at(self.line_ref(addr))
+    }
+
+    /// [`Cache::sharers`] with a precomputed [`LineRef`].
+    pub fn sharers_at(&self, r: LineRef) -> u64 {
+        match self.find_idx(r) {
+            Some(i) => self.sharers.get(i).copied().unwrap_or(0),
+            None => 0,
+        }
     }
 
     pub fn miss_rate(&self) -> f64 {
@@ -586,5 +681,65 @@ mod tests {
     #[should_panic]
     fn rejects_zero_sets() {
         Cache::new(64, 4, 64);
+    }
+
+    #[test]
+    fn line_ref_methods_equal_addr_methods() {
+        // drive two caches with one trace, one through the addr API and
+        // one through precomputed LineRefs: identical observables
+        check("linerefs == addrs", 20, |rng: &mut Rng| {
+            let mut by_addr = Cache::new(4096, 4, 64);
+            let mut by_ref = Cache::new(4096, 4, 64);
+            for _ in 0..2000 {
+                let addr = rng.below(1 << 14);
+                let write = rng.below(4) == 0;
+                let r = by_ref.line_ref(addr);
+                let (o1, e1) = by_addr.access_or_fill(addr, write);
+                let (o2, e2) = by_ref.access_or_fill_at(r, write);
+                if o1 != o2 {
+                    return Err(format!("outcome diverged at {addr:#x}"));
+                }
+                match (e1, e2) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) if a.addr == b.addr && a.dirty == b.dirty => {}
+                    other => return Err(format!("evictions diverged: {other:?}")),
+                }
+            }
+            if (by_addr.hits, by_addr.misses) != (by_ref.hits, by_ref.misses) {
+                return Err("counters diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn last_hit_memo_survives_invalidation() {
+        let mut c = Cache::new(1024, 4, 64);
+        c.fill(0x100, false);
+        assert_eq!(c.access(0x100, false), AccessOutcome::Hit); // memo set
+        c.invalidate(0x100);
+        // the memo slot is stale now; the lookup must not false-hit
+        assert_eq!(c.access(0x100, false), AccessOutcome::Miss);
+        // and a different line mapping to the memo slot's set is unaffected
+        c.fill(0x2100, true);
+        assert_eq!(c.access(0x2100, false), AccessOutcome::Hit);
+    }
+
+    #[test]
+    fn sharer_masks_allocate_lazily() {
+        let mut c = Cache::new(1024, 4, 64);
+        c.fill(0x40, false);
+        // reads before any set_sharer see zero masks
+        assert_eq!(c.sharers(0x40), 0);
+        c.clear_sharer(0x40, 1); // no-op, must not allocate or panic
+        c.set_sharer(0x40, 2);
+        assert_eq!(c.sharers(0x40), 1 << 2);
+        // eviction of a line clears its mask slot for the newcomer
+        let mut a = 0x40u64;
+        while c.fill(a, false).map(|e| e.addr) != Some(0x40) {
+            a += 1 << 12; // same set, new tags, until 0x40 is the victim
+        }
+        c.fill(0x40, false);
+        assert_eq!(c.sharers(0x40), 0);
     }
 }

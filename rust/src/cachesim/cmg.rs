@@ -26,6 +26,16 @@
 //! behind them is how bandwidth saturation and the Fig. 7 plateaus
 //! emerge.  Thread interleaving picks the thread with the smallest local
 //! clock each step (a causally-ordered merge).
+//!
+//! ## Hot-path engineering
+//!
+//! The loop consumes accesses from per-thread [`SpecStream`] batches
+//! (concrete enum-dispatched generators refilling a [`BATCH`]-sized
+//! buffer — no per-access virtual calls), derives each line's L0 set/tag
+//! once and threads it through the hierarchy walk, and bounds MSHRs with
+//! a min-heap over completion bit-patterns.  All of it is bit-identical
+//! to the straightforward boxed-iterator engine, which
+//! `tests/engine_equivalence.rs` keeps verbatim as a golden reference.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -37,7 +47,7 @@ use super::hierarchy::Hierarchy;
 use super::stats::SimStats;
 use crate::mca::analyzers::port_pressure_native;
 use crate::mca::port_model::PortModel;
-use crate::trace::{AccessIter, Spec};
+use crate::trace::{Access, Spec, SpecStream, BATCH};
 
 /// Result of one CMG simulation.
 #[derive(Clone, Debug)]
@@ -63,15 +73,86 @@ impl SimResult {
 }
 
 struct ThreadState {
-    stream: AccessIter,
+    /// Batched access generator (no per-access virtual dispatch).
+    stream: SpecStream,
+    /// Current batch of accesses, drained by position.
+    buf: Vec<Access>,
+    pos: usize,
     cycle: f64,
     last_completion: f64,
     /// Completion times of in-flight chunks (ring for the ROB window).
     inflight: Vec<f64>,
     inflight_head: usize,
     /// Completion times of outstanding misses (MSHR bound).
-    outstanding: Vec<f64>,
+    outstanding: MissHeap,
     finish: f64,
+}
+
+/// Min-heap over outstanding-miss completion times, keyed on the IEEE
+/// bit patterns (completions are non-negative finite, so bit order ==
+/// numeric order).  Replaces the O(mshrs) linear scan for the earliest
+/// completion when the MSHRs are full.  Completion times are *not*
+/// monotone in issue order — a late L2 hit completes before an early
+/// DRAM miss — so a plain ring would be wrong; the heap pops the true
+/// minimum, which is all the stall computation observes (equal values
+/// are interchangeable, keeping the result bit-identical to the scan).
+#[derive(Default)]
+struct MissHeap {
+    h: Vec<u64>,
+}
+
+impl MissHeap {
+    fn with_capacity(n: usize) -> MissHeap {
+        MissHeap { h: Vec::with_capacity(n) }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.h.len()
+    }
+
+    #[inline]
+    fn push(&mut self, v: f64) {
+        debug_assert!(v >= 0.0 && v.is_finite());
+        let mut i = self.h.len();
+        self.h.push(v.to_bits());
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.h[parent] <= self.h[i] {
+                break;
+            }
+            self.h.swap(parent, i);
+            i = parent;
+        }
+    }
+
+    /// Remove and return the earliest completion (heap must be non-empty).
+    #[inline]
+    fn pop_min(&mut self) -> f64 {
+        let min = self.h[0];
+        let last = self.h.pop().unwrap();
+        if !self.h.is_empty() {
+            self.h[0] = last;
+            let mut i = 0;
+            loop {
+                let l = 2 * i + 1;
+                let r = l + 1;
+                let mut smallest = i;
+                if l < self.h.len() && self.h[l] < self.h[smallest] {
+                    smallest = l;
+                }
+                if r < self.h.len() && self.h[r] < self.h[smallest] {
+                    smallest = r;
+                }
+                if smallest == i {
+                    break;
+                }
+                self.h.swap(i, smallest);
+                i = smallest;
+            }
+        }
+        f64::from_bits(min)
+    }
 }
 
 /// Per-phase derived costs.
@@ -113,12 +194,14 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
     let max_window = phase_costs.iter().map(|p| p.window).max().unwrap_or(1);
     let mut states: Vec<ThreadState> = (0..threads)
         .map(|t| ThreadState {
-            stream: spec.stream(t, threads),
+            stream: spec.batched_stream(t, threads),
+            buf: Vec::with_capacity(BATCH),
+            pos: 0,
             cycle: 0.0,
             last_completion: 0.0,
             inflight: vec![0.0; max_window],
             inflight_head: 0,
-            outstanding: Vec::with_capacity(cfg.mshrs as usize),
+            outstanding: MissHeap::with_capacity(cfg.mshrs as usize),
             finish: 0.0,
         })
         .collect();
@@ -143,18 +226,31 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
         loop {
             let access = {
                 let st = &mut states[t];
-                match st.stream.next() {
-                    Some(a) => a,
-                    None => {
+                if st.pos == st.buf.len() {
+                    st.stream.refill(&mut st.buf);
+                    st.pos = 0;
+                    if st.buf.is_empty() {
                         // this thread's stream is exhausted; others go on
                         st.finish = st.finish.max(st.cycle).max(st.last_completion);
                         continue 'sched;
                     }
                 }
+                let a = st.buf[st.pos];
+                st.pos += 1;
+                a
             };
             stats.accesses += 1;
 
             let phase = access.phase as usize;
+            // every generated access carries a phase index priced in
+            // `phase_costs`; the release fallback below is unreachable for
+            // well-formed specs and pinned so by the debug build
+            debug_assert!(
+                phase < phase_costs.len(),
+                "access.phase {phase} out of range ({} phases) in {}",
+                phase_costs.len(),
+                spec.name
+            );
             let (gap, window) = phase_costs
                 .get(phase)
                 .map(|p| (p.gap, p.window))
@@ -177,27 +273,25 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
             let mut line = first;
             while line <= last {
                 stats.line_touches += 1;
+                // one set/tag derivation serves the L0 lookup and (on a
+                // miss) the fill at the end of the hierarchy walk
+                let l0ref = hier.l0_line_ref(line);
                 let this_done;
-                match hier.access_l0(t, line, access.write) {
+                match hier.access_l0_at(t, l0ref, access.write) {
                     AccessOutcome::Hit => {
                         stats.l1_hits += 1;
                         this_done = issue + l1_latency;
                     }
                     AccessOutcome::Miss => {
                         stats.l1_misses += 1;
-                        // MSHR bound
+                        // MSHR bound: a full station stalls until the
+                        // earliest outstanding miss retires
                         if st.outstanding.len() >= cfg.mshrs as usize {
-                            let mut earliest_i = 0;
-                            for (i, &c) in st.outstanding.iter().enumerate() {
-                                if c < st.outstanding[earliest_i] {
-                                    earliest_i = i;
-                                }
-                            }
-                            let earliest = st.outstanding.swap_remove(earliest_i);
+                            let earliest = st.outstanding.pop_min();
                             issue = issue.max(earliest);
                         }
                         let fill_done =
-                            hier.fetch(t, line, access.write, issue, &mut dram, &mut stats);
+                            hier.fetch(t, line, l0ref, access.write, issue, &mut dram, &mut stats);
                         st.outstanding.push(fill_done);
                         this_done = fill_done;
 
@@ -439,6 +533,41 @@ mod tests {
         assert!(b.runtime_s < a.runtime_s, "{} vs {}", b.runtime_s, a.runtime_s);
         // and the three-level stats are actually three levels deep
         assert_eq!(a.stats.levels.len(), 3);
+    }
+
+    #[test]
+    fn multi_phase_spec_never_hits_the_phase_cost_fallback() {
+        // every access of a multi-phase spec must carry a phase index
+        // that phase_costs covers — the (1.0, 8) release fallback is dead
+        // code for well-formed specs (and the debug_assert in simulate()
+        // would abort this test's simulate() call if it ever fired)
+        let mut spec = stream_spec(MIB, 2, light_mix(), 8.0);
+        spec.phases.push(Phase {
+            label: "lookup",
+            pattern: Pattern::RandomLookup {
+                table_bytes: 2 * MIB,
+                lookups: 5_000,
+                chase: false,
+                seed: 9,
+            },
+            mix: InstrMix::new().with(InstrClass::Load, 2.0),
+            ilp: 2.0,
+        });
+        spec.phases.push(Phase {
+            label: "reduce",
+            pattern: Pattern::Reduction { bytes: MIB, passes: 1 },
+            mix: InstrMix::new().with(InstrClass::FpAdd, 1.0),
+            ilp: 2.0,
+        });
+        let nphases = spec.phases.len();
+        for t in 0..4 {
+            assert!(
+                spec.stream(t, 4).all(|a| (a.phase as usize) < nphases),
+                "thread {t} emitted an out-of-range phase"
+            );
+        }
+        let r = simulate(&spec, &configs::a64fx_s(), 4);
+        assert!(r.cycles > 0.0);
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! pipeline — `tests/hierarchy_equivalence.rs` pins that with a verbatim
 //! copy of the old code as a golden reference.
 
-use super::cache::{AccessOutcome, Cache};
+use super::cache::{AccessOutcome, Cache, LineRef};
 use super::configs::{LevelConfig, MachineConfig, Scope};
 use super::dram::Dram;
 use super::stats::{LevelStats, SimStats};
@@ -130,20 +130,40 @@ impl Hierarchy {
         self.levels[0].line_bytes
     }
 
+    /// Level-0 set/tag of `line` — all level-0 replicas share one
+    /// geometry, so the ref is valid for every core's cache.  Derive it
+    /// once per line in the scheduler loop and pass it to
+    /// [`Hierarchy::access_l0_at`] / [`Hierarchy::fetch`].
+    #[inline]
+    pub fn l0_line_ref(&self, line: u64) -> LineRef {
+        self.levels[0].caches[0].line_ref(line)
+    }
+
     /// Demand access at level 0 for `core`.  Hit/miss counters accrue on
     /// the level-0 cache; a miss must be followed by [`Hierarchy::fetch`].
     pub fn access_l0(&mut self, core: usize, line: u64, write: bool) -> AccessOutcome {
+        self.access_l0_at(core, self.l0_line_ref(line), write)
+    }
+
+    /// [`Hierarchy::access_l0`] with a precomputed [`LineRef`].
+    #[inline]
+    pub fn access_l0_at(&mut self, core: usize, l0ref: LineRef, write: bool) -> AccessOutcome {
         let ci = self.levels[0].cache_index(core);
-        self.levels[0].caches[ci].access(line, write)
+        self.levels[0].caches[ci].access_at(l0ref, write)
     }
 
     /// Service a level-0 miss issued at `issue`: walk the lower levels
     /// (and DRAM behind the last), install the line at every level that
-    /// missed plus level 0, and return the completion cycle.
+    /// missed plus level 0, and return the completion cycle.  `l0ref` is
+    /// `line`'s level-0 [`LineRef`] (from [`Hierarchy::l0_line_ref`]) so
+    /// the install does not re-derive the set and tag the lookup already
+    /// computed.
+    #[allow(clippy::too_many_arguments)]
     pub fn fetch(
         &mut self,
         core: usize,
         line: u64,
+        l0ref: LineRef,
         write: bool,
         issue: f64,
         dram: &mut Dram,
@@ -156,7 +176,7 @@ impl Hierarchy {
             stats.dram_bytes += lb;
             dram.transfer(line, lb, issue)
         };
-        self.install_l0(core, line, write, issue, dram, stats);
+        self.install_l0(core, line, l0ref, write, issue, dram, stats);
         done
     }
 
@@ -185,13 +205,16 @@ impl Hierarchy {
 
         let mut done = start + occ + lat;
         let ci = self.levels[lvl].cache_index(core);
-        let (outcome, evicted) = self.levels[lvl].caches[ci].access_or_fill(addr, write);
+        // one set/tag derivation serves the fused lookup+install and the
+        // sharer-mask read below
+        let lref = self.levels[lvl].caches[ci].line_ref(addr);
+        let (outcome, evicted) = self.levels[lvl].caches[ci].access_or_fill_at(lref, write);
         match outcome {
             AccessOutcome::Hit => {
                 // MESI-lite: a store hitting a directory line shared by
                 // other cores invalidates their private copies.
                 if write && self.dir == Some(lvl) {
-                    let sharers = self.levels[lvl].caches[ci].sharers(addr) & !(1u64 << core);
+                    let sharers = self.levels[lvl].caches[ci].sharers_at(lref) & !(1u64 << core);
                     if sharers != 0 {
                         let hi = l0_line + 1;
                         // wiped dirty copies are absorbed by this line:
@@ -253,10 +276,12 @@ impl Hierarchy {
 
     /// Install `line` at level 0 after a miss was serviced, maintaining
     /// the directory sharer mask when level 0 sits directly above it.
+    #[allow(clippy::too_many_arguments)]
     fn install_l0(
         &mut self,
         core: usize,
         line: u64,
+        l0ref: LineRef,
         write: bool,
         issue: f64,
         dram: &mut Dram,
@@ -265,7 +290,7 @@ impl Hierarchy {
         self.levels[0].bytes += self.levels[0].line_bytes;
         let ci = self.levels[0].cache_index(core);
         let maintains_mask = self.dir == Some(1);
-        if let Some(ev) = self.levels[0].caches[ci].fill(line, write) {
+        if let Some(ev) = self.levels[0].caches[ci].fill_at(l0ref, write) {
             if maintains_mask {
                 self.levels[1].caches[0].clear_sharer(ev.addr, core);
             }
@@ -410,7 +435,8 @@ impl Hierarchy {
         let occ = l0_line as f64 / self.levels[1].cfg.params.bank_bytes_per_cycle;
         self.levels[1].reserve_bank(core, line, issue, occ);
         self.levels[1].bytes += l0_line;
-        self.install_l0(core, line, false, issue, dram, stats);
+        let l0ref = self.l0_line_ref(line);
+        self.install_l0(core, line, l0ref, false, issue, dram, stats);
     }
 
     /// Aggregate counters of one level (private levels summed over cores).
@@ -451,8 +477,9 @@ mod tests {
         addrs: &[u64],
     ) {
         for &a in addrs {
-            if h.access_l0(core, a, false) == AccessOutcome::Miss {
-                h.fetch(core, a, false, 0.0, dram, stats);
+            let r = h.l0_line_ref(a);
+            if h.access_l0_at(core, r, false) == AccessOutcome::Miss {
+                h.fetch(core, a, r, false, 0.0, dram, stats);
             }
         }
     }
@@ -508,20 +535,21 @@ mod tests {
         let mut dram = Dram::new(1, 16.0, 100.0, 256);
         let mut stats = SimStats::default();
         // both cores read the same line; core 1 then writes it
+        let r = h.l0_line_ref(0x1000);
         for core in 0..2 {
-            if h.access_l0(core, 0x1000, false) == AccessOutcome::Miss {
-                h.fetch(core, 0x1000, false, 0.0, &mut dram, &mut stats);
+            if h.access_l0_at(core, r, false) == AccessOutcome::Miss {
+                h.fetch(core, 0x1000, r, false, 0.0, &mut dram, &mut stats);
             }
         }
-        if h.access_l0(1, 0x1000, true) == AccessOutcome::Miss {
-            h.fetch(1, 0x1000, true, 0.0, &mut dram, &mut stats);
+        if h.access_l0_at(1, r, true) == AccessOutcome::Miss {
+            h.fetch(1, 0x1000, r, true, 0.0, &mut dram, &mut stats);
         }
         // the L1 write hit does not reach the directory; force core 1's
         // copy out so the store walks down and hits the shared L3 line
         h.levels[0].caches[1].invalidate(0x1000);
         h.levels[1].caches[1].invalidate(0x1000);
-        if h.access_l0(1, 0x1000, true) == AccessOutcome::Miss {
-            h.fetch(1, 0x1000, true, 0.0, &mut dram, &mut stats);
+        if h.access_l0_at(1, r, true) == AccessOutcome::Miss {
+            h.fetch(1, 0x1000, r, true, 0.0, &mut dram, &mut stats);
         }
         assert!(stats.coherence_invalidations > 0);
         // core 0's private copies are gone
@@ -544,8 +572,9 @@ mod tests {
         let mut base = 1u64 << 28;
         for _round in 0..60 {
             for &a in &hot {
-                if h.access_l0(0, a, true) == AccessOutcome::Miss {
-                    h.fetch(0, a, true, 0.0, &mut dram, &mut stats);
+                let r = h.l0_line_ref(a);
+                if h.access_l0_at(0, r, true) == AccessOutcome::Miss {
+                    h.fetch(0, a, r, true, 0.0, &mut dram, &mut stats);
                 }
             }
             let chunk: Vec<u64> = (0..256u64).map(|i| base + i * 64).collect();
@@ -569,8 +598,10 @@ mod tests {
         let mut stats = SimStats::default();
         // two misses to the same L2 bank (same line group), issued at 0:
         // the second must queue behind the first's bank occupancy
-        let a = h.fetch(0, 0, false, 0.0, &mut dram, &mut stats);
-        let b = h.fetch(0, 4 * 256 * 4, false, 0.0, &mut dram, &mut stats);
+        let r0 = h.l0_line_ref(0);
+        let a = h.fetch(0, 0, r0, false, 0.0, &mut dram, &mut stats);
+        let r1 = h.l0_line_ref(4 * 256 * 4);
+        let b = h.fetch(0, 4 * 256 * 4, r1, false, 0.0, &mut dram, &mut stats);
         assert!(b > a, "second same-bank transfer did not queue: {a} vs {b}");
     }
 }

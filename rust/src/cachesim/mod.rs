@@ -26,7 +26,7 @@ pub mod dram;
 pub mod hierarchy;
 pub mod stats;
 
-pub use cache::ReplacementPolicy;
+pub use cache::{LineRef, ReplacementPolicy};
 pub use cmg::{simulate, SimResult};
 pub use configs::{CacheParams, LevelConfig, MachineConfig, Scope};
 pub use hierarchy::Hierarchy;

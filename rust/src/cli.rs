@@ -7,6 +7,7 @@
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--store DIR] [--resume]
 //! larc store <ls|verify|gc> --store DIR                # inspect the store
+//! larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
 //! larc model                                           # section-2 tables
 //! ```
 
@@ -98,6 +99,7 @@ USAGE:
               [--store DIR] [--resume]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
   larc store <ls|verify|gc> --store DIR
+  larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
   larc model
 
 HIERARCHY:
@@ -106,6 +108,12 @@ HIERARCHY:
                 --levels 2` is the flat near-L2 machine
   --sweep fam   fig8 sweep family: latency | capacity | bankbits | l3
                 (l3 = stacked-L3 level-count sweep over larc_c_3d slabs)
+
+BENCH:
+  --iters N     timed iterations per case (default 3)
+  --out DIR     where BENCH_<suite>.json baselines are written (default .)
+  --check DIR   compare against DIR/BENCH_<suite>.json and exit nonzero on
+                any >25% throughput regression (CI gate)
 
 STORE:
   --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
@@ -159,6 +167,20 @@ mod tests {
         assert_eq!(c.flag("levels"), Some("2"));
         let c = parse(&["figure", "fig8", "--sweep", "l3"]);
         assert_eq!(c.flag("sweep"), Some("l3"));
+    }
+
+    #[test]
+    fn bench_flags_parse() {
+        let c = parse(&["bench", "hierarchy", "--iters", "5", "--out", "/tmp/b", "--check", "b"]);
+        assert_eq!(c.command, "bench");
+        assert_eq!(c.positional, vec!["hierarchy"]);
+        assert_eq!(c.usize_flag("iters", 3).unwrap(), 5);
+        assert_eq!(c.flag("out"), Some("/tmp/b"));
+        assert_eq!(c.flag("check"), Some("b"));
+        // defaults
+        let c = parse(&["bench"]);
+        assert!(c.positional.is_empty());
+        assert_eq!(c.usize_flag("iters", 3).unwrap(), 3);
     }
 
     #[test]

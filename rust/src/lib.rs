@@ -17,6 +17,7 @@
 //!   figure-of-merit kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed through [`runtime`] (PJRT CPU client) on the hot path.
 
+pub mod benchsuite;
 pub mod cachesim;
 pub mod cli;
 pub mod coordinator;

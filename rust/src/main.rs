@@ -37,6 +37,7 @@ fn run(args: &[String]) -> Result<()> {
         "figure" => cmd_figure(&cli),
         "campaign" => cmd_campaign(&cli),
         "store" => cmd_store(&cli),
+        "bench" => cmd_bench(&cli),
         "model" => emit(&experiments::run("model", &opts(&cli)?)?, &cli),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -227,6 +228,57 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         eprintln!("=== {id} ===");
         let reports = experiments::run(id, &o)?;
         emit(&reports, cli)?;
+    }
+    Ok(())
+}
+
+/// `larc bench [cachesim|hierarchy|all] [--iters N] [--out DIR]
+/// [--check DIR]` — run the micro-benchmark suites without cargo,
+/// writing store-friendly `BENCH_<suite>.json` files and optionally
+/// gating against committed baselines (fail on >25% throughput
+/// regression).
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    let which = cli.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let suites: Vec<&str> = match which {
+        "all" => larc::benchsuite::SUITES.to_vec(),
+        s if larc::benchsuite::cases_for(s).is_some() => vec![which],
+        other => bail!(
+            "unknown bench suite {other:?} (expected all | {})",
+            larc::benchsuite::SUITES.join(" | ")
+        ),
+    };
+    let iters = cli.usize_flag("iters", 3).map_err(|e| anyhow!(e))?;
+    if iters == 0 {
+        bail!("--iters must be >= 1");
+    }
+    let out_dir = PathBuf::from(cli.flag_or("out", "."));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut failures = Vec::new();
+    for suite in suites {
+        let cases = larc::benchsuite::cases_for(suite).expect("suite validated above");
+        let results = larc::benchsuite::run_suite(suite, &cases, iters);
+        let path = larc::benchsuite::write_suite_json(&out_dir, suite, &results)?;
+        eprintln!("wrote {}", path.display());
+
+        if let Some(dir) = cli.flag("check") {
+            let baseline = Path::new(dir).join(format!("BENCH_{suite}.json"));
+            let text = std::fs::read_to_string(&baseline)
+                .map_err(|e| anyhow!("cannot read baseline {}: {e}", baseline.display()))?;
+            let violations = larc::benchsuite::compare_to_baseline(&results, &text, 0.25)
+                .map_err(|e| anyhow!("{}: {e}", baseline.display()))?;
+            if violations.is_empty() {
+                eprintln!("{suite}: throughput within 25% of {}", baseline.display());
+            } else {
+                for v in &violations {
+                    eprintln!("{suite} REGRESSION: {v}");
+                }
+                failures.extend(violations);
+            }
+        }
+    }
+    if !failures.is_empty() {
+        bail!("{} bench throughput regression(s) > 25%", failures.len());
     }
     Ok(())
 }

@@ -51,6 +51,39 @@ pub struct Access {
 
 pub type AccessIter = Box<dyn Iterator<Item = Access> + Send>;
 
+/// Accesses delivered per [`SpecStream::refill`] call — sized so a batch
+/// of `Access` (16 B each) stays resident in one 4 KiB page of L1D while
+/// the simulator drains it.
+pub const BATCH: usize = 256;
+
+/// Batched per-thread access stream: the hot-path twin of
+/// [`Spec::stream`].  Holds one concrete [`patterns::AccessGen`] per
+/// phase and refills a caller-owned buffer with up to [`BATCH`] accesses
+/// per call — no virtual dispatch, no per-access allocation.  The
+/// emitted sequence is identical to the boxed iterator's (pinned by
+/// `batched_stream_matches_boxed_stream` below and by the golden engine
+/// harness in `tests/engine_equivalence.rs`).
+pub struct SpecStream {
+    gens: Vec<patterns::AccessGen>,
+    cur: usize,
+}
+
+impl SpecStream {
+    /// Clear `buf` and fill it with the next batch (up to [`BATCH`]
+    /// accesses, phase-tagged).  An empty `buf` on return means the
+    /// stream is exhausted.
+    pub fn refill(&mut self, buf: &mut Vec<Access>) {
+        buf.clear();
+        while buf.len() < BATCH && self.cur < self.gens.len() {
+            self.gens[self.cur].refill(buf, BATCH, self.cur as u8);
+            if buf.len() < BATCH {
+                // generator exhausted (not merely out of buffer space)
+                self.cur += 1;
+            }
+        }
+    }
+}
+
 /// Benchmark suite, for per-suite panels (paper Figs. 6 and 9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Suite {
@@ -147,7 +180,10 @@ impl Spec {
         self.phases.iter().map(|p| p.pattern.footprint()).sum()
     }
 
-    /// The per-thread access stream (thread `t` of `n`).
+    /// The per-thread access stream (thread `t` of `n`) — boxed-iterator
+    /// reference implementation (the simulator consumes
+    /// [`Spec::batched_stream`]; this form is kept for tests and the
+    /// golden equivalence harness).
     ///
     /// Phase address spaces are disjoint (phase index in the high bits) so
     /// phases never alias in the cache.
@@ -162,6 +198,20 @@ impl Spec {
             })
         });
         Box::new(iter)
+    }
+
+    /// Batched twin of [`Spec::stream`]: same sequence, same phase tags,
+    /// delivered through [`SpecStream::refill`] instead of a boxed
+    /// iterator.
+    pub fn batched_stream(&self, thread: usize, nthreads: usize) -> SpecStream {
+        assert!(thread < nthreads);
+        let gens = self
+            .phases
+            .iter()
+            .enumerate()
+            .map(|(i, ph)| ph.pattern.gen((i as u64 + 1) << 40, thread, nthreads))
+            .collect();
+        SpecStream { gens, cur: 0 }
     }
 
     /// Kernel CFG summary for the MCA pipeline: one block per phase with
@@ -251,6 +301,96 @@ mod tests {
         let spec = tiny_spec();
         // Stream footprint = bytes * streams (passes don't grow it).
         assert_eq!(spec.footprint(), 2 * 64 * 1024);
+    }
+
+    fn multi_phase_spec() -> Spec {
+        Spec {
+            name: "mp".into(),
+            suite: Suite::Ecp,
+            class: BoundClass::Mixed,
+            threads: 4,
+            max_threads: usize::MAX,
+            ranks: 1,
+            phases: vec![
+                Phase {
+                    label: "stream",
+                    pattern: Pattern::Stream {
+                        bytes: 48 * CHUNK,
+                        passes: 2,
+                        streams: 3,
+                        write_fraction: 1.0 / 3.0,
+                    },
+                    mix: InstrMix::new().with(InstrClass::VecFma, 4.0),
+                    ilp: 4.0,
+                },
+                Phase {
+                    label: "lookup",
+                    pattern: Pattern::RandomLookup {
+                        table_bytes: 1 << 18,
+                        lookups: 300,
+                        chase: false,
+                        seed: 3,
+                    },
+                    mix: InstrMix::new().with(InstrClass::Load, 2.0),
+                    ilp: 2.0,
+                },
+                Phase {
+                    label: "spmv",
+                    pattern: Pattern::CsrSpmv {
+                        rows: 40,
+                        nnz_per_row: 12,
+                        elem_bytes: 8,
+                        passes: 2,
+                        col_spread_bytes: 1 << 14,
+                        seed: 5,
+                    },
+                    mix: InstrMix::new().with(InstrClass::FpFma, 2.0),
+                    ilp: 2.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn batched_stream_matches_boxed_stream() {
+        let spec = multi_phase_spec();
+        for nthreads in [1usize, 2, 4] {
+            for t in 0..nthreads {
+                let want: Vec<Access> = spec.stream(t, nthreads).collect();
+                let mut s = spec.batched_stream(t, nthreads);
+                let mut got = Vec::new();
+                let mut buf = Vec::new();
+                loop {
+                    s.refill(&mut buf);
+                    if buf.is_empty() {
+                        break;
+                    }
+                    assert!(buf.len() <= BATCH);
+                    got.extend_from_slice(&buf);
+                }
+                assert_eq!(got, want, "thread {t}/{nthreads}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_stream_phase_tags_are_in_spec_range() {
+        let spec = multi_phase_spec();
+        let nphases = spec.phases.len();
+        let mut s = spec.batched_stream(0, 2);
+        let mut buf = Vec::new();
+        let mut seen = vec![false; nphases];
+        loop {
+            s.refill(&mut buf);
+            if buf.is_empty() {
+                break;
+            }
+            for a in &buf {
+                assert!((a.phase as usize) < nphases, "phase {} out of range", a.phase);
+                seen[a.phase as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not every phase emitted");
     }
 
     #[test]

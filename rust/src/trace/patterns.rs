@@ -11,6 +11,19 @@
 //!
 //! All generators emit [`Access`]es at [`CHUNK`] granularity and partition
 //! their index space contiguously across threads.
+//!
+//! Two materializations exist per pattern:
+//!
+//! * [`Pattern::stream`] — the original boxed-iterator form, kept as the
+//!   *reference implementation* (tests compare against it; the golden
+//!   equivalence harness drives the pre-refactor engine with it).
+//! * [`Pattern::gen`] — the hot path: a concrete, enum-dispatched
+//!   [`AccessGen`] state machine that refills a caller-owned buffer in
+//!   batches, so the simulator's scheduler loop consumes plain slices
+//!   with no virtual calls or per-access `Box` indirection.  Each
+//!   generator mirrors its iterator's loop nest (and RNG draw points)
+//!   exactly, so the emitted sequence is identical by construction —
+//!   and pinned by the `gen_matches_iterator_*` tests below.
 
 use super::{Access, AccessIter, CHUNK};
 use crate::util::prng::Rng;
@@ -270,6 +283,664 @@ impl Pattern {
                     0,
                     1,
                 )
+            }
+        }
+    }
+
+    /// Batched twin of [`Pattern::stream`]: the same per-thread sequence,
+    /// materialized as a resumable state machine instead of a boxed
+    /// iterator chain.
+    pub fn gen(&self, base: u64, thread: usize, nthreads: usize) -> AccessGen {
+        match *self {
+            Pattern::Stream {
+                bytes,
+                passes,
+                streams,
+                write_fraction,
+            } => AccessGen::Stream(StreamGen::new(
+                base,
+                bytes,
+                passes,
+                streams,
+                write_fraction,
+                thread,
+                nthreads,
+            )),
+            Pattern::Strided {
+                bytes,
+                stride_chunks,
+                passes,
+            } => AccessGen::Strided(StridedGen::new(
+                base,
+                bytes,
+                stride_chunks,
+                passes,
+                thread,
+                nthreads,
+            )),
+            Pattern::RandomLookup {
+                table_bytes,
+                lookups,
+                chase,
+                seed,
+            } => AccessGen::Random(RandomGen::new(
+                base,
+                table_bytes,
+                lookups,
+                chase,
+                seed,
+                thread,
+                nthreads,
+            )),
+            Pattern::Stencil3d {
+                nx,
+                ny,
+                nz,
+                elem_bytes,
+                sweeps,
+            } => AccessGen::Stencil(StencilGen::new(
+                base, nx, ny, nz, elem_bytes, sweeps, thread, nthreads,
+            )),
+            Pattern::BlockedGemm { n, block, elem_bytes } => {
+                AccessGen::Gemm(GemmGen::new(base, n, block, elem_bytes, thread, nthreads))
+            }
+            Pattern::CsrSpmv {
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                passes,
+                col_spread_bytes,
+                seed,
+            } => AccessGen::Spmv(SpmvGen::new(
+                base,
+                rows,
+                nnz_per_row,
+                elem_bytes,
+                passes,
+                col_spread_bytes,
+                seed,
+                thread,
+                nthreads,
+            )),
+            Pattern::Butterfly { bytes, stages } => {
+                AccessGen::Butterfly(ButterflyGen::new(base, bytes, stages, thread, nthreads))
+            }
+            Pattern::Reduction { bytes, passes } => AccessGen::Stream(StreamGen::new(
+                base, bytes, passes, 1, 0.0, thread, nthreads,
+            )),
+            Pattern::PrivateStream {
+                bytes_per_thread,
+                passes,
+                streams,
+                write_fraction,
+            } => {
+                let guard = bytes_per_thread * streams as u64 * 2 + (1 << 24);
+                AccessGen::Stream(StreamGen::new(
+                    base + thread as u64 * guard,
+                    bytes_per_thread,
+                    passes,
+                    streams,
+                    write_fraction,
+                    0,
+                    1,
+                ))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ batched generators
+
+/// Concrete, enum-dispatched access generator: one variant per archetype
+/// loop nest.  [`AccessGen::refill`] appends accesses to a caller-owned
+/// buffer until `limit` is reached or the pattern is exhausted — the
+/// dispatch cost is paid once per *batch*, and the per-variant fill loops
+/// are plain counted loops the compiler can unroll.
+#[derive(Clone, Debug)]
+pub enum AccessGen {
+    Stream(StreamGen),
+    Strided(StridedGen),
+    Random(RandomGen),
+    Stencil(StencilGen),
+    Gemm(GemmGen),
+    Spmv(SpmvGen),
+    Butterfly(ButterflyGen),
+}
+
+impl AccessGen {
+    /// Append accesses (tagged with `phase`) until `buf.len() == limit`
+    /// or the generator is exhausted.  Returning with `buf.len() < limit`
+    /// means exhaustion.
+    pub fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        match self {
+            AccessGen::Stream(g) => g.refill(buf, limit, phase),
+            AccessGen::Strided(g) => g.refill(buf, limit, phase),
+            AccessGen::Random(g) => g.refill(buf, limit, phase),
+            AccessGen::Stencil(g) => g.refill(buf, limit, phase),
+            AccessGen::Gemm(g) => g.refill(buf, limit, phase),
+            AccessGen::Spmv(g) => g.refill(buf, limit, phase),
+            AccessGen::Butterfly(g) => g.refill(buf, limit, phase),
+        }
+    }
+}
+
+/// `stream_iter` as a state machine: pass -> chunk -> stream odometer.
+#[derive(Clone, Debug)]
+pub struct StreamGen {
+    base: u64,
+    stream_stride: u64,
+    lo: u64,
+    hi: u64,
+    passes: u32,
+    streams: u32,
+    /// First stream index whose traffic is stores.
+    first_write: u32,
+    pass: u32,
+    c: u64,
+    s: u32,
+}
+
+impl StreamGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        bytes: u64,
+        passes: u32,
+        streams: u32,
+        write_fraction: f32,
+        thread: usize,
+        nthreads: usize,
+    ) -> StreamGen {
+        let chunks = chunks_of(bytes);
+        let (lo, hi) = split(chunks, thread, nthreads);
+        let write_streams = (streams as f32 * write_fraction).round() as u32;
+        // empty inner ranges would stall the odometer: mark exhausted
+        let pass = if streams == 0 || lo >= hi { passes } else { 0 };
+        StreamGen {
+            base,
+            stream_stride: (chunks + 64) * CHUNK,
+            lo,
+            hi,
+            passes,
+            streams,
+            first_write: streams - write_streams,
+            pass,
+            c: lo,
+            s: 0,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.pass < self.passes {
+            buf.push(Access {
+                addr: self.base + self.s as u64 * self.stream_stride + self.c * CHUNK,
+                bytes: CHUNK as u32,
+                write: self.s >= self.first_write,
+                dep: false,
+                phase,
+            });
+            self.s += 1;
+            if self.s == self.streams {
+                self.s = 0;
+                self.c += 1;
+                if self.c == self.hi {
+                    self.c = self.lo;
+                    self.pass += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `strided_iter` as a state machine.
+#[derive(Clone, Debug)]
+pub struct StridedGen {
+    base: u64,
+    stride_bytes: u64,
+    lo: u64,
+    hi: u64,
+    passes: u32,
+    pass: u32,
+    i: u64,
+}
+
+impl StridedGen {
+    fn new(
+        base: u64,
+        bytes: u64,
+        stride_chunks: u32,
+        passes: u32,
+        thread: usize,
+        nthreads: usize,
+    ) -> StridedGen {
+        let touched = chunks_of(bytes) / stride_chunks as u64;
+        let (lo, hi) = split(touched.max(1), thread, nthreads);
+        let pass = if lo >= hi { passes } else { 0 };
+        StridedGen {
+            base,
+            stride_bytes: stride_chunks as u64 * CHUNK,
+            lo,
+            hi,
+            passes,
+            pass,
+            i: lo,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.pass < self.passes {
+            buf.push(Access {
+                addr: self.base + self.i * self.stride_bytes,
+                bytes: 64,
+                write: false,
+                dep: false,
+                phase,
+            });
+            self.i += 1;
+            if self.i == self.hi {
+                self.i = self.lo;
+                self.pass += 1;
+            }
+        }
+    }
+}
+
+/// `random_iter` as a state machine (one RNG draw per lookup).
+#[derive(Clone, Debug)]
+pub struct RandomGen {
+    base: u64,
+    slots: u64,
+    remaining: u64,
+    chase: bool,
+    rng: Rng,
+}
+
+impl RandomGen {
+    fn new(
+        base: u64,
+        table_bytes: u64,
+        lookups: u64,
+        chase: bool,
+        seed: u64,
+        thread: usize,
+        nthreads: usize,
+    ) -> RandomGen {
+        let (lo, hi) = split(lookups, thread, nthreads);
+        RandomGen {
+            base,
+            slots: (table_bytes / 64).max(1),
+            remaining: hi - lo,
+            chase,
+            rng: Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9)),
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.remaining > 0 {
+            self.remaining -= 1;
+            buf.push(Access {
+                addr: self.base + self.rng.below(self.slots) * 64,
+                bytes: 64,
+                write: false,
+                dep: self.chase,
+                phase,
+            });
+        }
+    }
+}
+
+/// `stencil_iter` as a state machine: sweep -> z -> y -> chunk -> plane.
+#[derive(Clone, Debug)]
+pub struct StencilGen {
+    base: u64,
+    out_base: u64,
+    row_bytes: u64,
+    row_chunks: u64,
+    plane_bytes: u64,
+    zlo: u64,
+    zhi: u64,
+    ny: u64,
+    sweeps: u32,
+    sweep: u32,
+    z: u64,
+    y: u64,
+    c: u64,
+    p: u8,
+}
+
+impl StencilGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        nx: u32,
+        ny: u32,
+        nz: u32,
+        elem_bytes: u32,
+        sweeps: u32,
+        thread: usize,
+        nthreads: usize,
+    ) -> StencilGen {
+        let row_bytes = nx as u64 * elem_bytes as u64;
+        let plane_bytes = row_bytes * ny as u64;
+        let interior = (nz as u64).saturating_sub(2).max(1);
+        let (zlo, zhi) = split(interior, thread, nthreads);
+        let sweep = if zlo >= zhi || ny == 0 { sweeps } else { 0 };
+        StencilGen {
+            base,
+            out_base: base + plane_bytes * nz as u64 + (1 << 30),
+            row_bytes,
+            row_chunks: chunks_of(row_bytes),
+            plane_bytes,
+            zlo,
+            zhi,
+            ny: ny as u64,
+            sweeps,
+            sweep,
+            z: zlo,
+            y: 0,
+            c: 0,
+            p: 0,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.sweep < self.sweeps {
+            let row_off = self.y * self.row_bytes + self.c * CHUNK;
+            buf.push(if self.p < 3 {
+                Access {
+                    addr: self.base + (self.z + self.p as u64) * self.plane_bytes + row_off,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            } else {
+                Access {
+                    addr: self.out_base + (self.z + 1) * self.plane_bytes + row_off,
+                    bytes: CHUNK as u32,
+                    write: true,
+                    dep: false,
+                    phase,
+                }
+            });
+            self.p += 1;
+            if self.p == 4 {
+                self.p = 0;
+                self.c += 1;
+                if self.c == self.row_chunks {
+                    self.c = 0;
+                    self.y += 1;
+                    if self.y == self.ny {
+                        self.y = 0;
+                        self.z += 1;
+                        if self.z == self.zhi {
+                            self.z = self.zlo;
+                            self.sweep += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `gemm_iter` as a state machine: bi -> bj -> bk -> tile -> chunk.
+#[derive(Clone, Debug)]
+pub struct GemmGen {
+    base: u64,
+    nb: u64,
+    tile_bytes: u64,
+    tile_chunks: u64,
+    mat_stride: u64,
+    ihi: u64,
+    bi: u64,
+    bj: u64,
+    bk: u64,
+    m: u8,
+    c: u64,
+}
+
+impl GemmGen {
+    fn new(
+        base: u64,
+        n: u32,
+        block: u32,
+        elem_bytes: u32,
+        thread: usize,
+        nthreads: usize,
+    ) -> GemmGen {
+        let nb = (n as u64 / block as u64).max(1);
+        let tile_bytes = block as u64 * block as u64 * elem_bytes as u64;
+        let mat_bytes = n as u64 * n as u64 * elem_bytes as u64;
+        // `bi` starting at or past `ihi` is already the exhausted state,
+        // so an empty per-thread range needs no special casing here
+        let (ilo, ihi) = split(nb, thread, nthreads);
+        GemmGen {
+            base,
+            nb,
+            tile_bytes,
+            tile_chunks: chunks_of(tile_bytes),
+            mat_stride: mat_bytes + (1 << 28),
+            ihi,
+            bi: ilo,
+            bj: 0,
+            bk: 0,
+            m: 0,
+            c: 0,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.bi < self.ihi {
+            // tiles: A[bi,bk], B[bk,bj], C[bi,bj]
+            let (t, write) = match self.m {
+                0 => (self.bi * self.nb + self.bk, false),
+                1 => (self.bk * self.nb + self.bj, false),
+                _ => (self.bi * self.nb + self.bj, true),
+            };
+            buf.push(Access {
+                addr: self.base
+                    + self.m as u64 * self.mat_stride
+                    + t * self.tile_bytes
+                    + self.c * CHUNK,
+                bytes: CHUNK as u32,
+                write,
+                dep: false,
+                phase,
+            });
+            self.c += 1;
+            if self.c == self.tile_chunks {
+                self.c = 0;
+                self.m += 1;
+                if self.m == 3 {
+                    self.m = 0;
+                    self.bk += 1;
+                    if self.bk == self.nb {
+                        self.bk = 0;
+                        self.bj += 1;
+                        if self.bj == self.nb {
+                            self.bj = 0;
+                            self.bi += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `spmv_iter` as a state machine.  RNG draw points mirror the iterator's
+/// lazy closure evaluation exactly: the outer RNG advances once per pass
+/// (seeding `local`), `local` advances once per row (seeding `g`), and
+/// `g` serves that row's gather offsets.
+#[derive(Clone, Debug)]
+pub struct SpmvGen {
+    base: u64,
+    x_base: u64,
+    elem_bytes: u64,
+    row_bytes: u64,
+    row_chunks: u64,
+    gathers: u64,
+    spread: u64,
+    rlo: u64,
+    rhi: u64,
+    passes: u32,
+    pass: u32,
+    r: u64,
+    /// Position within the row: `< row_chunks` = matrix stream, then gathers.
+    k: u64,
+    fresh_pass: bool,
+    fresh_row: bool,
+    rng: Rng,
+    local: Rng,
+    g: Rng,
+    diag: u64,
+}
+
+impl SpmvGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        rows: u64,
+        nnz_per_row: u32,
+        elem_bytes: u32,
+        passes: u32,
+        col_spread_bytes: u64,
+        seed: u64,
+        thread: usize,
+        nthreads: usize,
+    ) -> SpmvGen {
+        let row_bytes = nnz_per_row as u64 * (elem_bytes as u64 + 4);
+        let (rlo, rhi) = split(rows, thread, nthreads);
+        let pass = if rlo >= rhi { passes } else { 0 };
+        SpmvGen {
+            base,
+            x_base: base + rows * row_bytes + (1 << 32),
+            elem_bytes: elem_bytes as u64,
+            row_bytes,
+            row_chunks: chunks_of(row_bytes),
+            gathers: (nnz_per_row as u64 / 8).max(1),
+            spread: col_spread_bytes.max(4096),
+            rlo,
+            rhi,
+            passes,
+            pass,
+            r: rlo,
+            k: 0,
+            fresh_pass: true,
+            fresh_row: true,
+            rng: Rng::new(seed ^ (thread as u64).wrapping_mul(0xA5A5_5A5A)),
+            local: Rng::new(0),
+            g: Rng::new(0),
+            diag: 0,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.pass < self.passes {
+            if self.fresh_pass {
+                self.local = Rng::new(self.rng.next_u64());
+                self.fresh_pass = false;
+            }
+            if self.fresh_row {
+                self.g = Rng::new(self.local.next_u64());
+                // x gathers cluster around the row's diagonal neighbourhood
+                // (same precedence as the iterator: + binds before &)
+                self.diag = self.x_base + (self.r * self.elem_bytes) & !63;
+                self.fresh_row = false;
+            }
+            buf.push(if self.k < self.row_chunks {
+                Access {
+                    addr: self.base + self.r * self.row_bytes + self.k * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            } else {
+                let off = self.g.below(self.spread);
+                Access {
+                    addr: self.diag.wrapping_add(off) & !63,
+                    bytes: 64,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            });
+            self.k += 1;
+            if self.k == self.row_chunks + self.gathers {
+                self.k = 0;
+                self.fresh_row = true;
+                self.r += 1;
+                if self.r == self.rhi {
+                    self.r = self.rlo;
+                    self.pass += 1;
+                    self.fresh_pass = true;
+                }
+            }
+        }
+    }
+}
+
+/// `butterfly_iter` as a state machine: stage -> index -> (self, partner).
+#[derive(Clone, Debug)]
+pub struct ButterflyGen {
+    base: u64,
+    chunks: u64,
+    lo: u64,
+    hi: u64,
+    stages: u32,
+    s: u32,
+    i: u64,
+    half: u8,
+}
+
+impl ButterflyGen {
+    fn new(base: u64, bytes: u64, stages: u32, thread: usize, nthreads: usize) -> ButterflyGen {
+        let chunks = chunks_of(bytes);
+        let (lo, hi) = split(chunks, thread, nthreads);
+        let s = if lo >= hi { stages } else { 0 };
+        ButterflyGen {
+            base,
+            chunks,
+            lo,
+            hi,
+            stages,
+            s,
+            i: lo,
+            half: 0,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.s < self.stages {
+            buf.push(if self.half == 0 {
+                Access {
+                    addr: self.base + self.i * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            } else {
+                let stride = 1u64 << (self.s % 24);
+                let partner = (self.i ^ stride) % self.chunks;
+                Access {
+                    addr: self.base + partner * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: true,
+                    dep: false,
+                    phase,
+                }
+            });
+            self.half += 1;
+            if self.half == 2 {
+                self.half = 0;
+                self.i += 1;
+                if self.i == self.hi {
+                    self.i = self.lo;
+                    self.s += 1;
+                }
             }
         }
     }
@@ -665,5 +1336,144 @@ mod tests {
         let a: Vec<_> = p.stream(0, 0, 2).collect();
         let b: Vec<_> = p.stream(0, 0, 2).collect();
         assert_eq!(a, b);
+    }
+
+    /// Drain an [`AccessGen`] through deliberately awkward batch sizes so
+    /// every odometer resume point is exercised.
+    fn drain(mut g: AccessGen, phase: u8) -> Vec<Access> {
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        for limit in [1usize, 7, 256].into_iter().cycle() {
+            buf.clear();
+            g.refill(&mut buf, limit, phase);
+            if buf.is_empty() {
+                break;
+            }
+            out.extend_from_slice(&buf);
+        }
+        out
+    }
+
+    fn assert_gen_matches(p: &Pattern, base: u64) {
+        for nthreads in [1usize, 3, 4] {
+            for thread in 0..nthreads {
+                let want: Vec<Access> = p.stream(base, thread, nthreads).collect();
+                let got = drain(p.gen(base, thread, nthreads), 0);
+                assert_eq!(
+                    got, want,
+                    "batched generator diverged: {p:?} thread {thread}/{nthreads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gen_matches_iterator_stream_family() {
+        assert_gen_matches(
+            &Pattern::Stream {
+                bytes: 100 * CHUNK,
+                passes: 3,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            1 << 40,
+        );
+        assert_gen_matches(&Pattern::Reduction { bytes: 33 * CHUNK, passes: 2 }, 1 << 41);
+        assert_gen_matches(
+            &Pattern::PrivateStream {
+                bytes_per_thread: 16 * CHUNK,
+                passes: 2,
+                streams: 2,
+                write_fraction: 0.5,
+            },
+            1 << 42,
+        );
+        assert_gen_matches(
+            &Pattern::Strided {
+                bytes: 200 * CHUNK,
+                stride_chunks: 3,
+                passes: 2,
+            },
+            1 << 40,
+        );
+    }
+
+    #[test]
+    fn gen_matches_iterator_random_and_spmv() {
+        // RNG draw points must line up exactly with the iterator's lazy
+        // closure evaluation, across thread splits
+        assert_gen_matches(
+            &Pattern::RandomLookup {
+                table_bytes: 1 << 20,
+                lookups: 1000,
+                chase: true,
+                seed: 42,
+            },
+            1 << 40,
+        );
+        assert_gen_matches(
+            &Pattern::CsrSpmv {
+                rows: 53,
+                nnz_per_row: 17,
+                elem_bytes: 8,
+                passes: 3,
+                col_spread_bytes: 1 << 16,
+                seed: 9,
+            },
+            1 << 40,
+        );
+    }
+
+    #[test]
+    fn gen_matches_iterator_structured_kernels() {
+        assert_gen_matches(
+            &Pattern::Stencil3d {
+                nx: 40,
+                ny: 5,
+                nz: 7,
+                elem_bytes: 8,
+                sweeps: 2,
+            },
+            1 << 40,
+        );
+        assert_gen_matches(
+            &Pattern::BlockedGemm {
+                n: 64,
+                block: 16,
+                elem_bytes: 8,
+            },
+            1 << 40,
+        );
+        assert_gen_matches(&Pattern::Butterfly { bytes: 64 * CHUNK, stages: 5 }, 1 << 40);
+    }
+
+    #[test]
+    fn gen_tags_phase_on_every_access() {
+        let p = Pattern::Stream {
+            bytes: 8 * CHUNK,
+            passes: 1,
+            streams: 2,
+            write_fraction: 0.0,
+        };
+        let got = drain(p.gen(0, 0, 1), 3);
+        assert!(!got.is_empty());
+        assert!(got.iter().all(|a| a.phase == 3));
+    }
+
+    #[test]
+    fn gen_handles_empty_thread_ranges() {
+        // more threads than index-space items: some threads get nothing
+        // and their generators must report exhaustion immediately
+        let p = Pattern::Stream {
+            bytes: 2 * CHUNK,
+            passes: 1,
+            streams: 1,
+            write_fraction: 0.0,
+        };
+        assert_gen_matches(&p, 0);
+        // thread 0 of 4 owns [2*0/4, 2*1/4) = an empty chunk range
+        let mut buf = Vec::new();
+        p.gen(0, 0, 4).refill(&mut buf, 256, 0);
+        assert!(buf.is_empty());
     }
 }

@@ -37,7 +37,19 @@ impl BenchResult {
 
 /// Run `f` with warmup and timing; `items` is the per-iteration work amount
 /// for throughput reporting (pass 0 to omit).
-pub fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut() -> u64>(name: &str, iters: usize, f: F) -> BenchResult {
+    bench_unit(name, iters, "items", f)
+}
+
+/// [`bench`] with an explicit throughput unit — the cachesim suites
+/// return simulated accesses per iteration and report `accesses/s`, the
+/// perf-trajectory figure `BENCH_*.json` baselines track.
+pub fn bench_unit<F: FnMut() -> u64>(
+    name: &str,
+    iters: usize,
+    unit: &'static str,
+    mut f: F,
+) -> BenchResult {
     assert!(iters > 0);
     // Warmup (also primes caches/JIT-free but page-faults matter).
     let mut items = f();
@@ -49,7 +61,7 @@ pub fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> BenchResu
     }
     let median_s = stats::median(&times);
     let throughput = if items > 0 && median_s > 0.0 {
-        Some((items as f64 / median_s, "items"))
+        Some((items as f64 / median_s, unit))
     } else {
         None
     };
@@ -114,6 +126,25 @@ mod tests {
         assert!(r.median_s >= 0.0);
         assert!(r.throughput.is_some());
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn bench_unit_carries_custom_unit_into_json() {
+        // spin enough that median_s is measurably nonzero on coarse clocks
+        let r = bench_unit("u", 2, "accesses", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+            1000
+        });
+        assert_eq!(r.throughput.map(|(_, u)| u), Some("accesses"));
+        let v = results_to_json(&[r]);
+        let back = crate::util::json::parse(&v.to_string()).unwrap();
+        let arr = back.get("results").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(arr[0].get("unit").and_then(|u| u.as_str()), Some("accesses"));
+        assert!(arr[0].get("throughput").and_then(|t| t.as_f64()).unwrap() > 0.0);
     }
 
     #[test]

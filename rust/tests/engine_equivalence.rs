@@ -1,0 +1,1109 @@
+//! The hot-path overhaul's acceptance gate: the optimized engine (SoA
+//! tag store + last-hit memo, batched `SpecStream` access generation,
+//! `LineRef` threading, MSHR min-heap) must be **bit-identical** to the
+//! straightforward pre-refactor engine on every machine shape.
+//!
+//! Everything below the test section is a verbatim copy of the
+//! pre-refactor code, kept as a golden reference:
+//!
+//! * [`RefCache`] — the array-of-`Line`-structs cache (separate
+//!   `find`/`find_mut` tag scans, no memo, dense sharer masks);
+//! * [`RefHierarchy`] — the generic N-level walk over [`RefCache`]
+//!   (per-operation set/tag derivation);
+//! * [`ref_simulate`] — the scheduler loop consuming boxed
+//!   `Spec::stream` iterators with the O(mshrs) linear scan.
+//!
+//! Cycles (compared on IEEE bit patterns) and every counter — including
+//! the per-level vectors — must match exactly, across workload classes
+//! (stream, pointer-chase, mixed multi-phase) at 1/4/16 threads on
+//! two-level and three-level machines.  Counter-for-counter equality is
+//! what makes the fig7a campaign CSV byte-identical across the refactor.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use larc::cachesim::{self, configs, MachineConfig, ReplacementPolicy, Scope};
+use larc::cachesim::cache::{AccessOutcome, Cache};
+use larc::cachesim::configs::LevelConfig;
+use larc::cachesim::dram::Dram;
+use larc::cachesim::stats::{LevelStats, SimStats};
+use larc::isa::{InstrClass, InstrMix};
+use larc::mca::analyzers::port_pressure_native;
+use larc::mca::PortModel;
+use larc::trace::patterns::Pattern;
+use larc::trace::{AccessIter, BoundClass, Phase, Spec, Suite};
+use larc::util::prng::Rng;
+use larc::util::prop::check;
+use larc::util::units::{KIB, MIB};
+
+// ================================================================
+// golden reference: the pre-refactor AoS cache, verbatim
+// ================================================================
+
+const RRPV_MAX: u8 = 3;
+const DUEL_PERIOD: usize = 64;
+const PSEL_MAX: i16 = 512;
+
+#[derive(Clone, Copy, Debug)]
+struct RefEvicted {
+    addr: u64,
+    dirty: bool,
+    sharers: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Line {
+    tag: u64,
+    lru: u64,
+    sharers: u64,
+    rrpv: u8,
+    valid: bool,
+    dirty: bool,
+}
+
+impl Line {
+    #[inline]
+    fn touch(&mut self, tick: u64, write: bool) {
+        self.lru = tick;
+        self.rrpv = 0;
+        if write {
+            self.dirty = true;
+        }
+    }
+}
+
+struct RefCache {
+    sets: usize,
+    ways: usize,
+    line_shift: u32,
+    set_mask: Option<usize>,
+    lines: Vec<Line>,
+    tick: u64,
+    policy: ReplacementPolicy,
+    rng: u64,
+    psel: i16,
+    hits: u64,
+    misses: u64,
+    writebacks: u64,
+}
+
+impl RefCache {
+    fn with_policy(size: u64, ways: u32, line_bytes: u32, policy: ReplacementPolicy) -> Self {
+        assert!(line_bytes.is_power_of_two());
+        let ways = ways as usize;
+        let sets = (size / (ways as u64 * line_bytes as u64)) as usize;
+        assert!(sets > 0);
+        RefCache {
+            sets,
+            ways,
+            line_shift: line_bytes.trailing_zeros(),
+            set_mask: if sets.is_power_of_two() { Some(sets - 1) } else { None },
+            lines: vec![Line::default(); sets * ways],
+            tick: 0,
+            policy,
+            rng: (0x9E37_79B9_7F4A_7C15 ^ ((sets as u64) << 8) ^ ways as u64) | 1,
+            psel: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        let idx = (addr >> self.line_shift) as usize;
+        match self.set_mask {
+            Some(m) => idx & m,
+            None => idx % self.sets,
+        }
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    #[inline]
+    fn find(&self, addr: u64) -> Option<&Line> {
+        let base = self.set_of(addr) * self.ways;
+        let tag = self.tag_of(addr);
+        self.lines[base..base + self.ways]
+            .iter()
+            .find(|l| l.valid && l.tag == tag)
+    }
+
+    #[inline]
+    fn find_mut(&mut self, addr: u64) -> Option<&mut Line> {
+        let base = self.set_of(addr) * self.ways;
+        let tag = self.tag_of(addr);
+        self.lines[base..base + self.ways]
+            .iter_mut()
+            .find(|l| l.valid && l.tag == tag)
+    }
+
+    fn probe(&self, addr: u64) -> bool {
+        self.find(addr).is_some()
+    }
+
+    fn access(&mut self, addr: u64, write: bool) -> AccessOutcome {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.find_mut(addr) {
+            Some(l) => {
+                l.touch(tick, write);
+                self.hits += 1;
+                AccessOutcome::Hit
+            }
+            None => {
+                self.misses += 1;
+                AccessOutcome::Miss
+            }
+        }
+    }
+
+    fn fill(&mut self, addr: u64, write: bool) -> Option<RefEvicted> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(l) = self.find_mut(addr) {
+            l.touch(tick, write);
+            return None;
+        }
+        self.install(addr, write)
+    }
+
+    fn access_or_fill(&mut self, addr: u64, write: bool) -> (AccessOutcome, Option<RefEvicted>) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(l) = self.find_mut(addr) {
+            l.touch(tick, write);
+            self.hits += 1;
+            return (AccessOutcome::Hit, None);
+        }
+        self.misses += 1;
+        (AccessOutcome::Miss, self.install(addr, write))
+    }
+
+    fn install(&mut self, addr: u64, write: bool) -> Option<RefEvicted> {
+        let set = self.set_of(addr);
+        let victim = set * self.ways + self.choose_victim(set);
+        let v = self.lines[victim];
+        let evicted = if v.valid {
+            if v.dirty {
+                self.writebacks += 1;
+            }
+            Some(RefEvicted {
+                addr: v.tag << self.line_shift,
+                dirty: v.dirty,
+                sharers: v.sharers,
+            })
+        } else {
+            None
+        };
+
+        self.lines[victim] = Line {
+            tag: self.tag_of(addr),
+            lru: self.tick,
+            sharers: 0,
+            rrpv: self.insert_rrpv(set),
+            valid: true,
+            dirty: write,
+        };
+        evicted
+    }
+
+    fn choose_victim(&mut self, set: usize) -> usize {
+        let base = set * self.ways;
+        let ways = &self.lines[base..base + self.ways];
+        if let Some(i) = ways.iter().position(|l| !l.valid) {
+            return i;
+        }
+        match self.policy {
+            ReplacementPolicy::Lru => {
+                let mut victim = 0;
+                let mut oldest = u64::MAX;
+                for (i, l) in ways.iter().enumerate() {
+                    if l.lru < oldest {
+                        oldest = l.lru;
+                        victim = i;
+                    }
+                }
+                victim
+            }
+            ReplacementPolicy::Random => (self.next_rand() % self.ways as u64) as usize,
+            ReplacementPolicy::Drrip => loop {
+                let ways = &mut self.lines[base..base + self.ways];
+                if let Some(i) = ways.iter().position(|l| l.rrpv >= RRPV_MAX) {
+                    break i;
+                }
+                for l in ways.iter_mut() {
+                    l.rrpv += 1;
+                }
+            },
+        }
+    }
+
+    fn insert_rrpv(&mut self, set: usize) -> u8 {
+        if self.policy != ReplacementPolicy::Drrip {
+            return 0;
+        }
+        let brrip = match set % DUEL_PERIOD {
+            0 => {
+                self.psel = (self.psel + 1).min(PSEL_MAX);
+                false
+            }
+            1 => {
+                self.psel = (self.psel - 1).max(-PSEL_MAX);
+                true
+            }
+            _ => self.psel > 0,
+        };
+        if brrip && self.next_rand() % 32 != 0 {
+            RRPV_MAX
+        } else {
+            RRPV_MAX - 1
+        }
+    }
+
+    #[inline]
+    fn next_rand(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    fn writeback_touch(&mut self, addr: u64) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.find_mut(addr) {
+            Some(l) => {
+                l.touch(tick, true);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn invalidate(&mut self, addr: u64) -> (bool, bool) {
+        match self.find_mut(addr) {
+            Some(l) => {
+                let dirty = l.dirty;
+                l.valid = false;
+                l.dirty = false;
+                l.sharers = 0;
+                (true, dirty)
+            }
+            None => (false, false),
+        }
+    }
+
+    fn set_sharer(&mut self, addr: u64, core: usize) {
+        if let Some(l) = self.find_mut(addr) {
+            l.sharers |= 1 << core;
+        }
+    }
+
+    fn clear_sharer(&mut self, addr: u64, core: usize) {
+        if let Some(l) = self.find_mut(addr) {
+            l.sharers &= !(1 << core);
+        }
+    }
+
+    fn sharers(&self, addr: u64) -> u64 {
+        self.find(addr).map(|l| l.sharers).unwrap_or(0)
+    }
+}
+
+// ================================================================
+// golden reference: the pre-refactor N-level hierarchy walk, verbatim
+// ================================================================
+
+struct RefLevel {
+    cfg: LevelConfig,
+    caches: Vec<RefCache>,
+    bank_free: Vec<f64>,
+    banks: usize,
+    bank_mask: u64,
+    line_bytes: u64,
+    bytes: u64,
+}
+
+impl RefLevel {
+    #[inline]
+    fn cache_index(&self, core: usize) -> usize {
+        match self.cfg.scope {
+            Scope::Private => core,
+            Scope::SharedBanked => 0,
+        }
+    }
+
+    fn reserve_bank(&mut self, core: usize, addr: u64, t_in: f64, occ: f64) -> f64 {
+        let bank = ((addr / self.line_bytes) & self.bank_mask) as usize % self.banks;
+        let idx = match self.cfg.scope {
+            Scope::SharedBanked => bank,
+            Scope::Private => core * self.banks + bank,
+        };
+        let start = t_in.max(self.bank_free[idx]);
+        self.bank_free[idx] = start + occ;
+        start
+    }
+}
+
+struct RefHierarchy {
+    levels: Vec<RefLevel>,
+    dir: Option<usize>,
+    cores: usize,
+}
+
+impl RefHierarchy {
+    fn new(cfg: &MachineConfig, cores: usize) -> RefHierarchy {
+        assert!(!cfg.levels.is_empty());
+        let mut levels = Vec::with_capacity(cfg.levels.len());
+        for lc in &cfg.levels {
+            let replicas = match lc.scope {
+                Scope::Private => cores,
+                Scope::SharedBanked => 1,
+            };
+            let p = lc.params;
+            let caches = (0..replicas)
+                .map(|_| RefCache::with_policy(p.size, p.ways, p.line_bytes, lc.policy))
+                .collect();
+            let banks = p.banks as usize;
+            levels.push(RefLevel {
+                cfg: *lc,
+                caches,
+                bank_free: vec![0.0; banks * replicas],
+                banks,
+                bank_mask: (p.banks as u64).next_power_of_two() - 1,
+                line_bytes: p.line_bytes as u64,
+                bytes: 0,
+            });
+        }
+        assert!(cores <= 64);
+        RefHierarchy {
+            levels,
+            dir: cfg.directory_level(),
+            cores,
+        }
+    }
+
+    fn l0_latency(&self) -> f64 {
+        self.levels[0].cfg.params.latency
+    }
+
+    fn l0_line_bytes(&self) -> u64 {
+        self.levels[0].line_bytes
+    }
+
+    fn access_l0(&mut self, core: usize, line: u64, write: bool) -> AccessOutcome {
+        let ci = self.levels[0].cache_index(core);
+        self.levels[0].caches[ci].access(line, write)
+    }
+
+    fn fetch(
+        &mut self,
+        core: usize,
+        line: u64,
+        write: bool,
+        issue: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) -> f64 {
+        let done = if self.levels.len() > 1 {
+            self.walk(1, core, line, write, issue, dram, stats)
+        } else {
+            let lb = self.levels[0].line_bytes;
+            stats.dram_bytes += lb;
+            dram.transfer(line, lb, issue)
+        };
+        self.install_l0(core, line, write, issue, dram, stats);
+        done
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        l0_line: u64,
+        write: bool,
+        t_in: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) -> f64 {
+        let upper_line = self.levels[lvl - 1].line_bytes;
+        let lvl_line = self.levels[lvl].line_bytes;
+        let addr = l0_line & !(lvl_line - 1);
+        let lat = self.levels[lvl].cfg.params.latency;
+
+        let occ = upper_line as f64 / self.levels[lvl].cfg.params.bank_bytes_per_cycle;
+        let start = self.levels[lvl].reserve_bank(core, addr, t_in, occ);
+        self.levels[lvl].bytes += upper_line;
+
+        let mut done = start + occ + lat;
+        let ci = self.levels[lvl].cache_index(core);
+        let (outcome, evicted) = self.levels[lvl].caches[ci].access_or_fill(addr, write);
+        match outcome {
+            AccessOutcome::Hit => {
+                if write && self.dir == Some(lvl) {
+                    let sharers = self.levels[lvl].caches[ci].sharers(addr) & !(1u64 << core);
+                    if sharers != 0 {
+                        let hi = l0_line + 1;
+                        self.back_invalidate(lvl, sharers, l0_line, hi, stats);
+                        done += lat;
+                    }
+                }
+            }
+            AccessOutcome::Miss => {
+                let lower_done = if lvl + 1 < self.levels.len() {
+                    self.walk(lvl + 1, core, l0_line, write, start + occ, dram, stats)
+                } else {
+                    stats.dram_bytes += lvl_line;
+                    dram.transfer(addr, lvl_line, start + occ)
+                };
+                done = lower_done + lat;
+
+                let maintains_mask = self.dir == Some(lvl + 1);
+                if let Some(mut ev) = evicted {
+                    if self.dir == Some(lvl) && ev.sharers != 0 {
+                        let hi = ev.addr + lvl_line;
+                        ev.dirty |= self.back_invalidate(lvl, ev.sharers, ev.addr, hi, stats);
+                    }
+                    if self.levels[lvl].cfg.scope == Scope::Private {
+                        ev.dirty |= self.evict_upper(lvl, core, ev.addr, lvl_line, stats);
+                    }
+                    if maintains_mask {
+                        self.levels[lvl + 1].caches[0].clear_sharer(ev.addr, core);
+                    }
+                    if ev.dirty {
+                        if lvl + 1 < self.levels.len() {
+                            let t = start + occ;
+                            self.writeback(lvl + 1, core, ev.addr, lvl_line, t, dram, stats);
+                        } else {
+                            dram.transfer(ev.addr, lvl_line, start + occ);
+                            stats.dram_bytes += lvl_line;
+                        }
+                    }
+                }
+                if maintains_mask {
+                    self.levels[lvl + 1].caches[0].set_sharer(addr, core);
+                }
+            }
+        }
+        done
+    }
+
+    fn install_l0(
+        &mut self,
+        core: usize,
+        line: u64,
+        write: bool,
+        issue: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        self.levels[0].bytes += self.levels[0].line_bytes;
+        let ci = self.levels[0].cache_index(core);
+        let maintains_mask = self.dir == Some(1);
+        if let Some(ev) = self.levels[0].caches[ci].fill(line, write) {
+            if maintains_mask {
+                self.levels[1].caches[0].clear_sharer(ev.addr, core);
+            }
+            if ev.dirty {
+                let lb = self.levels[0].line_bytes;
+                if self.levels.len() > 1 {
+                    self.writeback(1, core, ev.addr, lb, issue, dram, stats);
+                } else {
+                    stats.dram_bytes += lb;
+                    dram.transfer(ev.addr, lb, issue);
+                }
+            }
+        }
+        if maintains_mask {
+            self.levels[1].caches[0].set_sharer(line, core);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn writeback(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        addr: u64,
+        bytes: u64,
+        now: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        self.levels[lvl].bytes += bytes;
+        let ci = self.levels[lvl].cache_index(core);
+        if self.levels[lvl].caches[ci].writeback_touch(addr) {
+            return;
+        }
+        if lvl + 1 < self.levels.len() {
+            self.writeback(lvl + 1, core, addr, bytes, now, dram, stats);
+        } else {
+            stats.dram_bytes += bytes;
+            dram.transfer(addr, bytes, now);
+        }
+    }
+
+    fn evict_upper(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        lo: u64,
+        len: u64,
+        stats: &mut SimStats,
+    ) -> bool {
+        let mut dirty = false;
+        for p in 0..lvl {
+            if self.levels[p].cfg.scope != Scope::Private {
+                continue;
+            }
+            let step = self.levels[p].line_bytes;
+            let ci = self.levels[p].cache_index(core);
+            let mut a = lo & !(step - 1);
+            while a < lo + len {
+                let (present, was_dirty) = self.levels[p].caches[ci].invalidate(a);
+                if present {
+                    stats.inclusion_invalidations += 1;
+                    dirty |= was_dirty;
+                }
+                a += step;
+            }
+        }
+        dirty
+    }
+
+    fn back_invalidate(
+        &mut self,
+        dir_lvl: usize,
+        mask: u64,
+        lo: u64,
+        hi: u64,
+        stats: &mut SimStats,
+    ) -> bool {
+        let cores = self.cores;
+        let mut dirty = false;
+        for p in 0..dir_lvl {
+            if self.levels[p].cfg.scope != Scope::Private {
+                continue;
+            }
+            let step = self.levels[p].line_bytes;
+            for (o, cache) in self.levels[p].caches.iter_mut().enumerate().take(cores) {
+                if mask & (1u64 << o) == 0 {
+                    continue;
+                }
+                let mut a = lo & !(step - 1);
+                while a < hi {
+                    let (present, was_dirty) = cache.invalidate(a);
+                    if present {
+                        stats.coherence_invalidations += 1;
+                        dirty |= was_dirty && p >= 1;
+                    }
+                    a += step;
+                }
+            }
+        }
+        dirty
+    }
+
+    fn prefetch_candidate(&self, core: usize, line: u64) -> bool {
+        if self.levels.len() < 2 {
+            return false;
+        }
+        let ci0 = self.levels[0].cache_index(core);
+        let ci1 = self.levels[1].cache_index(core);
+        !self.levels[0].caches[ci0].probe(line) && self.levels[1].caches[ci1].probe(line)
+    }
+
+    fn prefetch_fill(
+        &mut self,
+        core: usize,
+        line: u64,
+        issue: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        let l0_line = self.levels[0].line_bytes;
+        let occ = l0_line as f64 / self.levels[1].cfg.params.bank_bytes_per_cycle;
+        self.levels[1].reserve_bank(core, line, issue, occ);
+        self.levels[1].bytes += l0_line;
+        self.install_l0(core, line, false, issue, dram, stats);
+    }
+
+    fn level_stats(&self, lvl: usize) -> LevelStats {
+        let l = &self.levels[lvl];
+        let mut agg = LevelStats { bytes: l.bytes, ..Default::default() };
+        for c in &l.caches {
+            agg.hits += c.hits;
+            agg.misses += c.misses;
+            agg.writebacks += c.writebacks;
+        }
+        agg
+    }
+
+    fn collect_stats(&self, stats: &mut SimStats) {
+        stats.levels = (0..self.levels.len()).map(|i| self.level_stats(i)).collect();
+        let d = self.dir.unwrap_or(self.levels.len() - 1);
+        stats.l2_hits = stats.levels[d].hits;
+        stats.l2_misses = stats.levels[d].misses;
+        stats.l2_writebacks = stats.levels[d].writebacks;
+        stats.l2_bytes = stats.levels[d].bytes;
+    }
+}
+
+// ================================================================
+// golden reference: the pre-refactor scheduler loop, verbatim
+// (boxed iterators, linear-scan MSHRs, per-line set/tag re-derivation)
+// ================================================================
+
+struct ThreadState {
+    stream: AccessIter,
+    cycle: f64,
+    last_completion: f64,
+    inflight: Vec<f64>,
+    inflight_head: usize,
+    outstanding: Vec<f64>,
+    finish: f64,
+}
+
+struct PhaseCost {
+    gap: f64,
+    window: usize,
+}
+
+fn ref_simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> (f64, SimStats) {
+    let threads = threads.max(1).min(cfg.cores).min(64);
+    let pm = PortModel::get(cfg.port_arch);
+    let blocks = spec.blocks(threads);
+
+    let phase_costs: Vec<PhaseCost> = blocks
+        .iter()
+        .skip(1)
+        .map(|(bb, _)| {
+            let gap = port_pressure_native(bb, &pm) as f64;
+            let instr = bb.mix.total().max(1.0);
+            let window = ((cfg.rob_entries as f32 / instr).floor() as usize).max(1);
+            PhaseCost { gap, window }
+        })
+        .collect();
+
+    let mut hier = RefHierarchy::new(cfg, threads);
+    let mut dram = Dram::new(
+        cfg.dram_channels,
+        cfg.dram_bytes_per_cycle(),
+        cfg.dram_latency_cycles,
+        256,
+    );
+    let mut stats = SimStats::default();
+
+    let max_window = phase_costs.iter().map(|p| p.window).max().unwrap_or(1);
+    let mut states: Vec<ThreadState> = (0..threads)
+        .map(|t| ThreadState {
+            stream: spec.stream(t, threads),
+            cycle: 0.0,
+            last_completion: 0.0,
+            inflight: vec![0.0; max_window],
+            inflight_head: 0,
+            outstanding: Vec::with_capacity(cfg.mshrs as usize),
+            finish: 0.0,
+        })
+        .collect();
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..threads).map(|t| Reverse((0u64, t))).collect();
+
+    let l1_line = hier.l0_line_bytes();
+    let l1_latency = hier.l0_latency();
+    let l1_issue = |bytes: u64| bytes as f64 / cfg.l1_bytes_per_cycle;
+
+    'sched: while let Some(Reverse((_, t))) = heap.pop() {
+        loop {
+            let access = {
+                let st = &mut states[t];
+                match st.stream.next() {
+                    Some(a) => a,
+                    None => {
+                        st.finish = st.finish.max(st.cycle).max(st.last_completion);
+                        continue 'sched;
+                    }
+                }
+            };
+            stats.accesses += 1;
+
+            let phase = access.phase as usize;
+            let (gap, window) = phase_costs
+                .get(phase)
+                .map(|p| (p.gap, p.window))
+                .unwrap_or((1.0, 8));
+
+            let st = &mut states[t];
+            let mut issue = st.cycle + gap;
+            if access.dep {
+                issue = issue.max(st.last_completion);
+            }
+            let idx = st.inflight_head % window.min(st.inflight.len());
+            issue = issue.max(st.inflight[idx]);
+
+            let first = access.addr & !(l1_line - 1);
+            let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+            let mut completion = issue;
+            let mut line = first;
+            while line <= last {
+                stats.line_touches += 1;
+                let this_done;
+                match hier.access_l0(t, line, access.write) {
+                    AccessOutcome::Hit => {
+                        stats.l1_hits += 1;
+                        this_done = issue + l1_latency;
+                    }
+                    AccessOutcome::Miss => {
+                        stats.l1_misses += 1;
+                        if st.outstanding.len() >= cfg.mshrs as usize {
+                            let mut earliest_i = 0;
+                            for (i, &c) in st.outstanding.iter().enumerate() {
+                                if c < st.outstanding[earliest_i] {
+                                    earliest_i = i;
+                                }
+                            }
+                            let earliest = st.outstanding.swap_remove(earliest_i);
+                            issue = issue.max(earliest);
+                        }
+                        let fill_done =
+                            hier.fetch(t, line, access.write, issue, &mut dram, &mut stats);
+                        st.outstanding.push(fill_done);
+                        this_done = fill_done;
+
+                        if cfg.adjacent_prefetch {
+                            let next = line + l1_line;
+                            if hier.prefetch_candidate(t, next) {
+                                stats.prefetches += 1;
+                                hier.prefetch_fill(t, next, issue, &mut dram, &mut stats);
+                            }
+                        }
+                    }
+                }
+                completion = completion.max(this_done);
+                line += l1_line;
+            }
+
+            let w = window.min(st.inflight.len());
+            let idx = st.inflight_head % w;
+            st.inflight[idx] = completion;
+            st.inflight_head = st.inflight_head.wrapping_add(1);
+            st.last_completion = completion;
+
+            st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+            st.finish = st.finish.max(completion);
+
+            let clock = st.cycle as u64;
+            if let Some(&Reverse((next_min, _))) = heap.peek() {
+                if clock > next_min {
+                    heap.push(Reverse((clock, t)));
+                    continue 'sched;
+                }
+            }
+        }
+    }
+
+    let cycles = states.iter().map(|s| s.finish).fold(0f64, f64::max);
+    hier.collect_stats(&mut stats);
+    (cycles, stats)
+}
+
+// ================================================================ the gate
+
+fn mix_bw() -> InstrMix {
+    InstrMix::new()
+        .with(InstrClass::VecFma, 2.0)
+        .with(InstrClass::Load, 2.0)
+        .with(InstrClass::Store, 1.0)
+        .with(InstrClass::AddrGen, 1.0)
+}
+
+fn stream_spec(bytes: u64, passes: u32) -> Spec {
+    Spec {
+        name: "engine-stream".into(),
+        suite: Suite::Top500,
+        class: BoundClass::Bandwidth,
+        threads: 8,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "stream",
+            pattern: Pattern::Stream {
+                bytes,
+                passes,
+                streams: 3,
+                write_fraction: 1.0 / 3.0,
+            },
+            mix: mix_bw(),
+            ilp: 8.0,
+        }],
+    }
+}
+
+fn chase_spec(table_bytes: u64, lookups: u64) -> Spec {
+    Spec {
+        name: "engine-chase".into(),
+        suite: Suite::Ecp,
+        class: BoundClass::Latency,
+        threads: 4,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "chase",
+            pattern: Pattern::RandomLookup {
+                table_bytes,
+                lookups,
+                chase: true,
+                seed: 11,
+            },
+            mix: InstrMix::new().with(InstrClass::Load, 2.0).with(InstrClass::AddrGen, 1.0),
+            ilp: 2.0,
+        }],
+    }
+}
+
+/// Every generator archetype in one workload: stream, strided, random
+/// lookup, stencil, blocked GEMM, SpMV, butterfly — the engine must be
+/// identical across phase switches too.
+fn mixed_spec() -> Spec {
+    Spec {
+        name: "engine-mixed".into(),
+        suite: Suite::Ecp,
+        class: BoundClass::Mixed,
+        threads: 8,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![
+            Phase {
+                label: "stream",
+                pattern: Pattern::Stream {
+                    bytes: 512 * KIB,
+                    passes: 2,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: mix_bw(),
+                ilp: 8.0,
+            },
+            Phase {
+                label: "strided",
+                pattern: Pattern::Strided {
+                    bytes: 512 * KIB,
+                    stride_chunks: 3,
+                    passes: 2,
+                },
+                mix: InstrMix::new().with(InstrClass::Load, 1.0),
+                ilp: 4.0,
+            },
+            Phase {
+                label: "lookup",
+                pattern: Pattern::RandomLookup {
+                    table_bytes: 2 * MIB,
+                    lookups: 8_000,
+                    chase: false,
+                    seed: 3,
+                },
+                mix: InstrMix::new().with(InstrClass::VecGather, 1.0).with(InstrClass::Load, 1.0),
+                ilp: 4.0,
+            },
+            Phase {
+                label: "stencil",
+                pattern: Pattern::Stencil3d {
+                    nx: 32,
+                    ny: 16,
+                    nz: 10,
+                    elem_bytes: 8,
+                    sweeps: 1,
+                },
+                mix: mix_bw(),
+                ilp: 6.0,
+            },
+            Phase {
+                label: "gemm",
+                pattern: Pattern::BlockedGemm {
+                    n: 96,
+                    block: 32,
+                    elem_bytes: 8,
+                },
+                mix: InstrMix::new().with(InstrClass::VecFma, 16.0).with(InstrClass::Load, 2.0),
+                ilp: 8.0,
+            },
+            Phase {
+                label: "spmv",
+                pattern: Pattern::CsrSpmv {
+                    rows: 400,
+                    nnz_per_row: 16,
+                    elem_bytes: 8,
+                    passes: 2,
+                    col_spread_bytes: 1 << 16,
+                    seed: 7,
+                },
+                mix: InstrMix::new().with(InstrClass::FpFma, 2.0).with(InstrClass::Load, 2.0),
+                ilp: 2.0,
+            },
+            Phase {
+                label: "fft",
+                pattern: Pattern::Butterfly { bytes: 256 * KIB, stages: 4 },
+                mix: mix_bw(),
+                ilp: 4.0,
+            },
+        ],
+    }
+}
+
+/// Run both engines and require bit-identical cycles and counters.
+fn assert_engines_identical(spec: &Spec, cfg: &MachineConfig, threads: usize) {
+    let (ref_cycles, ref_stats) = ref_simulate(spec, cfg, threads);
+    let r = cachesim::simulate(spec, cfg, threads);
+    assert_eq!(
+        ref_cycles.to_bits(),
+        r.cycles.to_bits(),
+        "cycles diverged on {} x{threads} ({} vs {})",
+        cfg.name,
+        ref_cycles,
+        r.cycles
+    );
+    // SimStats carries only integer counters (plus the per-level vector),
+    // so Debug equality is exact field-for-field equality
+    assert_eq!(
+        format!("{ref_stats:?}"),
+        format!("{:?}", r.stats),
+        "counters diverged on {} x{threads}",
+        cfg.name
+    );
+}
+
+fn two_and_three_level_machines() -> Vec<MachineConfig> {
+    vec![
+        configs::a64fx_s(),   // 2-level, 256 B lines
+        configs::larc_c(),    // 2-level, 256 MiB LLC
+        configs::milan_x(),   // 3-level, private L2, 64 B lines
+        configs::larc_c_3d(), // 3-level, DRRIP stacked slab
+    ]
+}
+
+#[test]
+fn engines_bit_identical_on_streams() {
+    for cfg in two_and_three_level_machines() {
+        for threads in [1usize, 4, 16] {
+            assert_engines_identical(&stream_spec(2 * MIB, 2), &cfg, threads);
+        }
+    }
+}
+
+#[test]
+fn engines_bit_identical_on_dram_spilling_streams() {
+    for cfg in [configs::a64fx_s(), configs::milan_x()] {
+        assert_engines_identical(&stream_spec(12 * MIB, 1), &cfg, 4);
+    }
+}
+
+#[test]
+fn engines_bit_identical_on_pointer_chase() {
+    for cfg in two_and_three_level_machines() {
+        for threads in [1usize, 4] {
+            assert_engines_identical(&chase_spec(8 * MIB, 20_000), &cfg, threads);
+        }
+    }
+}
+
+#[test]
+fn engines_bit_identical_on_mixed_multi_phase() {
+    for cfg in two_and_three_level_machines() {
+        for threads in [1usize, 4, 16] {
+            assert_engines_identical(&mixed_spec(), &cfg, threads);
+        }
+    }
+}
+
+#[test]
+fn engines_bit_identical_on_write_heavy_shared() {
+    // all-write single stream over a small buffer: exercises the
+    // MESI-lite store-invalidate, inclusion, and writeback paths
+    let mut spec = stream_spec(256 * KIB, 4);
+    spec.phases[0].pattern = Pattern::Stream {
+        bytes: 256 * KIB,
+        passes: 4,
+        streams: 1,
+        write_fraction: 1.0,
+    };
+    for cfg in two_and_three_level_machines() {
+        assert_engines_identical(&spec, &cfg, 8);
+    }
+}
+
+// ------------------------------------------------ cache-level golden gate
+
+/// Drive the SoA cache and the AoS reference with one random op trace
+/// (accesses, fused access+fill, invalidations, writeback touches,
+/// sharer ops) and require identical observables — per policy.
+#[test]
+fn soa_cache_matches_aos_reference_on_random_op_traces() {
+    for policy in [
+        ReplacementPolicy::Lru,
+        ReplacementPolicy::Random,
+        ReplacementPolicy::Drrip,
+    ] {
+        check(&format!("soa == aos ({policy:?})"), 12, |rng: &mut Rng| {
+            let mut soa = Cache::with_policy(16 * 1024, 4, 64, policy);
+            let mut aos = RefCache::with_policy(16 * 1024, 4, 64, policy);
+            for step in 0..4000 {
+                let addr = rng.below(1 << 16);
+                match rng.below(10) {
+                    0 => {
+                        let (p1, d1) = soa.invalidate(addr);
+                        let (p2, d2) = aos.invalidate(addr);
+                        if (p1, d1) != (p2, d2) {
+                            return Err(format!("invalidate diverged at step {step}"));
+                        }
+                    }
+                    1 => {
+                        if soa.writeback_touch(addr) != aos.writeback_touch(addr) {
+                            return Err(format!("writeback_touch diverged at step {step}"));
+                        }
+                    }
+                    2 => {
+                        let core = (addr % 7) as usize;
+                        soa.set_sharer(addr, core);
+                        aos.set_sharer(addr, core);
+                        if soa.sharers(addr) != aos.sharers(addr) {
+                            return Err(format!("sharers diverged at step {step}"));
+                        }
+                    }
+                    _ => {
+                        let write = rng.below(3) == 0;
+                        let (o1, e1) = soa.access_or_fill(addr, write);
+                        let (o2, e2) = aos.access_or_fill(addr, write);
+                        if o1 != o2 {
+                            return Err(format!("outcome diverged at step {step} ({addr:#x})"));
+                        }
+                        match (e1, e2) {
+                            (None, None) => {}
+                            (Some(a), Some(b))
+                                if a.addr == b.addr
+                                    && a.dirty == b.dirty
+                                    && a.sharers == b.sharers => {}
+                            other => {
+                                return Err(format!("evictions diverged at step {step}: {other:?}"))
+                            }
+                        }
+                    }
+                }
+            }
+            if (soa.hits, soa.misses, soa.writebacks) != (aos.hits, aos.misses, aos.writebacks) {
+                return Err(format!(
+                    "counters diverged: soa {}/{}/{} aos {}/{}/{}",
+                    soa.hits, soa.misses, soa.writebacks, aos.hits, aos.misses, aos.writebacks
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -238,8 +238,9 @@ fn prop_single_shared_level_hierarchy_matches_bare_cache() {
             if bare.access(addr, write) == AccessOutcome::Miss {
                 bare.fill(addr, write);
             }
-            if h.access_l0(0, addr, write) == AccessOutcome::Miss {
-                h.fetch(0, addr, write, 0.0, &mut dram, &mut stats);
+            let r = h.l0_line_ref(addr);
+            if h.access_l0_at(0, r, write) == AccessOutcome::Miss {
+                h.fetch(0, addr, r, write, 0.0, &mut dram, &mut stats);
             }
         }
         h.collect_stats(&mut stats);
@@ -269,8 +270,9 @@ fn milan_pair_l3_misses(trace: impl Iterator<Item = (u64, bool)>) -> (u64, u64) 
     let mut stats = SimStats::default();
     for (addr, write) in trace {
         for (h, dram) in machines.iter_mut() {
-            if h.access_l0(0, addr, write) == AccessOutcome::Miss {
-                h.fetch(0, addr, write, 0.0, dram, &mut stats);
+            let r = h.l0_line_ref(addr);
+            if h.access_l0_at(0, r, write) == AccessOutcome::Miss {
+                h.fetch(0, addr, r, write, 0.0, dram, &mut stats);
             }
         }
     }

@@ -1,0 +1,185 @@
+//! Store-key stability gate for the engine overhaul.
+//!
+//! [`JobKey`]s are FNV-1a hashes over `v{SCHEMA_VERSION};...` canonical
+//! strings built from the `Debug` form of `Spec` and `MachineConfig`.
+//! The hot-path refactor (SoA cache, batched generators, LineRef
+//! threading) changes **no simulated semantics**, so it must not perturb
+//! keys: no `SCHEMA_VERSION` bump, no Debug-format drift — otherwise
+//! every `--resume` cache and every store entry in the wild silently
+//! invalidates.
+//!
+//! The pins below freeze (a) the schema version, (b) the exact Debug
+//! strings of a representative spec and machine config (the canonical
+//! string's moving parts), and (c) the resulting key hex digits,
+//! cross-checked against an in-test reimplementation of the FNV-1a
+//! canonical hash.  Any future change that knowingly alters simulation
+//! semantics should bump `SCHEMA_VERSION` and update these constants in
+//! the same commit — this test makes that an explicit decision instead
+//! of an accident.
+
+use larc::cachesim::configs::{CacheParams, LevelConfig, MachineConfig, Scope};
+use larc::cachesim::ReplacementPolicy;
+use larc::coordinator::campaign::Job;
+use larc::coordinator::store::{job_key, JobKey, SCHEMA_VERSION};
+use larc::isa::{InstrClass, InstrMix};
+use larc::mca::PortArch;
+use larc::trace::patterns::Pattern;
+use larc::trace::{BoundClass, Phase, Spec, Suite};
+
+/// The store schema this engine generation writes.  Bumping it
+/// invalidates every existing store entry — the engine overhaul is
+/// bit-identical and must NOT do that.
+const PINNED_SCHEMA: u32 = 2;
+
+/// Frozen `Debug` form of [`pin_spec`].
+const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latency, threads: 2, \
+     max_threads: 4, ranks: 1, phases: [Phase { label: \"p0\", pattern: Strided { bytes: 4096, \
+     stride_chunks: 2, passes: 1 }, mix: InstrMix { counts: [0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, \
+     0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0] }, ilp: 1.0 }] }";
+
+/// Frozen `Debug` form of [`pin_config`].
+const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, freq_ghz: 2.0, \
+     levels: [LevelConfig { params: CacheParams { size: 4096, ways: 2, line_bytes: 64, \
+     latency: 4.0, banks: 1, bank_bytes_per_cycle: 16.0 }, scope: Private, inclusive: false, \
+     policy: Lru }], dram_channels: 1, dram_bw_gbs: 64.0, dram_latency_cycles: 100.0, \
+     rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, adjacent_prefetch: false, \
+     port_arch: A64fxLike }";
+
+/// Frozen key of the pinned CacheSim job (pre-refactor value).
+const PINNED_SIM_KEY: &str = "969fba0d3e439a58";
+/// Frozen key of the pinned Mca job (pre-refactor value).
+const PINNED_MCA_KEY: &str = "720ce2ae2601aae6";
+
+fn pin_spec() -> Spec {
+    Spec {
+        name: "pin".into(),
+        suite: Suite::Ecp,
+        class: BoundClass::Latency,
+        threads: 2,
+        max_threads: 4,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "p0",
+            pattern: Pattern::Strided {
+                bytes: 4096,
+                stride_chunks: 2,
+                passes: 1,
+            },
+            mix: InstrMix::new().with(InstrClass::Load, 2.0),
+            ilp: 1.0,
+        }],
+    }
+}
+
+fn pin_config() -> MachineConfig {
+    MachineConfig {
+        name: "pinmachine".into(),
+        cores: 2,
+        freq_ghz: 2.0,
+        levels: vec![LevelConfig {
+            params: CacheParams {
+                size: 4096,
+                ways: 2,
+                line_bytes: 64,
+                latency: 4.0,
+                banks: 1,
+                bank_bytes_per_cycle: 16.0,
+            },
+            scope: Scope::Private,
+            inclusive: false,
+            policy: ReplacementPolicy::Lru,
+        }],
+        dram_channels: 1,
+        dram_bw_gbs: 64.0,
+        dram_latency_cycles: 100.0,
+        rob_entries: 32,
+        mshrs: 4,
+        l1_bytes_per_cycle: 16.0,
+        adjacent_prefetch: false,
+        port_arch: PortArch::A64fxLike,
+    }
+}
+
+/// In-test reimplementation of the store's canonical FNV-1a hash, so the
+/// pinned hex values are cross-checked against the algorithm too.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[test]
+fn schema_version_is_not_spuriously_bumped() {
+    assert_eq!(
+        SCHEMA_VERSION, PINNED_SCHEMA,
+        "SCHEMA_VERSION changed: if simulation semantics really changed, \
+         update the pinned keys in this test in the same commit"
+    );
+}
+
+#[test]
+fn spec_and_config_debug_forms_are_frozen() {
+    // the canonical job string is built from these Debug forms; any
+    // drift (field added/renamed/reordered, formatting change) silently
+    // invalidates every store entry
+    assert_eq!(format!("{:?}", pin_spec()), PINNED_SPEC_DEBUG);
+    assert_eq!(format!("{:?}", pin_config()), PINNED_CFG_DEBUG);
+}
+
+#[test]
+fn cachesim_job_key_is_frozen() {
+    let job = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+    };
+    let key = job_key(&job);
+    assert_eq!(
+        key.hex(),
+        PINNED_SIM_KEY,
+        "CacheSim JobKey drifted — resume caches from previous builds would go cold"
+    );
+    // cross-check the canonical construction end-to-end
+    let canonical = format!("v{PINNED_SCHEMA};sim;threads=3;{PINNED_SPEC_DEBUG};{PINNED_CFG_DEBUG}");
+    assert_eq!(key, JobKey(fnv1a(canonical.as_bytes())));
+}
+
+#[test]
+fn mca_job_key_is_frozen() {
+    let job = Job::Mca {
+        spec: pin_spec(),
+        arch: PortArch::A64fxLike,
+        freq_ghz: 2.0,
+        seed: 7,
+    };
+    let key = job_key(&job);
+    assert_eq!(
+        key.hex(),
+        PINNED_MCA_KEY,
+        "Mca JobKey drifted — resume caches from previous builds would go cold"
+    );
+    let canonical =
+        format!("v{PINNED_SCHEMA};mca;arch=A64fxLike;freq=2.0;seed=7;{PINNED_SPEC_DEBUG}");
+    assert_eq!(key, JobKey(fnv1a(canonical.as_bytes())));
+}
+
+#[test]
+fn real_campaign_jobs_key_stably_across_processes() {
+    // keys must depend only on job content: rebuilt values hash alike,
+    // and the hex form round-trips through the store's file-name parser
+    let job = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+    };
+    let again = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+    };
+    assert_eq!(job_key(&job), job_key(&again));
+    assert_eq!(JobKey::from_hex(&job_key(&job).hex()), Some(job_key(&job)));
+}
