@@ -11,7 +11,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::cachesim::{self, configs, MachineConfig};
+use crate::cachesim::{self, configs, MachineConfig, Prefetcher};
 use crate::isa::{InstrClass, InstrMix};
 use crate::trace::patterns::Pattern;
 use crate::trace::{BoundClass, Phase, Spec, Suite};
@@ -21,9 +21,13 @@ use crate::util::units::MIB;
 
 /// One simulation benchmark case.
 pub struct BenchCase {
+    /// Case name (stable: baseline matching is by name).
     pub name: &'static str,
+    /// Machine config the spec runs on.
     pub cfg: MachineConfig,
+    /// Workload driven through the simulator.
     pub spec: Spec,
+    /// Thread count passed to `simulate`.
     pub threads: usize,
 }
 
@@ -114,6 +118,33 @@ pub fn cachesim_cases() -> Vec<BenchCase> {
             cfg: configs::milan_x(),
             spec: stream(32 * MIB, 2, "stream-3level", 8),
             threads: 8,
+        },
+        // prefetch-on twins: keep the train/issue/claim branches of the
+        // hot path under the same regression gate as the demand path
+        BenchCase {
+            name: "stream_12t_dram_bound_stream_pf",
+            cfg: configs::a64fx_s().with_prefetch(Prefetcher::Stream { streams: 8, degree: 4 }),
+            spec: stream(32 * MIB, 2, "stream-dram-pf", 12),
+            threads: 12,
+        },
+        BenchCase {
+            name: "random_lookup_12t_stride_pf",
+            cfg: configs::a64fx_s().with_prefetch(Prefetcher::Stride {
+                table_entries: 16,
+                degree: 2,
+                distance: 4,
+            }),
+            spec: spec(
+                Pattern::RandomLookup {
+                    table_bytes: 16 * MIB,
+                    lookups: 400_000,
+                    chase: false,
+                    seed: 1,
+                },
+                "random-pf",
+                12,
+            ),
+            threads: 12,
         },
     ]
 }

@@ -23,7 +23,9 @@
 /// Result of a lookup/access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessOutcome {
+    /// The line was resident.
     Hit,
+    /// The line was absent (callers decide fill policy).
     Miss,
 }
 
@@ -54,11 +56,17 @@ const PSEL_MAX: i16 = 512;
 /// A line evicted by a fill.
 #[derive(Clone, Copy, Debug)]
 pub struct Evicted {
+    /// Line address of the victim.
     pub addr: u64,
+    /// Whether the victim was dirty (the caller owes a writeback).
     pub dirty: bool,
     /// Sharer mask at eviction time (directory level only; the hierarchy
     /// back-invalidates these cores' private copies).
     pub sharers: u64,
+    /// Whether the victim was a prefetched line that no demand access
+    /// ever claimed — the hierarchy counts these as
+    /// `prefetch_pollution`.  Always false when no prefetcher runs.
+    pub pf_unused: bool,
 }
 
 /// Sentinel stored in `tags` for invalid ways, so stale tags of
@@ -71,6 +79,16 @@ const INVALID_TAG: u64 = u64::MAX;
 /// `flags` bits.
 const VALID: u8 = 1;
 const DIRTY: u8 = 2;
+/// Set by [`Cache::fill_prefetched_at`]: the line was installed by a
+/// prefetch and its completion cycle is tracked in `pf_ready`.  Cleared
+/// once a demand hit observes the fill complete (so the in-flight wait
+/// applies to *every* early demand, not just the first) or when the way
+/// is re-filled/invalidated.
+const PREFETCHED: u8 = 4;
+/// Set by the first demand hit on a `PREFETCHED` line
+/// ([`Cache::claim_prefetch_at`]) — distinguishes "useful" (claimed)
+/// prefetches from pollution when the line leaves the cache.
+const CLAIMED: u8 = 8;
 
 /// Memo value meaning "no previous hit".
 const NO_MEMO: usize = usize::MAX;
@@ -81,7 +99,9 @@ const NO_MEMO: usize = usize::MAX;
 /// fill / sharer operations of one hierarchy-level step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LineRef {
+    /// Set index within the cache.
     pub set: usize,
+    /// Full line number (`addr >> line_shift`).
     pub tag: u64,
 }
 
@@ -105,6 +125,11 @@ pub struct Cache {
     /// Per-way sharer masks — allocated lazily on the first
     /// [`Cache::set_sharer`], since only the directory level uses them.
     sharers: Vec<u64>,
+    /// Per-way prefetch-completion cycles — allocated lazily on the
+    /// first [`Cache::fill_prefetched_at`], so levels without a
+    /// prefetcher never pay for the array.  Only meaningful while the
+    /// way's `PREFETCHED` flag is set.
+    pf_ready: Vec<f64>,
     /// Index of the last way that hit: sequential walks re-touch the same
     /// line many times and skip the set scan entirely.
     last_hit: usize,
@@ -114,8 +139,11 @@ pub struct Cache {
     rng: u64,
     /// DRRIP set-dueling selector (`> 0` ⇒ followers insert BRRIP-style).
     psel: i16,
+    /// Demand hits recorded by the access methods.
     pub hits: u64,
+    /// Demand misses recorded by the access methods.
     pub misses: u64,
+    /// Dirty evictions (each owed the next level a writeback).
     pub writebacks: u64,
 }
 
@@ -144,6 +172,7 @@ impl Cache {
             rrpv: vec![0; n],
             flags: vec![0; n],
             sharers: Vec::new(),
+            pf_ready: Vec::new(),
             last_hit: NO_MEMO,
             tick: 0,
             policy,
@@ -156,11 +185,13 @@ impl Cache {
     }
 
     #[inline]
+    /// Line size in bytes.
     pub fn line_bytes(&self) -> u64 {
         1 << self.line_shift
     }
 
     #[inline]
+    /// `addr` rounded down to its line base.
     pub fn line_addr(&self, addr: u64) -> u64 {
         addr >> self.line_shift << self.line_shift
     }
@@ -294,19 +325,7 @@ impl Cache {
     /// Evict (if needed) and write the new line; the line must be absent.
     fn install(&mut self, r: LineRef, write: bool) -> Option<Evicted> {
         let victim = r.set * self.ways + self.choose_victim(r.set);
-        let evicted = if self.flags[victim] & VALID != 0 {
-            let dirty = self.flags[victim] & DIRTY != 0;
-            if dirty {
-                self.writebacks += 1;
-            }
-            Some(Evicted {
-                addr: self.tags[victim] << self.line_shift,
-                dirty,
-                sharers: self.sharers.get(victim).copied().unwrap_or(0),
-            })
-        } else {
-            None
-        };
+        let evicted = self.take_victim(victim);
 
         self.tags[victim] = r.tag;
         self.lru[victim] = self.tick;
@@ -317,6 +336,107 @@ impl Cache {
         }
         self.last_hit = victim;
         evicted
+    }
+
+    /// Snapshot way `victim` as an [`Evicted`] record (counting the
+    /// writeback if dirty) without modifying it; `None` if invalid.
+    fn take_victim(&mut self, victim: usize) -> Option<Evicted> {
+        if self.flags[victim] & VALID == 0 {
+            return None;
+        }
+        let dirty = self.flags[victim] & DIRTY != 0;
+        if dirty {
+            self.writebacks += 1;
+        }
+        Some(Evicted {
+            addr: self.tags[victim] << self.line_shift,
+            dirty,
+            sharers: self.sharers.get(victim).copied().unwrap_or(0),
+            pf_unused: self.flags[victim] & (PREFETCHED | CLAIMED) == PREFETCHED,
+        })
+    }
+
+    /// Install a *prefetched* line with demoted replacement priority and
+    /// the `PREFETCHED` bit set; `ready` is the cycle the fill completes
+    /// (a demand hit before then is counted `prefetch_late`).  Returns
+    /// the victim like [`Cache::fill_at`].  No demand accounting runs,
+    /// and a line that is already resident is left untouched (callers
+    /// probe before issuing, so this is a defensive no-op).
+    ///
+    /// Demotion per policy: LRU inserts at the midpoint of the set's
+    /// current recency range (below MRU, but not the instant victim —
+    /// fully-demoted insertion would see every prefetch evicted before
+    /// use under any capacity pressure); DRRIP inserts at the SRRIP
+    /// long-re-reference point (`RRPV_MAX - 1`) *without* voting in the
+    /// set-dueling counter, so prefetch traffic cannot flip the demand
+    /// insertion policy; random replacement needs no demotion.
+    pub fn fill_prefetched_at(&mut self, r: LineRef, ready: f64) -> Option<Evicted> {
+        self.tick += 1;
+        if self.find_idx_mut(r).is_some() {
+            return None;
+        }
+        let demoted = self.demoted_lru(r.set);
+        let victim = r.set * self.ways + self.choose_victim(r.set);
+        let evicted = self.take_victim(victim);
+
+        self.tags[victim] = r.tag;
+        self.lru[victim] = demoted;
+        self.rrpv[victim] = RRPV_MAX - 1;
+        self.flags[victim] = VALID | PREFETCHED;
+        if let Some(s) = self.sharers.get_mut(victim) {
+            *s = 0;
+        }
+        if self.pf_ready.is_empty() {
+            self.pf_ready = vec![0.0; self.tags.len()];
+        }
+        self.pf_ready[victim] = ready;
+        self.last_hit = victim;
+        evicted
+    }
+
+    /// LRU insertion tick for a demoted (prefetch) fill: the midpoint of
+    /// the set's valid recency range, or the current tick in an empty
+    /// set.
+    fn demoted_lru(&self, set: usize) -> u64 {
+        let base = set * self.ways;
+        let mut lo = u64::MAX;
+        let mut hi = 0;
+        for i in base..base + self.ways {
+            if self.flags[i] & VALID != 0 {
+                lo = lo.min(self.lru[i]);
+                hi = hi.max(self.lru[i]);
+            }
+        }
+        if lo > hi {
+            self.tick
+        } else {
+            lo + (hi - lo) / 2
+        }
+    }
+
+    /// Demand hit (completing at `done`) on a line whose prefetch fill
+    /// is still tracked: returns `(adjusted_done, first_claim, waited)`.
+    /// *Every* demand arriving before the fill's ready cycle waits on it
+    /// (`waited`, with `adjusted_done = ready`) — not just the first
+    /// claimant; `first_claim` is true exactly once per fill, which is
+    /// what the hierarchy counts as `prefetch_useful` (and, if it also
+    /// waited, `prefetch_late`).  Once a demand observes the fill
+    /// complete the tracking bit clears and later hits return `None`.
+    pub fn claim_prefetch_at(&mut self, r: LineRef, done: f64) -> Option<(f64, bool, bool)> {
+        let i = self.find_idx(r)?;
+        if self.flags[i] & PREFETCHED == 0 {
+            return None;
+        }
+        let first = self.flags[i] & CLAIMED == 0;
+        self.flags[i] |= CLAIMED;
+        let ready = self.pf_ready.get(i).copied().unwrap_or(0.0);
+        if ready > done {
+            Some((ready, first, true))
+        } else {
+            // fill has landed: stop tracking, the line is a plain line now
+            self.flags[i] &= !PREFETCHED;
+            Some((done, first, false))
+        }
     }
 
     /// Way index of the victim within `set`: an invalid way if there is
@@ -405,20 +525,23 @@ impl Cache {
         }
     }
 
-    /// Invalidate a line (coherence back-invalidation). Returns whether it
-    /// was present and dirty.
-    pub fn invalidate(&mut self, addr: u64) -> (bool, bool) {
+    /// Invalidate a line (coherence back-invalidation). Returns whether
+    /// it was present, dirty, and an unclaimed prefetch (the hierarchy
+    /// counts the latter as `prefetch_pollution` — wasted whichever way
+    /// the line left the cache).
+    pub fn invalidate(&mut self, addr: u64) -> (bool, bool, bool) {
         match self.find_idx(self.line_ref(addr)) {
             Some(i) => {
                 let dirty = self.flags[i] & DIRTY != 0;
+                let pf_unused = self.flags[i] & (PREFETCHED | CLAIMED) == PREFETCHED;
                 self.flags[i] = 0;
                 self.tags[i] = INVALID_TAG;
                 if let Some(s) = self.sharers.get_mut(i) {
                     *s = 0;
                 }
-                (true, dirty)
+                (true, dirty, pf_unused)
             }
-            None => (false, false),
+            None => (false, false, false),
         }
     }
 
@@ -434,6 +557,7 @@ impl Cache {
         }
     }
 
+    /// Remove `core` from a directory line's sharer mask (no-op when absent).
     pub fn clear_sharer(&mut self, addr: u64, core: usize) {
         if self.sharers.is_empty() {
             return;
@@ -443,6 +567,7 @@ impl Cache {
         }
     }
 
+    /// Sharer mask of `addr` (0 when absent or never shared).
     pub fn sharers(&self, addr: u64) -> u64 {
         self.sharers_at(self.line_ref(addr))
     }
@@ -455,6 +580,7 @@ impl Cache {
         }
     }
 
+    /// Demand miss rate over all accesses so far (0 when idle).
     pub fn miss_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -464,6 +590,7 @@ impl Cache {
         }
     }
 
+    /// Zero the hit/miss/writeback counters (contents are kept).
     pub fn reset_stats(&mut self) {
         self.hits = 0;
         self.misses = 0;
@@ -515,8 +642,8 @@ mod tests {
     fn invalidate_removes_line() {
         let mut c = Cache::new(1024, 4, 64);
         c.fill(0x80, true);
-        let (present, dirty) = c.invalidate(0x80);
-        assert!(present && dirty);
+        let (present, dirty, pf_unused) = c.invalidate(0x80);
+        assert!(present && dirty && !pf_unused);
         assert_eq!(c.access(0x80, false), AccessOutcome::Miss);
     }
 
@@ -723,6 +850,87 @@ mod tests {
         // and a different line mapping to the memo slot's set is unaffected
         c.fill(0x2100, true);
         assert_eq!(c.access(0x2100, false), AccessOutcome::Hit);
+    }
+
+    #[test]
+    fn prefetched_fill_claim_and_pollution_bits() {
+        let mut c = Cache::new(1024, 4, 64);
+        assert!(c.fill_prefetched_at(c.line_ref(0x100), 50.0).is_none());
+        // resident: demand access hits; a claim after the fill landed is
+        // first-and-final (tracking stops, later hits see a plain line)
+        assert_eq!(c.access(0x100, false), AccessOutcome::Hit);
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x100), 60.0), Some((60.0, true, false)));
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x100), 70.0), None);
+
+        // an in-flight fill delays EVERY early demand, but only the
+        // first claim is "useful"; tracking ends once a demand sees the
+        // fill complete
+        c.fill_prefetched_at(c.line_ref(0x1000), 100.0);
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x1000), 10.0), Some((100.0, true, true)));
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x1000), 20.0), Some((100.0, false, true)));
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x1000), 120.0), Some((120.0, false, false)));
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x1000), 130.0), None);
+        // a claimed line evicts without the pollution marker
+        let mut a = 0x100u64;
+        let ev = loop {
+            a += 1 << 12; // same set, new tags, until 0x100 is the victim
+            if let Some(ev) = c.fill(a, false) {
+                if ev.addr == 0x100 {
+                    break ev;
+                }
+            }
+        };
+        assert!(!ev.pf_unused);
+
+        // an unclaimed prefetched line evicted by a demand fill reports
+        // pf_unused (the hierarchy counts it as prefetch_pollution)
+        let mut c2 = Cache::new(128, 1, 64); // 2 sets x 1 way
+        c2.fill_prefetched_at(c2.line_ref(0), 1.0);
+        let ev = c2.fill(128, false).unwrap(); // same set (line 2)
+        assert_eq!(ev.addr, 0);
+        assert!(ev.pf_unused);
+
+        // invalidating an unclaimed prefetch reports the flag too (the
+        // hierarchy counts coherence/inclusion wipes as pollution)
+        let mut c3 = Cache::new(1024, 4, 64);
+        c3.fill_prefetched_at(c3.line_ref(0x200), 2.0);
+        assert_eq!(c3.invalidate(0x200), (true, false, true));
+    }
+
+    #[test]
+    fn prefetch_fills_insert_demoted() {
+        let mut c = Cache::new(128, 2, 64); // 1 set x 2 ways
+        c.fill(0, false);
+        c.fill(64, false);
+        c.access(0, false); // line 0 is MRU, line 64 is LRU
+        // the prefetch evicts the LRU line and lands mid-stack, so the
+        // next demand fill evicts the unclaimed prefetch — not line 0
+        c.fill_prefetched_at(c.line_ref(128), 10.0);
+        assert!(!c.probe(64));
+        let ev = c.fill(192, false).unwrap();
+        assert_eq!(ev.addr, 128);
+        assert!(ev.pf_unused);
+        assert!(c.probe(0));
+    }
+
+    #[test]
+    fn prefetch_fill_on_resident_line_is_a_no_op() {
+        let mut c = Cache::new(1024, 4, 64);
+        c.fill(0x40, true);
+        assert!(c.fill_prefetched_at(c.line_ref(0x40), 9.0).is_none());
+        // the resident line keeps its state: still dirty, never claimable
+        assert_eq!(c.claim_prefetch_at(c.line_ref(0x40), 1.0), None);
+        let mut a = 0x40u64;
+        let ev = loop {
+            a += 1 << 12;
+            if let Some(ev) = c.fill(a, false) {
+                if ev.addr == 0x40 {
+                    break ev;
+                }
+            }
+        };
+        assert!(ev.dirty);
+        assert!(!ev.pf_unused);
     }
 
     #[test]

@@ -52,13 +52,17 @@ use crate::trace::{Access, Spec, SpecStream, BATCH};
 /// Result of one CMG simulation.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Workload name (`Spec::name`).
     pub workload: String,
+    /// Machine config name.
     pub config: String,
+    /// Threads actually simulated (clamped to the config's cores).
     pub threads: usize,
     /// Total simulated cycles (slowest thread).
     pub cycles: f64,
     /// Wall-clock seconds at the config's frequency.
     pub runtime_s: f64,
+    /// Aggregated counters of the run.
     pub stats: SimStats,
 }
 
@@ -214,6 +218,9 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
     let l1_line = hier.l0_line_bytes();
     let l1_latency = hier.l0_latency();
     let l1_issue = |bytes: u64| bytes as f64 / cfg.l1_bytes_per_cycle;
+    // checked once: with no level-0 prefetcher the loop below is exactly
+    // the pre-prefetch engine (pinned by tests/engine_equivalence.rs)
+    let l0_pf = hier.has_l0_prefetcher();
 
     'sched: while let Some(Reverse((_, t))) = heap.pop() {
         // Causally exact, heap-amortized scheduling: keep processing the
@@ -280,7 +287,14 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
                 match hier.access_l0_at(t, l0ref, access.write) {
                     AccessOutcome::Hit => {
                         stats.l1_hits += 1;
-                        this_done = issue + l1_latency;
+                        let hit_done = issue + l1_latency;
+                        this_done = if l0_pf {
+                            // a hit on a prefetched line claims it (and
+                            // may wait on the still-in-flight fill)
+                            hier.claim_l0_prefetch(t, l0ref, hit_done, &mut stats)
+                        } else {
+                            hit_done
+                        };
                     }
                     AccessOutcome::Miss => {
                         stats.l1_misses += 1;
@@ -304,6 +318,11 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
                             }
                         }
                     }
+                }
+                // the L1 prefetcher trains on every demand line touch
+                // (hit or miss), after the demand access it rides on
+                if l0_pf {
+                    hier.train_l0_prefetch(t, line, issue, &mut dram, &mut stats);
                 }
                 completion = completion.max(this_done);
                 line += l1_line;
@@ -568,6 +587,42 @@ mod tests {
         }
         let r = simulate(&spec, &configs::a64fx_s(), 4);
         assert!(r.cycles > 0.0);
+    }
+
+    #[test]
+    fn default_configs_report_zero_prefetch_counters() {
+        let spec = stream_spec(4 * MIB, 2, light_mix(), 8.0);
+        let r = simulate(&spec, &configs::a64fx_s(), 4);
+        assert_eq!(r.stats.prefetch_issued, 0);
+        assert_eq!(r.stats.prefetch_useful, 0);
+        assert_eq!(r.stats.prefetch_late, 0);
+        assert_eq!(r.stats.prefetch_pollution, 0);
+    }
+
+    #[test]
+    fn stream_prefetch_hides_dram_latency_for_an_unsaturated_core() {
+        use crate::cachesim::prefetch::Prefetcher;
+        // one thread streaming from DRAM is latency-limited (12 MSHRs x
+        // 256 B / ~180 cyc is far below the HBM bandwidth), so an L2
+        // stream prefetcher that runs ahead must shorten the run
+        let spec = stream_spec(32 * MIB, 1, light_mix(), 8.0);
+        let base_cfg = configs::a64fx_s();
+        let pf_cfg = configs::a64fx_s().with_prefetch(Prefetcher::Stream {
+            streams: 8,
+            degree: 4,
+        });
+        let base = simulate(&spec, &base_cfg, 1);
+        let pf = simulate(&spec, &pf_cfg, 1);
+        assert!(pf.stats.prefetch_issued > 0);
+        assert!(pf.stats.prefetch_useful > 0);
+        assert!(pf.stats.prefetch_useful <= pf.stats.prefetch_issued);
+        assert!(pf.stats.prefetch_late <= pf.stats.prefetch_useful);
+        assert!(
+            pf.cycles < base.cycles,
+            "stream prefetch did not help: {} vs {}",
+            pf.cycles,
+            base.cycles
+        );
     }
 
     #[test]

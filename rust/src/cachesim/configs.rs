@@ -13,14 +13,18 @@
 //! it generically, so any level count works.
 
 use super::cache::ReplacementPolicy;
+use super::prefetch::Prefetcher;
 use crate::mca::port_model::PortArch;
 use crate::util::units::{GB, KIB, MIB};
 
 /// Parameters of one cache level.
 #[derive(Clone, Copy, Debug)]
 pub struct CacheParams {
+    /// Capacity in bytes.
     pub size: u64,
+    /// Associativity.
     pub ways: u32,
+    /// Line size in bytes (power of two).
     pub line_bytes: u32,
     /// Load-to-use latency in cycles.
     pub latency: f64,
@@ -46,7 +50,9 @@ impl CacheParams {
 /// whole CMG.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scope {
+    /// Replicated per core.
     Private,
+    /// One banked instance shared by the whole CMG.
     SharedBanked,
 }
 
@@ -54,13 +60,20 @@ pub enum Scope {
 /// list).
 #[derive(Clone, Copy, Debug)]
 pub struct LevelConfig {
+    /// Geometry, latency, and banking of the level.
     pub params: CacheParams,
+    /// Per-core private or CMG-shared (banked).
     pub scope: Scope,
     /// Inclusive of the private levels above it.  The *first* shared
     /// inclusive level hosts the MESI-lite coherence directory (sharer
     /// masks + back-invalidation on eviction).
     pub inclusive: bool,
+    /// Replacement policy dispatched in the level's caches.
     pub policy: ReplacementPolicy,
+    /// Hardware prefetcher trained on this level's demand-access stream
+    /// ([`Prefetcher::None`] everywhere by default — the named `_pf`
+    /// config twins and `larc run --prefetch` opt in).
+    pub prefetcher: Prefetcher,
 }
 
 /// A per-core private level (LRU, not a directory home).
@@ -70,6 +83,7 @@ fn private(params: CacheParams) -> LevelConfig {
         scope: Scope::Private,
         inclusive: false,
         policy: ReplacementPolicy::Lru,
+        prefetcher: Prefetcher::None,
     }
 }
 
@@ -81,20 +95,26 @@ fn shared_inclusive(params: CacheParams) -> LevelConfig {
         scope: Scope::SharedBanked,
         inclusive: true,
         policy: ReplacementPolicy::Lru,
+        prefetcher: Prefetcher::None,
     }
 }
 
 /// One simulated CMG / socket-slice.
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
+    /// Config name (CLI lookup key and report label).
     pub name: String,
+    /// Cores per CMG.
     pub cores: usize,
+    /// Core clock in GHz.
     pub freq_ghz: f64,
     /// Cache levels, L1 first, LLC last; DRAM sits behind the last level.
     pub levels: Vec<LevelConfig>,
     /// DRAM: channels and aggregate bandwidth.
     pub dram_channels: usize,
+    /// Aggregate DRAM bandwidth in GB/s.
     pub dram_bw_gbs: f64,
+    /// DRAM access latency in core cycles.
     pub dram_latency_cycles: f64,
     /// Out-of-order window (ROB entries).
     pub rob_entries: u32,
@@ -139,6 +159,50 @@ impl MachineConfig {
     pub fn llc(&self) -> &CacheParams {
         &self.levels.last().expect("at least one cache level").params
     }
+
+    /// Whether any level carries a hardware prefetcher.
+    pub fn has_prefetcher(&self) -> bool {
+        self.levels.iter().any(|l| !l.prefetcher.is_none())
+    }
+
+    /// Set `pf` as the prefetcher of **every** cache level (levels above
+    /// the coherence directory run it promote-only — see the hierarchy
+    /// docs) and tag the config name with the prefetcher's label.
+    /// `Prefetcher::None` strips all prefetchers *and* any prefetch name
+    /// tag, so a stripped config is indistinguishable — by name, Debug
+    /// form, and store key — from the plain baseline.  Used by
+    /// `larc run --prefetch` and the `fig-prefetch` sweep.
+    pub fn with_prefetch(mut self, pf: Prefetcher) -> Self {
+        for l in &mut self.levels {
+            l.prefetcher = pf;
+        }
+        // canonical naming: strip any previous prefetch tag (`+<tag>` or
+        // the `_pf` twin suffix) before applying the new one
+        let mut base = self.name.split('+').next().unwrap_or("").to_string();
+        if let Some(s) = base.strip_suffix("_pf") {
+            base = s.to_string();
+        }
+        self.name = if pf.is_none() { base } else { format!("{base}+{}", pf.tag()) };
+        self
+    }
+}
+
+/// The A64FX-like prefetcher default: stream prefetch at the L1
+/// (promote-only, degree 2) and at the L2 (degree 4, pulling from DRAM)
+/// — the configuration the paper's gem5 models inherit from the A64FX
+/// baseline.  Applied to any machine by the `_pf` config-name twins
+/// (`a64fx_s_pf`, `larc_c_pf`, ...); deeper levels are left alone.
+pub fn prefetched(mut c: MachineConfig) -> MachineConfig {
+    c.levels[0].prefetcher = Prefetcher::Stream { streams: 8, degree: 2 };
+    if c.levels.len() > 1 {
+        c.levels[1].prefetcher = Prefetcher::Stream { streams: 8, degree: 4 };
+    }
+    // idempotent naming: `--prefetch default` on an already-`_pf` config
+    // must not stack suffixes
+    if !c.name.ends_with("_pf") {
+        c.name = format!("{}_pf", c.name);
+    }
+    c
 }
 
 /// A64FX_S — the baseline simulated A64FX CMG (Table 2): 12 cores, 8 MiB
@@ -345,6 +409,7 @@ pub fn larc_c_variant(p: LarcParam) -> MachineConfig {
                 scope: Scope::SharedBanked,
                 inclusive: false,
                 policy: ReplacementPolicy::Drrip,
+                prefetcher: Prefetcher::None,
             });
         }
     }
@@ -365,8 +430,13 @@ pub fn table2_configs() -> Vec<MachineConfig> {
     vec![a64fx_s(), a64fx_32(), larc_c(), larc_a()]
 }
 
-/// Look up a config by name (CLI).
+/// Look up a config by name (CLI).  A `_pf` suffix on any known name
+/// returns the [`prefetched`] twin (A64FX-like stream prefetch at
+/// L1/L2), e.g. `a64fx_s_pf` or `larc_c_pf`.
 pub fn by_name(name: &str) -> Option<MachineConfig> {
+    if let Some(base) = name.strip_suffix("_pf") {
+        return by_name(base).map(prefetched);
+    }
     match name {
         "a64fx_s" => Some(a64fx_s()),
         "a64fx_32" => Some(a64fx_32()),
@@ -380,8 +450,21 @@ pub fn by_name(name: &str) -> Option<MachineConfig> {
     }
 }
 
-pub const CONFIG_NAMES: [&str; 8] = [
-    "a64fx_s", "a64fx_32", "larc_c", "larc_a", "larc_c_3d", "broadwell", "milan", "milan_x",
+/// All named configs (CLI listing): the eight machines plus the
+/// prefetch-enabled twins of the gem5 comparison set.
+pub const CONFIG_NAMES: [&str; 12] = [
+    "a64fx_s",
+    "a64fx_32",
+    "larc_c",
+    "larc_a",
+    "larc_c_3d",
+    "broadwell",
+    "milan",
+    "milan_x",
+    "a64fx_s_pf",
+    "a64fx_32_pf",
+    "larc_c_pf",
+    "larc_c_3d_pf",
 ];
 
 #[cfg(test)]
@@ -471,6 +554,56 @@ mod tests {
             assert_eq!(by_name(name).unwrap().name, name);
         }
         assert!(by_name("nope").is_none());
+        assert!(by_name("nope_pf").is_none());
+    }
+
+    #[test]
+    fn base_configs_carry_no_prefetcher() {
+        // the Prefetcher::None default is what the bit-identity gate in
+        // tests/engine_equivalence.rs pins — the base constructors must
+        // never silently grow a prefetcher
+        let base = [
+            "a64fx_s", "a64fx_32", "larc_c", "larc_a", "larc_c_3d", "broadwell", "milan",
+            "milan_x",
+        ];
+        for name in base {
+            let c = by_name(name).unwrap();
+            assert!(!c.has_prefetcher(), "{name} grew a default prefetcher");
+        }
+    }
+
+    #[test]
+    fn pf_twins_carry_the_a64fx_like_default() {
+        let c = by_name("a64fx_s_pf").unwrap();
+        assert_eq!(c.levels[0].prefetcher, Prefetcher::Stream { streams: 8, degree: 2 });
+        assert_eq!(c.levels[1].prefetcher, Prefetcher::Stream { streams: 8, degree: 4 });
+        assert!(c.has_prefetcher());
+        // the twin only changes prefetchers (and the name)
+        let base = a64fx_s();
+        assert_eq!(c.cores, base.cores);
+        assert_eq!(c.shared().size, base.shared().size);
+        // three-level twin leaves the slab alone
+        let c3 = by_name("larc_c_3d_pf").unwrap();
+        assert_eq!(c3.levels[2].prefetcher, Prefetcher::None);
+    }
+
+    #[test]
+    fn with_prefetch_sets_every_level_and_tags_the_name() {
+        let pf = Prefetcher::Stride { table_entries: 16, degree: 2, distance: 4 };
+        let c = milan_x().with_prefetch(pf);
+        assert!(c.levels.iter().all(|l| l.prefetcher == pf));
+        assert_eq!(c.name, "milan_x+stride2d4");
+        // stripping restores the exact baseline identity (name included,
+        // so the store key matches the plain config again) and tags
+        // never stack
+        let off = c.with_prefetch(Prefetcher::None);
+        assert!(!off.has_prefetcher());
+        assert_eq!(off.name, "milan_x");
+        assert_eq!(format!("{off:?}"), format!("{:?}", milan_x()));
+        let retag = by_name("a64fx_s_pf").unwrap().with_prefetch(pf);
+        assert_eq!(retag.name, "a64fx_s+stride2d4");
+        // and `prefetched` is name-idempotent
+        assert_eq!(prefetched(by_name("a64fx_s_pf").unwrap()).name, "a64fx_s_pf");
     }
 
     #[test]

@@ -18,7 +18,9 @@ pub struct Dram {
     pub latency: f64,
     /// Interleave granularity (bytes).
     interleave: u64,
+    /// Total bytes moved through the channels.
     pub bytes_transferred: u64,
+    /// Transfer count.
     pub accesses: u64,
 }
 
@@ -54,6 +56,7 @@ impl Dram {
         start + occupancy + self.latency
     }
 
+    /// Zero the counters and the channel next-free times.
     pub fn reset_stats(&mut self) {
         self.bytes_transferred = 0;
         self.accesses = 0;

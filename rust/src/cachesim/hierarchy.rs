@@ -27,6 +27,21 @@
 //! coherence actions, and a dirty writeback that finds its lower copy
 //! already evicted forwards the data down toward DRAM.
 //!
+//! ## Hardware prefetch
+//!
+//! A level whose config names a [`crate::cachesim::Prefetcher`] owns a
+//! [`PrefetchEngine`] trained on the demand stream arriving at that
+//! level (every level-0 touch for an L1 prefetcher, the upper level's
+//! miss stream otherwise).  Issued prefetches bill bank bandwidth like
+//! demand transfers, pull from the first lower level holding the line
+//! (or DRAM), and install with demoted priority plus a prefetched bit;
+//! the first demand hit claims the bit (`prefetch_useful`, waiting on a
+//! still-in-flight fill counts `prefetch_late`), and unclaimed evictions
+//! count `prefetch_pollution`.  Levels above the coherence directory
+//! promote only — see [`Hierarchy::has_l0_prefetcher`]'s family and
+//! `docs/ARCHITECTURE.md`.  With every level at `Prefetcher::None` (the
+//! default) this machinery is never entered.
+//!
 //! For the two-level machines (A64FX_S, LARC_C/A, Broadwell) this walk is
 //! operation-for-operation identical to the legacy hard-coded L1+L2
 //! pipeline — `tests/hierarchy_equivalence.rs` pins that with a verbatim
@@ -35,6 +50,7 @@
 use super::cache::{AccessOutcome, Cache, LineRef};
 use super::configs::{LevelConfig, MachineConfig, Scope};
 use super::dram::Dram;
+use super::prefetch::PrefetchEngine;
 use super::stats::{LevelStats, SimStats};
 
 /// Runtime state of one level.
@@ -50,6 +66,10 @@ struct Level {
     line_bytes: u64,
     /// Bytes served by this level (see [`LevelStats::bytes`]).
     bytes: u64,
+    /// Hardware prefetcher trained on this level's demand arrivals
+    /// (`None` unless the level's config opts in — the demand path then
+    /// pays nothing beyond this Option check).
+    pf: Option<PrefetchEngine>,
 }
 
 impl Level {
@@ -85,6 +105,7 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
+    /// Instantiate `cfg`'s levels for `cores` cores (private levels replicate per core).
     pub fn new(cfg: &MachineConfig, cores: usize) -> Hierarchy {
         assert!(!cfg.levels.is_empty(), "hierarchy needs at least one level");
         let mut levels = Vec::with_capacity(cfg.levels.len());
@@ -98,6 +119,8 @@ impl Hierarchy {
                 .map(|_| Cache::with_policy(p.size, p.ways, p.line_bytes, lc.policy))
                 .collect();
             let banks = p.banks as usize;
+            let pf = (!lc.prefetcher.is_none())
+                .then(|| PrefetchEngine::new(lc.prefetcher, cores));
             levels.push(Level {
                 cfg: *lc,
                 caches,
@@ -106,6 +129,7 @@ impl Hierarchy {
                 bank_mask: (p.banks as u64).next_power_of_two() - 1,
                 line_bytes: p.line_bytes as u64,
                 bytes: 0,
+                pf,
             });
         }
         assert!(cores <= 64, "sharer masks are u64: at most 64 cores per CMG");
@@ -116,6 +140,7 @@ impl Hierarchy {
         }
     }
 
+    /// Number of cache levels (DRAM not counted).
     pub fn num_levels(&self) -> usize {
         self.levels.len()
     }
@@ -223,6 +248,22 @@ impl Hierarchy {
                         done += lat; // invalidation round-trip
                     }
                 }
+                // a demand touch of a tracked prefetched line claims it:
+                // the first claim counts useful (late if it also waited),
+                // and every demand beating the fill waits for it
+                if self.levels[lvl].pf.is_some() {
+                    if let Some((adj, first, waited)) =
+                        self.levels[lvl].caches[ci].claim_prefetch_at(lref, done)
+                    {
+                        if first {
+                            stats.prefetch_useful += 1;
+                            if waited {
+                                stats.prefetch_late += 1;
+                            }
+                        }
+                        done = adj;
+                    }
+                }
             }
             AccessOutcome::Miss => {
                 // recurse with the ORIGINAL level-0 line address: each
@@ -238,8 +279,18 @@ impl Hierarchy {
 
                 // sharer-mask home: the private level directly above the
                 // directory registers its fills/evictions there
+                // NOTE: this victim-bookkeeping block (pollution count,
+                // directory back-invalidation, private-stack inclusion,
+                // sharer-mask clear, dirty writeback) is mirrored in
+                // `install_prefetch` — change both in lockstep.  It is
+                // deliberately NOT factored out: this copy is pinned
+                // bit-identical by the golden engine harness, and the
+                // prefetch copy must track it without perturbing it.
                 let maintains_mask = self.dir == Some(lvl + 1);
                 if let Some(mut ev) = evicted {
+                    if ev.pf_unused {
+                        stats.prefetch_pollution += 1;
+                    }
                     // inclusive directory: back-invalidate the victim's
                     // private copies above; dirty intermediate copies
                     // ride along with the victim's writeback
@@ -271,6 +322,12 @@ impl Hierarchy {
                 }
             }
         }
+        // hardware prefetch: train on the demand arrival and issue the
+        // candidates after the whole demand step, so demand transfers
+        // keep bank priority at equal timestamps
+        if self.levels[lvl].pf.is_some() {
+            self.run_prefetcher(lvl, core, addr, start + occ, dram, stats);
+        }
         done
     }
 
@@ -291,6 +348,9 @@ impl Hierarchy {
         let ci = self.levels[0].cache_index(core);
         let maintains_mask = self.dir == Some(1);
         if let Some(ev) = self.levels[0].caches[ci].fill_at(l0ref, write) {
+            if ev.pf_unused {
+                stats.prefetch_pollution += 1;
+            }
             if maintains_mask {
                 self.levels[1].caches[0].clear_sharer(ev.addr, core);
             }
@@ -360,10 +420,13 @@ impl Hierarchy {
             let ci = self.levels[p].cache_index(core);
             let mut a = lo & !(step - 1);
             while a < lo + len {
-                let (present, was_dirty) = self.levels[p].caches[ci].invalidate(a);
+                let (present, was_dirty, pf_unused) = self.levels[p].caches[ci].invalidate(a);
                 if present {
                     stats.inclusion_invalidations += 1;
                     dirty |= was_dirty;
+                    if pf_unused {
+                        stats.prefetch_pollution += 1;
+                    }
                 }
                 a += step;
             }
@@ -399,16 +462,214 @@ impl Hierarchy {
                 }
                 let mut a = lo & !(step - 1);
                 while a < hi {
-                    let (present, was_dirty) = cache.invalidate(a);
+                    let (present, was_dirty, pf_unused) = cache.invalidate(a);
                     if present {
                         stats.coherence_invalidations += 1;
                         dirty |= was_dirty && p >= 1;
+                        if pf_unused {
+                            stats.prefetch_pollution += 1;
+                        }
                     }
                     a += step;
                 }
             }
         }
         dirty
+    }
+
+    /// Whether level 0 runs a hardware prefetcher.  The scheduler loop
+    /// checks this once and skips the L0 train/claim calls entirely when
+    /// false, keeping the `Prefetcher::None` hot path untouched.
+    pub fn has_l0_prefetcher(&self) -> bool {
+        self.levels[0].pf.is_some()
+    }
+
+    /// Train the level-0 prefetcher on a demand line touch from `core`
+    /// at cycle `now` and issue the candidates it emits.  Call only when
+    /// [`Hierarchy::has_l0_prefetcher`] is true.
+    pub fn train_l0_prefetch(
+        &mut self,
+        core: usize,
+        line: u64,
+        now: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        self.run_prefetcher(0, core, line, now, dram, stats);
+    }
+
+    /// Claim a prefetched level-0 line on a demand hit completing at
+    /// `hit_done`: bumps `prefetch_useful` / `prefetch_late` and returns
+    /// the (possibly delayed) completion cycle.  A plain hit — or a
+    /// level without a prefetcher — returns `hit_done` unchanged.
+    pub fn claim_l0_prefetch(
+        &mut self,
+        core: usize,
+        l0ref: LineRef,
+        hit_done: f64,
+        stats: &mut SimStats,
+    ) -> f64 {
+        if self.levels[0].pf.is_none() {
+            return hit_done;
+        }
+        let ci = self.levels[0].cache_index(core);
+        match self.levels[0].caches[ci].claim_prefetch_at(l0ref, hit_done) {
+            Some((adj, first, waited)) => {
+                if first {
+                    stats.prefetch_useful += 1;
+                    if waited {
+                        stats.prefetch_late += 1;
+                    }
+                }
+                adj
+            }
+            None => hit_done,
+        }
+    }
+
+    /// Train level `lvl`'s prefetcher on the demand arrival of `addr`
+    /// and issue every candidate it emits.
+    fn run_prefetcher(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        addr: u64,
+        now: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        let lb = self.levels[lvl].line_bytes;
+        let aligned = addr & !(lb - 1);
+        let cands = match self.levels[lvl].pf.as_mut() {
+            Some(e) => e.train(core, aligned, lb),
+            None => return,
+        };
+        for &cand in cands.as_slice() {
+            self.issue_prefetch(lvl, core, cand, now, dram, stats);
+        }
+    }
+
+    /// Issue one prefetch of `cand_addr` into level `lvl`: bill the
+    /// level's bank, pull the line from wherever it lives below (billing
+    /// every crossed level's bank, and DRAM when nowhere caches it), and
+    /// install it with demoted priority and the prefetched bit.
+    ///
+    /// Levels *above* the coherence directory promote only — the
+    /// candidate must already live in the next level down, or the
+    /// prefetch is dropped — because installing a line the levels below
+    /// do not hold would break the inclusion invariants (directory
+    /// back-invalidation and the private-stack subset property).  The
+    /// directory and everything below it pull from below freely.
+    fn issue_prefetch(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        cand_addr: u64,
+        now: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        let lb = self.levels[lvl].line_bytes;
+        let addr = cand_addr & !(lb - 1);
+        let ci = self.levels[lvl].cache_index(core);
+        if self.levels[lvl].caches[ci].probe(addr) {
+            return; // already resident (or already prefetched)
+        }
+        let pulls_from_below = match self.dir {
+            Some(d) => lvl >= d,
+            None => self.levels[lvl].cfg.scope == Scope::SharedBanked,
+        };
+        if !pulls_from_below {
+            let Some(next) = self.levels.get(lvl + 1) else {
+                return;
+            };
+            let nlb = next.line_bytes;
+            let cj = next.cache_index(core);
+            if !next.caches[cj].probe(addr & !(nlb - 1)) {
+                return; // promote-only level: nothing below to promote
+            }
+        }
+        stats.prefetch_issued += 1;
+
+        // bank billing at the installing level, then at every level the
+        // data crosses on its way up (mirroring the demand walk's
+        // bandwidth servers), then DRAM if no cache holds the line
+        let occ = lb as f64 / self.levels[lvl].cfg.params.bank_bytes_per_cycle;
+        let start = self.levels[lvl].reserve_bank(core, addr, now, occ);
+        self.levels[lvl].bytes += lb;
+        let mut t = start + occ;
+        let mut found = false;
+        for m in lvl + 1..self.levels.len() {
+            let mlb = self.levels[m].line_bytes;
+            let maddr = addr & !(mlb - 1);
+            let mocc = lb as f64 / self.levels[m].cfg.params.bank_bytes_per_cycle;
+            let mstart = self.levels[m].reserve_bank(core, maddr, t, mocc);
+            self.levels[m].bytes += lb;
+            t = mstart + mocc + self.levels[m].cfg.params.latency;
+            let cm = self.levels[m].cache_index(core);
+            if self.levels[m].caches[cm].probe(maddr) {
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            stats.dram_bytes += lb;
+            t = dram.transfer(addr, lb, t);
+        }
+        self.install_prefetch(lvl, core, addr, t, now, dram, stats);
+    }
+
+    /// Install a completed prefetch at level `lvl`, running the same
+    /// eviction bookkeeping as the demand walk (pollution counting,
+    /// directory back-invalidation, private-stack inclusion, sharer-mask
+    /// maintenance, dirty-victim writeback).
+    ///
+    /// NOTE: mirrors the victim block in [`Hierarchy::walk`]'s Miss arm
+    /// (and [`Hierarchy::install_l0`] for the level-0 shape) — any
+    /// change to that bookkeeping must be applied here too.  The demand
+    /// copies are pinned by the golden harness; this one only runs on
+    /// prefetch-enabled configs, which the golden gate cannot cover.
+    #[allow(clippy::too_many_arguments)]
+    fn install_prefetch(
+        &mut self,
+        lvl: usize,
+        core: usize,
+        addr: u64,
+        ready: f64,
+        now: f64,
+        dram: &mut Dram,
+        stats: &mut SimStats,
+    ) {
+        let lb = self.levels[lvl].line_bytes;
+        let ci = self.levels[lvl].cache_index(core);
+        let lref = self.levels[lvl].caches[ci].line_ref(addr);
+        let maintains_mask = self.dir == Some(lvl + 1);
+        if let Some(mut ev) = self.levels[lvl].caches[ci].fill_prefetched_at(lref, ready) {
+            if ev.pf_unused {
+                stats.prefetch_pollution += 1;
+            }
+            if self.dir == Some(lvl) && ev.sharers != 0 {
+                let hi = ev.addr + lb;
+                ev.dirty |= self.back_invalidate(lvl, ev.sharers, ev.addr, hi, stats);
+            }
+            if self.levels[lvl].cfg.scope == Scope::Private && lvl > 0 {
+                ev.dirty |= self.evict_upper(lvl, core, ev.addr, lb, stats);
+            }
+            if maintains_mask {
+                self.levels[lvl + 1].caches[0].clear_sharer(ev.addr, core);
+            }
+            if ev.dirty {
+                if lvl + 1 < self.levels.len() {
+                    self.writeback(lvl + 1, core, ev.addr, lb, now, dram, stats);
+                } else {
+                    stats.dram_bytes += lb;
+                    dram.transfer(ev.addr, lb, now);
+                }
+            }
+        }
+        if maintains_mask {
+            self.levels[lvl + 1].caches[0].set_sharer(addr, core);
+        }
     }
 
     /// Adjacent-line prefetch candidate: absent at level 0, present at
@@ -588,6 +849,93 @@ mod tests {
                 assert!(h.levels[1].caches[0].probe(a), "L1 holds {a:#x}, L2 does not");
             }
         }
+    }
+
+    #[test]
+    fn shared_level_stream_prefetch_turns_compulsory_misses_into_hits() {
+        use crate::cachesim::prefetch::Prefetcher;
+        let run = |pf: bool| {
+            let mut cfg = configs::a64fx_s();
+            if pf {
+                cfg.levels[1].prefetcher = Prefetcher::Stream { streams: 8, degree: 4 };
+            }
+            let mut h = Hierarchy::new(&cfg, 1);
+            let mut dram = Dram::new(4, 116.0, 180.0, 256);
+            let mut stats = SimStats::default();
+            // one sequential pass over 1 MiB: every line is a compulsory
+            // miss at L2 without prefetching
+            let addrs: Vec<u64> = (0..4096u64).map(|i| i * 256).collect();
+            for &a in &addrs {
+                let r = h.l0_line_ref(a);
+                if h.access_l0_at(0, r, false) == AccessOutcome::Miss {
+                    h.fetch(0, a, r, false, 0.0, &mut dram, &mut stats);
+                }
+            }
+            h.collect_stats(&mut stats);
+            stats
+        };
+        let base = run(false);
+        let pf = run(true);
+        assert_eq!(base.prefetch_issued, 0);
+        assert_eq!(base.prefetch_useful, 0);
+        assert!(pf.prefetch_issued > 0, "stream prefetcher never fired");
+        assert!(pf.prefetch_useful > 0, "no prefetch was ever claimed");
+        assert!(pf.prefetch_useful <= pf.prefetch_issued);
+        assert!(pf.prefetch_late <= pf.prefetch_useful);
+        assert!(
+            pf.levels[1].misses * 2 < base.levels[1].misses,
+            "L2 demand misses {} not halved vs {}",
+            pf.levels[1].misses,
+            base.levels[1].misses
+        );
+    }
+
+    #[test]
+    fn private_stack_stays_inclusive_under_l0_and_l1_prefetch() {
+        use crate::cachesim::prefetch::Prefetcher;
+        let cfg = configs::milan().with_prefetch(Prefetcher::Stream { streams: 8, degree: 4 });
+        let mut h = Hierarchy::new(&cfg, 1);
+        let mut dram = Dram::new(1, 16.0, 100.0, 256);
+        let mut stats = SimStats::default();
+        // two sequential passes over 1 MiB (spills L1 and the private
+        // L2): demand walks train every level's prefetcher, and the L0
+        // trainer runs exactly as the scheduler loop would run it
+        let addrs: Vec<u64> = (0..16384u64).map(|i| i * 64).collect();
+        for _pass in 0..2 {
+            for &a in &addrs {
+                let r = h.l0_line_ref(a);
+                if h.access_l0_at(0, r, false) == AccessOutcome::Miss {
+                    h.fetch(0, a, r, false, 0.0, &mut dram, &mut stats);
+                }
+                h.train_l0_prefetch(0, a, 0.0, &mut dram, &mut stats);
+            }
+        }
+        assert!(stats.prefetch_issued > 0);
+        // the invariant the promote-only rule protects: every
+        // L1-resident line is L2-resident, prefetches included
+        for &a in &addrs {
+            if h.levels[0].caches[0].probe(a) {
+                assert!(h.levels[1].caches[0].probe(a), "L1 holds {a:#x}, L2 does not");
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_lines_are_never_promoted_into_l0() {
+        use crate::cachesim::prefetch::Prefetcher;
+        // L0-only prefetcher: candidates can only be promoted out of the
+        // level below, and nothing is resident there yet — so training
+        // on untouched addresses must issue nothing
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].prefetcher = Prefetcher::Stream { streams: 4, degree: 2 };
+        let mut h = Hierarchy::new(&cfg, 1);
+        let mut dram = Dram::new(4, 116.0, 180.0, 256);
+        let mut stats = SimStats::default();
+        for i in 0..64u64 {
+            h.train_l0_prefetch(0, i * 256, 0.0, &mut dram, &mut stats);
+        }
+        assert_eq!(stats.prefetch_issued, 0);
+        assert_eq!(stats.dram_bytes, 0, "an L0 promotion must never touch DRAM");
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! Fig. 8) and the hierarchy *shapes* its comparison rests on: a generic
 //! N-level cache system ([`Hierarchy`]) of per-core private and
 //! shared-banked inclusive levels with pluggable replacement
-//! (LRU / random / DRRIP), adjacent-line prefetch, an HBM2/DDR channel
-//! model, MESI-lite coherence anchored at the first shared inclusive
-//! level, and an out-of-order-window core timing model (ROB-limited
-//! memory-level parallelism, MSHR-limited outstanding misses).
+//! (LRU / random / DRRIP), pluggable per-level hardware prefetch
+//! ([`prefetch`]: next-line / stride / stream engines, off by default),
+//! an HBM2/DDR channel model, MESI-lite coherence anchored at the first
+//! shared inclusive level, and an out-of-order-window core timing model
+//! (ROB-limited memory-level parallelism, MSHR-limited outstanding
+//! misses).
 //!
 //! Two-level CMGs (A64FX_S, LARC_C/A), three-level CCDs (Milan,
 //! Milan-X), and stacked-slab variants (LARC_C^3D) all run through the
@@ -24,9 +26,11 @@ pub mod cmg;
 pub mod configs;
 pub mod dram;
 pub mod hierarchy;
+pub mod prefetch;
 pub mod stats;
 
 pub use cache::{LineRef, ReplacementPolicy};
 pub use cmg::{simulate, SimResult};
 pub use configs::{CacheParams, LevelConfig, MachineConfig, Scope};
 pub use hierarchy::Hierarchy;
+pub use prefetch::Prefetcher;

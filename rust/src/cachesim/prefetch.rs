@@ -1,0 +1,517 @@
+//! Pluggable per-level hardware prefetchers.
+//!
+//! The paper's gem5 LARC models inherit the A64FX's aggressive hardware
+//! prefetchers, and whether a workload is latency- or bandwidth-bound —
+//! exactly the axis prefetchers move — decides how much a copious
+//! 3D-stacked cache buys it.  This module supplies the *configuration*
+//! side ([`Prefetcher`], carried per level in
+//! [`crate::cachesim::LevelConfig`]) and the *training* side
+//! ([`PrefetchEngine`], one per configured level inside
+//! [`crate::cachesim::Hierarchy`]).
+//!
+//! Three classic designs are modelled, each trained on the demand-access
+//! line stream *arriving at its level* (all level-0 touches for an L1
+//! prefetcher; the miss stream of the level above for everything else):
+//!
+//! * [`Prefetcher::NextLine`] — stateless: every demand line `L` emits
+//!   `L+1 .. L+degree`.
+//! * [`Prefetcher::Stride`] — a region-tagged table (the classic
+//!   PC-tagged design, re-keyed by 64 KiB address region because the
+//!   trace substrate carries no program counters): once a region's
+//!   address delta repeats twice in a row (i.e. from the fourth access
+//!   of a regular run), the entry is armed and emits `degree` lines
+//!   starting `distance` strides ahead.
+//! * [`Prefetcher::Stream`] — a small file of monotone streams (the
+//!   A64FX/Fujitsu design point): a second touch within a ±3-line window
+//!   of a tracked head confirms the direction, after which every advance
+//!   emits the next `degree` lines ahead of the head.
+//!
+//! What a prefetch *does* — bank-bandwidth billing, demoted-priority
+//! allocation, the prefetched bit behind the `prefetch_useful` /
+//! `prefetch_late` / `prefetch_pollution` counters — lives in
+//! [`crate::cachesim::Hierarchy`]; this module only decides *which lines*
+//! to ask for.  Everything here is deterministic: no RNG, victim choice
+//! by LRU tick with index tie-break, so simulations stay reproducible.
+
+/// Upper bound on `degree` (candidate lines per trigger): candidates are
+/// returned in a fixed-size buffer so the hot path never allocates.
+pub const MAX_DEGREE: u32 = 8;
+
+/// Hardware-prefetcher configuration of one cache level.
+///
+/// `None` is the default everywhere and is pinned **bit-identical** to
+/// the pre-prefetch engine by `tests/engine_equivalence.rs`; the other
+/// variants are opt-in per level via
+/// [`crate::cachesim::MachineConfig::with_prefetch`], the `_pf` config
+/// twins, or `larc run --prefetch`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Prefetcher {
+    /// No hardware prefetching (the pre-subsystem behaviour).
+    None,
+    /// Next-line: demand line `L` emits `L+1 ..= L+degree`.
+    NextLine {
+        /// Lines fetched per trigger (clamped to [`MAX_DEGREE`]).
+        degree: u32,
+    },
+    /// Region-keyed stride detector (PC-less Chen/Baer-style table).
+    Stride {
+        /// Tracked address regions (table rows, LRU-replaced).
+        table_entries: u32,
+        /// Lines fetched per trigger (clamped to [`MAX_DEGREE`]).
+        degree: u32,
+        /// How many strides ahead of the demand address the first
+        /// candidate lands.
+        distance: u32,
+    },
+    /// Monotone stream detector (A64FX-like stream prefetch).
+    Stream {
+        /// Concurrently tracked streams (LRU-replaced).
+        streams: u32,
+        /// Lines fetched ahead of the stream head per advance (clamped
+        /// to [`MAX_DEGREE`]).
+        degree: u32,
+    },
+}
+
+impl Prefetcher {
+    /// Whether this is [`Prefetcher::None`].
+    pub fn is_none(&self) -> bool {
+        matches!(self, Prefetcher::None)
+    }
+
+    /// Short label used in config names, report rows, and CLI output:
+    /// `none`, `nl<degree>`, `stride<degree>d<distance>`,
+    /// `stream<degree>x<streams>`.
+    pub fn tag(&self) -> String {
+        match self {
+            Prefetcher::None => "none".into(),
+            Prefetcher::NextLine { degree } => format!("nl{degree}"),
+            Prefetcher::Stride { degree, distance, .. } => format!("stride{degree}d{distance}"),
+            Prefetcher::Stream { streams, degree } => format!("stream{degree}x{streams}"),
+        }
+    }
+
+    /// Parse a CLI prefetcher spec (`larc run --prefetch <spec>`):
+    ///
+    /// ```text
+    /// none
+    /// nextline[:DEGREE]
+    /// stride[:DEGREE[,DISTANCE[,ENTRIES]]]
+    /// stream[:DEGREE[,STREAMS]]
+    /// ```
+    ///
+    /// Omitted numbers take the defaults used by the `fig-prefetch`
+    /// sweep (`nextline:2`, `stride:2,4,16`, `stream:4,8`); degrees are
+    /// clamped to [`MAX_DEGREE`].
+    pub fn parse(spec: &str) -> Result<Prefetcher, String> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (spec, None),
+        };
+        let nums: Vec<u32> = match rest {
+            None => Vec::new(),
+            Some(r) => r
+                .split(',')
+                .map(|n| {
+                    n.parse::<u32>()
+                        .map_err(|_| format!("bad number {n:?} in prefetch spec {spec:?}"))
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let arg = |i: usize, default: u32| nums.get(i).copied().unwrap_or(default).max(1);
+        let pf = match kind {
+            "none" => Prefetcher::None,
+            "nextline" => Prefetcher::NextLine { degree: arg(0, 2).min(MAX_DEGREE) },
+            "stride" => Prefetcher::Stride {
+                degree: arg(0, 2).min(MAX_DEGREE),
+                distance: arg(1, 4).min(64),
+                table_entries: arg(2, 16).min(64),
+            },
+            "stream" => Prefetcher::Stream {
+                degree: arg(0, 4).min(MAX_DEGREE),
+                streams: arg(1, 8).min(16),
+            },
+            other => {
+                return Err(format!(
+                    "unknown prefetcher {other:?} (none | nextline | stride | stream)"
+                ))
+            }
+        };
+        let max_args = match pf {
+            Prefetcher::None => 0,
+            Prefetcher::NextLine { .. } => 1,
+            Prefetcher::Stream { .. } => 2,
+            Prefetcher::Stride { .. } => 3,
+        };
+        if nums.len() > max_args {
+            return Err(format!(
+                "too many numbers in prefetch spec {spec:?} (at most {max_args})"
+            ));
+        }
+        Ok(pf)
+    }
+}
+
+/// Candidate lines produced by one training step — a fixed-size buffer
+/// ([`MAX_DEGREE`] slots) of line *addresses* so the hot path allocates
+/// nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Candidates {
+    buf: [u64; MAX_DEGREE as usize],
+    len: usize,
+}
+
+impl Candidates {
+    #[inline]
+    fn push(&mut self, addr: u64) {
+        if self.len < self.buf.len() {
+            self.buf[self.len] = addr;
+            self.len += 1;
+        }
+    }
+
+    /// The emitted candidate line addresses, in issue order.
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        &self.buf[..self.len]
+    }
+
+    /// Whether no candidate was emitted.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Stride-table row: one tracked address region.
+#[derive(Clone, Copy)]
+struct StrideEntry {
+    /// Region id (`line address >> REGION_SHIFT`), `u64::MAX` = unused.
+    region: u64,
+    /// Last line number seen in the region.
+    last: u64,
+    /// Last observed line-number delta.
+    stride: i64,
+    /// Saturating confidence; emission requires `>= CONF_EMIT`.
+    conf: u8,
+    /// LRU tick for victim selection.
+    lru: u64,
+}
+
+/// Stream-file row: one tracked monotone stream.
+#[derive(Clone, Copy)]
+struct StreamEntry {
+    /// Head line number, `u64::MAX` = unused.
+    last: u64,
+    /// Direction: +1 / -1 once confirmed, 0 while single-touch.
+    dir: i64,
+    /// Confirmed advances (saturating); emission requires `>= RUN_EMIT`.
+    run: u8,
+    /// LRU tick for victim selection.
+    lru: u64,
+}
+
+/// Address-region granularity for the stride table (64 KiB).
+const REGION_SHIFT: u32 = 16;
+/// Stride confidence needed before emitting (two confirmed repeats).
+const CONF_EMIT: u8 = 2;
+/// Stream advances needed before emitting (direction confirmed).
+const RUN_EMIT: u8 = 2;
+/// A new touch within this many lines of a stream head extends it.
+const STREAM_WINDOW: i64 = 3;
+/// Sentinel for unused table rows.
+const UNUSED: u64 = u64::MAX;
+
+/// Per-core training state of one level's prefetcher.
+enum CoreState {
+    /// Stateless.
+    NextLine,
+    /// Region-keyed stride table.
+    Stride { table: Vec<StrideEntry>, tick: u64 },
+    /// Stream file.
+    Stream { file: Vec<StreamEntry>, tick: u64 },
+}
+
+/// Runtime prefetch engine of one cache level: the configured
+/// [`Prefetcher`] plus one training state per core (shared levels still
+/// train per requesting core, like real per-core stream engines in front
+/// of a shared cache).
+pub struct PrefetchEngine {
+    kind: Prefetcher,
+    cores: Vec<CoreState>,
+}
+
+impl PrefetchEngine {
+    /// Build the engine for `kind` serving `cores` cores.  Panics on
+    /// [`Prefetcher::None`] — levels without a prefetcher carry no
+    /// engine at all.
+    pub fn new(kind: Prefetcher, cores: usize) -> PrefetchEngine {
+        let state = || match kind {
+            Prefetcher::None => unreachable!("no engine for Prefetcher::None"),
+            Prefetcher::NextLine { .. } => CoreState::NextLine,
+            Prefetcher::Stride { table_entries, .. } => CoreState::Stride {
+                table: vec![
+                    StrideEntry { region: UNUSED, last: 0, stride: 0, conf: 0, lru: 0 };
+                    table_entries.max(1) as usize
+                ],
+                tick: 0,
+            },
+            Prefetcher::Stream { streams, .. } => CoreState::Stream {
+                file: vec![
+                    StreamEntry { last: UNUSED, dir: 0, run: 0, lru: 0 };
+                    streams.max(1) as usize
+                ],
+                tick: 0,
+            },
+        };
+        assert!(!kind.is_none());
+        PrefetchEngine {
+            kind,
+            cores: (0..cores).map(|_| state()).collect(),
+        }
+    }
+
+    /// Observe one demand access (line-aligned `addr`, this level's
+    /// `line_bytes`) from `core` and return the candidate prefetch
+    /// addresses it triggers.
+    pub fn train(&mut self, core: usize, addr: u64, line_bytes: u64) -> Candidates {
+        let ln = addr / line_bytes;
+        let mut out = Candidates::default();
+        match (&mut self.cores[core], self.kind) {
+            (CoreState::NextLine, Prefetcher::NextLine { degree }) => {
+                for j in 1..=degree as u64 {
+                    out.push((ln + j) * line_bytes);
+                }
+            }
+            (
+                CoreState::Stride { table, tick },
+                Prefetcher::Stride { degree, distance, .. },
+            ) => {
+                *tick += 1;
+                let region = ln >> (REGION_SHIFT - line_bytes.trailing_zeros().min(REGION_SHIFT));
+                match table.iter().position(|e| e.region == region) {
+                    Some(i) => {
+                        let e = &mut table[i];
+                        e.lru = *tick;
+                        let d = ln as i64 - e.last as i64;
+                        if d != 0 {
+                            if d == e.stride {
+                                e.conf = (e.conf + 1).min(CONF_EMIT + 1);
+                            } else if e.conf > 0 {
+                                e.conf -= 1;
+                            } else {
+                                e.stride = d;
+                            }
+                            e.last = ln;
+                            if e.conf >= CONF_EMIT {
+                                for j in 0..degree as i64 {
+                                    let c = ln as i64 + e.stride * (distance as i64 + j);
+                                    if c > 0 {
+                                        out.push(c as u64 * line_bytes);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        // allocate the LRU row for the new region
+                        let v = lru_victim(table.iter().map(|e| (e.region, e.lru)));
+                        table[v] = StrideEntry {
+                            region,
+                            last: ln,
+                            stride: 0,
+                            conf: 0,
+                            lru: *tick,
+                        };
+                    }
+                }
+            }
+            (CoreState::Stream { file, tick }, Prefetcher::Stream { degree, .. }) => {
+                *tick += 1;
+                let mut matched = false;
+                for e in file.iter_mut() {
+                    if e.last == UNUSED {
+                        continue;
+                    }
+                    let d = ln as i64 - e.last as i64;
+                    if d == 0 {
+                        // repeat touch of the head: refresh, no advance
+                        e.lru = *tick;
+                        matched = true;
+                        break;
+                    }
+                    if d.abs() <= STREAM_WINDOW && (e.run == 0 || d.signum() == e.dir) {
+                        e.dir = d.signum();
+                        e.run = e.run.saturating_add(1);
+                        e.last = ln;
+                        e.lru = *tick;
+                        if e.run >= RUN_EMIT {
+                            for j in 1..=degree as i64 {
+                                let c = ln as i64 + e.dir * j;
+                                if c > 0 {
+                                    out.push(c as u64 * line_bytes);
+                                }
+                            }
+                        }
+                        matched = true;
+                        break;
+                    }
+                }
+                if !matched {
+                    let v = lru_victim(file.iter().map(|e| (e.last, e.lru)));
+                    file[v] = StreamEntry { last: ln, dir: 0, run: 0, lru: *tick };
+                }
+            }
+            // kind and state are built together; other pairings cannot occur
+            _ => unreachable!("prefetch state does not match configured kind"),
+        }
+        out
+    }
+}
+
+/// Deterministic victim: first unused row, else smallest LRU tick
+/// (index tie-break).
+fn lru_victim(rows: impl Iterator<Item = (u64, u64)>) -> usize {
+    let mut victim = 0;
+    let mut best = u64::MAX;
+    for (i, (key, lru)) in rows.enumerate() {
+        if key == UNUSED {
+            return i;
+        }
+        if lru < best {
+            best = lru;
+            victim = i;
+        }
+    }
+    victim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        assert_eq!(Prefetcher::parse("none").unwrap(), Prefetcher::None);
+        assert_eq!(
+            Prefetcher::parse("nextline").unwrap(),
+            Prefetcher::NextLine { degree: 2 }
+        );
+        assert_eq!(
+            Prefetcher::parse("nextline:4").unwrap(),
+            Prefetcher::NextLine { degree: 4 }
+        );
+        assert_eq!(
+            Prefetcher::parse("stride:2,8,32").unwrap(),
+            Prefetcher::Stride { degree: 2, distance: 8, table_entries: 32 }
+        );
+        assert_eq!(
+            Prefetcher::parse("stream:4,8").unwrap(),
+            Prefetcher::Stream { degree: 4, streams: 8 }
+        );
+        // degree clamps to MAX_DEGREE, zero promotes to 1
+        assert_eq!(
+            Prefetcher::parse("nextline:99").unwrap(),
+            Prefetcher::NextLine { degree: MAX_DEGREE }
+        );
+        assert_eq!(
+            Prefetcher::parse("nextline:0").unwrap(),
+            Prefetcher::NextLine { degree: 1 }
+        );
+        assert!(Prefetcher::parse("magic").is_err());
+        assert!(Prefetcher::parse("nextline:x").is_err());
+        assert!(Prefetcher::parse("nextline:1,2").is_err());
+        assert!(Prefetcher::parse("none:1").is_err());
+    }
+
+    #[test]
+    fn tags_are_distinct_and_stable() {
+        let pfs = [
+            Prefetcher::None,
+            Prefetcher::NextLine { degree: 2 },
+            Prefetcher::Stride { table_entries: 16, degree: 2, distance: 4 },
+            Prefetcher::Stream { streams: 8, degree: 4 },
+        ];
+        let tags: Vec<String> = pfs.iter().map(|p| p.tag()).collect();
+        assert_eq!(tags, ["none", "nl2", "stride2d4", "stream4x8"]);
+    }
+
+    #[test]
+    fn next_line_emits_degree_lines() {
+        let mut e = PrefetchEngine::new(Prefetcher::NextLine { degree: 3 }, 1);
+        let c = e.train(0, 0x1000, 256);
+        assert_eq!(c.as_slice(), &[0x1100, 0x1200, 0x1300]);
+    }
+
+    #[test]
+    fn stream_detector_needs_two_advances_then_runs_ahead() {
+        let mut e = PrefetchEngine::new(Prefetcher::Stream { streams: 4, degree: 2 }, 1);
+        assert!(e.train(0, 0, 64).is_empty()); // allocate
+        assert!(e.train(0, 64, 64).is_empty()); // dir confirmed, run 1
+        let c = e.train(0, 128, 64); // run 2: emit ahead
+        assert_eq!(c.as_slice(), &[192, 256]);
+        // descending streams work symmetrically
+        let mut d = PrefetchEngine::new(Prefetcher::Stream { streams: 4, degree: 1 }, 1);
+        assert!(d.train(0, 100 * 64, 64).is_empty());
+        assert!(d.train(0, 99 * 64, 64).is_empty());
+        assert_eq!(d.train(0, 98 * 64, 64).as_slice(), &[97 * 64]);
+    }
+
+    #[test]
+    fn stream_file_tracks_interleaved_streams() {
+        let mut e = PrefetchEngine::new(Prefetcher::Stream { streams: 4, degree: 1 }, 1);
+        let a = 0u64;
+        let b = 1 << 30;
+        let mut emitted = 0;
+        for i in 0..8u64 {
+            emitted += e.train(0, a + i * 256, 256).as_slice().len();
+            emitted += e.train(0, b + i * 256, 256).as_slice().len();
+        }
+        // both streams confirm after 2 advances and emit from then on
+        assert_eq!(emitted, 2 * 6);
+    }
+
+    #[test]
+    fn stride_detector_finds_non_unit_strides() {
+        let mut e = PrefetchEngine::new(
+            Prefetcher::Stride { table_entries: 8, degree: 1, distance: 2 },
+            1,
+        );
+        // stride of 3 lines within one region
+        let mut cands = Vec::new();
+        for i in 0..6u64 {
+            cands.extend_from_slice(e.train(0, i * 3 * 64, 64).as_slice());
+        }
+        // first access allocates, second sets stride, third/fourth build
+        // confidence; from the trained point on, candidates run
+        // `distance` strides ahead
+        assert!(!cands.is_empty());
+        let last = 5 * 3;
+        assert!(cands.contains(&((last + 2 * 3) * 64)));
+    }
+
+    #[test]
+    fn random_deltas_never_train_the_stride_table() {
+        let mut e = PrefetchEngine::new(
+            Prefetcher::Stride { table_entries: 8, degree: 2, distance: 4 },
+            1,
+        );
+        // irregular deltas within one region: confidence never reaches 2
+        let mut total = 0;
+        for &ln in &[1u64, 5, 2, 9, 3, 14, 6, 11, 4, 13] {
+            total += e.train(0, ln * 64, 64).as_slice().len();
+        }
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn per_core_states_are_independent() {
+        let mut e = PrefetchEngine::new(Prefetcher::Stream { streams: 2, degree: 1 }, 2);
+        // core 0 trains a stream; core 1's first touch of the same range
+        // must not inherit it
+        assert!(e.train(0, 0, 256).is_empty());
+        assert!(e.train(0, 256, 256).is_empty());
+        assert!(!e.train(0, 512, 256).is_empty());
+        assert!(e.train(1, 768, 256).is_empty());
+    }
+}

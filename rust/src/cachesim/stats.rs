@@ -4,8 +4,11 @@
 /// are summed across cores.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LevelStats {
+    /// Demand hits at this level.
     pub hits: u64,
+    /// Demand misses at this level.
     pub misses: u64,
+    /// Dirty evictions at this level.
     pub writebacks: u64,
     /// Bytes this level served: lines delivered upward on demand (hits
     /// included) and prefetch, plus dirty writebacks landing here — the
@@ -15,6 +18,7 @@ pub struct LevelStats {
 }
 
 impl LevelStats {
+    /// Miss rate over this level's accesses (0 when idle).
     pub fn miss_rate(&self) -> f64 {
         rate(self.misses, self.hits + self.misses)
     }
@@ -28,14 +32,23 @@ impl LevelStats {
 /// full per-level picture lives in `levels`.
 #[derive(Clone, Debug, Default)]
 pub struct SimStats {
+    /// Chunk-granular accesses consumed from the workload streams.
     pub accesses: u64,
+    /// Cache-line touches (each access covers >= 1 line).
     pub line_touches: u64,
+    /// Level-0 demand hits, summed over cores.
     pub l1_hits: u64,
+    /// Level-0 demand misses, summed over cores.
     pub l1_misses: u64,
+    /// Directory-level demand hits (see the type docs).
     pub l2_hits: u64,
+    /// Directory-level demand misses.
     pub l2_misses: u64,
+    /// Directory-level dirty evictions.
     pub l2_writebacks: u64,
+    /// Bytes moved to/from DRAM.
     pub dram_bytes: u64,
+    /// Bytes served by the directory level.
     pub l2_bytes: u64,
     /// Directory-driven invalidations of private copies (store-hit
     /// invalidates + directory-eviction back-invalidation).
@@ -44,12 +57,26 @@ pub struct SimStats {
     /// intermediate private level evicting a line the levels above still
     /// hold) — capacity events, not coherence traffic.
     pub inclusion_invalidations: u64,
+    /// Legacy adjacent-line promotions into L1 (`adjacent_prefetch`).
     pub prefetches: u64,
+    /// Hardware-prefetch fills issued (all levels; the legacy
+    /// adjacent-line promotions above stay in `prefetches`).
+    pub prefetch_issued: u64,
+    /// Prefetched lines claimed by a demand access before eviction.
+    pub prefetch_useful: u64,
+    /// Useful prefetches whose fill had not completed when the demand
+    /// arrived (the demand waited on the in-flight fill — partial win).
+    pub prefetch_late: u64,
+    /// Prefetched lines removed — evicted by replacement or wiped by an
+    /// invalidation — without ever being claimed: cache space and
+    /// bandwidth spent for nothing.
+    pub prefetch_pollution: u64,
     /// Per-level counters, L1 first (filled by the hierarchy walk).
     pub levels: Vec<LevelStats>,
 }
 
 impl SimStats {
+    /// Level-0 miss rate over demand line touches.
     pub fn l1_miss_rate(&self) -> f64 {
         rate(self.l1_misses, self.l1_hits + self.l1_misses)
     }

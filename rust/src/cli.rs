@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! larc list [workloads|configs|experiments]
-//! larc run --workload <name> [--config <name>] [--threads N] [--levels N] [--scale s]
+//! larc run --workload <name> [--config <name>] [--threads N] [--levels N]
+//!          [--prefetch spec] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
-//! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|table2|table3|headline|model>
-//! larc campaign [--scale small|paper|tiny] [--pjrt] [--store DIR] [--resume]
+//! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
+//!              |table2|table3|headline|model>
+//! larc campaign [--scale small|paper|tiny] [--pjrt] [--csv] [--store DIR] [--resume]
 //! larc store <ls|verify|gc> --store DIR                # inspect the store
 //! larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
 //! larc model                                           # section-2 tables
@@ -16,8 +18,11 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Cli {
+    /// First non-flag token: the subcommand.
     pub command: String,
+    /// Remaining non-flag tokens, in order.
     pub positional: Vec<String>,
+    /// `--flag value` / `--flag=value` pairs (bare flags store "true").
     pub flags: HashMap<String, String>,
 }
 
@@ -57,18 +62,22 @@ impl Cli {
         })
     }
 
+    /// Value of `--name`, if given.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn flag_or(&self, name: &str, default: &str) -> String {
         self.flag(name).unwrap_or(default).to_string()
     }
 
+    /// Whether `--name` was given (with or without a value).
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
 
+    /// Integer value of `--name`, or `default` when absent.
     pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.flag(name) {
             None => Ok(default),
@@ -78,6 +87,7 @@ impl Cli {
         }
     }
 
+    /// Parse the `--scale` flag (tiny | small | paper; default small).
     pub fn scale(&self) -> Result<crate::trace::Scale, String> {
         match self.flag_or("scale", "small").as_str() {
             "tiny" => Ok(crate::trace::Scale::Tiny),
@@ -88,12 +98,14 @@ impl Cli {
     }
 }
 
+/// CLI usage text printed by `larc help` and on errors.
 pub const USAGE: &str = "\
 larc — LARC (3D-stacked cache) reproduction toolkit
 
 USAGE:
   larc list [workloads|configs|experiments]
-  larc run --workload <name> [--config <cfg>] [--threads N] [--levels N] [--scale ...]
+  larc run --workload <name> [--config <cfg>] [--threads N] [--levels N]
+           [--prefetch spec] [--scale ...]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
               [--store DIR] [--resume]
@@ -109,6 +121,14 @@ HIERARCHY:
   --sweep fam   fig8 sweep family: latency | capacity | bankbits | l3
                 (l3 = stacked-L3 level-count sweep over larc_c_3d slabs)
 
+PREFETCH:
+  --prefetch s  set every cache level's hardware prefetcher:
+                none | nextline[:DEG] | stride[:DEG[,DIST[,ENTRIES]]]
+                | stream[:DEG[,STREAMS]] | default (A64FX-like stream @ L1/L2)
+                Configs named with a `_pf` suffix (a64fx_s_pf, larc_c_pf, ...)
+                carry the A64FX-like default already; `--prefetch none`
+                strips it.  `larc figure fig-prefetch` sweeps the whole axis.
+
 BENCH:
   --iters N     timed iterations per case (default 3)
   --out DIR     where BENCH_<suite>.json baselines are written (default .)
@@ -118,11 +138,13 @@ BENCH:
 STORE:
   --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
   --resume      reuse valid store entries; only missing/invalid keys recompute
-  (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 headline; other
-   experiments are closed-form or direct and note that the flags are ignored)
+  (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 fig-prefetch headline;
+   other experiments are closed-form or direct and note that the flags are
+   ignored)
 
 EXPERIMENT IDS:
-  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 table2 table3 headline model
+  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 fig-prefetch table2 table3
+  headline model
 ";
 
 #[cfg(test)]
@@ -167,6 +189,14 @@ mod tests {
         assert_eq!(c.flag("levels"), Some("2"));
         let c = parse(&["figure", "fig8", "--sweep", "l3"]);
         assert_eq!(c.flag("sweep"), Some("l3"));
+    }
+
+    #[test]
+    fn prefetch_flag_parses() {
+        let c = parse(&["run", "--workload", "minife", "--prefetch", "stream:4,8"]);
+        assert_eq!(c.flag("prefetch"), Some("stream:4,8"));
+        let c = parse(&["figure", "fig-prefetch", "--store", "/tmp/s"]);
+        assert_eq!(c.positional, vec!["fig-prefetch"]);
     }
 
     #[test]

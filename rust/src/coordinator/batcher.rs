@@ -28,11 +28,14 @@ pub struct McaBatcher {
     pending: Vec<([f32; NUM_CLASSES], f32)>,
     /// Stats: PJRT executions and total rows evaluated.
     pub executions: u64,
+    /// Real (non-padding) rows priced through the backend.
     pub rows_evaluated: u64,
+    /// Padding rows added to reach a fixed executable batch shape.
     pub rows_padded: u64,
 }
 
 impl McaBatcher {
+    /// Batcher over `runtime`, priced against `pm`'s latency table.
     pub fn new(runtime: Arc<Runtime>, pm: &PortModel) -> Self {
         McaBatcher {
             runtime,

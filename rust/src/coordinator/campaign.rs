@@ -33,6 +33,7 @@ pub enum Job {
 }
 
 impl Job {
+    /// Human-readable job label for logs and store listings.
     pub fn label(&self) -> String {
         match self {
             Job::CacheSim { spec, config, threads } => {
@@ -46,11 +47,14 @@ impl Job {
 /// Result of one job.
 #[derive(Clone, Debug)]
 pub enum JobOutput {
+    /// Cachesim result.
     Sim(SimResult),
+    /// MCA estimate.
     Mca(McaEstimate),
 }
 
 impl JobOutput {
+    /// The run's estimated wall-clock seconds (either kind).
     pub fn runtime_s(&self) -> f64 {
         match self {
             JobOutput::Sim(r) => r.runtime_s,
@@ -58,6 +62,7 @@ impl JobOutput {
         }
     }
 
+    /// The cachesim result, if this is one.
     pub fn as_sim(&self) -> Option<&SimResult> {
         match self {
             JobOutput::Sim(r) => Some(r),
@@ -65,6 +70,7 @@ impl JobOutput {
         }
     }
 
+    /// The MCA estimate, if this is one.
     pub fn as_mca(&self) -> Option<&McaEstimate> {
         match self {
             JobOutput::Mca(e) => Some(e),
@@ -75,12 +81,16 @@ impl JobOutput {
 
 /// A frozen set of jobs plus executor configuration.
 pub struct Campaign {
+    /// The frozen job list (results align positionally).
     pub jobs: Vec<Job>,
+    /// Worker-thread count.
     pub workers: usize,
+    /// Progress lines to stderr.
     pub verbose: bool,
 }
 
 impl Campaign {
+    /// Campaign over `jobs` with one worker per available core.
     pub fn new(jobs: Vec<Job>) -> Self {
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -92,11 +102,13 @@ impl Campaign {
         }
     }
 
+    /// Set the worker-thread count (minimum 1).
     pub fn with_workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
     }
 
+    /// Toggle progress lines to stderr.
     pub fn verbose(mut self, v: bool) -> Self {
         self.verbose = v;
         self

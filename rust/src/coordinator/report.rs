@@ -8,13 +8,16 @@ use crate::util::table::Table;
 
 /// Destination + rendering for one experiment's output.
 pub struct Report {
+    /// Experiment id (also the CSV file stem).
     pub id: String,
+    /// Human-readable title rendered above the table.
     pub title: String,
     csv: Csv,
     table: Table,
 }
 
 impl Report {
+    /// Empty report with the given column header.
     pub fn new(id: &str, title: &str, header: &[&str]) -> Self {
         Report {
             id: id.to_string(),
@@ -24,15 +27,18 @@ impl Report {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         self.csv.row(cells);
         self.table.row(cells);
     }
 
+    /// Number of data rows.
     pub fn len(&self) -> usize {
         self.csv.len()
     }
 
+    /// Whether the report has no rows.
     pub fn is_empty(&self) -> bool {
         self.csv.is_empty()
     }

@@ -39,11 +39,19 @@ use crate::util::json::{self, Json};
 /// serialization layout, ...). Old entries stop matching both by key and
 /// by the embedded schema field.
 ///
-/// v2: the generic N-level hierarchy refactor — `MachineConfig` grew an
-/// ordered level list (whose Debug form feeds the canonical job string)
-/// and `SimStats` gained per-level counters, so every pre-refactor entry
-/// is stale by construction.
-pub const SCHEMA_VERSION: u32 = 2;
+/// History (also documented in `docs/ARCHITECTURE.md`):
+///
+/// * v1 — initial store format (flat L1+L2 configs).
+/// * v2 — the generic N-level hierarchy refactor: `MachineConfig` grew an
+///   ordered level list (whose Debug form feeds the canonical job string)
+///   and `SimStats` gained per-level counters, so every pre-refactor
+///   entry is stale by construction.
+/// * v3 — the pluggable prefetch subsystem: `LevelConfig` grew a
+///   `prefetcher` field (changing every canonical config string) and
+///   `SimStats` gained the `prefetch_issued` / `prefetch_useful` /
+///   `prefetch_late` / `prefetch_pollution` counters (changing the
+///   serialized stats layout).
+pub const SCHEMA_VERSION: u32 = 3;
 
 // ---------------------------------------------------------------- job keys
 
@@ -127,6 +135,10 @@ fn sim_to_json(r: &SimResult) -> Json {
         ("coherence_invalidations", json::num(s.coherence_invalidations as f64)),
         ("inclusion_invalidations", json::num(s.inclusion_invalidations as f64)),
         ("prefetches", json::num(s.prefetches as f64)),
+        ("prefetch_issued", json::num(s.prefetch_issued as f64)),
+        ("prefetch_useful", json::num(s.prefetch_useful as f64)),
+        ("prefetch_late", json::num(s.prefetch_late as f64)),
+        ("prefetch_pollution", json::num(s.prefetch_pollution as f64)),
         ("levels", levels),
     ]);
     json::obj(vec![
@@ -206,6 +218,10 @@ fn stats_from_json(v: &Json) -> Result<SimStats, String> {
         coherence_invalidations: req_u64(v, "coherence_invalidations")?,
         inclusion_invalidations: req_u64(v, "inclusion_invalidations")?,
         prefetches: req_u64(v, "prefetches")?,
+        prefetch_issued: req_u64(v, "prefetch_issued")?,
+        prefetch_useful: req_u64(v, "prefetch_useful")?,
+        prefetch_late: req_u64(v, "prefetch_late")?,
+        prefetch_pollution: req_u64(v, "prefetch_pollution")?,
         levels,
     })
 }
@@ -293,7 +309,9 @@ pub enum EntryState {
 /// One scanned file.
 #[derive(Debug)]
 pub struct ScanEntry {
+    /// File path within the store directory.
     pub path: PathBuf,
+    /// Validation result for the file.
     pub state: EntryState,
 }
 
@@ -326,6 +344,7 @@ impl Store {
         })
     }
 
+    /// The store directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -29,6 +29,7 @@ pub fn sizes(opts: &ExpOptions) -> Vec<u32> {
     }
 }
 
+/// Run the Fig. 1 pilot study (Milan vs Milan-X CCDs).
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let milan = configs::milan();
     let milan_x = configs::milan_x();

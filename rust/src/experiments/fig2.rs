@@ -29,6 +29,7 @@ pub fn cpu_survey() -> Vec<(&'static str, u32, f64, u32)> {
     ]
 }
 
+/// Emit the Fig. 2 stacked-cache capacity/bandwidth curves.
 pub fn run() -> Report {
     let mut report = Report::new(
         "fig2",

@@ -15,17 +15,23 @@ use crate::mca::{self, PortModel};
 use crate::trace::workloads::polybench;
 use crate::util::csv;
 
+/// Aggregate accuracy counters behind Fig. 5.
 pub struct Fig5Stats {
+    /// Estimates within 2x of the simulated runtime.
     pub within_2x: usize,
+    /// Workloads compared.
     pub total: usize,
+    /// Estimates that came out slower than the simulation.
     pub predicted_slower: usize,
 }
 
+/// Run the Fig. 5 MCA-validation comparison.
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let (report, _) = run_with_stats(opts)?;
     Ok(report)
 }
 
+/// Like [`run`], also returning the accuracy counters.
 pub fn run_with_stats(opts: &ExpOptions) -> anyhow::Result<(Report, Fig5Stats)> {
     let cfg = configs::broadwell();
     let pm = PortModel::get(cfg.port_arch);

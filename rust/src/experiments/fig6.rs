@@ -22,6 +22,7 @@ use crate::runtime::Runtime;
 use crate::trace::workloads;
 use crate::util::{csv, stats};
 
+/// Run the Fig. 6 per-suite MCA speedup panels.
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let cfg = configs::broadwell();
     let pm = PortModel::get(cfg.port_arch);

@@ -18,8 +18,11 @@ use crate::coordinator::{Campaign, Job};
 use crate::trace::workloads::tapp;
 use crate::util::csv;
 
+/// Swept shared-L2 load-to-use latencies (cycles).
 pub const LATENCIES: [f64; 5] = [22.0, 30.0, 37.0, 45.0, 52.0];
+/// Swept shared-L2 capacities (MiB).
 pub const SIZES_MIB: [u64; 5] = [64, 128, 256, 512, 1024];
+/// Swept log2 bank counts.
 pub const BANKBITS: [u32; 5] = [0, 1, 2, 3, 4];
 /// Stacked-L3 slab sizes for the `--sweep l3` level-count sweep.
 pub const L3_MIB: [u64; 4] = [128, 256, 512, 1024];
@@ -76,6 +79,7 @@ fn kernels(opts: &ExpOptions) -> Vec<crate::trace::Spec> {
     }
 }
 
+/// Run the Fig. 8 TAPP sensitivity sweeps.
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let baseline = configs::larc_c();
     let specs = kernels(opts);

@@ -15,6 +15,7 @@ use crate::mca::{self, PortModel};
 use crate::trace::workloads;
 use crate::util::{csv, stats};
 
+/// Run the Fig. 9 best-LARC speedup distribution.
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let rows = matrix::run(opts)?;
     let mut report = Report::new(

@@ -1,0 +1,176 @@
+//! `fig-prefetch` — prefetch sensitivity sweep (beyond the paper).
+//!
+//! The paper's gem5 LARC models inherit the A64FX's aggressive hardware
+//! prefetchers, while our baseline engine models none; this sweep
+//! quantifies what that omission is worth.  For a representative
+//! workload set spanning the bound classes, every (workload × machine ×
+//! prefetcher) cell runs through the campaign store: machines are the
+//! A64FX_S baseline and LARC_C, prefetchers are off / next-line /
+//! stride / stream applied to every cache level.
+//!
+//! Expected shape: *latency-bound workloads with regular access streams*
+//! (seidel-2d's Gauss–Seidel sweep, cg's row walks) see their LARC
+//! speedup **shrink** under stream prefetch — the prefetcher hides the
+//! DRAM latency the big cache would otherwise hide, which is the
+//! Lowe-Power et al. bandwidth-vs-latency argument in miniature.
+//! Pointer-chasing workloads (mcf, durbin) are insensitive: no
+//! prefetcher predicts a random chase, so their LARC win survives.
+//! Bandwidth- and compute-bound rows barely move.
+
+use super::ExpOptions;
+use crate::cachesim::configs;
+use crate::cachesim::Prefetcher;
+use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads;
+use crate::trace::Spec;
+use crate::util::csv;
+
+/// The swept prefetcher configurations, in presentation order.  `None`
+/// reuses the plain machine configs, so the baseline cells share their
+/// store keys with fig1/fig7/fig9 campaigns.
+pub fn prefetchers() -> Vec<Prefetcher> {
+    vec![
+        Prefetcher::None,
+        Prefetcher::NextLine { degree: 2 },
+        Prefetcher::Stride { table_entries: 16, degree: 2, distance: 4 },
+        Prefetcher::Stream { streams: 8, degree: 4 },
+    ]
+}
+
+/// Workloads swept: the latency-bound set the motivation targets
+/// (regular: seidel-2d, cg-omp; chasing: durbin, mcf) plus one
+/// bandwidth- and one compute-bound control row.
+pub const WORKLOADS: [&str; 6] = ["seidel-2d", "cg-omp", "durbin", "mcf", "mvt", "ep-omp"];
+
+fn specs(opts: &ExpOptions) -> Vec<Spec> {
+    WORKLOADS
+        .iter()
+        .filter_map(|n| workloads::by_name(n, opts.scale))
+        .collect()
+}
+
+/// Run the prefetch sensitivity sweep.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let machines = [configs::a64fx_s(), configs::larc_c()];
+    let pfs = prefetchers();
+    let specs = specs(opts);
+
+    let mut jobs = Vec::new();
+    for spec in &specs {
+        for pf in &pfs {
+            for m in &machines {
+                let config = if pf.is_none() {
+                    m.clone()
+                } else {
+                    m.clone().with_prefetch(*pf)
+                };
+                let threads = spec.effective_threads(m.cores);
+                jobs.push(Job::CacheSim { spec: spec.clone(), config, threads });
+            }
+        }
+    }
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let out = super::run_campaign(&campaign, opts)?;
+
+    let mut report = Report::new(
+        "fig-prefetch",
+        "prefetch sensitivity: LARC_C speedup over A64FX_S per (workload, prefetcher)",
+        &["workload", "class", "prefetcher", "a64fx_s", "larc_c", "larc_speedup"],
+    );
+    let stride = pfs.len() * machines.len();
+    for (i, spec) in specs.iter().enumerate() {
+        for (j, pf) in pfs.iter().enumerate() {
+            let a64fx = out[i * stride + j * machines.len()].as_sim().unwrap().runtime_s;
+            let larc = out[i * stride + j * machines.len() + 1].as_sim().unwrap().runtime_s;
+            report.row(&[
+                spec.name.clone(),
+                format!("{:?}", spec.class).to_lowercase(),
+                pf.tag(),
+                csv::f(a64fx),
+                csv::f(larc),
+                csv::f(a64fx / larc),
+            ]);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim;
+    use crate::trace::{BoundClass, Scale};
+
+    /// LARC speedup of `name` with and without a prefetcher, at `scale`.
+    fn speedup_pair(name: &str, scale: Scale, pf: Prefetcher) -> (f64, f64) {
+        let spec = workloads::by_name(name, scale).unwrap();
+        let speedup = |with_pf: bool| {
+            let mut rts = Vec::new();
+            for m in [configs::a64fx_s(), configs::larc_c()] {
+                let threads = spec.effective_threads(m.cores);
+                let cfg = if with_pf { m.with_prefetch(pf) } else { m };
+                rts.push(cachesim::simulate(&spec, &cfg, threads).runtime_s);
+            }
+            rts[0] / rts[1]
+        };
+        (speedup(false), speedup(true))
+    }
+
+    #[test]
+    fn stream_prefetch_shrinks_the_latency_bound_larc_win() {
+        // seidel-2d: latency-bound (serialized Gauss–Seidel chain) but a
+        // *regular* sweep, i.e. exactly what a stream prefetcher hides.
+        // Paper scale puts its 32 MiB sweep between the 8 MiB A64FX L2
+        // and the 256 MiB LARC L2 — the LARC-win zone.
+        let spec = workloads::by_name("seidel-2d", Scale::Paper).unwrap();
+        assert_eq!(spec.class, BoundClass::Latency);
+        let pf = Prefetcher::Stream { streams: 8, degree: 4 };
+        let (none, stream) = speedup_pair("seidel-2d", Scale::Paper, pf);
+        assert!(none > 1.2, "no LARC win to begin with: {none}");
+        assert!(
+            stream * 1.1 < none,
+            "stream prefetch did not shrink the LARC win: {none} -> {stream}"
+        );
+        // and the prefetcher genuinely helped the small-cache machine
+        let a_none = cachesim::simulate(&spec, &configs::a64fx_s(), 1).runtime_s;
+        let a_pf =
+            cachesim::simulate(&spec, &configs::a64fx_s().with_prefetch(pf), 1).runtime_s;
+        assert!(a_pf < a_none, "a64fx did not speed up: {a_none} -> {a_pf}");
+    }
+
+    #[test]
+    fn pointer_chases_keep_their_larc_win_under_prefetch() {
+        // mcf's random chase is unpredictable: neither stride nor stream
+        // prefetch should move its LARC speedup by more than noise
+        let (none, stream) = speedup_pair(
+            "mcf",
+            Scale::Small,
+            Prefetcher::Stream { streams: 8, degree: 4 },
+        );
+        assert!(none > 1.2, "no LARC win to begin with: {none}");
+        let ratio = stream / none;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "chase speedup moved under stream prefetch: {none} -> {stream}"
+        );
+    }
+
+    #[test]
+    fn driver_routes_through_the_store_and_resumes_byte_identically() {
+        let dir = std::env::temp_dir().join("larc_store_figprefetch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: Scale::Tiny,
+            store: Some(dir.clone()),
+            resume: true,
+            ..ExpOptions::default()
+        };
+        let first = run(&opts).unwrap();
+        assert_eq!(first.len(), WORKLOADS.len() * prefetchers().len());
+        // resumed run is served from the store and renders identically
+        let second = run(&opts).unwrap();
+        assert_eq!(first.render(), second.render());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

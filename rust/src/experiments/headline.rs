@@ -10,6 +10,7 @@ use crate::coordinator::report::Report;
 use crate::model::projection;
 use crate::util::csv;
 
+/// Run the headline projection (gem5 matrix + §6.1 chip scaling).
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
     let rows = matrix::run(opts)?;
 

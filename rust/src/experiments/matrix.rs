@@ -12,7 +12,9 @@ use super::ExpOptions;
 /// Per-workload row of the four-config matrix.
 #[derive(Clone, Debug)]
 pub struct MatrixRow {
+    /// Workload name.
     pub name: String,
+    /// Suite label.
     pub suite: &'static str,
     /// Runtimes (s): [a64fx_s, a64fx_32, larc_c, larc_a].
     pub runtime_s: [f64; 4],
@@ -23,6 +25,7 @@ pub struct MatrixRow {
 }
 
 impl MatrixRow {
+    /// Best LARC-vs-A64FX speedup across the swept variants.
     pub fn best_larc_speedup(&self) -> f64 {
         self.speedup[1].max(self.speedup[2])
     }

@@ -14,6 +14,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod figprefetch;
 pub mod headline;
 pub mod matrix;
 pub mod table2;
@@ -89,15 +90,27 @@ pub fn run_campaign(c: &Campaign, opts: &ExpOptions) -> anyhow::Result<Vec<JobOu
 }
 
 /// Experiment registry for the CLI.
-pub const EXPERIMENTS: [&str; 12] = [
-    "fig1", "fig2", "fig5", "fig6", "fig7a", "fig7b", "fig8", "fig9", "table2", "table3",
-    "headline", "model",
+pub const EXPERIMENTS: [&str; 13] = [
+    "fig1",
+    "fig2",
+    "fig5",
+    "fig6",
+    "fig7a",
+    "fig7b",
+    "fig8",
+    "fig9",
+    "fig-prefetch",
+    "table2",
+    "table3",
+    "headline",
+    "model",
 ];
 
 /// Experiments whose simulation jobs route through the result store.
 /// The rest are closed-form or call the simulators directly and ignore
 /// `--store` / `--resume`.
-pub const STORE_BACKED: [&str; 6] = ["fig1", "fig7a", "fig7b", "fig8", "fig9", "headline"];
+pub const STORE_BACKED: [&str; 7] =
+    ["fig1", "fig7a", "fig7b", "fig8", "fig9", "fig-prefetch", "headline"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
@@ -113,6 +126,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
         "fig7b" => Ok(vec![fig7::run_7b(opts)?]),
         "fig8" => Ok(vec![fig8::run(opts)?]),
         "fig9" => Ok(vec![fig9::run(opts)?]),
+        "fig-prefetch" => Ok(vec![figprefetch::run(opts)?]),
         "table2" => Ok(vec![table2::run()]),
         "table3" => Ok(vec![table3::run(opts)?]),
         "headline" => headline::run(opts),

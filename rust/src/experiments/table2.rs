@@ -6,6 +6,7 @@ use crate::coordinator::report::Report;
 use crate::util::csv;
 use crate::util::units::fmt_bytes;
 
+/// Emit Table 2 (simulated machine configurations).
 pub fn run() -> Report {
     let mut report = Report::new(
         "table2",

@@ -22,6 +22,7 @@ pub const PROXIES: [&str; 6] = [
     "xsbench",
 ];
 
+/// Run Table 3 (cache statistics per workload).
 pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
     let cfgs = configs::table2_configs();
     let mut report = Report::new(

@@ -6,6 +6,7 @@ use crate::model;
 use crate::util::csv;
 use crate::util::units::fmt_bytes;
 
+/// Emit the §2 analytical model tables.
 pub fn run() -> Vec<Report> {
     let cmg = model::larc_cmg();
     let cache = model::stacked_cache();

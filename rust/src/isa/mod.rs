@@ -50,6 +50,7 @@ pub enum InstrClass {
     Nop = 15,
 }
 
+/// Every instruction class, in vector order.
 pub const ALL_CLASSES: [InstrClass; NUM_CLASSES] = [
     InstrClass::IntAlu,
     InstrClass::IntMul,
@@ -72,10 +73,12 @@ pub const ALL_CLASSES: [InstrClass; NUM_CLASSES] = [
 /// Per-class instruction counts of one basic block ("instruction mix").
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct InstrMix {
+    /// Weighted count per instruction class (vector order).
     pub counts: [f32; NUM_CLASSES],
 }
 
 impl InstrMix {
+    /// Empty mix.
     pub fn new() -> Self {
         Self::default()
     }
@@ -86,10 +89,12 @@ impl InstrMix {
         self
     }
 
+    /// Add `n` instructions of class `c`.
     pub fn add(&mut self, c: InstrClass, n: f32) {
         self.counts[c as usize] += n;
     }
 
+    /// Count of class `c`.
     pub fn get(&self, c: InstrClass) -> f32 {
         self.counts[c as usize]
     }
@@ -141,6 +146,7 @@ pub struct BasicBlock {
 }
 
 impl BasicBlock {
+    /// Block with `mix`, exploitable ILP `ilp`, and loop flag.
     pub fn new(id: u32, label: &str, mix: InstrMix, ilp: f32, looping: bool) -> Self {
         assert!(ilp >= 1.0, "ilp must be >= 1.0, got {ilp}");
         BasicBlock {

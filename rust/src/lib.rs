@@ -4,18 +4,78 @@
 //! Effects of Copious 3D-Stacked Cache on HPC Workloads"* (Domke, Vatai,
 //! et al., 2022) as a three-layer Rust + JAX + Pallas system.
 //!
-//! Layer map:
+//! Layer map (the repo-level view, with diagrams, is
+//! `docs/ARCHITECTURE.md`):
 //!
 //! * **L3 (this crate)** — the simulation campaign coordinator plus every
 //!   substrate the paper depends on: a cycle-approximate multicore cache
-//!   simulator ([`cachesim`], the gem5 substitute), the MCA upper-bound
-//!   pipeline ([`mca`], the SDE + llvm-mca/IACA/uiCA/OSACA substitute), a
-//!   workload library ([`trace`], the proxy-app suite substitute), the
-//!   analytical LARC hardware model ([`model`], §2 of the paper), and the
-//!   experiment drivers ([`experiments`], one per paper figure/table).
+//!   simulator ([`cachesim`], the gem5 substitute — generic N-level
+//!   hierarchies, MESI-lite coherence, pluggable replacement and
+//!   hardware prefetch), the MCA upper-bound pipeline ([`mca`], the
+//!   SDE + llvm-mca/IACA/uiCA/OSACA substitute), a workload library
+//!   ([`trace`], the proxy-app suite substitute), the analytical LARC
+//!   hardware model ([`model`], §2 of the paper), and the experiment
+//!   drivers ([`experiments`], one per paper figure/table).
 //! * **L2/L1 (python, build-time only)** — the batched MCA cost model and
 //!   figure-of-merit kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed through [`runtime`] (PJRT CPU client) on the hot path.
+//!
+//! ## Worked example: define a workload, simulate it
+//!
+//! A workload is one [`trace::Spec`] — phases of access patterns plus
+//! the instruction mix executed per 256-byte chunk — and
+//! [`cachesim::simulate`] runs it on a named machine config:
+//!
+//! ```
+//! use larc::cachesim::{self, configs};
+//! use larc::isa::{InstrClass, InstrMix};
+//! use larc::trace::patterns::Pattern;
+//! use larc::trace::{BoundClass, Phase, Spec, Suite};
+//!
+//! // a small STREAM-triad-like kernel: 3 streams, one write in three
+//! let spec = Spec {
+//!     name: "triad".into(),
+//!     suite: Suite::Top500,
+//!     class: BoundClass::Bandwidth,
+//!     threads: 4,
+//!     max_threads: usize::MAX,
+//!     ranks: 1,
+//!     phases: vec![Phase {
+//!         label: "triad",
+//!         pattern: Pattern::Stream {
+//!             bytes: 256 * 1024,
+//!             passes: 2,
+//!             streams: 3,
+//!             write_fraction: 1.0 / 3.0,
+//!         },
+//!         mix: InstrMix::new()
+//!             .with(InstrClass::VecFma, 2.0)
+//!             .with(InstrClass::Load, 2.0)
+//!             .with(InstrClass::Store, 1.0),
+//!         ilp: 8.0,
+//!     }],
+//! };
+//!
+//! // run it on the simulated A64FX CMG and the 256 MiB LARC variant
+//! let a64fx = cachesim::simulate(&spec, &configs::a64fx_s(), 4);
+//! let larc = cachesim::simulate(&spec, &configs::larc_c(), 4);
+//! assert!(a64fx.cycles > 0.0);
+//! assert!(a64fx.stats.l1_hits + a64fx.stats.l1_misses > 0);
+//! // the working set fits both L2s, so the big cache buys ~nothing here
+//! assert!(larc.runtime_s <= a64fx.runtime_s * 1.05);
+//! ```
+//!
+//! The same `Spec` feeds the MCA pipeline ([`mca::estimate_runtime`]),
+//! which is what keeps the two simulation pipelines comparable — they
+//! differ exactly by memory-system modelling.
+//!
+//! ## Documentation policy
+//!
+//! `missing_docs` is enforced for every public item, under `cfg(doc)` so
+//! the enforcement point is the CI docs gate
+//! (`RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`) rather than every
+//! incremental `cargo check`.
+#![cfg_attr(doc, warn(missing_docs))]
 
 pub mod benchsuite;
 pub mod cachesim;

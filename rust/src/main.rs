@@ -140,6 +140,14 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             cfg.name = format!("{}_l{n}", cfg.name);
         }
     }
+    if let Some(pf_spec) = cli.flag("prefetch") {
+        cfg = if pf_spec == "default" {
+            configs::prefetched(cfg)
+        } else {
+            let pf = larc::cachesim::Prefetcher::parse(pf_spec).map_err(|e| anyhow!(e))?;
+            cfg.with_prefetch(pf)
+        };
+    }
     let threads = cli
         .usize_flag("threads", spec.effective_threads(cfg.cores))
         .map_err(|e| anyhow!(e))?;
@@ -171,6 +179,13 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         fmt_bytes(r.stats.dram_bytes),
         r.dram_bw_gbs(&cfg)
     );
+    if cfg.has_prefetcher() {
+        let s = &r.stats;
+        println!(
+            "prefetch : {} issued, {} useful ({} late), {} pollution",
+            s.prefetch_issued, s.prefetch_useful, s.prefetch_late, s.prefetch_pollution
+        );
+    }
     Ok(())
 }
 

@@ -27,6 +27,7 @@ pub enum Analyzer {
     Smoothed,
 }
 
+/// All four analyzer models, in the paper's order.
 pub const ALL_ANALYZERS: [Analyzer; 4] = [
     Analyzer::PortPressure,
     Analyzer::DepChain,
@@ -96,6 +97,7 @@ pub fn smoothed(block: &BasicBlock, m: &PortModel) -> f32 {
     port + 0.15 * chain
 }
 
+/// Price `block` with one analyzer: cycles per loop iteration.
 pub fn run(analyzer: Analyzer, block: &BasicBlock, m: &PortModel) -> f32 {
     match analyzer {
         Analyzer::PortPressure => port_pressure_native(block, m),

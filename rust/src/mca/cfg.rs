@@ -11,19 +11,25 @@ use crate::isa::BasicBlock;
 /// One CFG edge: `from` jumped to `to` exactly `calls` times.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Edge {
+    /// Source block id.
     pub from: u32,
+    /// Destination block id.
     pub to: u32,
+    /// Traversal count (the Eq. 1 weight).
     pub calls: u64,
 }
 
 /// Weighted control-flow graph of one instruction stream (thread).
 #[derive(Clone, Debug, Default)]
 pub struct Cfg {
+    /// Basic blocks, indexed by id.
     pub blocks: Vec<BasicBlock>,
+    /// Weighted edges.
     pub edges: Vec<Edge>,
 }
 
 impl Cfg {
+    /// Empty CFG.
     pub fn new() -> Self {
         Self::default()
     }
@@ -36,12 +42,14 @@ impl Cfg {
         id
     }
 
+    /// Add an edge traversed `calls` times.
     pub fn add_edge(&mut self, from: u32, to: u32, calls: u64) {
         assert!((from as usize) < self.blocks.len(), "bad from");
         assert!((to as usize) < self.blocks.len(), "bad to");
         self.edges.push(Edge { from, to, calls });
     }
 
+    /// Block by id (panics when out of range).
     pub fn block(&self, id: u32) -> &BasicBlock {
         &self.blocks[id as usize]
     }

@@ -17,6 +17,7 @@ use crate::trace::Spec;
 /// Result of an MCA estimation run.
 #[derive(Clone, Debug)]
 pub struct McaEstimate {
+    /// Workload name.
     pub workload: String,
     /// Estimated cycles of the slowest (rank, thread).
     pub cycles: f64,

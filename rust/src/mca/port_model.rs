@@ -22,6 +22,7 @@ pub enum PortArch {
 /// Port pressure matrix + latency vector for one microarchitecture.
 #[derive(Clone, Debug)]
 pub struct PortModel {
+    /// Which architecture's port tables this model carries.
     pub arch: PortArch,
     /// `ports[c][p]`: cycles of pressure a class-`c` instruction puts on
     /// port `p` (reciprocal-throughput style).
@@ -35,6 +36,7 @@ pub struct PortModel {
 }
 
 impl PortModel {
+    /// The port model of `arch` (static tables).
     pub fn get(arch: PortArch) -> PortModel {
         match arch {
             PortArch::BroadwellLike => broadwell_like(),
@@ -53,6 +55,7 @@ impl PortModel {
         v
     }
 
+    /// Per-class latency row in the layout the PJRT kernels expect.
     pub fn lat_vec(&self) -> Vec<f32> {
         self.lat.to_vec()
     }

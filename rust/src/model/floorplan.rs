@@ -10,14 +10,21 @@
 /// Baseline A64FX CMG geometry (measured from die shots, §2.2).
 #[derive(Clone, Copy, Debug)]
 pub struct A64fxCmg {
+    /// Die area in mm^2.
     pub die_mm2: f64,
+    /// One CMG's area in mm^2.
     pub cmg_mm2: f64,
+    /// One core's area in mm^2.
     pub core_mm2: f64,
+    /// Cores per chip.
     pub cores: u32,
+    /// CMGs per chip.
     pub cmgs: u32,
+    /// Shared L2 capacity per CMG in MiB.
     pub l2_mib: u64,
 }
 
+/// The measured A64FX floorplan (paper §2.2).
 pub fn a64fx_cmg() -> A64fxCmg {
     A64fxCmg {
         die_mm2: 400.0,
@@ -36,8 +43,11 @@ pub struct LarcCmg {
     pub shrink: f64,
     /// CMG area after shrink + core-count doubling (mm²).
     pub cmg_mm2: f64,
+    /// Cores per LARC CMG.
     pub cores_per_cmg: u32,
+    /// CMGs per LARC chip.
     pub cmgs: u32,
+    /// Cores per LARC chip.
     pub total_cores: u32,
     /// Per-CMG double-precision peak (Tflop/s) at A64FX per-core rate.
     pub cmg_tflops: f64,
@@ -48,6 +58,7 @@ pub struct LarcCmg {
 /// Per-core A64FX FP64 peak: 70.4 Gflop/s (512-bit SVE × 2 pipes × 2.2 GHz).
 pub const GFLOPS_PER_CORE: f64 = 70.4;
 
+/// The projected LARC floorplan (paper §2.3).
 pub fn larc_cmg() -> LarcCmg {
     let base = a64fx_cmg();
     // ~1.7x linear shrink per generation over 4 generations ≈ 8x area

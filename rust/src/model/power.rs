@@ -11,14 +11,23 @@
 /// Full power breakdown of the hypothetical LARC chip.
 #[derive(Clone, Copy, Debug)]
 pub struct LarcPower {
+    /// Per-core power at 7 nm (W).
     pub watts_per_core_7nm: f64,
+    /// Per-memory-interface power at 7 nm (W).
     pub watts_per_mif_7nm: f64,
+    /// One CMG at 7 nm (W).
     pub cmg_7nm_w: f64,
+    /// One CMG scaled to 5 nm (W).
     pub cmg_5nm_w: f64,
+    /// One CMG scaled to 1.5 nm (W).
     pub cmg_1_5nm_w: f64,
+    /// All-core power per chip (W).
     pub chip_cores_w: f64,
+    /// Static power of the stacked cache (W).
     pub cache_static_w: f64,
+    /// Total power of the stacked cache (W).
     pub cache_total_w: f64,
+    /// Projected chip TDP (W).
     pub tdp_w: f64,
     /// Stream-Triad-adjusted realistic draw.
     pub stream_w: f64,
@@ -26,6 +35,7 @@ pub struct LarcPower {
     pub density_w_mm2: f64,
 }
 
+/// The §2.6 LARC power/thermal estimate.
 pub fn larc_power() -> LarcPower {
     // §2.6 constants
     let core_w = 95.0 / 48.0; // 1.979 W/core (48 user cores)

@@ -11,6 +11,7 @@ use crate::util::stats;
 
 /// CMG counts per chip.
 pub const A64FX_CMGS_PER_CHIP: f64 = 4.0;
+/// CMGs per projected LARC chip (§6.1).
 pub const LARC_CMGS_PER_CHIP: f64 = 16.0;
 
 /// Chip-level speedup from a CMG-level speedup under ideal scaling.
@@ -29,11 +30,17 @@ pub fn cache_responsive(a64fx32_speedup: f64, larc_c_speedup: f64, larc_a_speedu
 /// Summary of the §6.1 projection over a set of per-workload CMG speedups.
 #[derive(Clone, Debug)]
 pub struct Projection {
+    /// Workloads projected.
     pub n_total: usize,
+    /// Workloads with a meaningful (>5%) chip-level speedup.
     pub n_responsive: usize,
+    /// Per-workload (name, chip speedup) pairs.
     pub chip_speedups: Vec<(String, f64)>,
+    /// Geometric-mean chip speedup.
     pub gm: f64,
+    /// Minimum chip speedup.
     pub min: f64,
+    /// Maximum chip speedup.
     pub max: f64,
 }
 

@@ -13,13 +13,19 @@ use crate::util::units::MIB;
 /// Parameters + derived capacity/bandwidth of a stacked SRAM cache.
 #[derive(Clone, Copy, Debug)]
 pub struct StackedCache {
+    /// Stacked SRAM dies.
     pub n_dies: u32,
+    /// Channels per die.
     pub n_channels: u32,
+    /// Capacity per channel in KiB.
     pub channel_cap_kib: u32,
+    /// Bus width per channel in bytes.
     pub channel_width_bytes: u32,
+    /// Cache clock in GHz.
     pub f_clk_ghz: f64,
     /// Tag bytes per 256 B block.
     pub tag_bytes: u32,
+    /// Transfer block size in bytes.
     pub block_bytes: u32,
 }
 

@@ -29,7 +29,9 @@ pub struct ManifestEntry {
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Manifest rows, as listed in manifest.json.
     pub entries: Vec<ManifestEntry>,
 }
 
@@ -114,6 +116,7 @@ impl Manifest {
             .or_else(|| sizes.last().copied())
     }
 
+    /// Absolute path of an entry's HLO file.
     pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
         self.dir.join(&e.file)
     }

@@ -27,6 +27,7 @@ mod backend {
 
     /// One compiled executable.
     pub struct PjrtModel {
+        /// Model name (manifest entry).
         pub name: String,
         exe: xla::PjRtLoadedExecutable,
     }
@@ -75,6 +76,7 @@ mod backend {
             Self::with_dir(&Manifest::default_dir())
         }
 
+        /// Load a runtime from an explicit artifacts directory.
         pub fn with_dir(dir: &Path) -> Result<Runtime> {
             let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
             let manifest = Manifest::load(dir)?;
@@ -85,6 +87,7 @@ mod backend {
             })
         }
 
+        /// The loaded artifact manifest.
         pub fn manifest(&self) -> &Manifest {
             &self.manifest
         }
@@ -153,10 +156,12 @@ mod backend {
     /// Stub executable handle (never constructed; the stub `Runtime`
     /// cannot be created).
     pub struct PjrtModel {
+        /// Model name (manifest entry).
         pub name: String,
     }
 
     impl PjrtModel {
+        /// Stub executor: always errors (build with `pjrt-backend`).
         pub fn run_f32(&self, _args: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
             bail!("{UNAVAILABLE}")
         }
@@ -170,23 +175,28 @@ mod backend {
     }
 
     impl Runtime {
+        /// Stub constructor: always errors (build with `pjrt-backend`).
         pub fn new() -> Result<Runtime> {
             Self::with_dir(&Manifest::default_dir())
         }
 
+        /// Stub constructor: always errors (build with `pjrt-backend`).
         pub fn with_dir(dir: &Path) -> Result<Runtime> {
             let _ = Manifest::load(dir)?;
             bail!("{UNAVAILABLE}")
         }
 
+        /// The loaded artifact manifest.
         pub fn manifest(&self) -> &Manifest {
             &self.manifest
         }
 
+        /// Look up a compiled model by name.
         pub fn model(&self, name: &str) -> Result<std::sync::Arc<PjrtModel>> {
             bail!("{UNAVAILABLE}: cannot compile artifact {name:?}")
         }
 
+        /// Look up the executable matching a batch size.
         pub fn model_for_batch(&self, entry: &str, _n: usize) -> Result<std::sync::Arc<PjrtModel>> {
             bail!("{UNAVAILABLE}: cannot compile entry {entry:?}")
         }

@@ -49,6 +49,7 @@ pub struct Access {
     pub phase: u8,
 }
 
+/// Boxed per-thread access stream (the reference-path form).
 pub type AccessIter = Box<dyn Iterator<Item = Access> + Send>;
 
 /// Accesses delivered per [`SpecStream::refill`] call — sized so a batch
@@ -87,17 +88,26 @@ impl SpecStream {
 /// Benchmark suite, for per-suite panels (paper Figs. 6 and 9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Suite {
+    /// PolyBench/C kernels.
     PolyBench,
+    /// NAS Parallel Benchmarks.
     Npb,
+    /// TOP500-style HPL/HPCG proxies.
     Top500,
+    /// ECP proxy apps.
     Ecp,
+    /// RIKEN TAPP kernels.
     Tapp,
+    /// RIKEN Fiber miniapps.
     Fiber,
+    /// SPEC CPU 2017.
     SpecCpu,
+    /// SPEC OMP 2012.
     SpecOmp,
 }
 
 impl Suite {
+    /// Lowercase suite label for reports.
     pub fn label(&self) -> &'static str {
         match self {
             Suite::PolyBench => "polybench",
@@ -117,10 +127,15 @@ impl Suite {
 /// speed up much from cache).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BoundClass {
+    /// Dominated by arithmetic throughput.
     Compute,
+    /// Dominated by memory bandwidth.
     Bandwidth,
+    /// Dominated by memory latency (serialized misses).
     Latency,
+    /// Working set fits in cache; little memory sensitivity.
     CacheFit,
+    /// No single dominating resource.
     Mixed,
 }
 
@@ -131,8 +146,11 @@ pub enum BoundClass {
 /// for the default campaign; `Tiny` is for unit tests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
+    /// Unit-test inputs (~1/64 of the paper footprints).
     Tiny,
+    /// Default campaign inputs (~1/4).
     Small,
+    /// The paper's input sizes.
     Paper,
 }
 
@@ -151,7 +169,9 @@ impl Scale {
 /// executed per chunk of that pattern.
 #[derive(Clone, Debug)]
 pub struct Phase {
+    /// Phase label (report rows, MCA block names).
     pub label: &'static str,
+    /// Access pattern generating the phase's traffic.
     pub pattern: Pattern,
     /// Instructions executed per CHUNK of traffic in this phase.
     pub mix: InstrMix,
@@ -162,8 +182,11 @@ pub struct Phase {
 /// Full description of one workload.
 #[derive(Clone, Debug)]
 pub struct Spec {
+    /// Workload name (CLI lookup key).
     pub name: String,
+    /// Originating benchmark suite.
     pub suite: Suite,
+    /// Expected performance class.
     pub class: BoundClass,
     /// Natural (paper) thread count.
     pub threads: usize,
@@ -171,6 +194,7 @@ pub struct Spec {
     pub max_threads: usize,
     /// MPI ranks (Eq. 1 takes the max over ranks; >1 adds imbalance jitter).
     pub ranks: usize,
+    /// Execution phases, in program order.
     pub phases: Vec<Phase>,
 }
 

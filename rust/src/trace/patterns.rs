@@ -398,12 +398,19 @@ impl Pattern {
 /// are plain counted loops the compiler can unroll.
 #[derive(Clone, Debug)]
 pub enum AccessGen {
+    /// State machine for [`Pattern::Stream`].
     Stream(StreamGen),
+    /// State machine for [`Pattern::Strided`].
     Strided(StridedGen),
+    /// State machine for [`Pattern::RandomLookup`].
     Random(RandomGen),
+    /// State machine for [`Pattern::Stencil3d`].
     Stencil(StencilGen),
+    /// State machine for [`Pattern::BlockedGemm`].
     Gemm(GemmGen),
+    /// State machine for [`Pattern::CsrSpmv`].
     Spmv(SpmvGen),
+    /// State machine for [`Pattern::Butterfly`].
     Butterfly(ButterflyGen),
 }
 

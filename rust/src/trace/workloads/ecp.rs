@@ -23,6 +23,7 @@ fn ecp(name: &str, class: BoundClass, threads: usize, phases: Vec<Phase>) -> Spe
     }
 }
 
+/// ECP proxy-app specs at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     vec![
         amg(scale),

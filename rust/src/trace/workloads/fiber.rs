@@ -22,6 +22,7 @@ fn fiber(name: &str, class: BoundClass, threads: usize, ranks: usize, phases: Ve
     }
 }
 
+/// RIKEN Fiber miniapp specs at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     let (stream_mix, stream_ilp) = mixes::stream();
     let (stencil_mix, stencil_ilp) = mixes::stencil();

@@ -101,6 +101,7 @@ fn sweep3d_phases(scale: Scale, sweeps: u32) -> Vec<Phase> {
     }]
 }
 
+/// NPB specs (OpenMP and MPI variants) at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     let mut v = Vec::new();
 

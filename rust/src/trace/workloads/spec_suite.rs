@@ -107,6 +107,7 @@ fn compute_phase(label: &'static str, mib: u64, passes: u32, scale: Scale) -> Ph
     }
 }
 
+/// SPEC CPU 2017 and SPEC OMP specs at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     let mut v = Vec::new();
 

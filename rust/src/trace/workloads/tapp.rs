@@ -39,6 +39,7 @@ fn private_stream(bytes_per_thread: u64, passes: u32) -> Pattern {
     }
 }
 
+/// RIKEN TAPP kernel specs at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     let (stream_mix, stream_ilp) = mixes::stream();
     let (stencil_mix, stencil_ilp) = mixes::stencil();

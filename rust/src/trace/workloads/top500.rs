@@ -12,6 +12,7 @@ use crate::trace::patterns::Pattern;
 use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
 use crate::util::units::{GIB, MIB};
 
+/// TOP500-proxy specs at `scale`.
 pub fn workloads(scale: Scale) -> Vec<Spec> {
     vec![hpl(scale), hpcg(scale), babelstream(scale), dlproxy(scale)]
 }

@@ -11,15 +11,20 @@ use crate::util::stats;
 /// One benchmark result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Median wall-clock seconds per iteration.
     pub median_s: f64,
+    /// Median absolute deviation of the timings.
     pub mad_s: f64,
+    /// Timed iterations.
     pub iters: usize,
     /// Optional items-per-second figure (items supplied by the caller).
     pub throughput: Option<(f64, &'static str)>,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         let mut line = format!(
             "{:<44} {:>12} +- {:<10} ({} iters)",

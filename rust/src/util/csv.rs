@@ -12,6 +12,7 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Empty CSV with the given header.
     pub fn new(header: &[&str]) -> Self {
         Csv {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -19,6 +20,7 @@ impl Csv {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(
             cells.len(),
@@ -30,14 +32,17 @@ impl Csv {
         self.rows.push(cells.to_vec());
     }
 
+    /// Number of data rows.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// Whether there are no data rows.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Write the CSV to `path`.
     pub fn write_to(&self, path: &Path) -> io::Result<()> {
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;

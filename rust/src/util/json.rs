@@ -8,16 +8,24 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Clone, Debug, PartialEq)]
+/// Parsed JSON value (hand-rolled; the vendor set has no serde).
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Number (all JSON numbers read as f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys, so output is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -25,6 +33,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -32,10 +41,12 @@ impl Json {
         }
     }
 
+    /// The numeric value as usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Object field by key, if this is an object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -43,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -50,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -129,14 +142,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number value.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String value.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Array value.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

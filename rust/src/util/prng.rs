@@ -22,6 +22,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (splitmix64-expanded state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -32,6 +33,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

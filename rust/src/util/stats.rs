@@ -80,10 +80,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Minimum of `xs`.
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum of `xs`.
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }

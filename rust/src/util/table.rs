@@ -8,6 +8,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given header.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -15,11 +16,13 @@ impl Table {
         }
     }
 
+    /// Append one row.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Render as aligned plain text.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

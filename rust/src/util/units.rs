@@ -1,12 +1,16 @@
 //! Byte / bandwidth / frequency units and formatting.
 
+/// Bytes per KiB.
 pub const KIB: u64 = 1024;
+/// Bytes per MiB.
 pub const MIB: u64 = 1024 * KIB;
+/// Bytes per GiB.
 pub const GIB: u64 = 1024 * MIB;
 
 /// 1 GB/s in bytes per second (decimal, matching the paper's GB/s).
 pub const GB: f64 = 1e9;
 
+/// Human-readable byte count (B/KiB/MiB/GiB).
 pub fn fmt_bytes(b: u64) -> String {
     if b >= GIB && b % GIB == 0 {
         format!("{} GiB", b / GIB)
@@ -19,6 +23,7 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// Human-readable bandwidth.
 pub fn fmt_bw(bytes_per_sec: f64) -> String {
     if bytes_per_sec >= 1e12 {
         format!("{:.1} TB/s", bytes_per_sec / 1e12)
@@ -29,6 +34,7 @@ pub fn fmt_bw(bytes_per_sec: f64) -> String {
     }
 }
 
+/// Human-readable duration.
 pub fn fmt_seconds(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.2} s")

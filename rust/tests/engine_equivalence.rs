@@ -1039,6 +1039,49 @@ fn engines_bit_identical_on_write_heavy_shared() {
     }
 }
 
+// ------------------------------------------- prefetch-subsystem gate
+
+#[test]
+fn gate_configs_carry_no_prefetcher() {
+    // every machine the golden comparisons run is a Prefetcher::None
+    // machine — which is exactly what makes them the acceptance gate of
+    // the prefetch subsystem's "None is bit-identical" contract
+    for cfg in two_and_three_level_machines() {
+        assert!(
+            !cfg.has_prefetcher(),
+            "{}: golden gate no longer covers the None path",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn explicit_prefetcher_none_matches_the_reference_engine() {
+    use larc::cachesim::Prefetcher;
+    // Prefetcher::None — default *or* explicitly applied via
+    // with_prefetch — must be the pre-prefetch engine, bit for bit
+    for cfg in two_and_three_level_machines() {
+        let stripped = cfg.with_prefetch(Prefetcher::None);
+        assert_engines_identical(&stream_spec(2 * MIB, 2), &stripped, 4);
+        assert_engines_identical(&mixed_spec(), &stripped, 4);
+    }
+}
+
+#[test]
+fn prefetch_enabled_configs_diverge_from_the_reference() {
+    use larc::cachesim::Prefetcher;
+    // sanity for the gate itself: a stream prefetcher must change the
+    // timing relative to the golden (prefetch-less) engine — otherwise
+    // the None-equivalence tests above would be vacuous
+    let cfg = configs::a64fx_s().with_prefetch(Prefetcher::Stream { streams: 8, degree: 4 });
+    let spec = stream_spec(12 * MIB, 1);
+    let (ref_cycles, ref_stats) = ref_simulate(&spec, &cfg, 1);
+    let r = cachesim::simulate(&spec, &cfg, 1);
+    assert_eq!(ref_stats.prefetch_issued, 0, "the golden engine cannot prefetch");
+    assert!(r.stats.prefetch_issued > 0, "prefetcher never fired");
+    assert_ne!(ref_cycles.to_bits(), r.cycles.to_bits());
+}
+
 // ------------------------------------------------ cache-level golden gate
 
 /// Drive the SoA cache and the AoS reference with one random op trace
@@ -1058,9 +1101,11 @@ fn soa_cache_matches_aos_reference_on_random_op_traces() {
                 let addr = rng.below(1 << 16);
                 match rng.below(10) {
                     0 => {
-                        let (p1, d1) = soa.invalidate(addr);
+                        // the third element (unclaimed-prefetch flag) is
+                        // always false here: no prefetch fills in this trace
+                        let (p1, d1, pf1) = soa.invalidate(addr);
                         let (p2, d2) = aos.invalidate(addr);
-                        if (p1, d1) != (p2, d2) {
+                        if (p1, d1) != (p2, d2) || pf1 {
                             return Err(format!("invalidate diverged at step {step}"));
                         }
                     }

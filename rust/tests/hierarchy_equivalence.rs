@@ -242,7 +242,7 @@ fn fetch_line(
                 if sharers != 0 {
                     for (o, l1o) in l1s.iter_mut().enumerate() {
                         if o != t && sharers & (1 << o) != 0 {
-                            let (present, _) = l1o.invalidate(line);
+                            let (present, _, _) = l1o.invalidate(line);
                             if present {
                                 stats.coherence_invalidations += 1;
                             }
@@ -262,7 +262,7 @@ fn fetch_line(
                         if ev.sharers & (1 << o) != 0 {
                             let mut a = ev.addr;
                             while a < ev.addr + l2_line {
-                                let (present, _) = l1o.invalidate(a);
+                                let (present, _, _) = l1o.invalidate(a);
                                 if present {
                                     stats.coherence_invalidations += 1;
                                 }

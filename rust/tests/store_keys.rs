@@ -1,24 +1,24 @@
-//! Store-key stability gate for the engine overhaul.
+//! Store-key stability gate.
 //!
 //! [`JobKey`]s are FNV-1a hashes over `v{SCHEMA_VERSION};...` canonical
 //! strings built from the `Debug` form of `Spec` and `MachineConfig`.
-//! The hot-path refactor (SoA cache, batched generators, LineRef
-//! threading) changes **no simulated semantics**, so it must not perturb
-//! keys: no `SCHEMA_VERSION` bump, no Debug-format drift — otherwise
-//! every `--resume` cache and every store entry in the wild silently
-//! invalidates.
+//! Any *unintended* Debug-format drift silently invalidates every
+//! `--resume` cache and every store entry in the wild, so the pins below
+//! freeze (a) the schema version, (b) the exact Debug strings of a
+//! representative spec and machine config (the canonical string's moving
+//! parts), and (c) the resulting key hex digits, cross-checked against
+//! an in-test reimplementation of the FNV-1a canonical hash.
 //!
-//! The pins below freeze (a) the schema version, (b) the exact Debug
-//! strings of a representative spec and machine config (the canonical
-//! string's moving parts), and (c) the resulting key hex digits,
-//! cross-checked against an in-test reimplementation of the FNV-1a
-//! canonical hash.  Any future change that knowingly alters simulation
-//! semantics should bump `SCHEMA_VERSION` and update these constants in
-//! the same commit — this test makes that an explicit decision instead
-//! of an accident.
+//! Any change that knowingly alters simulation semantics must bump
+//! `SCHEMA_VERSION` and update these constants in the same commit —
+//! this test makes that an explicit decision instead of an accident.
+//! The current pins date from the **v3** bump (the prefetch subsystem:
+//! `LevelConfig` grew a `prefetcher` field, `SimStats` grew the four
+//! `prefetch_*` counters); the v2 pins were `969fba0d3e439a58` /
+//! `720ce2ae2601aae6`, recorded here so the history stays auditable.
 
 use larc::cachesim::configs::{CacheParams, LevelConfig, MachineConfig, Scope};
-use larc::cachesim::ReplacementPolicy;
+use larc::cachesim::{Prefetcher, ReplacementPolicy};
 use larc::coordinator::campaign::Job;
 use larc::coordinator::store::{job_key, JobKey, SCHEMA_VERSION};
 use larc::isa::{InstrClass, InstrMix};
@@ -27,9 +27,10 @@ use larc::trace::patterns::Pattern;
 use larc::trace::{BoundClass, Phase, Spec, Suite};
 
 /// The store schema this engine generation writes.  Bumping it
-/// invalidates every existing store entry — the engine overhaul is
-/// bit-identical and must NOT do that.
-const PINNED_SCHEMA: u32 = 2;
+/// invalidates every existing store entry; the prefetch subsystem did so
+/// deliberately (v2 -> v3) because the canonical config string and the
+/// serialized stats layout both changed.
+const PINNED_SCHEMA: u32 = 3;
 
 /// Frozen `Debug` form of [`pin_spec`].
 const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latency, threads: 2, \
@@ -41,14 +42,14 @@ const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latenc
 const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, freq_ghz: 2.0, \
      levels: [LevelConfig { params: CacheParams { size: 4096, ways: 2, line_bytes: 64, \
      latency: 4.0, banks: 1, bank_bytes_per_cycle: 16.0 }, scope: Private, inclusive: false, \
-     policy: Lru }], dram_channels: 1, dram_bw_gbs: 64.0, dram_latency_cycles: 100.0, \
-     rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, adjacent_prefetch: false, \
-     port_arch: A64fxLike }";
+     policy: Lru, prefetcher: None }], dram_channels: 1, dram_bw_gbs: 64.0, \
+     dram_latency_cycles: 100.0, rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, \
+     adjacent_prefetch: false, port_arch: A64fxLike }";
 
-/// Frozen key of the pinned CacheSim job (pre-refactor value).
-const PINNED_SIM_KEY: &str = "969fba0d3e439a58";
-/// Frozen key of the pinned Mca job (pre-refactor value).
-const PINNED_MCA_KEY: &str = "720ce2ae2601aae6";
+/// Frozen key of the pinned CacheSim job (schema v3).
+const PINNED_SIM_KEY: &str = "044fd57562db917d";
+/// Frozen key of the pinned Mca job (schema v3).
+const PINNED_MCA_KEY: &str = "8732434b1dd14669";
 
 fn pin_spec() -> Spec {
     Spec {
@@ -88,6 +89,7 @@ fn pin_config() -> MachineConfig {
             scope: Scope::Private,
             inclusive: false,
             policy: ReplacementPolicy::Lru,
+            prefetcher: Prefetcher::None,
         }],
         dram_channels: 1,
         dram_bw_gbs: 64.0,
@@ -164,6 +166,18 @@ fn mca_job_key_is_frozen() {
     let canonical =
         format!("v{PINNED_SCHEMA};mca;arch=A64fxLike;freq=2.0;seed=7;{PINNED_SPEC_DEBUG}");
     assert_eq!(key, JobKey(fnv1a(canonical.as_bytes())));
+}
+
+#[test]
+fn prefetcher_field_participates_in_the_key() {
+    // a prefetch-enabled twin of the same machine must hash to a
+    // different cell — otherwise fig-prefetch sweeps would collide with
+    // baseline campaign entries in a shared store
+    let mut pf_cfg = pin_config();
+    pf_cfg.levels[0].prefetcher = Prefetcher::Stream { streams: 8, degree: 4 };
+    let base = Job::CacheSim { spec: pin_spec(), config: pin_config(), threads: 3 };
+    let pf = Job::CacheSim { spec: pin_spec(), config: pf_cfg, threads: 3 };
+    assert_ne!(job_key(&base), job_key(&pf));
 }
 
 #[test]
