@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use crate::cachesim::{self, configs, MachineConfig, Prefetcher};
 use crate::isa::{InstrClass, InstrMix};
 use crate::trace::patterns::Pattern;
-use crate::trace::{BoundClass, Phase, Spec, Suite};
+use crate::trace::{BoundClass, Phase, Placement, Spec, Suite};
 use crate::util::bench::{bench_unit, black_box, write_json, BenchResult};
 use crate::util::json;
 use crate::util::units::MIB;
@@ -195,6 +195,15 @@ pub fn hierarchy_cases() -> Vec<BenchCase> {
                 8,
             ),
             threads: 8,
+        },
+        // socket hot path: 4 coupled CMG walks + NUMA interleave + the
+        // socket directory (not yet in the committed baseline floors —
+        // the gate ignores baseline-less cases; re-baseline to arm it)
+        BenchCase {
+            name: "a64fx_sock_4cmg_interleave",
+            cfg: configs::a64fx_sock().with_placement(Placement::Interleave),
+            spec: stream(8 * MIB, 2, "sock", 16),
+            threads: 16,
         },
     ]
 }

@@ -76,20 +76,22 @@ impl SimResult {
     }
 }
 
-struct ThreadState {
+/// Per-thread scheduler state, shared by the single-CMG loop below and
+/// the socket loop in [`super::socket`].
+pub(crate) struct ThreadState {
     /// Batched access generator (no per-access virtual dispatch).
-    stream: SpecStream,
+    pub(crate) stream: SpecStream,
     /// Current batch of accesses, drained by position.
-    buf: Vec<Access>,
-    pos: usize,
-    cycle: f64,
-    last_completion: f64,
+    pub(crate) buf: Vec<Access>,
+    pub(crate) pos: usize,
+    pub(crate) cycle: f64,
+    pub(crate) last_completion: f64,
     /// Completion times of in-flight chunks (ring for the ROB window).
-    inflight: Vec<f64>,
-    inflight_head: usize,
+    pub(crate) inflight: Vec<f64>,
+    pub(crate) inflight_head: usize,
     /// Completion times of outstanding misses (MSHR bound).
-    outstanding: MissHeap,
-    finish: f64,
+    pub(crate) outstanding: MissHeap,
+    pub(crate) finish: f64,
 }
 
 /// Min-heap over outstanding-miss completion times, keyed on the IEEE
@@ -101,22 +103,22 @@ struct ThreadState {
 /// minimum, which is all the stall computation observes (equal values
 /// are interchangeable, keeping the result bit-identical to the scan).
 #[derive(Default)]
-struct MissHeap {
+pub(crate) struct MissHeap {
     h: Vec<u64>,
 }
 
 impl MissHeap {
-    fn with_capacity(n: usize) -> MissHeap {
+    pub(crate) fn with_capacity(n: usize) -> MissHeap {
         MissHeap { h: Vec::with_capacity(n) }
     }
 
     #[inline]
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.h.len()
     }
 
     #[inline]
-    fn push(&mut self, v: f64) {
+    pub(crate) fn push(&mut self, v: f64) {
         debug_assert!(v >= 0.0 && v.is_finite());
         let mut i = self.h.len();
         self.h.push(v.to_bits());
@@ -132,7 +134,7 @@ impl MissHeap {
 
     /// Remove and return the earliest completion (heap must be non-empty).
     #[inline]
-    fn pop_min(&mut self) -> f64 {
+    pub(crate) fn pop_min(&mut self) -> f64 {
         let min = self.h[0];
         let last = self.h.pop().unwrap();
         if !self.h.is_empty() {
@@ -159,23 +161,20 @@ impl MissHeap {
     }
 }
 
-/// Per-phase derived costs.
-struct PhaseCost {
+/// Per-phase derived costs, shared with the socket loop.
+pub(crate) struct PhaseCost {
     /// Compute cycles per chunk (port-pressure price of the phase mix).
-    gap: f64,
+    pub(crate) gap: f64,
     /// ROB window in chunks.
-    window: usize,
+    pub(crate) window: usize,
 }
 
-/// Simulate `spec` on `cfg` with `threads` threads. Single-OS-thread
-/// implementation (the host has one core; determinism is a feature).
-pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
-    let threads = threads.max(1).min(cfg.cores).min(64);
+/// Per-phase compute gap + ROB window for `spec` at `threads`
+/// (`spec.blocks(threads)[0]` is the prologue and carries no phase).
+/// One derivation shared by the single-CMG and socket scheduler loops.
+pub(crate) fn phase_costs(spec: &Spec, cfg: &MachineConfig, threads: usize) -> Vec<PhaseCost> {
     let pm = PortModel::get(cfg.port_arch);
-    let blocks = spec.blocks(threads);
-
-    // Per-phase compute gap + ROB window (blocks[0] is the prologue).
-    let phase_costs: Vec<PhaseCost> = blocks
+    spec.blocks(threads)
         .iter()
         .skip(1)
         .map(|(bb, _)| {
@@ -184,7 +183,24 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
             let window = ((cfg.rob_entries as f32 / instr).floor() as usize).max(1);
             PhaseCost { gap, window }
         })
-        .collect();
+        .collect()
+}
+
+/// Simulate `spec` on `cfg` with `threads` threads. Single-OS-thread
+/// implementation (the host has one core; determinism is a feature).
+///
+/// Multi-CMG sockets (`cfg.cmgs > 1`) dispatch to
+/// [`super::socket::simulate_socket`]; everything below is the
+/// single-CMG path, pinned bit-identical to the pre-socket engine by
+/// `tests/engine_equivalence.rs`.
+pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
+    if cfg.cmgs > 1 {
+        return super::socket::simulate_socket(spec, cfg, threads);
+    }
+    let threads = threads.max(1).min(cfg.cores).min(64);
+
+    // Per-phase compute gap + ROB window (blocks[0] is the prologue).
+    let phase_costs: Vec<PhaseCost> = phase_costs(spec, cfg, threads);
 
     let mut hier = Hierarchy::new(cfg, threads);
     let mut dram = Dram::new(

@@ -15,6 +15,7 @@
 use super::cache::ReplacementPolicy;
 use super::prefetch::Prefetcher;
 use crate::mca::port_model::PortArch;
+use crate::trace::Placement;
 use crate::util::units::{GB, KIB, MIB};
 
 /// Parameters of one cache level.
@@ -99,13 +100,44 @@ fn shared_inclusive(params: CacheParams) -> LevelConfig {
     }
 }
 
-/// One simulated CMG / socket-slice.
+/// Inter-CMG interconnect of a multi-CMG socket: a ring/mesh whose
+/// remote accesses pay a per-hop latency and queue behind a shared
+/// bisection-bandwidth server.  Unused when `cmgs == 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct Interconnect {
+    /// One-way CMG-to-CMG hop latency in core cycles.
+    pub hop_cycles: f64,
+    /// Aggregate cross-CMG bisection bandwidth in GB/s.
+    pub bisection_gbs: f64,
+}
+
+/// A64FX-like ring-bus interconnect: the default every single-CMG
+/// constructor carries (inert at `cmgs == 1`) and the fabric of the
+/// [`a64fx_sock`] socket.
+pub const RING_BUS: Interconnect = Interconnect { hop_cycles: 96.0, bisection_gbs: 115.2 };
+
+/// Hypothetical 2028-era LARC mesh (the socket fabric of the
+/// [`larc_c_sock`] / [`larc_a_sock`] 8-CMG machines): lower hop latency,
+/// ~4x the A64FX ring's bisection.
+pub const LARC_MESH: Interconnect = Interconnect { hop_cycles: 64.0, bisection_gbs: 460.8 };
+
+/// One simulated machine: a socket of `cmgs` CMG tiles (each with the
+/// per-CMG `levels` hierarchy, `cores` cores, and a local DRAM slice)
+/// coupled by an [`Interconnect`].  `cmgs == 1` — every base config — is
+/// the classic single-CMG machine and runs the bit-identical legacy
+/// engine path.
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
     /// Config name (CLI lookup key and report label).
     pub name: String,
     /// Cores per CMG.
     pub cores: usize,
+    /// CMGs (NUMA domains) per socket; 1 = single-CMG machine.
+    pub cmgs: usize,
+    /// Inter-CMG fabric (inert when `cmgs == 1`).
+    pub interconnect: Interconnect,
+    /// NUMA page placement of socket runs (inert when `cmgs == 1`).
+    pub placement: Placement,
     /// Core clock in GHz.
     pub freq_ghz: f64,
     /// Cache levels, L1 first, LLC last; DRAM sits behind the last level.
@@ -129,9 +161,28 @@ pub struct MachineConfig {
 }
 
 impl MachineConfig {
-    /// DRAM aggregate bytes per core-cycle.
+    /// DRAM aggregate bytes per core-cycle (per CMG).
     pub fn dram_bytes_per_cycle(&self) -> f64 {
         self.dram_bw_gbs * GB / (self.freq_ghz * 1e9)
+    }
+
+    /// Total cores across every CMG of the socket.
+    pub fn total_cores(&self) -> usize {
+        self.cores * self.cmgs.max(1)
+    }
+
+    /// NUMA-placement twin: same machine, different page policy.  Only
+    /// socket runs (`cmgs > 1`) observe the difference; the config name
+    /// is left alone (reports carry placement as its own column) but the
+    /// field participates in the store key like every other field.
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Interconnect bisection bandwidth in bytes per core-cycle.
+    pub fn bisection_bytes_per_cycle(&self) -> f64 {
+        self.interconnect.bisection_gbs * GB / (self.freq_ghz * 1e9)
     }
 
     /// The per-core L1 (level 0).
@@ -211,6 +262,9 @@ pub fn a64fx_s() -> MachineConfig {
     MachineConfig {
         name: "a64fx_s".into(),
         cores: 12,
+        cmgs: 1,
+        interconnect: RING_BUS,
+        placement: Placement::Local,
         freq_ghz: 2.2,
         levels: vec![
             private(CacheParams {
@@ -275,6 +329,9 @@ pub fn broadwell() -> MachineConfig {
     MachineConfig {
         name: "broadwell".into(),
         cores: 12,
+        cmgs: 1,
+        interconnect: RING_BUS,
+        placement: Placement::Local,
         freq_ghz: 2.2,
         levels: vec![
             private(CacheParams {
@@ -312,6 +369,9 @@ pub fn milan() -> MachineConfig {
     MachineConfig {
         name: "milan".into(),
         cores: 8,
+        cmgs: 1,
+        interconnect: RING_BUS,
+        placement: Placement::Local,
         freq_ghz: 2.45,
         levels: vec![
             private(CacheParams {
@@ -425,6 +485,40 @@ pub fn larc_c_3d() -> MachineConfig {
     c
 }
 
+/// Scale a single-CMG machine out to a `cmgs`-CMG socket coupled by
+/// `fabric`.  Per-CMG parameters (cores, hierarchy, DRAM channels and
+/// bandwidth) are untouched — a 4-CMG A64FX socket has 4 x 12 cores, 4 x
+/// 8 MiB L2 slices, and 4 x 256 GB/s of HBM.  `cmgs == 1` returns the
+/// machine unchanged (bit-identical engine path).
+pub fn socket(mut c: MachineConfig, cmgs: usize, fabric: Interconnect) -> MachineConfig {
+    assert!(cmgs >= 1, "a socket needs at least one CMG");
+    c.cmgs = cmgs;
+    c.interconnect = fabric;
+    c
+}
+
+/// A64FX socket — the real chip's 4 CMGs over the ring bus.
+pub fn a64fx_sock() -> MachineConfig {
+    let mut c = socket(a64fx_s(), 4, RING_BUS);
+    c.name = "a64fx_sock".into();
+    c
+}
+
+/// LARC_C socket — the hypothetical LARC organization: 8 conservative
+/// CMGs over the LARC mesh.
+pub fn larc_c_sock() -> MachineConfig {
+    let mut c = socket(larc_c(), 8, LARC_MESH);
+    c.name = "larc_c_sock".into();
+    c
+}
+
+/// LARC^A socket — 8 aggressive CMGs over the LARC mesh.
+pub fn larc_a_sock() -> MachineConfig {
+    let mut c = socket(larc_a(), 8, LARC_MESH);
+    c.name = "larc_a_sock".into();
+    c
+}
+
 /// All Table-2 configurations in presentation order.
 pub fn table2_configs() -> Vec<MachineConfig> {
     vec![a64fx_s(), a64fx_32(), larc_c(), larc_a()]
@@ -446,13 +540,17 @@ pub fn by_name(name: &str) -> Option<MachineConfig> {
         "broadwell" => Some(broadwell()),
         "milan" => Some(milan()),
         "milan_x" => Some(milan_x()),
+        "a64fx_sock" => Some(a64fx_sock()),
+        "larc_c_sock" => Some(larc_c_sock()),
+        "larc_a_sock" => Some(larc_a_sock()),
         _ => None,
     }
 }
 
-/// All named configs (CLI listing): the eight machines plus the
-/// prefetch-enabled twins of the gem5 comparison set.
-pub const CONFIG_NAMES: [&str; 12] = [
+/// All named configs (CLI listing): the eight single-CMG machines, the
+/// prefetch-enabled twins of the gem5 comparison set, and the multi-CMG
+/// sockets.
+pub const CONFIG_NAMES: [&str; 15] = [
     "a64fx_s",
     "a64fx_32",
     "larc_c",
@@ -465,6 +563,9 @@ pub const CONFIG_NAMES: [&str; 12] = [
     "a64fx_32_pf",
     "larc_c_pf",
     "larc_c_3d_pf",
+    "a64fx_sock",
+    "larc_c_sock",
+    "larc_a_sock",
 ];
 
 #[cfg(test)]
@@ -604,6 +705,43 @@ mod tests {
         assert_eq!(retag.name, "a64fx_s+stride2d4");
         // and `prefetched` is name-idempotent
         assert_eq!(prefetched(by_name("a64fx_s_pf").unwrap()).name, "a64fx_s_pf");
+    }
+
+    #[test]
+    fn base_configs_are_single_cmg() {
+        // every base machine must stay on the bit-identical single-CMG
+        // engine path (this is what the engine_equivalence gate covers)
+        for name in CONFIG_NAMES {
+            let c = by_name(name).unwrap();
+            let is_sock = name.ends_with("_sock");
+            assert_eq!(c.cmgs > 1, is_sock, "{name}");
+            assert_eq!(c.placement, Placement::Local, "{name}");
+        }
+    }
+
+    #[test]
+    fn sockets_scale_the_cmg_out_without_touching_the_tile() {
+        let base = a64fx_s();
+        let sock = a64fx_sock();
+        assert_eq!(sock.cmgs, 4);
+        assert_eq!(sock.cores, base.cores);
+        assert_eq!(sock.total_cores(), 48);
+        assert_eq!(sock.shared().size, base.shared().size);
+        assert_eq!(sock.dram_bw_gbs, base.dram_bw_gbs);
+        for c in [larc_c_sock(), larc_a_sock()] {
+            assert_eq!(c.cmgs, 8, "{}", c.name);
+            assert_eq!(c.total_cores(), 256, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn with_placement_only_changes_the_placement() {
+        let c = a64fx_sock().with_placement(Placement::Interleave);
+        assert_eq!(c.placement, Placement::Interleave);
+        assert_eq!(c.name, "a64fx_sock");
+        assert_ne!(format!("{c:?}"), format!("{:?}", a64fx_sock()));
+        let back = c.with_placement(Placement::Local);
+        assert_eq!(format!("{back:?}"), format!("{:?}", a64fx_sock()));
     }
 
     #[test]

@@ -8,6 +8,24 @@
 //! STREAM-like workloads at the configured aggregate bandwidth (paper
 //! Fig. 7's HBM plateau).
 
+/// Anything the bottom of a [`crate::cachesim::Hierarchy`] walk can
+/// spill to: the flat single-CMG [`Dram`], or the socket-level NUMA
+/// memory system (per-CMG DRAM slices behind an inter-CMG interconnect,
+/// [`crate::cachesim::socket::SocketMem`]).  The hierarchy is generic
+/// over this trait, so the single-CMG instantiation monomorphizes to
+/// exactly the pre-socket code.
+pub trait MainMemory {
+    /// Transfer `bytes` at `addr` starting no earlier than `now`;
+    /// returns the completion cycle (including queueing).
+    fn transfer(&mut self, addr: u64, bytes: u64, now: f64) -> f64;
+}
+
+impl MainMemory for Dram {
+    fn transfer(&mut self, addr: u64, bytes: u64, now: f64) -> f64 {
+        Dram::transfer(self, addr, bytes, now)
+    }
+}
+
 /// Channel-interleaved DRAM model.
 pub struct Dram {
     /// Per-channel next-free cycle.

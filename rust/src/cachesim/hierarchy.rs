@@ -49,7 +49,7 @@
 
 use super::cache::{AccessOutcome, Cache, LineRef};
 use super::configs::{LevelConfig, MachineConfig, Scope};
-use super::dram::Dram;
+use super::dram::MainMemory;
 use super::prefetch::PrefetchEngine;
 use super::stats::{LevelStats, SimStats};
 
@@ -178,20 +178,22 @@ impl Hierarchy {
     }
 
     /// Service a level-0 miss issued at `issue`: walk the lower levels
-    /// (and DRAM behind the last), install the line at every level that
-    /// missed plus level 0, and return the completion cycle.  `l0ref` is
-    /// `line`'s level-0 [`LineRef`] (from [`Hierarchy::l0_line_ref`]) so
-    /// the install does not re-derive the set and tag the lookup already
-    /// computed.
+    /// (and main memory behind the last), install the line at every
+    /// level that missed plus level 0, and return the completion cycle.
+    /// `l0ref` is `line`'s level-0 [`LineRef`] (from
+    /// [`Hierarchy::l0_line_ref`]) so the install does not re-derive the
+    /// set and tag the lookup already computed.  `dram` is any
+    /// [`MainMemory`] — the flat per-CMG [`super::dram::Dram`] or the
+    /// socket's NUMA memory system.
     #[allow(clippy::too_many_arguments)]
-    pub fn fetch(
+    pub fn fetch<M: MainMemory>(
         &mut self,
         core: usize,
         line: u64,
         l0ref: LineRef,
         write: bool,
         issue: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) -> f64 {
         let done = if self.levels.len() > 1 {
@@ -208,14 +210,14 @@ impl Hierarchy {
     /// One step of the miss path at level `lvl` (>= 1): bill the bank,
     /// look up, and either stop at a hit or recurse toward DRAM.
     #[allow(clippy::too_many_arguments)]
-    fn walk(
+    fn walk<M: MainMemory>(
         &mut self,
         lvl: usize,
         core: usize,
         l0_line: u64,
         write: bool,
         t_in: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) -> f64 {
         let upper_line = self.levels[lvl - 1].line_bytes;
@@ -334,14 +336,14 @@ impl Hierarchy {
     /// Install `line` at level 0 after a miss was serviced, maintaining
     /// the directory sharer mask when level 0 sits directly above it.
     #[allow(clippy::too_many_arguments)]
-    fn install_l0(
+    fn install_l0<M: MainMemory>(
         &mut self,
         core: usize,
         line: u64,
         l0ref: LineRef,
         write: bool,
         issue: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         self.levels[0].bytes += self.levels[0].line_bytes;
@@ -375,14 +377,14 @@ impl Hierarchy {
     /// slab evicted it early), forward the dirty data down instead of
     /// silently dropping it.
     #[allow(clippy::too_many_arguments)]
-    fn writeback(
+    fn writeback<M: MainMemory>(
         &mut self,
         lvl: usize,
         core: usize,
         addr: u64,
         bytes: u64,
         now: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         self.levels[lvl].bytes += bytes;
@@ -477,6 +479,36 @@ impl Hierarchy {
         dirty
     }
 
+    /// Socket-directory back-invalidation: wipe the line range
+    /// `[lo, lo + len)` from **every** level and core of this CMG's
+    /// hierarchy (each level aligned to its own line size).  Returns
+    /// `(present, dirty)` — whether any copy existed and whether any
+    /// wiped copy was dirty (the socket engine forwards dirty data to
+    /// the line's home DRAM).  Unclaimed prefetched copies count as
+    /// `prefetch_pollution`, mirroring the in-CMG invalidation paths;
+    /// the cross-CMG hop itself is counted by the caller in
+    /// `remote_coherence_hops`.  Never called on the single-CMG path.
+    pub fn wipe_line(&mut self, lo: u64, len: u64, stats: &mut SimStats) -> (bool, bool) {
+        let mut present = false;
+        let mut dirty = false;
+        for level in &mut self.levels {
+            let step = level.line_bytes;
+            for cache in &mut level.caches {
+                let mut a = lo & !(step - 1);
+                while a < lo + len {
+                    let (p, d, pf_unused) = cache.invalidate(a);
+                    present |= p;
+                    dirty |= d;
+                    if pf_unused {
+                        stats.prefetch_pollution += 1;
+                    }
+                    a += step;
+                }
+            }
+        }
+        (present, dirty)
+    }
+
     /// Whether level 0 runs a hardware prefetcher.  The scheduler loop
     /// checks this once and skips the L0 train/claim calls entirely when
     /// false, keeping the `Prefetcher::None` hot path untouched.
@@ -487,12 +519,12 @@ impl Hierarchy {
     /// Train the level-0 prefetcher on a demand line touch from `core`
     /// at cycle `now` and issue the candidates it emits.  Call only when
     /// [`Hierarchy::has_l0_prefetcher`] is true.
-    pub fn train_l0_prefetch(
+    pub fn train_l0_prefetch<M: MainMemory>(
         &mut self,
         core: usize,
         line: u64,
         now: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         self.run_prefetcher(0, core, line, now, dram, stats);
@@ -529,13 +561,13 @@ impl Hierarchy {
 
     /// Train level `lvl`'s prefetcher on the demand arrival of `addr`
     /// and issue every candidate it emits.
-    fn run_prefetcher(
+    fn run_prefetcher<M: MainMemory>(
         &mut self,
         lvl: usize,
         core: usize,
         addr: u64,
         now: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         let lb = self.levels[lvl].line_bytes;
@@ -560,13 +592,13 @@ impl Hierarchy {
     /// do not hold would break the inclusion invariants (directory
     /// back-invalidation and the private-stack subset property).  The
     /// directory and everything below it pull from below freely.
-    fn issue_prefetch(
+    fn issue_prefetch<M: MainMemory>(
         &mut self,
         lvl: usize,
         core: usize,
         cand_addr: u64,
         now: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         let lb = self.levels[lvl].line_bytes;
@@ -630,14 +662,14 @@ impl Hierarchy {
     /// copies are pinned by the golden harness; this one only runs on
     /// prefetch-enabled configs, which the golden gate cannot cover.
     #[allow(clippy::too_many_arguments)]
-    fn install_prefetch(
+    fn install_prefetch<M: MainMemory>(
         &mut self,
         lvl: usize,
         core: usize,
         addr: u64,
         ready: f64,
         now: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         let lb = self.levels[lvl].line_bytes;
@@ -684,12 +716,12 @@ impl Hierarchy {
     }
 
     /// Issue the prefetch: occupy a level-1 bank and install at level 0.
-    pub fn prefetch_fill(
+    pub fn prefetch_fill<M: MainMemory>(
         &mut self,
         core: usize,
         line: u64,
         issue: f64,
-        dram: &mut Dram,
+        dram: &mut M,
         stats: &mut SimStats,
     ) {
         let l0_line = self.levels[0].line_bytes;
@@ -729,6 +761,7 @@ impl Hierarchy {
 mod tests {
     use super::*;
     use crate::cachesim::configs;
+    use crate::cachesim::dram::Dram;
 
     fn drive(
         h: &mut Hierarchy,

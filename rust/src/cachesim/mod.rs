@@ -14,7 +14,10 @@
 //!
 //! Two-level CMGs (A64FX_S, LARC_C/A), three-level CCDs (Milan,
 //! Milan-X), and stacked-slab variants (LARC_C^3D) all run through the
-//! same level walk.
+//! same level walk.  Multi-CMG sockets (`a64fx_sock`, `larc_c_sock`,
+//! `larc_a_sock`) couple one such hierarchy per CMG with NUMA page
+//! placement and a socket-level coherence directory — see [`socket`];
+//! `cmgs == 1` machines stay on the bit-identical single-CMG path.
 //!
 //! Fidelity envelope: the simulator is *timing-approximate* (it reproduces
 //! capacity/bandwidth/latency effects on miss traffic and overlap), not
@@ -27,10 +30,11 @@ pub mod configs;
 pub mod dram;
 pub mod hierarchy;
 pub mod prefetch;
+pub mod socket;
 pub mod stats;
 
 pub use cache::{LineRef, ReplacementPolicy};
 pub use cmg::{simulate, SimResult};
-pub use configs::{CacheParams, LevelConfig, MachineConfig, Scope};
+pub use configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, Scope};
 pub use hierarchy::Hierarchy;
 pub use prefetch::Prefetcher;

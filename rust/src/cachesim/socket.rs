@@ -1,0 +1,657 @@
+//! Multi-CMG socket simulation: N coupled CMG tiles with NUMA-placed
+//! memory and a socket-level coherence directory.
+//!
+//! The paper's machines are multi-CMG sockets (the A64FX has 4 CMGs, the
+//! hypothetical LARC organizations 8), yet the headline comparisons are
+//! per-chip numbers extrapolated from one simulated CMG.  This module
+//! models the full socket: each CMG instantiates its own
+//! [`Hierarchy`] (private + shared levels) and local DRAM slice, threads
+//! pin **round-robin** to CMGs (thread `t` → CMG `t % cmgs`, core
+//! `t / cmgs`), and the tiles are coupled by two socket-level mechanisms:
+//!
+//! * **NUMA memory** ([`SocketMem`]) — every DRAM transfer resolves its
+//!   page's home CMG under the machine's [`Placement`] policy
+//!   (`Local` / `Interleave` / `FirstTouch`, page granularity
+//!   [`PAGE_BYTES`]).  Remote-homed transfers queue behind the
+//!   interconnect's bisection-bandwidth server and pay the hop latency
+//!   both ways, then queue on the *home* CMG's DRAM channels.  Counted
+//!   in `SimStats::remote_dram_accesses`.
+//! * **Socket directory** ([`SocketDirectory`]) — a MESI-lite presence
+//!   directory over level-0 lines, consulted on every level-0 miss.  A
+//!   write to a line another CMG may hold wipes the remote copies
+//!   ([`Hierarchy::wipe_line`]), charges an invalidation round trip
+//!   (2 × hop), forwards wiped-dirty data to the line's home DRAM, and
+//!   counts one `remote_coherence_hops` per remote copy actually found.
+//!   The directory is two-tier to stay small: exact per-line masks are
+//!   kept only for pages that more than one CMG has touched (a line of
+//!   a freshly-shared page is seeded with the page's CMG mask — a
+//!   documented over-approximation that the wipe's presence probe
+//!   filters).
+//!
+//! ## Relation to the single-CMG engine
+//!
+//! The scheduler loop below **mirrors** `cmg::simulate` (same issue
+//! rules, ROB window, MSHR heap, bank/DRAM servers, prefetch hooks) —
+//! change both in lockstep.  With `cmgs == 1` every socket mechanism
+//! degenerates to a no-op (all pages are local, the directory never
+//! finds a remote sharer) and [`simulate_socket`] is **bit-identical**
+//! to `cmg::simulate`, which `tests/engine_equivalence.rs` pins; the
+//! public entry point [`crate::cachesim::simulate`] only dispatches
+//! here for `cmgs > 1`.
+//!
+//! Fidelity envelope (documented trades, same spirit as DESIGN.md §1):
+//! dirty remote copies are fetched from the home DRAM rather than
+//! CMG-to-CMG forwarded; `Placement::Local` is the idealized bound
+//! (every page is local to its accessor); directory state is never
+//! pruned on silent LLC evictions (stale presence bits cost a probe,
+//! not a hop); the directory is consulted on level-0 **misses** only, so
+//! a write that *hits* in the writer's L0 invalidates no remote readers
+//! — the socket-level twin of the in-CMG trade where an L1 write hit
+//! never reaches the L2 directory (`hierarchy.rs`); and hardware
+//! prefetchers that pull from DRAM install lines the directory has not
+//! recorded, so such copies can dodge a later writer's wipe (the base
+//! sockets are unaffected: without a hardware prefetcher, the
+//! promote-only adjacent prefetch can only duplicate lines whose demand
+//! fetch already registered the CMG).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::cache::AccessOutcome;
+use super::cmg::{phase_costs, MissHeap, SimResult, ThreadState};
+use super::configs::MachineConfig;
+use super::dram::{Dram, MainMemory};
+use super::hierarchy::Hierarchy;
+use super::stats::{LevelStats, SimStats};
+use crate::trace::{Placement, Spec, BATCH, PAGE_BYTES};
+
+/// The socket's NUMA memory system: one DRAM slice per CMG plus the
+/// inter-CMG interconnect, presented to each CMG's [`Hierarchy`] through
+/// the [`MainMemory`] trait.  The scheduler loop sets [`SocketMem::cur_cmg`]
+/// before every hierarchy call so transfers know their requester.
+pub struct SocketMem {
+    /// Per-CMG local DRAM slices (each with the config's per-CMG
+    /// channels and bandwidth).
+    drams: Vec<Dram>,
+    /// Bisection-bandwidth server of the fabric, modelled as a
+    /// channel-interleaved server whose access latency is the one-way
+    /// hop (the request leg).
+    xbar: Dram,
+    /// One-way hop latency in cycles (the reply leg).
+    hop_cycles: f64,
+    /// Page-placement policy of this run.
+    placement: Placement,
+    cmgs: usize,
+    /// CMG issuing the current transfer.
+    pub cur_cmg: usize,
+    /// `FirstTouch` page homes (page number → CMG).
+    first_touch: HashMap<u64, u32>,
+    /// Transfers served by a remote CMG's DRAM.
+    remote_accesses: u64,
+}
+
+impl SocketMem {
+    /// Instantiate the memory system of `cfg`'s socket.
+    pub fn new(cfg: &MachineConfig) -> SocketMem {
+        let cmgs = cfg.cmgs.max(1);
+        let drams = (0..cmgs)
+            .map(|_| {
+                Dram::new(
+                    cfg.dram_channels,
+                    cfg.dram_bytes_per_cycle(),
+                    cfg.dram_latency_cycles,
+                    256,
+                )
+            })
+            .collect();
+        let xbar = Dram::new(
+            cmgs,
+            cfg.bisection_bytes_per_cycle(),
+            cfg.interconnect.hop_cycles,
+            256,
+        );
+        SocketMem {
+            drams,
+            xbar,
+            hop_cycles: cfg.interconnect.hop_cycles,
+            placement: cfg.placement,
+            cmgs,
+            cur_cmg: 0,
+            first_touch: HashMap::new(),
+            remote_accesses: 0,
+        }
+    }
+
+    /// Home CMG of `addr`'s page under the placement policy.
+    /// `FirstTouch` records the current CMG on the page's first DRAM
+    /// transfer (for cold caches, its first touch).
+    fn home_of(&mut self, addr: u64) -> usize {
+        let page = addr / PAGE_BYTES;
+        match self.placement {
+            Placement::Local => self.cur_cmg,
+            Placement::Interleave => (page % self.cmgs as u64) as usize,
+            Placement::FirstTouch => {
+                let cur = self.cur_cmg as u32;
+                *self.first_touch.entry(page).or_insert(cur) as usize
+            }
+        }
+    }
+
+    /// Flush a wiped-dirty line from CMG `from_cmg` toward its home DRAM
+    /// (coherence writeback; fire-and-forget, the writer does not wait).
+    fn flush_from(&mut self, from_cmg: usize, addr: u64, bytes: u64, now: f64) {
+        let prev = self.cur_cmg;
+        self.cur_cmg = from_cmg;
+        let _ = self.transfer(addr, bytes, now);
+        self.cur_cmg = prev;
+    }
+}
+
+impl MainMemory for SocketMem {
+    fn transfer(&mut self, addr: u64, bytes: u64, now: f64) -> f64 {
+        let home = self.home_of(addr);
+        if home == self.cur_cmg {
+            return self.drams[home].transfer(addr, bytes, now);
+        }
+        self.remote_accesses += 1;
+        // request leg: queue on the bisection server, arrive one hop later
+        let at_home = self.xbar.transfer(addr, bytes, now);
+        // home DRAM service, then the reply hop back
+        self.drams[home].transfer(addr, bytes, at_home) + self.hop_cycles
+    }
+}
+
+/// Socket-level MESI-lite presence directory over level-0 line
+/// addresses, consulted on every level-0 miss.  Two-tier to bound
+/// memory: per-page CMG masks always, exact per-line masks only for
+/// pages touched by more than one CMG.
+struct SocketDirectory {
+    /// CMGs that have fetched any line of each page.
+    page_cmgs: HashMap<u64, u32>,
+    /// CMGs that may hold each line — tracked only for shared pages,
+    /// lazily seeded from the page mask (over-approximation; the wipe's
+    /// presence probe filters phantom sharers).
+    line_cmgs: HashMap<u64, u32>,
+}
+
+impl SocketDirectory {
+    fn new() -> SocketDirectory {
+        SocketDirectory {
+            page_cmgs: HashMap::new(),
+            line_cmgs: HashMap::new(),
+        }
+    }
+
+    /// Record CMG `cmg` fetching `line`.  For a **write** to a line some
+    /// other CMG may hold, returns the mask of those CMGs (the caller
+    /// wipes their copies) and resets the line's mask to the writer;
+    /// reads (and unshared pages) return 0.
+    fn note_fetch(&mut self, cmg: usize, line: u64, write: bool) -> u32 {
+        let me = 1u32 << cmg;
+        let pm = self.page_cmgs.entry(line / PAGE_BYTES).or_insert(0);
+        let prior = *pm;
+        *pm |= me;
+        if prior & !me == 0 {
+            // page never touched by another CMG: nothing to track
+            return 0;
+        }
+        let seed = *pm;
+        let entry = self.line_cmgs.entry(line).or_insert(seed);
+        let others = *entry & !me;
+        if write {
+            *entry = me;
+            others
+        } else {
+            *entry |= me;
+            0
+        }
+    }
+}
+
+/// The socket-directory step run after every level-0 miss fetch from
+/// CMG `cmg`: consult/update the directory and, on a write to a shared
+/// line, wipe the remote copies, forward wiped-dirty data home, and
+/// charge the invalidation round trip.  Returns the (possibly delayed)
+/// fetch completion.
+#[allow(clippy::too_many_arguments)]
+fn directory_step(
+    dir: &mut SocketDirectory,
+    hiers: &mut [Hierarchy],
+    mem: &mut SocketMem,
+    cmg: usize,
+    line: u64,
+    line_bytes: u64,
+    write: bool,
+    issue: f64,
+    fill_done: f64,
+    hop_cycles: f64,
+    stats: &mut SimStats,
+) -> f64 {
+    let sharers = dir.note_fetch(cmg, line, write);
+    if sharers == 0 {
+        return fill_done;
+    }
+    let mut wiped = false;
+    for d in 0..hiers.len() {
+        if d == cmg || sharers & (1u32 << d) == 0 {
+            continue;
+        }
+        let (present, dirty) = hiers[d].wipe_line(line, line_bytes, stats);
+        if present {
+            stats.remote_coherence_hops += 1;
+            wiped = true;
+        }
+        if dirty {
+            stats.dram_bytes += line_bytes;
+            mem.flush_from(d, line, line_bytes, issue);
+        }
+    }
+    if wiped {
+        fill_done + 2.0 * hop_cycles
+    } else {
+        fill_done
+    }
+}
+
+/// Simulate `spec` on the full `cfg` socket with `threads` threads
+/// pinned round-robin across the CMGs.  Called through
+/// [`crate::cachesim::simulate`] when `cfg.cmgs > 1`; public so the
+/// equivalence gate can also drive the `cmgs == 1` degenerate case
+/// directly.
+///
+/// NOTE: the scheduler loop mirrors `cmg::simulate` — any change to the
+/// issue rules, MSHR handling, or prefetch hooks there must be applied
+/// here too (and vice versa).  The `cmgs == 1` bit-identity test in
+/// `tests/engine_equivalence.rs` enforces the lockstep.
+pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
+    let cmgs = cfg.cmgs.max(1);
+    assert!(cmgs <= 32, "socket directory masks are u32: at most 32 CMGs");
+    let threads = threads.max(1).min(cfg.total_cores()).min(64 * cmgs);
+
+    let phase_costs = phase_costs(spec, cfg, threads);
+
+    // round-robin pinning: thread t -> CMG t % cmgs, core t / cmgs
+    let cmg_threads: Vec<usize> = (0..cmgs).map(|k| (threads + cmgs - 1 - k) / cmgs).collect();
+    let mut hiers: Vec<Hierarchy> = cmg_threads
+        .iter()
+        .map(|&n| Hierarchy::new(cfg, n.max(1)))
+        .collect();
+    let mut mem = SocketMem::new(cfg);
+    let mut dir = SocketDirectory::new();
+    let mut stats = SimStats::default();
+
+    let max_window = phase_costs.iter().map(|p| p.window).max().unwrap_or(1);
+    let mut states: Vec<ThreadState> = (0..threads)
+        .map(|t| ThreadState {
+            stream: spec.batched_stream(t, threads),
+            buf: Vec::with_capacity(BATCH),
+            pos: 0,
+            cycle: 0.0,
+            last_completion: 0.0,
+            inflight: vec![0.0; max_window],
+            inflight_head: 0,
+            outstanding: MissHeap::with_capacity(cfg.mshrs as usize),
+            finish: 0.0,
+        })
+        .collect();
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..threads)
+        .map(|t| Reverse((0u64, t)))
+        .collect();
+
+    let l1_line = hiers[0].l0_line_bytes();
+    let l1_latency = hiers[0].l0_latency();
+    let l1_issue = |bytes: u64| bytes as f64 / cfg.l1_bytes_per_cycle;
+    let l0_pf = hiers[0].has_l0_prefetcher();
+    let hop = cfg.interconnect.hop_cycles;
+
+    'sched: while let Some(Reverse((_, t))) = heap.pop() {
+        let cmg = t % cmgs;
+        let core = t / cmgs;
+        mem.cur_cmg = cmg;
+        loop {
+            let access = {
+                let st = &mut states[t];
+                if st.pos == st.buf.len() {
+                    st.stream.refill(&mut st.buf);
+                    st.pos = 0;
+                    if st.buf.is_empty() {
+                        st.finish = st.finish.max(st.cycle).max(st.last_completion);
+                        continue 'sched;
+                    }
+                }
+                let a = st.buf[st.pos];
+                st.pos += 1;
+                a
+            };
+            stats.accesses += 1;
+
+            let phase = access.phase as usize;
+            debug_assert!(
+                phase < phase_costs.len(),
+                "access.phase {phase} out of range ({} phases) in {}",
+                phase_costs.len(),
+                spec.name
+            );
+            let (gap, window) = phase_costs
+                .get(phase)
+                .map(|p| (p.gap, p.window))
+                .unwrap_or((1.0, 8));
+
+            // ---- issue-time constraints (mirrors cmg::simulate) ----
+            let st = &mut states[t];
+            let mut issue = st.cycle + gap;
+            if access.dep {
+                issue = issue.max(st.last_completion);
+            }
+            let idx = st.inflight_head % window.min(st.inflight.len());
+            issue = issue.max(st.inflight[idx]);
+
+            // ---- walk the lines this chunk covers ----
+            let first = access.addr & !(l1_line - 1);
+            let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+            let mut completion = issue;
+            let mut line = first;
+            while line <= last {
+                stats.line_touches += 1;
+                let l0ref = hiers[cmg].l0_line_ref(line);
+                let this_done;
+                match hiers[cmg].access_l0_at(core, l0ref, access.write) {
+                    AccessOutcome::Hit => {
+                        stats.l1_hits += 1;
+                        let hit_done = issue + l1_latency;
+                        this_done = if l0_pf {
+                            hiers[cmg].claim_l0_prefetch(core, l0ref, hit_done, &mut stats)
+                        } else {
+                            hit_done
+                        };
+                    }
+                    AccessOutcome::Miss => {
+                        stats.l1_misses += 1;
+                        if st.outstanding.len() >= cfg.mshrs as usize {
+                            let earliest = st.outstanding.pop_min();
+                            issue = issue.max(earliest);
+                        }
+                        let fill_done = hiers[cmg].fetch(
+                            core,
+                            line,
+                            l0ref,
+                            access.write,
+                            issue,
+                            &mut mem,
+                            &mut stats,
+                        );
+                        // socket directory: cross-CMG coherence on the line
+                        let fill_done = directory_step(
+                            &mut dir,
+                            &mut hiers,
+                            &mut mem,
+                            cmg,
+                            line,
+                            l1_line,
+                            access.write,
+                            issue,
+                            fill_done,
+                            hop,
+                            &mut stats,
+                        );
+                        st.outstanding.push(fill_done);
+                        this_done = fill_done;
+
+                        if cfg.adjacent_prefetch {
+                            let next = line + l1_line;
+                            if hiers[cmg].prefetch_candidate(core, next) {
+                                stats.prefetches += 1;
+                                hiers[cmg].prefetch_fill(core, next, issue, &mut mem, &mut stats);
+                            }
+                        }
+                    }
+                }
+                if l0_pf {
+                    hiers[cmg].train_l0_prefetch(core, line, issue, &mut mem, &mut stats);
+                }
+                completion = completion.max(this_done);
+                line += l1_line;
+            }
+
+            // retire bookkeeping (mirrors cmg::simulate)
+            let w = window.min(st.inflight.len());
+            let idx = st.inflight_head % w;
+            st.inflight[idx] = completion;
+            st.inflight_head = st.inflight_head.wrapping_add(1);
+            st.last_completion = completion;
+
+            st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+            st.finish = st.finish.max(completion);
+
+            let clock = st.cycle as u64;
+            if let Some(&Reverse((next_min, _))) = heap.peek() {
+                if clock > next_min {
+                    heap.push(Reverse((clock, t)));
+                    continue 'sched;
+                }
+            }
+        }
+    }
+
+    let cycles = states.iter().map(|s| s.finish).fold(0f64, f64::max);
+
+    // fold the per-CMG hierarchies into one socket-wide counter view
+    let nlevels = cfg.levels.len();
+    stats.levels = (0..nlevels)
+        .map(|i| {
+            let mut agg = LevelStats::default();
+            for h in &hiers {
+                let s = h.level_stats(i);
+                agg.hits += s.hits;
+                agg.misses += s.misses;
+                agg.writebacks += s.writebacks;
+                agg.bytes += s.bytes;
+            }
+            agg
+        })
+        .collect();
+    let d = cfg.directory_level().unwrap_or(nlevels - 1);
+    stats.l2_hits = stats.levels[d].hits;
+    stats.l2_misses = stats.levels[d].misses;
+    stats.l2_writebacks = stats.levels[d].writebacks;
+    stats.l2_bytes = stats.levels[d].bytes;
+    stats.remote_dram_accesses = mem.remote_accesses;
+
+    SimResult {
+        workload: spec.name.clone(),
+        config: cfg.name.clone(),
+        threads,
+        cycles,
+        runtime_s: cycles / (cfg.freq_ghz * 1e9),
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::{self, configs};
+    use crate::isa::{InstrClass, InstrMix};
+    use crate::trace::patterns::Pattern;
+    use crate::trace::{BoundClass, Phase, Suite};
+    use crate::util::units::MIB;
+
+    fn stream_spec(bytes: u64, passes: u32, threads: usize) -> Spec {
+        Spec {
+            name: "sock-stream".into(),
+            suite: Suite::Top500,
+            class: BoundClass::Bandwidth,
+            threads,
+            max_threads: usize::MAX,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "stream",
+                pattern: Pattern::Stream {
+                    bytes,
+                    passes,
+                    streams: 3,
+                    write_fraction: 1.0 / 3.0,
+                },
+                mix: InstrMix::new()
+                    .with(InstrClass::VecFma, 2.0)
+                    .with(InstrClass::Load, 2.0)
+                    .with(InstrClass::Store, 1.0)
+                    .with(InstrClass::AddrGen, 1.0),
+                ilp: 8.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn one_cmg_socket_is_bit_identical_to_the_plain_engine() {
+        // the lockstep contract with cmg::simulate, in miniature (the
+        // full gate lives in tests/engine_equivalence.rs)
+        let spec = stream_spec(2 * MIB, 2, 8);
+        for pl in [Placement::Local, Placement::Interleave, Placement::FirstTouch] {
+            let cfg = configs::a64fx_s().with_placement(pl);
+            let want = cachesim::simulate(&spec, &cfg, 8);
+            let got = simulate_socket(&spec, &cfg, 8);
+            assert_eq!(want.cycles.to_bits(), got.cycles.to_bits(), "{pl:?}");
+            assert_eq!(format!("{:?}", want.stats), format!("{:?}", got.stats), "{pl:?}");
+        }
+    }
+
+    #[test]
+    fn socket_runs_are_deterministic() {
+        let spec = stream_spec(4 * MIB, 2, 16);
+        let cfg = configs::a64fx_sock().with_placement(Placement::Interleave);
+        let a = cachesim::simulate(&spec, &cfg, 16);
+        let b = cachesim::simulate(&spec, &cfg, 16);
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.stats.dram_bytes, b.stats.dram_bytes);
+        assert_eq!(a.stats.remote_dram_accesses, b.stats.remote_dram_accesses);
+    }
+
+    #[test]
+    fn interleave_pays_the_fabric_and_local_does_not() {
+        // DRAM-spilling stream on the 4-CMG A64FX socket: interleaved
+        // pages route 3/4 of the traffic across the ring, local pages
+        // none of it
+        let spec = stream_spec(64 * MIB, 1, 16);
+        let base = configs::a64fx_sock();
+        let local = cachesim::simulate(&spec, &base.clone().with_placement(Placement::Local), 16);
+        let il =
+            cachesim::simulate(&spec, &base.clone().with_placement(Placement::Interleave), 16);
+        assert_eq!(local.stats.remote_dram_accesses, 0);
+        assert!(il.stats.remote_dram_accesses > 0, "interleave never left the CMG");
+        assert!(
+            local.runtime_s <= il.runtime_s * 1.01,
+            "interleave beat local: {} vs {}",
+            il.runtime_s,
+            local.runtime_s
+        );
+        // roughly (cmgs-1)/cmgs of DRAM line transfers are remote
+        let frac = il.stats.remote_dram_accesses as f64 / il.stats.dram_bytes.max(1) as f64
+            * hiers_line_bytes(&base) as f64;
+        assert!((0.5..=1.0).contains(&frac), "remote fraction {frac}");
+    }
+
+    /// L0 line size of `cfg` (helper for the remote-fraction estimate).
+    fn hiers_line_bytes(cfg: &MachineConfig) -> u64 {
+        cfg.l1().line_bytes as u64
+    }
+
+    #[test]
+    fn first_touch_places_partitioned_data_like_local() {
+        // thread-partitioned streams first-touch their own pages, so
+        // FirstTouch degenerates to (almost) Local: only pages spanning
+        // a partition boundary can go remote
+        let spec = stream_spec(8 * MIB, 2, 16);
+        let base = configs::a64fx_sock();
+        let ft =
+            cachesim::simulate(&spec, &base.clone().with_placement(Placement::FirstTouch), 16);
+        let il =
+            cachesim::simulate(&spec, &base.clone().with_placement(Placement::Interleave), 16);
+        assert!(
+            ft.stats.remote_dram_accesses * 4 < il.stats.remote_dram_accesses.max(1),
+            "first-touch went remote as often as interleave: {} vs {}",
+            ft.stats.remote_dram_accesses,
+            il.stats.remote_dram_accesses
+        );
+    }
+
+    #[test]
+    fn directory_wipes_remote_sharers_and_counts_hops() {
+        // drive the exact directory step the scheduler runs: CMG 0 reads
+        // a line, CMG 1 writes it — CMG 0's copy must be wiped, one hop
+        // counted, and the writer's completion delayed by the round trip
+        let cfg = configs::a64fx_sock();
+        let line_bytes = cfg.l1().line_bytes as u64;
+        let mut hiers = vec![Hierarchy::new(&cfg, 1), Hierarchy::new(&cfg, 1)];
+        let mut mem = SocketMem::new(&cfg);
+        let mut dirs = SocketDirectory::new();
+        let mut stats = SimStats::default();
+        let addr = 0x4000u64;
+
+        // one directory step exactly as the scheduler would run it
+        let step = |dirs: &mut SocketDirectory,
+                    hiers: &mut Vec<Hierarchy>,
+                    mem: &mut SocketMem,
+                    cmg: usize,
+                    write: bool,
+                    fill_done: f64,
+                    stats: &mut SimStats| {
+            directory_step(
+                dirs, hiers, mem, cmg, addr, line_bytes, write, 0.0, fill_done, 96.0, stats,
+            )
+        };
+
+        // CMG 0 reads (and caches) the line
+        mem.cur_cmg = 0;
+        let r = hiers[0].l0_line_ref(addr);
+        assert_eq!(hiers[0].access_l0_at(0, r, false), AccessOutcome::Miss);
+        let f0 = hiers[0].fetch(0, addr, r, false, 0.0, &mut mem, &mut stats);
+        let done = step(&mut dirs, &mut hiers, &mut mem, 0, false, f0, &mut stats);
+        assert_eq!(done, f0, "a read must not be penalized");
+        assert_eq!(stats.remote_coherence_hops, 0);
+
+        // CMG 1 writes the same line
+        mem.cur_cmg = 1;
+        assert_eq!(hiers[1].access_l0_at(0, r, true), AccessOutcome::Miss);
+        let f1 = hiers[1].fetch(0, addr, r, true, 0.0, &mut mem, &mut stats);
+        let done = step(&mut dirs, &mut hiers, &mut mem, 1, true, f1, &mut stats);
+        assert_eq!(stats.remote_coherence_hops, 1, "remote sharer wipe not counted");
+        assert_eq!(done, f1 + 2.0 * 96.0, "invalidation round trip not charged");
+        // CMG 0's copy is gone: wiping again finds nothing
+        let (present, _) = hiers[0].wipe_line(addr, line_bytes, &mut stats);
+        assert!(!present, "remote copy survived the wipe");
+
+        // a second write by CMG 1 is now unshared: no hops, no penalty
+        let done = step(&mut dirs, &mut hiers, &mut mem, 1, true, f1, &mut stats);
+        assert_eq!(done, f1);
+        assert_eq!(stats.remote_coherence_hops, 1);
+    }
+
+    #[test]
+    fn larc_socket_keeps_the_cache_win_at_socket_scale() {
+        // the socket-level version of the paper's comparison: the 8-CMG
+        // LARC_C socket must beat the 4-CMG A64FX socket on a working
+        // set that spills the 8 MiB per-CMG L2 but fits 256 MiB
+        let spec = stream_spec(24 * MIB, 4, 48);
+        let a = cachesim::simulate(&spec, &configs::a64fx_sock(), 48);
+        let l = cachesim::simulate(&spec, &configs::larc_c_sock(), 48);
+        assert!(
+            l.runtime_s < a.runtime_s,
+            "larc socket no faster: {} vs {}",
+            l.runtime_s,
+            a.runtime_s
+        );
+        assert!(a.stats.l2_miss_rate() > l.stats.l2_miss_rate());
+    }
+
+    #[test]
+    fn threads_clamp_to_the_whole_socket() {
+        let spec = stream_spec(MIB, 1, 4);
+        let cfg = configs::a64fx_sock(); // 4 x 12 cores
+        let r = cachesim::simulate(&spec, &cfg, 10_000);
+        assert_eq!(r.threads, 48);
+        let r = cachesim::simulate(&spec, &cfg, 3);
+        assert_eq!(r.threads, 3);
+    }
+}

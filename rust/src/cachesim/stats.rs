@@ -57,6 +57,15 @@ pub struct SimStats {
     /// intermediate private level evicting a line the levels above still
     /// hold) — capacity events, not coherence traffic.
     pub inclusion_invalidations: u64,
+    /// Main-memory transfers served by a *remote* CMG's DRAM (socket
+    /// runs only): each paid the inter-CMG hop latency and queued behind
+    /// the bisection-bandwidth server.  Always 0 on single-CMG machines.
+    pub remote_dram_accesses: u64,
+    /// Cross-CMG coherence invalidations: remote-CMG copies actually
+    /// wiped when a writing CMG's fetch consulted the socket directory
+    /// (one per remote CMG that held the line).  Always 0 on single-CMG
+    /// machines.
+    pub remote_coherence_hops: u64,
     /// Legacy adjacent-line promotions into L1 (`adjacent_prefetch`).
     pub prefetches: u64,
     /// Hardware-prefetch fills issued (all levels; the legacy

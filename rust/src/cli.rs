@@ -6,9 +6,9 @@
 //!          [--prefetch spec] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
-//!              |table2|table3|headline|model>
+//!              |fig-socket|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--csv] [--store DIR] [--resume]
-//! larc store <ls|verify|gc> --store DIR                # inspect the store
+//! larc store <ls|verify|gc> --store DIR [--tmp-age SECS] # inspect the store
 //! larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
 //! larc model                                           # section-2 tables
 //! ```
@@ -110,7 +110,7 @@ USAGE:
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
               [--store DIR] [--resume]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
-  larc store <ls|verify|gc> --store DIR
+  larc store <ls|verify|gc> --store DIR [--tmp-age SECS]
   larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
   larc model
 
@@ -120,6 +120,14 @@ HIERARCHY:
                 --levels 2` is the flat near-L2 machine
   --sweep fam   fig8 sweep family: latency | capacity | bankbits | l3
                 (l3 = stacked-L3 level-count sweep over larc_c_3d slabs)
+
+SOCKET:
+  socket configs simulate every CMG of the chip as a coupled NUMA tile:
+  a64fx_sock (4 CMGs, ring bus), larc_c_sock / larc_a_sock (8 CMGs,
+  mesh).  --threads counts the whole socket (clamped to cores x CMGs,
+  with a warning); threads pin round-robin to CMGs.  `larc figure
+  fig-socket` sweeps workload x socket x NUMA placement
+  (local | interleave | first-touch).
 
 PREFETCH:
   --prefetch s  set every cache level's hardware prefetcher:
@@ -138,13 +146,15 @@ BENCH:
 STORE:
   --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
   --resume      reuse valid store entries; only missing/invalid keys recompute
-  (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 fig-prefetch headline;
-   other experiments are closed-form or direct and note that the flags are
-   ignored)
+  --tmp-age S   (gc) reclaim `*.tmp*` litter older than S seconds (default
+                3600; 0 reclaims immediately — only safe with no live writers)
+  (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 fig-prefetch
+   fig-socket headline; other experiments are closed-form or direct and note
+   that the flags are ignored)
 
 EXPERIMENT IDS:
-  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 fig-prefetch table2 table3
-  headline model
+  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 fig-prefetch fig-socket table2
+  table3 headline model
 ";
 
 #[cfg(test)]
@@ -223,5 +233,9 @@ mod tests {
         assert_eq!(c.command, "store");
         assert_eq!(c.positional, vec!["verify"]);
         assert_eq!(c.flag("store"), Some("/tmp/s"));
+
+        let c = parse(&["store", "gc", "--store", "/tmp/s", "--tmp-age", "0"]);
+        assert_eq!(c.flag("tmp-age"), Some("0"));
+        assert_eq!(c.usize_flag("tmp-age", 3600).unwrap(), 0);
     }
 }

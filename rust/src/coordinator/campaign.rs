@@ -7,6 +7,7 @@
 //! order is independent of scheduling — campaigns must be reproducible.
 
 use std::io;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -115,12 +116,18 @@ impl Campaign {
     }
 
     /// Execute all jobs; results are positionally aligned with `self.jobs`.
+    ///
+    /// A panicking job makes this call panic *after* the rest of the
+    /// queue has drained, with a message naming every failed cell; for
+    /// recoverable handling (and to lose nothing), run through a store
+    /// with [`Campaign::run_with_store`] instead.
     pub fn run(&self) -> Vec<JobOutput> {
         let n = self.jobs.len();
         let todo: Vec<usize> = (0..n).collect();
         let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        self.run_indices(&todo, &results, &|_, _| Ok(()))
-            .expect("no-op completion hook cannot fail");
+        if let Err(e) = self.run_indices(&todo, &results, &|_, _| Ok(())) {
+            panic!("campaign failed: {e}");
+        }
         collect_results(results)
     }
 
@@ -129,6 +136,14 @@ impl Campaign {
     /// thread after each job (the store-backed executor persists the
     /// entry there); its first error aborts the remaining queue and is
     /// returned.
+    ///
+    /// Per-job **panics are caught**: a panicking job must not poison
+    /// the result slots or tear down the other workers (losing a whole
+    /// campaign to one bad cell).  The failed cell's slot stays empty
+    /// and `on_done` never runs for it, so a store-backed run persists
+    /// every successful cell; after the queue drains, the collected
+    /// failures come back as one error naming each cell — a
+    /// `--store --resume` rerun then recomputes only those.
     pub(crate) fn run_indices(
         &self,
         todo: &[usize],
@@ -138,6 +153,7 @@ impl Campaign {
         let cursor = AtomicUsize::new(0);
         let abort = AtomicBool::new(false);
         let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
+        let panics: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
         std::thread::scope(|scope| {
             for _ in 0..self.workers.min(todo.len().max(1)) {
                 scope.spawn(|| loop {
@@ -149,7 +165,21 @@ impl Campaign {
                         break;
                     }
                     let i = todo[t];
-                    let out = run_job(&self.jobs[i]);
+                    // `run_job` takes `&Job` and owns everything else it
+                    // touches, so resuming the pool after a caught panic
+                    // observes no broken invariants
+                    let out = match catch_unwind(AssertUnwindSafe(|| run_job(&self.jobs[i]))) {
+                        Ok(out) => out,
+                        Err(payload) => {
+                            let label = self.jobs[i].label();
+                            let msg = panic_message(payload.as_ref());
+                            if self.verbose {
+                                eprintln!("  [{}/{}] {label} PANICKED: {msg}", t + 1, todo.len());
+                            }
+                            panics.lock().unwrap().push((i, format!("{label}: {msg}")));
+                            continue;
+                        }
+                    };
                     if self.verbose {
                         eprintln!(
                             "  [{}/{}] {} -> {:.4}s",
@@ -171,10 +201,32 @@ impl Campaign {
                 });
             }
         });
-        match first_err.into_inner().unwrap() {
-            Some(e) => Err(e),
-            None => Ok(()),
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
         }
+        let mut failed = panics.into_inner().unwrap();
+        if !failed.is_empty() {
+            failed.sort_by_key(|(i, _)| *i);
+            let list: Vec<&str> = failed.iter().map(|(_, m)| m.as_str()).collect();
+            return Err(io::Error::other(format!(
+                "{} job(s) panicked (completed cells were kept): {}",
+                failed.len(),
+                list.join("; ")
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` / `String`
+/// payloads cover every `panic!`/`assert!` in this crate).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -245,5 +297,43 @@ mod tests {
     #[test]
     fn empty_campaign_is_fine() {
         assert!(Campaign::new(vec![]).run().is_empty());
+    }
+
+    /// A job that reliably panics inside the worker: the machine's L1 is
+    /// smaller than one line, so `Cache::new` asserts during
+    /// `Hierarchy::new`.
+    fn panicking_job() -> Job {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].params.size = 64; // 64 B / 4 ways / 256 B lines -> 0 sets
+        Job::CacheSim {
+            spec: workloads::by_name("ep-omp", Scale::Tiny).unwrap(),
+            config: cfg,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn a_panicking_job_fails_alone_without_killing_the_pool() {
+        let mut jobs = tiny_jobs();
+        jobs.insert(1, panicking_job());
+        let c = Campaign::new(jobs).with_workers(2);
+        let n = c.jobs.len();
+        let todo: Vec<usize> = (0..n).collect();
+        let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let err = c.run_indices(&todo, &results, &|_, _| Ok(())).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("1 job(s) panicked"), "{msg}");
+        assert!(msg.contains("sim:ep-omp@a64fx_s"), "{msg}");
+        // the surviving jobs completed on the same pool; only the bad
+        // cell's slot is empty (and no mutex was poisoned)
+        assert!(results[0].lock().unwrap().is_some());
+        assert!(results[2].lock().unwrap().is_some());
+        assert!(results[1].lock().unwrap().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "campaign failed")]
+    fn plain_run_panics_with_the_cell_list() {
+        Campaign::new(vec![panicking_job()]).with_workers(1).run();
     }
 }

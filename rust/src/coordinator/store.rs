@@ -51,7 +51,12 @@ use crate::util::json::{self, Json};
 ///   `SimStats` gained the `prefetch_issued` / `prefetch_useful` /
 ///   `prefetch_late` / `prefetch_pollution` counters (changing the
 ///   serialized stats layout).
-pub const SCHEMA_VERSION: u32 = 3;
+/// * v4 — the multi-CMG socket model: `MachineConfig` grew `cmgs`,
+///   `interconnect`, and `placement` (changing every canonical config
+///   string) and `SimStats` gained the `remote_dram_accesses` /
+///   `remote_coherence_hops` socket counters (changing the serialized
+///   stats layout).
+pub const SCHEMA_VERSION: u32 = 4;
 
 // ---------------------------------------------------------------- job keys
 
@@ -134,6 +139,8 @@ fn sim_to_json(r: &SimResult) -> Json {
         ("l2_bytes", json::num(s.l2_bytes as f64)),
         ("coherence_invalidations", json::num(s.coherence_invalidations as f64)),
         ("inclusion_invalidations", json::num(s.inclusion_invalidations as f64)),
+        ("remote_dram_accesses", json::num(s.remote_dram_accesses as f64)),
+        ("remote_coherence_hops", json::num(s.remote_coherence_hops as f64)),
         ("prefetches", json::num(s.prefetches as f64)),
         ("prefetch_issued", json::num(s.prefetch_issued as f64)),
         ("prefetch_useful", json::num(s.prefetch_useful as f64)),
@@ -217,6 +224,8 @@ fn stats_from_json(v: &Json) -> Result<SimStats, String> {
         l2_bytes: req_u64(v, "l2_bytes")?,
         coherence_invalidations: req_u64(v, "coherence_invalidations")?,
         inclusion_invalidations: req_u64(v, "inclusion_invalidations")?,
+        remote_dram_accesses: req_u64(v, "remote_dram_accesses")?,
+        remote_coherence_hops: req_u64(v, "remote_coherence_hops")?,
         prefetches: req_u64(v, "prefetches")?,
         prefetch_issued: req_u64(v, "prefetch_issued")?,
         prefetch_useful: req_u64(v, "prefetch_useful")?,
@@ -777,6 +786,46 @@ mod tests {
         assert_eq!(s2.recomputed, 2);
         let (_, s3) = c.run_with_store(&store, true).unwrap();
         assert_eq!(s3.hits, 2);
+    }
+
+    #[test]
+    fn a_panicking_cell_loses_only_itself_and_resume_recomputes_it() {
+        let store = tmp_store("panic_cell");
+        let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        // degenerate machine: `Cache::new` asserts inside the worker
+        let mut bad_cfg = configs::a64fx_s();
+        bad_cfg.levels[0].params.size = 64;
+        let mut jobs = tiny_jobs();
+        jobs.insert(
+            1,
+            Job::CacheSim {
+                spec: spec.clone(),
+                config: bad_cfg,
+                threads: 2,
+            },
+        );
+
+        let c = Campaign::new(jobs.clone()).with_workers(2);
+        let err = c.run_with_store(&store, true).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // the two good cells were persisted before the error surfaced
+        let valid = store
+            .scan()
+            .unwrap()
+            .iter()
+            .filter(|e| matches!(e.state, EntryState::Valid { .. }))
+            .count();
+        assert_eq!(valid, 2, "successful cells were lost with the panicking one");
+
+        // replace the bad cell and resume: only the new cell computes
+        jobs[1] = Job::CacheSim {
+            spec,
+            config: configs::larc_c(),
+            threads: 2,
+        };
+        let (out, st) = Campaign::new(jobs).with_workers(2).run_with_store(&store, true).unwrap();
+        assert_eq!(st, StoreRunStats { hits: 2, misses: 1, recomputed: 0 });
+        assert_eq!(out.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! `fig-socket` — socket-level scale-out sweep (beyond the paper).
+//!
+//! The paper's headline 9.56x is a per-chip geometric mean extrapolated
+//! from single-CMG gem5 runs; the real machines are multi-CMG sockets
+//! (A64FX: 4 CMGs on a ring bus, the hypothetical LARC organizations:
+//! 8).  This sweep runs the *whole socket* — per-CMG hierarchies, an
+//! inter-CMG coherence directory, NUMA page placement — for every
+//! (workload × socket × placement) cell through the campaign store.
+//!
+//! Expected shape: the LARC sockets keep their cache win at socket
+//! scale (per-CMG working sets still drop into the 256/512 MiB slices),
+//! while the placement axis exposes the NUMA sensitivity the paper
+//! could not measure: `interleave` pays inter-CMG hops on `1 - 1/cmgs`
+//! of DRAM traffic, so DRAM-resident workloads spread between the
+//! `local` bound and the interleaved penalty, and cache-resident ones
+//! barely move.
+
+use super::ExpOptions;
+use crate::cachesim::configs;
+use crate::cachesim::MachineConfig;
+use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads;
+use crate::trace::{Placement, Spec};
+use crate::util::csv;
+
+/// The swept NUMA placements, in presentation order.
+pub fn placements() -> Vec<Placement> {
+    vec![Placement::Local, Placement::Interleave, Placement::FirstTouch]
+}
+
+/// The swept sockets: the real A64FX organization and the two LARC
+/// organizations (paper Sec. on LARC chip organization).
+pub fn sockets() -> Vec<MachineConfig> {
+    vec![configs::a64fx_sock(), configs::larc_c_sock(), configs::larc_a_sock()]
+}
+
+/// Workloads swept: the fig-prefetch set (latency-bound regular +
+/// chasing, one bandwidth- and one compute-bound control), so the two
+/// beyond-the-paper sweeps stay comparable row-for-row.
+pub const WORKLOADS: [&str; 6] = ["seidel-2d", "cg-omp", "durbin", "mcf", "mvt", "ep-omp"];
+
+fn specs(opts: &ExpOptions) -> Vec<Spec> {
+    WORKLOADS
+        .iter()
+        .filter_map(|n| workloads::by_name(n, opts.scale))
+        .collect()
+}
+
+/// Run the socket scale-out sweep.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let machines = sockets();
+    let pls = placements();
+    let specs = specs(opts);
+
+    let mut jobs = Vec::new();
+    for spec in &specs {
+        for pl in &pls {
+            for m in &machines {
+                let config = m.clone().with_placement(*pl);
+                let threads = spec.effective_threads(m.total_cores());
+                jobs.push(Job::CacheSim { spec: spec.clone(), config, threads });
+            }
+        }
+    }
+    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let out = super::run_campaign(&campaign, opts)?;
+
+    let mut report = Report::new(
+        "fig-socket",
+        "socket scale-out: runtimes and LARC speedups per (workload, NUMA placement)",
+        &[
+            "workload",
+            "class",
+            "placement",
+            "a64fx_sock",
+            "larc_c_sock",
+            "larc_a_sock",
+            "larc_c_speedup",
+            "larc_a_speedup",
+        ],
+    );
+    let stride = pls.len() * machines.len();
+    for (i, spec) in specs.iter().enumerate() {
+        for (j, pl) in pls.iter().enumerate() {
+            let cell = |k: usize| out[i * stride + j * machines.len() + k].as_sim().unwrap();
+            let a64fx = cell(0).runtime_s;
+            let larc_c = cell(1).runtime_s;
+            let larc_a = cell(2).runtime_s;
+            report.row(&[
+                spec.name.clone(),
+                format!("{:?}", spec.class).to_lowercase(),
+                pl.label().to_string(),
+                csv::f(a64fx),
+                csv::f(larc_c),
+                csv::f(larc_a),
+                csv::f(a64fx / larc_c),
+                csv::f(a64fx / larc_a),
+            ]);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim;
+    use crate::trace::Scale;
+
+    #[test]
+    fn driver_routes_through_the_store_and_resumes_byte_identically() {
+        let dir = std::env::temp_dir().join("larc_store_figsocket");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: Scale::Tiny,
+            store: Some(dir.clone()),
+            resume: true,
+            // an 8-CMG LARC socket instantiates ~0.3 GB of tag/side
+            // arrays per in-flight job: keep the pool narrow so the test
+            // stays memory-friendly alongside the rest of the suite
+            workers: 2,
+            ..ExpOptions::default()
+        };
+        let first = run(&opts).unwrap();
+        assert_eq!(first.len(), WORKLOADS.len() * placements().len());
+        // resumed run is served from the store and renders identically
+        let second = run(&opts).unwrap();
+        assert_eq!(first.render(), second.render());
+        assert_eq!(first.csv_text(), second.csv_text());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_sensitive_workloads_keep_the_larc_win_at_socket_scale() {
+        // xsbench's shared lookup table (the Table-3 capacity anchor)
+        // spills every per-CMG 8 MiB A64FX slice — the table is shared,
+        // so scaling out to 4 CMGs does not shrink any CMG's working
+        // set — but drops into LARC_C's 256 MiB ones: the socket-level
+        // speedup must survive the move from one CMG to the full chip
+        let spec = workloads::by_name("xsbench", Scale::Small).unwrap();
+        let a = configs::a64fx_sock();
+        let l = configs::larc_c_sock();
+        let ra = cachesim::simulate(&spec, &a, spec.effective_threads(a.total_cores()));
+        let rl = cachesim::simulate(&spec, &l, spec.effective_threads(l.total_cores()));
+        assert!(
+            ra.runtime_s / rl.runtime_s > 1.2,
+            "socket-level LARC win lost: {} vs {}",
+            ra.runtime_s,
+            rl.runtime_s
+        );
+    }
+
+    #[test]
+    fn placement_axis_moves_dram_resident_workloads_only_one_way() {
+        // NUMA sensitivity: interleave can only slow a workload down
+        // relative to the local bound (hops + bisection queueing are
+        // pure penalties), and its remote traffic must be visible
+        let spec = workloads::by_name("mvt", Scale::Small).unwrap();
+        let sock = configs::a64fx_sock();
+        let t = spec.effective_threads(sock.total_cores());
+        let local = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Local), t);
+        let il = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Interleave), t);
+        assert_eq!(local.stats.remote_dram_accesses, 0);
+        assert!(il.stats.remote_dram_accesses > 0);
+        assert!(
+            local.runtime_s <= il.runtime_s * 1.01,
+            "interleave beat the local bound: {} vs {}",
+            il.runtime_s,
+            local.runtime_s
+        );
+    }
+}

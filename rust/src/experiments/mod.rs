@@ -15,6 +15,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod figprefetch;
+pub mod figsocket;
 pub mod headline;
 pub mod matrix;
 pub mod table2;
@@ -90,7 +91,7 @@ pub fn run_campaign(c: &Campaign, opts: &ExpOptions) -> anyhow::Result<Vec<JobOu
 }
 
 /// Experiment registry for the CLI.
-pub const EXPERIMENTS: [&str; 13] = [
+pub const EXPERIMENTS: [&str; 14] = [
     "fig1",
     "fig2",
     "fig5",
@@ -100,6 +101,7 @@ pub const EXPERIMENTS: [&str; 13] = [
     "fig8",
     "fig9",
     "fig-prefetch",
+    "fig-socket",
     "table2",
     "table3",
     "headline",
@@ -109,8 +111,8 @@ pub const EXPERIMENTS: [&str; 13] = [
 /// Experiments whose simulation jobs route through the result store.
 /// The rest are closed-form or call the simulators directly and ignore
 /// `--store` / `--resume`.
-pub const STORE_BACKED: [&str; 7] =
-    ["fig1", "fig7a", "fig7b", "fig8", "fig9", "fig-prefetch", "headline"];
+pub const STORE_BACKED: [&str; 8] =
+    ["fig1", "fig7a", "fig7b", "fig8", "fig9", "fig-prefetch", "fig-socket", "headline"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
@@ -127,6 +129,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
         "fig8" => Ok(vec![fig8::run(opts)?]),
         "fig9" => Ok(vec![fig9::run(opts)?]),
         "fig-prefetch" => Ok(vec![figprefetch::run(opts)?]),
+        "fig-socket" => Ok(vec![figsocket::run(opts)?]),
         "table2" => Ok(vec![table2::run()]),
         "table3" => Ok(vec![table3::run(opts)?]),
         "headline" => headline::run(opts),

@@ -11,7 +11,8 @@
 //!   substrate the paper depends on: a cycle-approximate multicore cache
 //!   simulator ([`cachesim`], the gem5 substitute — generic N-level
 //!   hierarchies, MESI-lite coherence, pluggable replacement and
-//!   hardware prefetch), the MCA upper-bound pipeline ([`mca`], the
+//!   hardware prefetch, multi-CMG sockets with NUMA page placement and
+//!   an inter-CMG coherence directory), the MCA upper-bound pipeline ([`mca`], the
 //!   SDE + llvm-mca/IACA/uiCA/OSACA substitute), a workload library
 //!   ([`trace`], the proxy-app suite substitute), the analytical LARC
 //!   hardware model ([`model`], §2 of the paper), and the experiment

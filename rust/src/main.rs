@@ -92,8 +92,10 @@ fn cmd_list(cli: &Cli) -> Result<()> {
         for name in configs::CONFIG_NAMES {
             let c = configs::by_name(name).unwrap();
             println!(
-                "  {:<10} cores={:<3} {} @ {:.0} GB/s shared, HBM {:.0} GB/s",
+                "  {:<12} {:>3} cores ({} CMG x {:<2}) {} @ {:.0} GB/s shared, DRAM {:.0} GB/s/CMG",
                 c.name,
+                c.total_cores(),
+                c.cmgs,
                 c.cores,
                 levels_summary(&c),
                 c.shared().bw_gbs(c.freq_ghz),
@@ -148,13 +150,40 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             cfg.with_prefetch(pf)
         };
     }
-    let threads = cli
-        .usize_flag("threads", spec.effective_threads(cfg.cores))
+    // clamp --threads to the machine exactly like the campaign drivers'
+    // `effective_threads` does — the raw flag must never silently exceed
+    // the core count (the engine would clamp internally, but the user
+    // deserves the warning)
+    let requested = cli
+        .usize_flag("threads", spec.effective_threads(cfg.total_cores()))
         .map_err(|e| anyhow!(e))?;
+    let threads = requested.clamp(1, cfg.total_cores());
+    if threads != requested {
+        eprintln!(
+            "warning: --threads {requested} clamped to {threads} ({} has {} cores{})",
+            cfg.name,
+            cfg.total_cores(),
+            if cfg.cmgs > 1 {
+                format!(" across {} CMGs", cfg.cmgs)
+            } else {
+                String::new()
+            }
+        );
+    }
 
     let r = cachesim::simulate(&spec, &cfg, threads);
     println!("workload : {} ({})", r.workload, spec.suite.label());
     println!("config   : {} x{} threads", r.config, r.threads);
+    if cfg.cmgs > 1 {
+        println!(
+            "socket   : {} CMGs x {} cores, {} placement, hop {} cyc, bisection {} GB/s",
+            cfg.cmgs,
+            cfg.cores,
+            cfg.placement.label(),
+            cfg.interconnect.hop_cycles,
+            cfg.interconnect.bisection_gbs
+        );
+    }
     println!("levels   : {}", levels_summary(&cfg));
     println!("footprint: {}", fmt_bytes(spec.footprint()));
     println!("cycles   : {:.3e}", r.cycles);
@@ -179,6 +208,12 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         fmt_bytes(r.stats.dram_bytes),
         r.dram_bw_gbs(&cfg)
     );
+    if cfg.cmgs > 1 {
+        println!(
+            "fabric   : {} remote DRAM transfers, {} coherence hops",
+            r.stats.remote_dram_accesses, r.stats.remote_coherence_hops
+        );
+    }
     if cfg.has_prefetcher() {
         let s = &r.stats;
         println!(
@@ -351,7 +386,12 @@ fn cmd_store(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "gc" => {
-            let r = store.gc()?;
+            // --tmp-age SECS: staleness threshold for `*.tmp*` litter
+            // left by interrupted writers (default 3600; 0 reclaims
+            // everything immediately — only safe when no campaign is
+            // writing to the store)
+            let secs = cli.usize_flag("tmp-age", 3600).map_err(|e| anyhow!(e))?;
+            let r = store.gc_with_max_tmp_age(std::time::Duration::from_secs(secs as u64))?;
             println!(
                 "removed {} invalid files, kept {} entries in {dir} ({} foreign, {} in-flight temps untouched)",
                 r.removed, r.kept, r.foreign, r.in_flight

@@ -32,6 +32,49 @@ use patterns::Pattern;
 /// Chunk granularity (bytes) for generated accesses.
 pub const CHUNK: u64 = 256;
 
+/// NUMA page granularity (bytes) for socket-mode placement decisions:
+/// [`Placement`] maps a workload's address space onto CMG-local DRAM one
+/// page at a time.
+pub const PAGE_BYTES: u64 = 4096;
+
+/// NUMA placement policy of a multi-CMG socket run: which CMG's local
+/// DRAM a page of the workload's address space lives in.  Ignored by
+/// single-CMG machines (`cmgs == 1`), where all memory is local by
+/// construction.
+///
+/// The socket engine (`cachesim::socket`) charges every access whose
+/// page homes on a *different* CMG the inter-CMG hop latency and
+/// bisection-bandwidth queueing of the machine's
+/// [`crate::cachesim::configs::Interconnect`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Every page is resident on the accessing CMG's local memory — the
+    /// ideal NUMA-aware placement (exact for thread-partitioned data,
+    /// optimistic for genuinely shared pages).
+    #[default]
+    Local,
+    /// Pages interleave round-robin across the CMG memories
+    /// (`page % cmgs`) — the OS default on many systems; `1 - 1/cmgs`
+    /// of DRAM traffic pays the interconnect.
+    Interleave,
+    /// Each page homes on the CMG whose thread first touches it.  First
+    /// touch is observed at the page's first DRAM transfer, which for
+    /// cold caches is the first access — the standard Linux policy under
+    /// a parallel initialization pass.
+    FirstTouch,
+}
+
+impl Placement {
+    /// Lowercase label for reports and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Placement::Local => "local",
+            Placement::Interleave => "interleave",
+            Placement::FirstTouch => "first-touch",
+        }
+    }
+}
+
 /// One memory touch of the workload.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Access {

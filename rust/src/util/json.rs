@@ -157,11 +157,21 @@ pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }
 
-/// Recursive-descent parser for the JSON subset aot.py emits.
+/// Maximum container nesting depth the parser accepts.  The parser is
+/// recursive-descent, so unbounded nesting means unbounded stack: a
+/// corrupt or adversarial store entry of the form `[[[[...` could
+/// otherwise overflow the stack during `larc store verify` instead of
+/// reading as a parse error.  128 is far beyond anything the store or
+/// the artifact manifests emit (≤ 5 levels).
+pub const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent parser for the JSON subset aot.py emits.  Nesting
+/// deeper than [`MAX_DEPTH`] is a parse error, not a stack overflow.
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: input.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -175,6 +185,8 @@ pub fn parse(input: &str) -> Result<Json, String> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting depth (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -204,11 +216,23 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Enter a container: depth-guarded so adversarial nesting cannot
+    /// overflow the parse stack.
+    fn nested(&mut self, f: fn(&mut Self) -> Result<Json, String>) -> Result<Json, String> {
+        if self.depth >= MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
+    }
+
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'[') => self.nested(Self::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -383,6 +407,31 @@ mod tests {
     #[test]
     fn negative_and_exponent_numbers() {
         assert_eq!(parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
+    }
+
+    /// `depth` nested arrays around a single `0`.
+    fn nested_arrays(depth: usize) -> String {
+        format!("{}0{}", "[".repeat(depth), "]".repeat(depth))
+    }
+
+    #[test]
+    fn depth_guard_rejects_runaway_nesting_as_a_parse_error() {
+        // adversarial input: must come back as Err, not a stack overflow
+        let bomb = "[".repeat(1_000_000);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.contains("deep"), "{err}");
+        // unterminated-but-shallow input still reports its real problem
+        assert!(parse("[[").unwrap_err().contains("expected"));
+    }
+
+    #[test]
+    fn depth_guard_boundary_is_exact() {
+        assert!(parse(&nested_arrays(MAX_DEPTH)).is_ok());
+        let err = parse(&nested_arrays(MAX_DEPTH + 1)).unwrap_err();
+        assert!(err.contains(&format!("deeper than {MAX_DEPTH}")), "{err}");
+        // objects count toward the same budget
+        let objs = format!("{}0{}", "{\"k\":[".repeat(70), "]}".repeat(70));
+        assert!(parse(&objs).unwrap_err().contains("deep"));
     }
 
     #[test]

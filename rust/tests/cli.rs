@@ -1,0 +1,104 @@
+//! CLI-level regression tests: drive the built `larc` binary end to end
+//! (argument handling, clamping warnings, store maintenance flags) —
+//! the layer the unit tests cannot see.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn larc(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_larc"))
+        .args(args)
+        .output()
+        .expect("failed to spawn larc")
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("larc_cli_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn run_clamps_thread_oversubscription_with_a_warning() {
+    // --threads beyond the core count must clamp (uniformly with the
+    // campaign drivers) and say so — not silently hand the raw flag to
+    // the engine
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--threads", "9999"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("clamped to 12"), "no clamp warning: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("x12 threads"), "{stdout}");
+}
+
+#[test]
+fn run_within_the_core_count_does_not_warn() {
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--threads", "4"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!stderr.contains("clamped"), "spurious warning: {stderr}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("x4 threads"));
+}
+
+#[test]
+fn run_on_a_socket_clamps_to_the_whole_socket_and_reports_the_fabric() {
+    let out = larc(&[
+        "run",
+        "--workload",
+        "ep-omp",
+        "--scale",
+        "tiny",
+        "--config",
+        "a64fx_sock",
+        "--threads",
+        "9999",
+    ]);
+    assert!(out.status.success(), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("clamped to 48"), "{stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("socket   : 4 CMGs"), "{stdout}");
+    assert!(stdout.contains("fabric   :"), "{stdout}");
+}
+
+#[test]
+fn store_gc_tmp_age_zero_reclaims_orphaned_writes() {
+    let d = tmpdir("gc_tmp_age");
+    let orphan = d.join("00000000deadbeef.tmp99-0");
+    fs::write(&orphan, "partial").unwrap();
+    let dir = d.to_str().unwrap();
+
+    // default gc leaves the fresh orphan in place
+    let out = larc(&["store", "gc", "--store", dir]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(orphan.exists());
+
+    // --tmp-age 0 reclaims it
+    let out = larc(&["store", "gc", "--store", dir, "--tmp-age", "0"]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(!orphan.exists(), "orphan survived --tmp-age 0");
+
+    let out = larc(&["store", "gc", "--store", dir, "--tmp-age", "soon"]);
+    assert!(!out.status.success(), "--tmp-age soon must be rejected");
+}
+
+#[test]
+fn store_verify_survives_adversarial_nesting() {
+    // a deeply-nested bomb under a store-owned name: verify must exit
+    // nonzero with a corruption report, not crash on a blown stack
+    let d = tmpdir("verify_bomb");
+    fs::write(d.join("0000000000000abc.json"), "[".repeat(200_000)).unwrap();
+    let out = larc(&["store", "verify", "--store", d.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out.status);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("corrupt"), "{stderr}");
+}
+
+#[test]
+fn unknown_figure_id_exits_nonzero() {
+    let out = larc(&["figure", "fig99"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+}

@@ -1082,6 +1082,70 @@ fn prefetch_enabled_configs_diverge_from_the_reference() {
     assert_ne!(ref_cycles.to_bits(), r.cycles.to_bits());
 }
 
+// --------------------------------------------- socket-subsystem gate
+
+#[test]
+fn gate_configs_are_single_cmg_local_machines() {
+    // every machine the golden comparisons run is a cmgs == 1 /
+    // Placement::Local machine — exactly what makes them the acceptance
+    // gate of the socket model's "one CMG is bit-identical" contract
+    for cfg in two_and_three_level_machines() {
+        assert_eq!(cfg.cmgs, 1, "{}: golden gate no longer covers the single-CMG path", cfg.name);
+        assert_eq!(
+            cfg.placement,
+            larc::trace::Placement::Local,
+            "{}: golden gate no longer covers the Local default",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn socket_engine_with_one_cmg_is_bit_identical_to_the_reference() {
+    // the socket scheduler loop mirrors the single-CMG loop; with one
+    // CMG every socket mechanism (placement, fabric, directory) must
+    // degenerate to a no-op — bit for bit, under every placement policy
+    use larc::cachesim::socket::simulate_socket;
+    use larc::trace::Placement;
+    for cfg in [configs::a64fx_s(), configs::larc_c_3d()] {
+        for pl in [Placement::Local, Placement::Interleave, Placement::FirstTouch] {
+            let cfg = cfg.clone().with_placement(pl);
+            for (spec, threads) in [
+                (stream_spec(2 * MIB, 2), 4usize),
+                (stream_spec(12 * MIB, 1), 4),
+                (chase_spec(8 * MIB, 20_000), 1),
+                (mixed_spec(), 16),
+            ] {
+                let (ref_cycles, ref_stats) = ref_simulate(&spec, &cfg, threads);
+                let r = simulate_socket(&spec, &cfg, threads);
+                assert_eq!(
+                    ref_cycles.to_bits(),
+                    r.cycles.to_bits(),
+                    "socket(cmgs=1) cycles diverged on {} x{threads} ({pl:?})",
+                    cfg.name
+                );
+                assert_eq!(
+                    format!("{ref_stats:?}"),
+                    format!("{:?}", r.stats),
+                    "socket(cmgs=1) counters diverged on {} x{threads} ({pl:?})",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_cmg_sockets_actually_use_the_socket_mechanisms() {
+    // sanity for the gate itself: a real socket run must exercise the
+    // fabric — otherwise the degenerate-case equivalence above would be
+    // vacuous
+    use larc::trace::Placement;
+    let cfg = configs::a64fx_sock().with_placement(Placement::Interleave);
+    let r = cachesim::simulate(&stream_spec(12 * MIB, 1), &cfg, 16);
+    assert!(r.stats.remote_dram_accesses > 0, "interleaved socket never left a CMG");
+}
+
 // ------------------------------------------------ cache-level golden gate
 
 /// Drive the SoA cache and the AoS reference with one random op trace

@@ -145,3 +145,101 @@ fn simulate_with_more_threads_than_cores_clamps() {
     assert!(r.threads <= cfg.cores);
     assert!(r.cycles > 0.0);
 }
+
+#[test]
+fn a_panicking_job_does_not_take_down_the_campaign() {
+    use larc::cachesim::configs;
+    use larc::coordinator::{Campaign, Job, Store};
+    use larc::trace::{workloads, Scale};
+
+    let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+    // unconstructible L1 (64 B < one 256 B line): panics in the worker
+    let mut bad = configs::a64fx_s();
+    bad.levels[0].params.size = 64;
+    let jobs = vec![
+        Job::CacheSim {
+            spec: spec.clone(),
+            config: configs::a64fx_s(),
+            threads: 2,
+        },
+        Job::CacheSim {
+            spec: spec.clone(),
+            config: bad,
+            threads: 2,
+        },
+        Job::CacheSim {
+            spec,
+            config: configs::larc_c(),
+            threads: 2,
+        },
+    ];
+    let dir = tmpdir("panic_campaign");
+    let store = Store::open(&dir).unwrap();
+    let err = Campaign::new(jobs.clone())
+        .with_workers(2)
+        .run_with_store(&store, true)
+        .unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+    assert!(err.to_string().contains("sim:ep-omp@a64fx_s"), "{err}");
+
+    // the surviving cells were persisted: resuming just them is all hits
+    let good = vec![jobs[0].clone(), jobs[2].clone()];
+    let (out, st) = Campaign::new(good)
+        .with_workers(2)
+        .run_with_store(&store, true)
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(st.hits, 2);
+    assert_eq!(st.misses + st.recomputed, 0);
+}
+
+#[test]
+fn interrupted_store_write_is_reported_and_reclaimable() {
+    use larc::coordinator::store::EntryState;
+    use larc::coordinator::Store;
+    use std::time::Duration;
+
+    let d = tmpdir("tmp_orphan");
+    let store = Store::open(&d).unwrap();
+    // simulated crash: the temp file was written but the atomic rename
+    // never ran (killed writer)
+    let orphan = d.join("00000000deadbeef.tmp1234-0");
+    fs::write(&orphan, "{\"partial\":").unwrap();
+
+    // scan/verify report it as an interrupted write, not as corruption
+    let scan = store.scan().unwrap();
+    assert!(
+        scan.iter().any(|e| matches!(e.state, EntryState::TmpLeftover)),
+        "orphaned tmp file not reported"
+    );
+    assert!(!scan.iter().any(|e| matches!(e.state, EntryState::Corrupt { .. })));
+
+    // default gc spares a fresh temp (it could belong to a live writer)
+    let r = store.gc().unwrap();
+    assert_eq!((r.removed, r.in_flight), (0, 1));
+    assert!(orphan.exists());
+    // zero staleness tolerance (the `larc store gc --tmp-age 0` path)
+    // reclaims it
+    let r = store.gc_with_max_tmp_age(Duration::ZERO).unwrap();
+    assert_eq!((r.removed, r.in_flight), (1, 0));
+    assert!(!orphan.exists());
+}
+
+#[test]
+fn adversarial_store_entry_nesting_reads_as_corrupt() {
+    use larc::coordinator::store::EntryState;
+    use larc::coordinator::Store;
+
+    // a store-named entry holding a 100k-deep array: `store verify`
+    // must classify it as corrupt via the parser's depth guard instead
+    // of overflowing the stack
+    let d = tmpdir("deep_entry");
+    let store = Store::open(&d).unwrap();
+    fs::write(d.join("0000000000000abc.json"), "[".repeat(100_000)).unwrap();
+    let scan = store.scan().unwrap();
+    let corrupt = scan
+        .iter()
+        .filter(|e| matches!(e.state, EntryState::Corrupt { .. }))
+        .count();
+    assert_eq!(corrupt, 1);
+}

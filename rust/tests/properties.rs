@@ -298,16 +298,74 @@ fn pointer_chase_gains_nothing_from_stride_prefetch() {
     );
 }
 
+// ------------------------------------------------------- socket props
+
+#[test]
+fn prop_interleave_never_beats_local_on_cache_resident_streams() {
+    use larc::trace::Placement;
+    // for streams whose per-CMG share fits the CMG-local hierarchy, the
+    // fabric is pure penalty: interleaved placement routes (cmgs-1)/cmgs
+    // of the (compulsory) DRAM traffic across hops the local policy
+    // never pays, so it can never win
+    check("interleave never beats local", 6, |rng| {
+        let mut spec = random_stream_spec(rng);
+        spec.threads = 8; // two threads per CMG on the 4-CMG socket
+        let sock = larc::cachesim::configs::a64fx_sock();
+        let local = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Local), 8);
+        let il = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Interleave), 8);
+        if local.stats.remote_dram_accesses != 0 {
+            return Err("local placement went remote".into());
+        }
+        if local.runtime_s > il.runtime_s * 1.01 {
+            return Err(format!(
+                "interleave beat local: {} vs {} ({} B)",
+                il.runtime_s,
+                local.runtime_s,
+                spec.footprint()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_socket_counters_are_internally_consistent() {
+    use larc::trace::Placement;
+    // remote transfers are a subset of all DRAM transfers, and single-CMG
+    // machines never touch the socket counters — for any stream workload
+    check("socket counter consistency", 6, |rng| {
+        let spec = random_stream_spec(rng);
+        let flat = cachesim::simulate(&spec, &configs::a64fx_s(), spec.threads);
+        if flat.stats.remote_dram_accesses != 0 || flat.stats.remote_coherence_hops != 0 {
+            return Err("single-CMG run touched the socket counters".into());
+        }
+        let sock = larc::cachesim::configs::larc_c_sock().with_placement(Placement::Interleave);
+        let r = cachesim::simulate(&spec, &sock, spec.threads);
+        let line = sock.l1().line_bytes as u64;
+        if r.stats.remote_dram_accesses * line > r.stats.dram_bytes {
+            return Err(format!(
+                "more remote transfers than DRAM bytes allow: {} x {line} > {}",
+                r.stats.remote_dram_accesses, r.stats.dram_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------ generic hierarchy props
 
 /// A one-level shared hierarchy driven like a bare cache.
 fn single_level_config() -> larc::cachesim::MachineConfig {
     use larc::cachesim::{
-        CacheParams, LevelConfig, MachineConfig, Prefetcher, ReplacementPolicy, Scope,
+        CacheParams, Interconnect, LevelConfig, MachineConfig, Prefetcher, ReplacementPolicy,
+        Scope,
     };
     MachineConfig {
         name: "single-shared".into(),
         cores: 1,
+        cmgs: 1,
+        interconnect: Interconnect { hop_cycles: 64.0, bisection_gbs: 64.0 },
+        placement: larc::trace::Placement::Local,
         freq_ghz: 1.0,
         levels: vec![LevelConfig {
             params: CacheParams {

@@ -12,25 +12,27 @@
 //! Any change that knowingly alters simulation semantics must bump
 //! `SCHEMA_VERSION` and update these constants in the same commit —
 //! this test makes that an explicit decision instead of an accident.
-//! The current pins date from the **v3** bump (the prefetch subsystem:
-//! `LevelConfig` grew a `prefetcher` field, `SimStats` grew the four
-//! `prefetch_*` counters); the v2 pins were `969fba0d3e439a58` /
-//! `720ce2ae2601aae6`, recorded here so the history stays auditable.
+//! The current pins date from the **v4** bump (the multi-CMG socket
+//! model: `MachineConfig` grew `cmgs` / `interconnect` / `placement`,
+//! `SimStats` grew the two `remote_*` counters); recorded for the
+//! audit trail, the v3 pins were `044fd57562db917d` /
+//! `8732434b1dd14669` and the v2 pins `969fba0d3e439a58` /
+//! `720ce2ae2601aae6`.
 
-use larc::cachesim::configs::{CacheParams, LevelConfig, MachineConfig, Scope};
+use larc::cachesim::configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, Scope};
 use larc::cachesim::{Prefetcher, ReplacementPolicy};
 use larc::coordinator::campaign::Job;
 use larc::coordinator::store::{job_key, JobKey, SCHEMA_VERSION};
 use larc::isa::{InstrClass, InstrMix};
 use larc::mca::PortArch;
 use larc::trace::patterns::Pattern;
-use larc::trace::{BoundClass, Phase, Spec, Suite};
+use larc::trace::{BoundClass, Phase, Placement, Spec, Suite};
 
 /// The store schema this engine generation writes.  Bumping it
-/// invalidates every existing store entry; the prefetch subsystem did so
-/// deliberately (v2 -> v3) because the canonical config string and the
+/// invalidates every existing store entry; the socket model did so
+/// deliberately (v3 -> v4) because the canonical config string and the
 /// serialized stats layout both changed.
-const PINNED_SCHEMA: u32 = 3;
+const PINNED_SCHEMA: u32 = 4;
 
 /// Frozen `Debug` form of [`pin_spec`].
 const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latency, threads: 2, \
@@ -39,17 +41,19 @@ const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latenc
      0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0] }, ilp: 1.0 }] }";
 
 /// Frozen `Debug` form of [`pin_config`].
-const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, freq_ghz: 2.0, \
+const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, cmgs: 1, \
+     interconnect: Interconnect { hop_cycles: 64.0, bisection_gbs: 64.0 }, placement: Local, \
+     freq_ghz: 2.0, \
      levels: [LevelConfig { params: CacheParams { size: 4096, ways: 2, line_bytes: 64, \
      latency: 4.0, banks: 1, bank_bytes_per_cycle: 16.0 }, scope: Private, inclusive: false, \
      policy: Lru, prefetcher: None }], dram_channels: 1, dram_bw_gbs: 64.0, \
      dram_latency_cycles: 100.0, rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, \
      adjacent_prefetch: false, port_arch: A64fxLike }";
 
-/// Frozen key of the pinned CacheSim job (schema v3).
-const PINNED_SIM_KEY: &str = "044fd57562db917d";
-/// Frozen key of the pinned Mca job (schema v3).
-const PINNED_MCA_KEY: &str = "8732434b1dd14669";
+/// Frozen key of the pinned CacheSim job (schema v4).
+const PINNED_SIM_KEY: &str = "bee5c61b6ea22c53";
+/// Frozen key of the pinned Mca job (schema v4).
+const PINNED_MCA_KEY: &str = "83750c5c5be26aac";
 
 fn pin_spec() -> Spec {
     Spec {
@@ -76,6 +80,9 @@ fn pin_config() -> MachineConfig {
     MachineConfig {
         name: "pinmachine".into(),
         cores: 2,
+        cmgs: 1,
+        interconnect: Interconnect { hop_cycles: 64.0, bisection_gbs: 64.0 },
+        placement: Placement::Local,
         freq_ghz: 2.0,
         levels: vec![LevelConfig {
             params: CacheParams {
@@ -178,6 +185,42 @@ fn prefetcher_field_participates_in_the_key() {
     let base = Job::CacheSim { spec: pin_spec(), config: pin_config(), threads: 3 };
     let pf = Job::CacheSim { spec: pin_spec(), config: pf_cfg, threads: 3 };
     assert_ne!(job_key(&base), job_key(&pf));
+}
+
+#[test]
+fn socket_fields_participate_in_the_key() {
+    // a socket twin (or a placement twin) of the same machine must hash
+    // to different cells — otherwise fig-socket sweeps would collide
+    // with single-CMG campaign entries in a shared store
+    let base = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+    };
+    let mut sock_cfg = pin_config();
+    sock_cfg.cmgs = 4;
+    let sock = Job::CacheSim {
+        spec: pin_spec(),
+        config: sock_cfg,
+        threads: 3,
+    };
+    assert_ne!(job_key(&base), job_key(&sock));
+
+    let placed = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config().with_placement(Placement::Interleave),
+        threads: 3,
+    };
+    assert_ne!(job_key(&base), job_key(&placed));
+
+    let mut fabric_cfg = pin_config();
+    fabric_cfg.interconnect.hop_cycles = 32.0;
+    let fabric = Job::CacheSim {
+        spec: pin_spec(),
+        config: fabric_cfg,
+        threads: 3,
+    };
+    assert_ne!(job_key(&base), job_key(&fabric));
 }
 
 #[test]
