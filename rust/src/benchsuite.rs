@@ -197,8 +197,7 @@ pub fn hierarchy_cases() -> Vec<BenchCase> {
             threads: 8,
         },
         // socket hot path: 4 coupled CMG walks + NUMA interleave + the
-        // socket directory (not yet in the committed baseline floors —
-        // the gate ignores baseline-less cases; re-baseline to arm it)
+        // socket directory
         BenchCase {
             name: "a64fx_sock_4cmg_interleave",
             cfg: configs::a64fx_sock().with_placement(Placement::Interleave),
@@ -264,22 +263,10 @@ pub fn compare_to_baseline(
     baseline_text: &str,
     tolerance: f64,
 ) -> Result<Vec<String>, String> {
-    let v = json::parse(baseline_text).map_err(|e| format!("bad baseline JSON: {e}"))?;
-    let entries = v
-        .get("results")
-        .and_then(|a| a.as_arr())
-        .ok_or("baseline has no results array")?;
+    let floors = baseline_floors(baseline_text)?;
     let mut violations = Vec::new();
-    for b in entries {
-        let name = match b.get("name").and_then(|n| n.as_str()) {
-            Some(n) => n,
-            None => continue,
-        };
-        let floor = match b.get("throughput").and_then(|t| t.as_f64()) {
-            Some(t) if t > 0.0 => t,
-            _ => continue, // baseline entry without a throughput figure
-        };
-        let cur = current.iter().find(|r| r.name == name);
+    for (name, floor) in &floors {
+        let cur = current.iter().find(|r| &r.name == name);
         match cur.and_then(|r| r.throughput) {
             Some((rate, _)) => {
                 let min = floor * (1.0 - tolerance);
@@ -295,6 +282,40 @@ pub fn compare_to_baseline(
         }
     }
     Ok(violations)
+}
+
+/// Parse a baseline file into its comparable `(name, floor)` pairs —
+/// entries carrying a name and a positive throughput figure.  Errors on
+/// malformed JSON, a missing results array, or when **no** entry is
+/// comparable: a vacuous baseline would make the regression gate pass
+/// without checking anything, which is exactly the failure mode a gate
+/// exists to prevent.
+pub fn baseline_floors(baseline_text: &str) -> Result<Vec<(String, f64)>, String> {
+    let v = json::parse(baseline_text).map_err(|e| format!("bad baseline JSON: {e}"))?;
+    let entries = v
+        .get("results")
+        .and_then(|a| a.as_arr())
+        .ok_or("baseline has no results array")?;
+    let mut floors = Vec::new();
+    for b in entries {
+        let name = match b.get("name").and_then(|n| n.as_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if let Some(t) = b.get("throughput").and_then(|t| t.as_f64()) {
+            if t > 0.0 {
+                floors.push((name.to_string(), t));
+            }
+        }
+    }
+    if floors.is_empty() {
+        return Err(
+            "baseline has no comparable entries (name + positive throughput) — \
+             the regression gate would pass vacuously"
+                .into(),
+        );
+    }
+    Ok(floors)
 }
 
 #[cfg(test)]
@@ -348,6 +369,24 @@ mod tests {
     fn baseline_comparison_rejects_garbage() {
         assert!(compare_to_baseline(&[], "not json", 0.25).is_err());
         assert!(compare_to_baseline(&[], "{\"x\":1}", 0.25).is_err());
+    }
+
+    #[test]
+    fn a_vacuous_baseline_is_an_error_not_a_pass() {
+        // every entry lacks a name or a positive throughput: nothing
+        // would be compared, so the gate must fail instead of passing
+        let vacuous = r#"{"results":[
+            {"median_s":1.0,"throughput":5.0},
+            {"name":"zeroed","median_s":1.0,"throughput":0.0},
+            {"name":"nulled","median_s":1.0,"throughput":null}
+        ]}"#;
+        let err = compare_to_baseline(&[], vacuous, 0.25).unwrap_err();
+        assert!(err.contains("vacuously"), "{err}");
+        assert!(baseline_floors(vacuous).is_err());
+        assert!(baseline_floors(r#"{"results":[]}"#).is_err());
+        // one comparable entry is enough to arm the gate
+        let armed = r#"{"results":[{"name":"ok","median_s":1.0,"throughput":7.5}]}"#;
+        assert_eq!(baseline_floors(armed).unwrap(), vec![("ok".to_string(), 7.5)]);
     }
 
     #[test]

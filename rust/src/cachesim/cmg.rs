@@ -44,6 +44,7 @@ use super::cache::AccessOutcome;
 use super::configs::MachineConfig;
 use super::dram::Dram;
 use super::hierarchy::Hierarchy;
+use super::sampling::{LineMode, Sampler, Sampling};
 use super::stats::SimStats;
 use crate::mca::analyzers::port_pressure_native;
 use crate::mca::port_model::PortModel;
@@ -197,15 +198,55 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
     if cfg.cmgs > 1 {
         return super::socket::simulate_socket(spec, cfg, threads);
     }
+    simulate_cmg(spec, cfg, threads, None)
+}
+
+/// [`simulate`] with a per-job [`Sampling`] mode.  `Sampling::Exact`
+/// takes the identical code path as `simulate` (no [`Sampler`] is ever
+/// constructed); the sampled modes thread an estimator through the same
+/// scheduler loop — see `src/cachesim/sampling.rs` for the semantics.
+pub fn simulate_sampled(
+    spec: &Spec,
+    cfg: &MachineConfig,
+    threads: usize,
+    sampling: Sampling,
+) -> SimResult {
+    if sampling.is_exact() {
+        return simulate(spec, cfg, threads);
+    }
+    let mut sampler = Sampler::new(sampling, cfg);
+    if cfg.cmgs > 1 {
+        return super::socket::simulate_socket_sampled(spec, cfg, threads, Some(&mut sampler));
+    }
+    simulate_cmg(spec, cfg, threads, Some(&mut sampler))
+}
+
+/// The single-CMG scheduler loop.  `sampler` is `None` on the exact
+/// path (every sampling hook below is then either skipped or an IEEE
+/// identity — `/ 1.0`, `* 1.0`), `Some` for `--sample` runs.
+pub(crate) fn simulate_cmg(
+    spec: &Spec,
+    cfg: &MachineConfig,
+    threads: usize,
+    mut sampler: Option<&mut Sampler>,
+) -> SimResult {
     let threads = threads.max(1).min(cfg.cores).min(64);
 
     // Per-phase compute gap + ROB window (blocks[0] is the prologue).
     let phase_costs: Vec<PhaseCost> = phase_costs(spec, cfg, threads);
 
     let mut hier = Hierarchy::new(cfg, threads);
+    // set-sampling: the sampled 1/R of the traffic runs against 1/R of
+    // the DRAM bandwidth and R x bank occupancy so queueing matches the
+    // full run; on the exact path both knobs are the IEEE identity
+    let bw_div = sampler.as_ref().map_or(1.0, |s| s.bw_divisor());
+    if let Some(s) = sampler.as_mut() {
+        s.init_threads(threads);
+        hier.set_occ_scale(s.occ_scale());
+    }
     let mut dram = Dram::new(
         cfg.dram_channels,
-        cfg.dram_bytes_per_cycle(),
+        cfg.dram_bytes_per_cycle() / bw_div,
         cfg.dram_latency_cycles,
         256,
     );
@@ -279,8 +320,49 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
                 .map(|p| (p.gap, p.window))
                 .unwrap_or((1.0, 8));
 
+            // interval sampling: a warmup-window access maintains cache
+            // state functionally and advances the clock by its issue
+            // occupancy alone (no detailed walk, no bank/DRAM billing)
+            if let Some(s) = sampler.as_mut() {
+                if s.is_interval() && s.interval_warmup(t) {
+                    let st = &mut states[t];
+                    let mut issue = st.cycle + gap;
+                    if access.dep {
+                        issue = issue.max(st.last_completion);
+                    }
+                    let w = window.min(st.inflight.len());
+                    let idx = st.inflight_head % w;
+                    issue = issue.max(st.inflight[idx]);
+                    let first = access.addr & !(l1_line - 1);
+                    let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+                    let mut line = first;
+                    while line <= last {
+                        stats.line_touches += 1;
+                        match hier.warm_access(t, line, access.write) {
+                            AccessOutcome::Hit => stats.l1_hits += 1,
+                            AccessOutcome::Miss => stats.l1_misses += 1,
+                        }
+                        line += l1_line;
+                    }
+                    st.inflight[idx] = issue;
+                    st.inflight_head = st.inflight_head.wrapping_add(1);
+                    st.last_completion = issue;
+                    st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+                    st.finish = st.finish.max(st.cycle);
+                    let clock = st.cycle as u64;
+                    if let Some(&Reverse((next_min, _))) = heap.peek() {
+                        if clock > next_min {
+                            heap.push(Reverse((clock, t)));
+                            continue 'sched;
+                        }
+                    }
+                    continue;
+                }
+            }
+
             // ---- issue-time constraints ----
             let st = &mut states[t];
+            let cycle_before = st.cycle;
             let mut issue = st.cycle + gap;
             if access.dep {
                 issue = issue.max(st.last_completion);
@@ -295,6 +377,31 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
             let mut completion = issue;
             let mut line = first;
             while line <= last {
+                // set-sampling: lines outside the sampled set slice take
+                // a predicted outcome instead of the detailed walk
+                if let Some(s) = sampler.as_mut() {
+                    if s.is_set() {
+                        match s.line_mode(line) {
+                            LineMode::Detailed => {}
+                            LineMode::PredictHit => {
+                                completion = completion.max(issue + l1_latency);
+                                line += l1_line;
+                                continue;
+                            }
+                            LineMode::PredictMiss => {
+                                if st.outstanding.len() >= cfg.mshrs as usize {
+                                    let earliest = st.outstanding.pop_min();
+                                    issue = issue.max(earliest);
+                                }
+                                let fill_done = issue + s.predicted_miss_latency();
+                                st.outstanding.push(fill_done);
+                                completion = completion.max(fill_done);
+                                line += l1_line;
+                                continue;
+                            }
+                        }
+                    }
+                }
                 stats.line_touches += 1;
                 // one set/tag derivation serves the L0 lookup and (on a
                 // miss) the fill at the end of the hierarchy walk
@@ -303,6 +410,9 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
                 match hier.access_l0_at(t, l0ref, access.write) {
                     AccessOutcome::Hit => {
                         stats.l1_hits += 1;
+                        if let Some(s) = sampler.as_mut() {
+                            s.observe_hit();
+                        }
                         let hit_done = issue + l1_latency;
                         this_done = if l0_pf {
                             // a hit on a prefetched line claims it (and
@@ -324,6 +434,9 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
                             hier.fetch(t, line, l0ref, access.write, issue, &mut dram, &mut stats);
                         st.outstanding.push(fill_done);
                         this_done = fill_done;
+                        if let Some(s) = sampler.as_mut() {
+                            s.observe_miss(fill_done - issue);
+                        }
 
                         // adjacent-line prefetch into L1 (next-level hit only)
                         if cfg.adjacent_prefetch {
@@ -354,6 +467,11 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
             // local clock: issue occupancy (L1 port) or compute gap
             st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
             st.finish = st.finish.max(completion);
+            if let Some(s) = sampler.as_mut() {
+                // interval mode: accrue this access into the open
+                // measurement window (no-op for set sampling)
+                s.measured(t, st.cycle - cycle_before);
+            }
 
             // yield only when another thread's clock is now earlier
             let clock = st.cycle as u64;
@@ -366,12 +484,15 @@ pub fn simulate(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
         }
     }
 
-    let cycles = states
+    let mut cycles = states
         .iter()
         .map(|s| s.finish)
         .fold(0f64, f64::max);
 
     hier.collect_stats(&mut stats);
+    if let Some(s) = sampler.as_mut() {
+        s.finalize(&mut stats, &mut cycles);
+    }
 
     SimResult {
         workload: spec.name.clone(),

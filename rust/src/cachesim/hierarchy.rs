@@ -102,6 +102,11 @@ pub struct Hierarchy {
     /// First shared inclusive level: the coherence directory.
     dir: Option<usize>,
     cores: usize,
+    /// Bank-occupancy multiplier for set-sampled runs (the sampled 1/R
+    /// of the traffic must see full-run bank contention).  1.0 — exact,
+    /// and bit-inert: every occupancy is multiplied by it, and
+    /// `occ * 1.0` is the IEEE identity.
+    occ_scale: f64,
 }
 
 impl Hierarchy {
@@ -137,7 +142,40 @@ impl Hierarchy {
             levels,
             dir: cfg.directory_level(),
             cores,
+            occ_scale: 1.0,
         }
+    }
+
+    /// Scale every bank occupancy by `s` (set-sampling contention
+    /// model; see [`crate::cachesim::sampling`]).  The default 1.0 is
+    /// bit-inert on the exact path.
+    pub(crate) fn set_occ_scale(&mut self, s: f64) {
+        self.occ_scale = s;
+    }
+
+    /// Functional (timing-free) access for sampled warmup windows: walk
+    /// the levels in order, counting hits/misses and installing the
+    /// line at every level that missed, with no bank or DRAM billing.
+    /// Victim bookkeeping (sharer masks, inclusion back-invalidation,
+    /// dirty forwarding) is skipped — warmup maintains cache *contents*,
+    /// not coherence timing; see `docs/ARCHITECTURE.md`.  Returns the
+    /// level-0 outcome.
+    pub(crate) fn warm_access(&mut self, core: usize, line: u64, write: bool) -> AccessOutcome {
+        let mut l0_outcome = AccessOutcome::Miss;
+        for lvl in 0..self.levels.len() {
+            let lb = self.levels[lvl].line_bytes;
+            let addr = line & !(lb - 1);
+            let ci = self.levels[lvl].cache_index(core);
+            let lref = self.levels[lvl].caches[ci].line_ref(addr);
+            let (outcome, _victim) = self.levels[lvl].caches[ci].access_or_fill_at(lref, write);
+            if lvl == 0 {
+                l0_outcome = outcome;
+            }
+            if outcome == AccessOutcome::Hit {
+                break;
+            }
+        }
+        l0_outcome
     }
 
     /// Number of cache levels (DRAM not counted).
@@ -227,7 +265,7 @@ impl Hierarchy {
 
         // bandwidth server: filling the upper level's line occupies a bank
         let occ = upper_line as f64 / self.levels[lvl].cfg.params.bank_bytes_per_cycle;
-        let start = self.levels[lvl].reserve_bank(core, addr, t_in, occ);
+        let start = self.levels[lvl].reserve_bank(core, addr, t_in, occ * self.occ_scale);
         self.levels[lvl].bytes += upper_line;
 
         let mut done = start + occ + lat;
@@ -627,7 +665,7 @@ impl Hierarchy {
         // data crosses on its way up (mirroring the demand walk's
         // bandwidth servers), then DRAM if no cache holds the line
         let occ = lb as f64 / self.levels[lvl].cfg.params.bank_bytes_per_cycle;
-        let start = self.levels[lvl].reserve_bank(core, addr, now, occ);
+        let start = self.levels[lvl].reserve_bank(core, addr, now, occ * self.occ_scale);
         self.levels[lvl].bytes += lb;
         let mut t = start + occ;
         let mut found = false;
@@ -635,7 +673,7 @@ impl Hierarchy {
             let mlb = self.levels[m].line_bytes;
             let maddr = addr & !(mlb - 1);
             let mocc = lb as f64 / self.levels[m].cfg.params.bank_bytes_per_cycle;
-            let mstart = self.levels[m].reserve_bank(core, maddr, t, mocc);
+            let mstart = self.levels[m].reserve_bank(core, maddr, t, mocc * self.occ_scale);
             self.levels[m].bytes += lb;
             t = mstart + mocc + self.levels[m].cfg.params.latency;
             let cm = self.levels[m].cache_index(core);
@@ -726,7 +764,8 @@ impl Hierarchy {
     ) {
         let l0_line = self.levels[0].line_bytes;
         let occ = l0_line as f64 / self.levels[1].cfg.params.bank_bytes_per_cycle;
-        self.levels[1].reserve_bank(core, line, issue, occ);
+        let occ_scale = self.occ_scale;
+        self.levels[1].reserve_bank(core, line, issue, occ * occ_scale);
         self.levels[1].bytes += l0_line;
         let l0ref = self.l0_line_ref(line);
         self.install_l0(core, line, l0ref, false, issue, dram, stats);

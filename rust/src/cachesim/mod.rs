@@ -30,11 +30,13 @@ pub mod configs;
 pub mod dram;
 pub mod hierarchy;
 pub mod prefetch;
+pub mod sampling;
 pub mod socket;
 pub mod stats;
 
 pub use cache::{LineRef, ReplacementPolicy};
-pub use cmg::{simulate, SimResult};
+pub use cmg::{simulate, simulate_sampled, SimResult};
+pub use sampling::{Sampling, SamplingStats};
 pub use configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, Scope};
 pub use hierarchy::Hierarchy;
 pub use prefetch::Prefetcher;

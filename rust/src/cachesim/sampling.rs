@@ -1,0 +1,578 @@
+//! Sampled simulation: the statistically principled fast paths of the
+//! engine (`larc ... --sample <set:R|interval:W:M>`).
+//!
+//! Two estimators are offered, selectable per job via [`Sampling`]:
+//!
+//! * **Set-sampling** (`set:R`, R a power of two): only lines whose
+//!   level-0 set falls in a 1/R slice of the index space run the
+//!   detailed hierarchy walk; every other line charges a *predicted*
+//!   outcome drawn from the running sampled miss rate (predicted misses
+//!   pay the running mean sampled miss latency and still occupy an MSHR
+//!   slot).  DRAM bandwidth and cache-bank occupancy are scaled so the
+//!   sampled 1/R of the traffic sees the contention of the whole run,
+//!   and hit/miss/byte counters are scaled back up by R at the end.
+//!   The timeline itself is real: cycles are the actual finish of the
+//!   simulated schedule, not an extrapolation.
+//!
+//! * **Interval sampling** (`interval:W:M`, SMARTS-style): each
+//!   thread's access stream alternates `W` functional-warmup accesses
+//!   (cache state is maintained, timing is a cheap issue-occupancy
+//!   advance) with `M` detailed measurement accesses.  Cycles are
+//!   extrapolated from the measured cycles-per-access of each thread;
+//!   hit/miss counters are exact totals (warmup accesses walk the real
+//!   caches), only byte counters are scaled by the inverse measured
+//!   fraction.
+//!
+//! Both estimators carry a 95% confidence interval through
+//! [`SamplingStats`] (relative half-width, Welford over the sampled
+//! miss latencies for `set`, over per-window cycles-per-access for
+//! `interval`).  `Sampling::Exact` never constructs a [`Sampler`] at
+//! all — the exact engine path stays bit-identical and is pinned so by
+//! `tests/engine_equivalence.rs`.
+
+use super::configs::MachineConfig;
+use super::stats::SimStats;
+
+/// Per-job sampling mode of the simulation executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// Full detailed simulation (the default; bit-identical to the
+    /// pre-sampling engine).
+    Exact,
+    /// Set-sampling: simulate 1/`rate` of the level-0 set index space
+    /// in detail (`rate` a power of two in `2..=64`).
+    Set {
+        /// Inverse sampling fraction R (simulate 1 line-run in R).
+        rate: u32,
+    },
+    /// SMARTS-style interval sampling over each thread's access stream.
+    Interval {
+        /// Functional-warmup accesses per window.
+        warmup: u32,
+        /// Detailed measurement accesses per window.
+        measure: u32,
+    },
+}
+
+impl Sampling {
+    /// Parse a `--sample` argument: `exact`, `set:R`, or
+    /// `interval:W:M`.
+    pub fn parse(s: &str) -> Result<Sampling, String> {
+        if s == "exact" {
+            return Ok(Sampling::Exact);
+        }
+        if let Some(r) = s.strip_prefix("set:") {
+            let rate: u32 = r
+                .parse()
+                .map_err(|_| format!("--sample set:R expects an integer rate, got {r:?}"))?;
+            if !(2..=64).contains(&rate) || !rate.is_power_of_two() {
+                return Err(format!(
+                    "--sample set:R needs a power-of-two rate in 2..=64, got {rate}"
+                ));
+            }
+            return Ok(Sampling::Set { rate });
+        }
+        if let Some(rest) = s.strip_prefix("interval:") {
+            let (w, m) = rest.split_once(':').ok_or_else(|| {
+                format!("--sample interval:W:M needs warmup and measure counts, got {rest:?}")
+            })?;
+            let warmup: u32 = w
+                .parse()
+                .map_err(|_| format!("--sample interval warmup must be an integer, got {w:?}"))?;
+            let measure: u32 = m
+                .parse()
+                .map_err(|_| format!("--sample interval measure must be an integer, got {m:?}"))?;
+            if warmup == 0 || measure == 0 {
+                return Err("--sample interval:W:M needs W >= 1 and M >= 1".into());
+            }
+            return Ok(Sampling::Interval { warmup, measure });
+        }
+        Err(format!(
+            "unknown --sample mode {s:?} (expected exact | set:R | interval:W:M)"
+        ))
+    }
+
+    /// Whether this is the exact (unsampled) mode.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, Sampling::Exact)
+    }
+
+    /// Short human/CLI label (`exact`, `set:8`, `interval:512:128`).
+    pub fn label(&self) -> String {
+        match self {
+            Sampling::Exact => "exact".into(),
+            Sampling::Set { rate } => format!("set:{rate}"),
+            Sampling::Interval { warmup, measure } => format!("interval:{warmup}:{measure}"),
+        }
+    }
+}
+
+/// Point-estimate metadata of a sampled run, carried in
+/// [`SimStats::sampled`] (`None` on exact runs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingStats {
+    /// Fraction of the work simulated in detail (1/R for `set:R`,
+    /// M/(W+M) for `interval:W:M`).
+    pub rate: f64,
+    /// Number of samples behind the confidence interval (sampled misses
+    /// for `set`, completed measurement windows for `interval`).
+    pub intervals: u64,
+    /// Relative 95% confidence half-width of the estimator (0.0 when
+    /// fewer than two samples were observed).
+    pub ci95: f64,
+}
+
+/// Welford running mean/variance (numerically stable one-pass).
+#[derive(Clone, Copy, Debug, Default)]
+struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Relative 95% confidence half-width: `1.96 * s / (sqrt(n) * mean)`.
+    fn rel_ci95(&self) -> f64 {
+        if self.n < 2 || self.mean <= 0.0 {
+            return 0.0;
+        }
+        let s = (self.m2 / (self.n - 1) as f64).sqrt();
+        1.96 * s / ((self.n as f64).sqrt() * self.mean)
+    }
+}
+
+/// How the detailed walk should treat one line in set-sampling mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum LineMode {
+    /// The line falls in the sampled set slice: run the real walk.
+    Detailed,
+    /// Unsampled line predicted to hit at level 0: charge L1 latency.
+    PredictHit,
+    /// Unsampled line predicted to miss: charge the running mean
+    /// sampled miss latency (and occupy an MSHR slot).
+    PredictMiss,
+}
+
+/// Lines are selected in runs of `2^SET_RUN_BITS` consecutive line
+/// indices, so spatial locality inside the run (adjacent-line reuse,
+/// stride prefetch) is preserved within the sample.
+const SET_RUN_BITS: u32 = 3;
+
+/// SplitMix64 — the stateless per-line hash behind predicted-outcome
+/// draws (same line, same draw: the prediction is deterministic).
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Mutable estimator state threaded through one sampled simulation.
+/// Never constructed for `Sampling::Exact`.
+pub(crate) struct Sampler {
+    mode: Sampling,
+    /// log2 of the level-0 line size (line index = addr >> shift).
+    line_shift: u32,
+    /// Cold-start miss latency (sum of level latencies + DRAM) charged
+    /// before any detailed miss has been observed.
+    fallback_miss_latency: f64,
+    // --- set-sampling state ---
+    set_mask: u64,
+    sampled_hits: u64,
+    sampled_misses: u64,
+    miss_lat: Welford,
+    // --- interval-sampling state (per thread) ---
+    warmup: u64,
+    period: u64,
+    pos: Vec<u64>,
+    meas_cycles: Vec<f64>,
+    meas_accesses: Vec<u64>,
+    win_cycles: Vec<f64>,
+    win_accesses: Vec<u64>,
+    cpa: Welford,
+}
+
+impl Sampler {
+    /// Build the estimator for `mode` on `cfg`.  Call
+    /// [`Sampler::init_threads`] once the thread count is clamped.
+    pub(crate) fn new(mode: Sampling, cfg: &MachineConfig) -> Sampler {
+        debug_assert!(!mode.is_exact(), "Exact runs never construct a Sampler");
+        let fallback = cfg.levels.iter().map(|l| l.params.latency).sum::<f64>()
+            + cfg.dram_latency_cycles;
+        let (set_mask, warmup, period) = match mode {
+            Sampling::Set { rate } => (rate as u64 - 1, 0, 1),
+            Sampling::Interval { warmup, measure } => {
+                (0, warmup as u64, warmup as u64 + measure as u64)
+            }
+            Sampling::Exact => (0, 0, 1),
+        };
+        Sampler {
+            mode,
+            line_shift: cfg.l1().line_bytes.trailing_zeros(),
+            fallback_miss_latency: fallback,
+            set_mask,
+            sampled_hits: 0,
+            sampled_misses: 0,
+            miss_lat: Welford::default(),
+            warmup,
+            period,
+            pos: Vec::new(),
+            meas_cycles: Vec::new(),
+            meas_accesses: Vec::new(),
+            win_cycles: Vec::new(),
+            win_accesses: Vec::new(),
+            cpa: Welford::default(),
+        }
+    }
+
+    /// Size the per-thread window bookkeeping (idempotent growth — the
+    /// socket loop calls it once per simulation with the global thread
+    /// count).
+    pub(crate) fn init_threads(&mut self, threads: usize) {
+        self.pos.resize(threads, 0);
+        self.meas_cycles.resize(threads, 0.0);
+        self.meas_accesses.resize(threads, 0);
+        self.win_cycles.resize(threads, 0.0);
+        self.win_accesses.resize(threads, 0);
+    }
+
+    pub(crate) fn is_set(&self) -> bool {
+        matches!(self.mode, Sampling::Set { .. })
+    }
+
+    pub(crate) fn is_interval(&self) -> bool {
+        matches!(self.mode, Sampling::Interval { .. })
+    }
+
+    /// DRAM bandwidth divisor: the sampled 1/R of the traffic must see
+    /// 1/R of the channels' bandwidth for queueing to match the full
+    /// run.  1.0 outside set mode.
+    pub(crate) fn bw_divisor(&self) -> f64 {
+        match self.mode {
+            Sampling::Set { rate } => rate as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Cache-bank occupancy multiplier (the dual of
+    /// [`Sampler::bw_divisor`] for the hierarchy's bank servers).
+    pub(crate) fn occ_scale(&self) -> f64 {
+        match self.mode {
+            Sampling::Set { rate } => rate as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Advance thread `t` one access and report whether it falls in a
+    /// functional-warmup window.  Interval mode only.
+    pub(crate) fn interval_warmup(&mut self, t: usize) -> bool {
+        let p = self.pos[t];
+        self.pos[t] = p + 1;
+        let phase = p % self.period;
+        if phase == 0 && p > 0 {
+            self.close_window(t);
+        }
+        phase < self.warmup
+    }
+
+    /// Fold thread `t`'s open measurement window into the estimator.
+    fn close_window(&mut self, t: usize) {
+        if self.win_accesses[t] > 0 {
+            self.cpa.push(self.win_cycles[t] / self.win_accesses[t] as f64);
+            self.meas_cycles[t] += self.win_cycles[t];
+            self.meas_accesses[t] += self.win_accesses[t];
+            self.win_cycles[t] = 0.0;
+            self.win_accesses[t] = 0;
+        }
+    }
+
+    /// Account one detailed (measured) access of thread `t` advancing
+    /// its local clock by `cycle_delta`.  No-op outside interval mode.
+    pub(crate) fn measured(&mut self, t: usize, cycle_delta: f64) {
+        if self.is_interval() {
+            self.win_cycles[t] += cycle_delta;
+            self.win_accesses[t] += 1;
+        }
+    }
+
+    /// Classify one line for the detailed walk (set mode; lines in the
+    /// sampled slice are `Detailed`, the rest get a predicted outcome
+    /// drawn against the running sampled miss rate).
+    pub(crate) fn line_mode(&mut self, line_addr: u64) -> LineMode {
+        let li = line_addr >> self.line_shift;
+        if (li >> SET_RUN_BITS) & self.set_mask == 0 {
+            return LineMode::Detailed;
+        }
+        let n = self.sampled_hits + self.sampled_misses;
+        if n == 0 {
+            // cold start: nothing observed yet, predict conservatively
+            return LineMode::PredictMiss;
+        }
+        let miss_rate = self.sampled_misses as f64 / n as f64;
+        let u = (splitmix64(li) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < miss_rate {
+            LineMode::PredictMiss
+        } else {
+            LineMode::PredictHit
+        }
+    }
+
+    /// Record a detailed level-0 hit (set-mode estimator input).
+    pub(crate) fn observe_hit(&mut self) {
+        if self.is_set() {
+            self.sampled_hits += 1;
+        }
+    }
+
+    /// Record a detailed level-0 miss and its fill latency.
+    pub(crate) fn observe_miss(&mut self, latency: f64) {
+        if self.is_set() {
+            self.sampled_misses += 1;
+            self.miss_lat.push(latency);
+        }
+    }
+
+    /// Latency charged to a predicted miss: the running mean sampled
+    /// miss latency, or the cold-start fallback before any sample.
+    pub(crate) fn predicted_miss_latency(&self) -> f64 {
+        if self.miss_lat.n > 0 {
+            self.miss_lat.mean
+        } else {
+            self.fallback_miss_latency
+        }
+    }
+
+    /// Scale the run's counters back to full-trace estimates, replace
+    /// `cycles` with the extrapolated estimate (interval mode), and
+    /// attach [`SamplingStats`].  Call after `collect_stats`.
+    pub(crate) fn finalize(&mut self, stats: &mut SimStats, cycles: &mut f64) {
+        match self.mode {
+            Sampling::Set { rate } => {
+                let r = rate as u64;
+                stats.line_touches *= r;
+                stats.l1_hits *= r;
+                stats.l1_misses *= r;
+                stats.l2_hits *= r;
+                stats.l2_misses *= r;
+                stats.l2_writebacks *= r;
+                stats.dram_bytes *= r;
+                stats.l2_bytes *= r;
+                stats.coherence_invalidations *= r;
+                stats.inclusion_invalidations *= r;
+                stats.remote_dram_accesses *= r;
+                stats.remote_coherence_hops *= r;
+                stats.prefetches *= r;
+                stats.prefetch_issued *= r;
+                stats.prefetch_useful *= r;
+                stats.prefetch_late *= r;
+                stats.prefetch_pollution *= r;
+                for l in &mut stats.levels {
+                    l.hits *= r;
+                    l.misses *= r;
+                    l.writebacks *= r;
+                    l.bytes *= r;
+                }
+                stats.sampled = Some(SamplingStats {
+                    rate: 1.0 / rate as f64,
+                    intervals: self.miss_lat.n,
+                    ci95: self.miss_lat.rel_ci95(),
+                });
+            }
+            Sampling::Interval { warmup, measure } => {
+                for t in 0..self.pos.len() {
+                    self.close_window(t);
+                }
+                let mut est = 0f64;
+                let mut measured_any = false;
+                for t in 0..self.pos.len() {
+                    if self.meas_accesses[t] > 0 {
+                        measured_any = true;
+                        let cpa = self.meas_cycles[t] / self.meas_accesses[t] as f64;
+                        est = est.max(cpa * self.pos[t] as f64);
+                    }
+                }
+                if measured_any {
+                    *cycles = est;
+                }
+                // byte counters only accrue inside measurement windows;
+                // hit/miss counters are true totals (warmup walks the
+                // real caches) and stay unscaled
+                let total: u64 = self.pos.iter().sum();
+                let meas: u64 = self.meas_accesses.iter().sum();
+                if meas > 0 && total > meas {
+                    let scale = total as f64 / meas as f64;
+                    let up = |x: u64| (x as f64 * scale).round() as u64;
+                    stats.dram_bytes = up(stats.dram_bytes);
+                    stats.l2_bytes = up(stats.l2_bytes);
+                    for l in &mut stats.levels {
+                        l.bytes = up(l.bytes);
+                    }
+                }
+                stats.sampled = Some(SamplingStats {
+                    rate: measure as f64 / (warmup as f64 + measure as f64),
+                    intervals: self.cpa.n,
+                    ci95: self.cpa.rel_ci95(),
+                });
+            }
+            Sampling::Exact => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+
+    #[test]
+    fn parse_accepts_the_three_modes() {
+        assert_eq!(Sampling::parse("exact").unwrap(), Sampling::Exact);
+        assert_eq!(Sampling::parse("set:8").unwrap(), Sampling::Set { rate: 8 });
+        assert_eq!(
+            Sampling::parse("interval:512:128").unwrap(),
+            Sampling::Interval { warmup: 512, measure: 128 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_modes() {
+        for bad in [
+            "set:3", "set:1", "set:128", "set:x", "interval:0:5", "interval:5:0",
+            "interval:5", "nope", "set:", "interval:a:b",
+        ] {
+            assert!(Sampling::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for s in [
+            Sampling::Exact,
+            Sampling::Set { rate: 16 },
+            Sampling::Interval { warmup: 100, measure: 25 },
+        ] {
+            assert_eq!(Sampling::parse(&s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.push(x);
+        }
+        assert!((w.mean - 5.0).abs() < 1e-12);
+        // sample variance of that set is 32/7
+        let s2 = w.m2 / (w.n - 1) as f64;
+        assert!((s2 - 32.0 / 7.0).abs() < 1e-12, "{s2}");
+        assert!(w.rel_ci95() > 0.0);
+        // degenerate cases report zero width instead of NaN
+        assert_eq!(Welford::default().rel_ci95(), 0.0);
+        let mut one = Welford::default();
+        one.push(3.0);
+        assert_eq!(one.rel_ci95(), 0.0);
+    }
+
+    #[test]
+    fn set_mode_samples_one_run_in_r() {
+        let cfg = configs::a64fx_s();
+        let mut s = Sampler::new(Sampling::Set { rate: 8 }, &cfg);
+        let line = cfg.l1().line_bytes as u64;
+        let runs = 1u64 << SET_RUN_BITS;
+        let mut detailed = 0u64;
+        let n = 8 * 1024u64;
+        for i in 0..n {
+            if s.line_mode(i * line) == LineMode::Detailed {
+                detailed += 1;
+            }
+        }
+        assert_eq!(detailed, n / 8, "exactly 1/8 of line runs sampled");
+        // and the selection is runs of 2^SET_RUN_BITS consecutive lines
+        for i in 0..runs {
+            assert_eq!(s.line_mode(i * line), LineMode::Detailed);
+        }
+    }
+
+    #[test]
+    fn predictions_track_the_sampled_miss_rate() {
+        let cfg = configs::a64fx_s();
+        let mut s = Sampler::new(Sampling::Set { rate: 8 }, &cfg);
+        // before any observation: conservative PredictMiss, fallback latency
+        let unsampled = 9 * cfg.l1().line_bytes as u64 * (1 << SET_RUN_BITS);
+        assert_eq!(s.line_mode(unsampled), LineMode::PredictMiss);
+        assert_eq!(s.predicted_miss_latency(), s.fallback_miss_latency);
+        // all-hit observations force PredictHit everywhere
+        for _ in 0..1000 {
+            s.observe_hit();
+        }
+        let line = cfg.l1().line_bytes as u64;
+        let mut hits = 0;
+        for i in 0..1000u64 {
+            // offset into unsampled territory
+            let addr = (i * 8 + 9) * (1 << SET_RUN_BITS) * line;
+            if s.line_mode(addr) == LineMode::PredictHit {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 1000, "zero miss rate must predict hits");
+        // observed misses move the predicted latency to their mean
+        s.observe_miss(100.0);
+        s.observe_miss(300.0);
+        assert!((s.predicted_miss_latency() - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interval_windows_alternate_and_accumulate() {
+        let cfg = configs::a64fx_s();
+        let mut s = Sampler::new(Sampling::Interval { warmup: 3, measure: 2 }, &cfg);
+        s.init_threads(1);
+        let mut pattern = Vec::new();
+        for _ in 0..10 {
+            let w = s.interval_warmup(0);
+            if !w {
+                s.measured(0, 4.0);
+            }
+            pattern.push(w);
+        }
+        assert_eq!(
+            pattern,
+            [true, true, true, false, false, true, true, true, false, false]
+        );
+        let mut stats = SimStats::default();
+        let mut cycles = 0.0;
+        s.finalize(&mut stats, &mut cycles);
+        let sampled = stats.sampled.unwrap();
+        assert_eq!(sampled.intervals, 2, "two measurement windows closed");
+        assert!((sampled.rate - 0.4).abs() < 1e-12);
+        // 4 cycles/access extrapolated over all 10 accesses
+        assert!((cycles - 40.0).abs() < 1e-12, "{cycles}");
+    }
+
+    #[test]
+    fn set_finalize_scales_counters_and_reports_ci() {
+        let cfg = configs::a64fx_s();
+        let mut s = Sampler::new(Sampling::Set { rate: 4 }, &cfg);
+        for lat in [100.0, 150.0, 200.0, 250.0] {
+            s.observe_miss(lat);
+        }
+        let mut stats = SimStats::default();
+        stats.l1_misses = 10;
+        stats.dram_bytes = 1000;
+        let mut cycles = 5000.0;
+        s.finalize(&mut stats, &mut cycles);
+        assert_eq!(stats.l1_misses, 40);
+        assert_eq!(stats.dram_bytes, 4000);
+        assert_eq!(cycles, 5000.0, "set mode keeps the real timeline");
+        let sampled = stats.sampled.unwrap();
+        assert!((sampled.rate - 0.25).abs() < 1e-12);
+        assert_eq!(sampled.intervals, 4);
+        assert!(sampled.ci95 > 0.0);
+    }
+}

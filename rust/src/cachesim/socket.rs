@@ -62,6 +62,7 @@ use super::cmg::{phase_costs, MissHeap, SimResult, ThreadState};
 use super::configs::MachineConfig;
 use super::dram::{Dram, MainMemory};
 use super::hierarchy::Hierarchy;
+use super::sampling::{LineMode, Sampler};
 use super::stats::{LevelStats, SimStats};
 use crate::trace::{Placement, Spec, BATCH, PAGE_BYTES};
 
@@ -93,12 +94,19 @@ pub struct SocketMem {
 impl SocketMem {
     /// Instantiate the memory system of `cfg`'s socket.
     pub fn new(cfg: &MachineConfig) -> SocketMem {
+        SocketMem::with_bw_divisor(cfg, 1.0)
+    }
+
+    /// [`SocketMem::new`] with every bandwidth server (per-CMG DRAM and
+    /// the fabric's bisection) scaled down by `bw_div` — the
+    /// set-sampling contention model.  `bw_div == 1.0` is bit-inert.
+    pub(crate) fn with_bw_divisor(cfg: &MachineConfig, bw_div: f64) -> SocketMem {
         let cmgs = cfg.cmgs.max(1);
         let drams = (0..cmgs)
             .map(|_| {
                 Dram::new(
                     cfg.dram_channels,
-                    cfg.dram_bytes_per_cycle(),
+                    cfg.dram_bytes_per_cycle() / bw_div,
                     cfg.dram_latency_cycles,
                     256,
                 )
@@ -106,7 +114,7 @@ impl SocketMem {
             .collect();
         let xbar = Dram::new(
             cmgs,
-            cfg.bisection_bytes_per_cycle(),
+            cfg.bisection_bytes_per_cycle() / bw_div,
             cfg.interconnect.hop_cycles,
             256,
         );
@@ -264,6 +272,18 @@ fn directory_step(
 /// here too (and vice versa).  The `cmgs == 1` bit-identity test in
 /// `tests/engine_equivalence.rs` enforces the lockstep.
 pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimResult {
+    simulate_socket_sampled(spec, cfg, threads, None)
+}
+
+/// [`simulate_socket`] with an optional [`Sampler`] (the `--sample`
+/// estimators).  `None` is the exact path: every sampling hook below is
+/// gated behind the option so exact runs stay bit-identical.
+pub(crate) fn simulate_socket_sampled(
+    spec: &Spec,
+    cfg: &MachineConfig,
+    threads: usize,
+    mut sampler: Option<&mut Sampler>,
+) -> SimResult {
     let cmgs = cfg.cmgs.max(1);
     assert!(cmgs <= 32, "socket directory masks are u32: at most 32 CMGs");
     let threads = threads.max(1).min(cfg.total_cores()).min(64 * cmgs);
@@ -276,7 +296,15 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
         .iter()
         .map(|&n| Hierarchy::new(cfg, n.max(1)))
         .collect();
-    let mut mem = SocketMem::new(cfg);
+    let bw_div = sampler.as_ref().map_or(1.0, |s| s.bw_divisor());
+    let mut mem = SocketMem::with_bw_divisor(cfg, bw_div);
+    if let Some(s) = sampler.as_mut() {
+        s.init_threads(threads);
+        let occ = s.occ_scale();
+        for h in hiers.iter_mut() {
+            h.set_occ_scale(occ);
+        }
+    }
     let mut dir = SocketDirectory::new();
     let mut stats = SimStats::default();
 
@@ -338,8 +366,49 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
                 .map(|p| (p.gap, p.window))
                 .unwrap_or((1.0, 8));
 
+            // interval sampling: a warmup-window access maintains cache
+            // state functionally and advances the clock by its issue
+            // occupancy alone (mirrors cmg::simulate_cmg)
+            if let Some(s) = sampler.as_mut() {
+                if s.is_interval() && s.interval_warmup(t) {
+                    let st = &mut states[t];
+                    let mut issue = st.cycle + gap;
+                    if access.dep {
+                        issue = issue.max(st.last_completion);
+                    }
+                    let w = window.min(st.inflight.len());
+                    let idx = st.inflight_head % w;
+                    issue = issue.max(st.inflight[idx]);
+                    let first = access.addr & !(l1_line - 1);
+                    let last = (access.addr + access.bytes as u64 - 1) & !(l1_line - 1);
+                    let mut line = first;
+                    while line <= last {
+                        stats.line_touches += 1;
+                        match hiers[cmg].warm_access(core, line, access.write) {
+                            AccessOutcome::Hit => stats.l1_hits += 1,
+                            AccessOutcome::Miss => stats.l1_misses += 1,
+                        }
+                        line += l1_line;
+                    }
+                    st.inflight[idx] = issue;
+                    st.inflight_head = st.inflight_head.wrapping_add(1);
+                    st.last_completion = issue;
+                    st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
+                    st.finish = st.finish.max(st.cycle);
+                    let clock = st.cycle as u64;
+                    if let Some(&Reverse((next_min, _))) = heap.peek() {
+                        if clock > next_min {
+                            heap.push(Reverse((clock, t)));
+                            continue 'sched;
+                        }
+                    }
+                    continue;
+                }
+            }
+
             // ---- issue-time constraints (mirrors cmg::simulate) ----
             let st = &mut states[t];
+            let cycle_before = st.cycle;
             let mut issue = st.cycle + gap;
             if access.dep {
                 issue = issue.max(st.last_completion);
@@ -353,12 +422,40 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
             let mut completion = issue;
             let mut line = first;
             while line <= last {
+                // set-sampling: lines outside the sampled set slice take
+                // a predicted outcome instead of the detailed walk
+                if let Some(s) = sampler.as_mut() {
+                    if s.is_set() {
+                        match s.line_mode(line) {
+                            LineMode::Detailed => {}
+                            LineMode::PredictHit => {
+                                completion = completion.max(issue + l1_latency);
+                                line += l1_line;
+                                continue;
+                            }
+                            LineMode::PredictMiss => {
+                                if st.outstanding.len() >= cfg.mshrs as usize {
+                                    let earliest = st.outstanding.pop_min();
+                                    issue = issue.max(earliest);
+                                }
+                                let fill_done = issue + s.predicted_miss_latency();
+                                st.outstanding.push(fill_done);
+                                completion = completion.max(fill_done);
+                                line += l1_line;
+                                continue;
+                            }
+                        }
+                    }
+                }
                 stats.line_touches += 1;
                 let l0ref = hiers[cmg].l0_line_ref(line);
                 let this_done;
                 match hiers[cmg].access_l0_at(core, l0ref, access.write) {
                     AccessOutcome::Hit => {
                         stats.l1_hits += 1;
+                        if let Some(s) = sampler.as_mut() {
+                            s.observe_hit();
+                        }
                         let hit_done = issue + l1_latency;
                         this_done = if l0_pf {
                             hiers[cmg].claim_l0_prefetch(core, l0ref, hit_done, &mut stats)
@@ -397,6 +494,10 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
                         );
                         st.outstanding.push(fill_done);
                         this_done = fill_done;
+                        if let Some(s) = sampler.as_mut() {
+                            // latency includes the directory step above
+                            s.observe_miss(fill_done - issue);
+                        }
 
                         if cfg.adjacent_prefetch {
                             let next = line + l1_line;
@@ -423,6 +524,11 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
 
             st.cycle = issue + l1_issue(access.bytes as u64).max(1.0);
             st.finish = st.finish.max(completion);
+            if let Some(s) = sampler.as_mut() {
+                // interval mode: accrue this access into the open
+                // measurement window (no-op for set sampling)
+                s.measured(t, st.cycle - cycle_before);
+            }
 
             let clock = st.cycle as u64;
             if let Some(&Reverse((next_min, _))) = heap.peek() {
@@ -434,7 +540,7 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
         }
     }
 
-    let cycles = states.iter().map(|s| s.finish).fold(0f64, f64::max);
+    let mut cycles = states.iter().map(|s| s.finish).fold(0f64, f64::max);
 
     // fold the per-CMG hierarchies into one socket-wide counter view
     let nlevels = cfg.levels.len();
@@ -457,6 +563,9 @@ pub fn simulate_socket(spec: &Spec, cfg: &MachineConfig, threads: usize) -> SimR
     stats.l2_writebacks = stats.levels[d].writebacks;
     stats.l2_bytes = stats.levels[d].bytes;
     stats.remote_dram_accesses = mem.remote_accesses;
+    if let Some(s) = sampler.as_mut() {
+        s.finalize(&mut stats, &mut cycles);
+    }
 
     SimResult {
         workload: spec.name.clone(),

@@ -1,5 +1,7 @@
 //! Aggregated counters of one simulation run.
 
+use super::sampling::SamplingStats;
+
 /// Counters of one hierarchy level (index 0 = the L1).  Private levels
 /// are summed across cores.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -82,6 +84,9 @@ pub struct SimStats {
     pub prefetch_pollution: u64,
     /// Per-level counters, L1 first (filled by the hierarchy walk).
     pub levels: Vec<LevelStats>,
+    /// Sampling metadata of a `--sample` run (`None` on exact runs —
+    /// every counter above is then a measured total, not an estimate).
+    pub sampled: Option<SamplingStats>,
 }
 
 impl SimStats {

@@ -105,11 +105,12 @@ larc — LARC (3D-stacked cache) reproduction toolkit
 USAGE:
   larc list [workloads|configs|experiments]
   larc run --workload <name> [--config <cfg>] [--threads N] [--levels N]
-           [--prefetch spec] [--scale ...]
+           [--prefetch spec] [--scale ...] [--sample mode] [--exact]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
-              [--store DIR] [--resume]
+              [--store DIR] [--resume] [--sample mode] [--exact]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
+                [--sample mode] [--exact]
   larc store <ls|verify|gc> --store DIR [--tmp-age SECS]
   larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
   larc model
@@ -136,6 +137,21 @@ PREFETCH:
                 Configs named with a `_pf` suffix (a64fx_s_pf, larc_c_pf, ...)
                 carry the A64FX-like default already; `--prefetch none`
                 strips it.  `larc figure fig-prefetch` sweeps the whole axis.
+
+SAMPLING:
+  --sample m    sampled simulation estimator for every cachesim job:
+                  exact          full detailed run (the default)
+                  set:R          simulate 1/R of the L1 set space in detail
+                                 (R a power of two in 2..=64); unsampled
+                                 lines take predicted outcomes, counters
+                                 are scaled back by R
+                  interval:W:M   SMARTS-style: alternate W functional-warmup
+                                 accesses with M detailed measured accesses
+                                 per thread; cycles extrapolate from the
+                                 measured windows
+                sampled results carry a 95% confidence interval and are
+                stored under their own content key (never mixed with exact)
+  --exact       force the exact engine (wins over --sample)
 
 BENCH:
   --iters N     timed iterations per case (default 3)

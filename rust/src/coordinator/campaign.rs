@@ -11,7 +11,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cachesim::{self, MachineConfig, SimResult};
+use crate::cachesim::{self, MachineConfig, Sampling, SimResult};
 use crate::mca::{self, McaEstimate, PortModel};
 use crate::trace::Spec;
 
@@ -23,6 +23,8 @@ pub enum Job {
         spec: Spec,
         config: MachineConfig,
         threads: usize,
+        /// Per-job sampling mode (`Sampling::Exact` = full detail).
+        sampling: Sampling,
     },
     /// MCA upper-bound estimate (Eq. 1 pipeline).
     Mca {
@@ -37,8 +39,13 @@ impl Job {
     /// Human-readable job label for logs and store listings.
     pub fn label(&self) -> String {
         match self {
-            Job::CacheSim { spec, config, threads } => {
-                format!("sim:{}@{}x{}", spec.name, config.name, threads)
+            Job::CacheSim { spec, config, threads, sampling } => {
+                // sampling is a suffix so exact labels stay unchanged
+                if sampling.is_exact() {
+                    format!("sim:{}@{}x{}", spec.name, config.name, threads)
+                } else {
+                    format!("sim:{}@{}x{}~{}", spec.name, config.name, threads, sampling.label())
+                }
             }
             Job::Mca { spec, arch, .. } => format!("mca:{}@{arch:?}", spec.name),
         }
@@ -242,8 +249,8 @@ pub(crate) fn collect_results(results: Vec<Mutex<Option<JobOutput>>>) -> Vec<Job
 /// store tests to produce reference outputs).
 pub(crate) fn run_job(job: &Job) -> JobOutput {
     match job {
-        Job::CacheSim { spec, config, threads } => {
-            JobOutput::Sim(cachesim::simulate(spec, config, *threads))
+        Job::CacheSim { spec, config, threads, sampling } => {
+            JobOutput::Sim(cachesim::simulate_sampled(spec, config, *threads, *sampling))
         }
         Job::Mca { spec, arch, freq_ghz, seed } => {
             let pm = PortModel::get(*arch);
@@ -267,6 +274,7 @@ mod tests {
                 spec: spec.clone(),
                 config: configs::a64fx_s(),
                 threads: 4,
+                sampling: Sampling::Exact,
             },
             Job::Mca {
                 spec,
@@ -309,6 +317,7 @@ mod tests {
             spec: workloads::by_name("ep-omp", Scale::Tiny).unwrap(),
             config: cfg,
             threads: 2,
+            sampling: Sampling::Exact,
         }
     }
 

@@ -30,7 +30,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::cachesim::stats::{LevelStats, SimStats};
-use crate::cachesim::SimResult;
+use crate::cachesim::{SamplingStats, SimResult};
 use crate::coordinator::campaign::{collect_results, Campaign, Job, JobOutput};
 use crate::mca::McaEstimate;
 use crate::util::json::{self, Json};
@@ -56,7 +56,12 @@ use crate::util::json::{self, Json};
 ///   string) and `SimStats` gained the `remote_dram_accesses` /
 ///   `remote_coherence_hops` socket counters (changing the serialized
 ///   stats layout).
-pub const SCHEMA_VERSION: u32 = 4;
+/// * v5 — the sampled simulation executor: `Job::CacheSim` grew a
+///   `sampling` mode folded into the canonical string (so sampled and
+///   exact cells of the same (workload, machine, threads) triple address
+///   different entries) and `SimStats` gained the optional `sampled`
+///   confidence-interval block.
+pub const SCHEMA_VERSION: u32 = 5;
 
 // ---------------------------------------------------------------- job keys
 
@@ -99,8 +104,8 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 /// simulated parameter changes this string (and therefore the key).
 fn canonical(job: &Job) -> String {
     match job {
-        Job::CacheSim { spec, config, threads } => {
-            format!("v{SCHEMA_VERSION};sim;threads={threads};{spec:?};{config:?}")
+        Job::CacheSim { spec, config, threads, sampling } => {
+            format!("v{SCHEMA_VERSION};sim;threads={threads};sampling={sampling:?};{spec:?};{config:?}")
         }
         Job::Mca { spec, arch, freq_ghz, seed } => {
             format!("v{SCHEMA_VERSION};mca;arch={arch:?};freq={freq_ghz:?};seed={seed};{spec:?}")
@@ -127,7 +132,7 @@ fn level_to_json(l: &LevelStats) -> Json {
 fn sim_to_json(r: &SimResult) -> Json {
     let s = &r.stats;
     let levels = json::arr(s.levels.iter().map(level_to_json).collect());
-    let stats = json::obj(vec![
+    let mut fields = vec![
         ("accesses", json::num(s.accesses as f64)),
         ("line_touches", json::num(s.line_touches as f64)),
         ("l1_hits", json::num(s.l1_hits as f64)),
@@ -147,7 +152,18 @@ fn sim_to_json(r: &SimResult) -> Json {
         ("prefetch_late", json::num(s.prefetch_late as f64)),
         ("prefetch_pollution", json::num(s.prefetch_pollution as f64)),
         ("levels", levels),
-    ]);
+    ];
+    if let Some(sp) = &s.sampled {
+        fields.push((
+            "sampled",
+            json::obj(vec![
+                ("rate", json::num(sp.rate)),
+                ("intervals", json::num(sp.intervals as f64)),
+                ("ci95", json::num(sp.ci95)),
+            ]),
+        ));
+    }
+    let stats = json::obj(fields);
     json::obj(vec![
         ("kind", json::s("sim")),
         ("workload", json::s(&r.workload)),
@@ -212,6 +228,15 @@ fn stats_from_json(v: &Json) -> Result<SimStats, String> {
         .iter()
         .map(level_from_json)
         .collect::<Result<Vec<_>, _>>()?;
+    // absent on exact runs: the field postdates them (schema v5)
+    let sampled = match v.get("sampled") {
+        Some(sv) => Some(SamplingStats {
+            rate: req_f64(sv, "rate")?,
+            intervals: req_u64(sv, "intervals")?,
+            ci95: req_f64(sv, "ci95")?,
+        }),
+        None => None,
+    };
     Ok(SimStats {
         accesses: req_u64(v, "accesses")?,
         line_touches: req_u64(v, "line_touches")?,
@@ -232,6 +257,7 @@ fn stats_from_json(v: &Json) -> Result<SimStats, String> {
         prefetch_late: req_u64(v, "prefetch_late")?,
         prefetch_pollution: req_u64(v, "prefetch_pollution")?,
         levels,
+        sampled,
     })
 }
 
@@ -575,7 +601,7 @@ impl Campaign {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cachesim::configs;
+    use crate::cachesim::{configs, Sampling};
     use crate::coordinator::campaign::run_job;
     use crate::mca::PortArch;
     use crate::trace::workloads;
@@ -594,6 +620,7 @@ mod tests {
                 spec: spec.clone(),
                 config: configs::a64fx_s(),
                 threads: 4,
+                sampling: Sampling::Exact,
             },
             Job::Mca {
                 spec,
@@ -617,14 +644,32 @@ mod tests {
                 spec: spec.clone(),
                 config: config.clone(),
                 threads: 8,
+                sampling: Sampling::Exact,
             };
             assert_ne!(job_key(&jobs[0]), job_key(&other));
             let other_cfg = Job::CacheSim {
                 spec: spec.clone(),
                 config: configs::larc_c(),
                 threads: 4,
+                sampling: Sampling::Exact,
             };
             assert_ne!(job_key(&jobs[0]), job_key(&other_cfg));
+            // sampling mode is part of the content address: a sampled
+            // cell never shadows (or reuses) the exact one
+            let sampled = Job::CacheSim {
+                spec: spec.clone(),
+                config: config.clone(),
+                threads: 4,
+                sampling: Sampling::Set { rate: 8 },
+            };
+            assert_ne!(job_key(&jobs[0]), job_key(&sampled));
+            let interval = Job::CacheSim {
+                spec: spec.clone(),
+                config: config.clone(),
+                threads: 4,
+                sampling: Sampling::Interval { warmup: 512, measure: 128 },
+            };
+            assert_ne!(job_key(&sampled), job_key(&interval));
         }
         if let Job::Mca { spec, arch, freq_ghz, .. } = &jobs[1] {
             let other = Job::Mca {
@@ -648,6 +693,36 @@ mod tests {
             // f64 Display/parse round-trips exactly.
             assert_eq!(format!("{out:?}"), format!("{back:?}"));
         }
+    }
+
+    #[test]
+    fn sampled_cells_round_trip_and_resume_byte_identically() {
+        let store = tmp_store("sampled_resume");
+        let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        let job = Job::CacheSim {
+            spec,
+            config: configs::a64fx_s(),
+            threads: 4,
+            sampling: Sampling::Set { rate: 8 },
+        };
+        let out = run_job(&job);
+        let sim = out.as_sim().unwrap();
+        assert!(sim.stats.sampled.is_some(), "sampled runs must carry the CI block");
+        let text = output_to_json(&out).to_string();
+        let back = output_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(format!("{out:?}"), format!("{back:?}"));
+
+        // resume serves the cell from disk; the entry's bytes and the
+        // resumed output are identical to the first run's
+        let c = Campaign::new(vec![job]).with_workers(1);
+        let (_, s1) = c.run_with_store(&store, true).unwrap();
+        assert_eq!(s1.misses, 1);
+        let path = store.path_for(job_key(&c.jobs[0]));
+        let bytes = fs::read(&path).unwrap();
+        let (resumed, s2) = c.run_with_store(&store, true).unwrap();
+        assert_eq!(s2, StoreRunStats { hits: 1, misses: 0, recomputed: 0 });
+        assert_eq!(bytes, fs::read(&path).unwrap());
+        assert_eq!(format!("{out:?}"), format!("{:?}", resumed[0]));
     }
 
     #[test]
@@ -802,6 +877,7 @@ mod tests {
                 spec: spec.clone(),
                 config: bad_cfg,
                 threads: 2,
+                sampling: Sampling::Exact,
             },
         );
 
@@ -822,6 +898,7 @@ mod tests {
             spec,
             config: configs::larc_c(),
             threads: 2,
+            sampling: Sampling::Exact,
         };
         let (out, st) = Campaign::new(jobs).with_workers(2).run_with_store(&store, true).unwrap();
         assert_eq!(st, StoreRunStats { hits: 2, misses: 1, recomputed: 0 });

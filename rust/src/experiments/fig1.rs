@@ -44,11 +44,13 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             spec: spec.clone(),
             config: milan.clone(),
             threads,
+            sampling: opts.sampling,
         });
         jobs.push(Job::CacheSim {
             spec,
             config: milan_x.clone(),
             threads,
+            sampling: opts.sampling,
         });
     }
     let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);

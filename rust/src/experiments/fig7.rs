@@ -103,6 +103,7 @@ fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> 
             spec: spec.clone(),
             config: cfg.clone(),
             threads: *threads,
+            sampling: opts.sampling,
         })
         .collect();
     let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);

@@ -92,12 +92,14 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             spec: spec.clone(),
             config: baseline.clone(),
             threads,
+            sampling: opts.sampling,
         });
         for (_, _, cfg) in &vars {
             jobs.push(Job::CacheSim {
                 spec: spec.clone(),
                 config: cfg.clone(),
                 threads,
+                sampling: opts.sampling,
             });
         }
     }

@@ -66,7 +66,12 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
                     m.clone().with_prefetch(*pf)
                 };
                 let threads = spec.effective_threads(m.cores);
-                jobs.push(Job::CacheSim { spec: spec.clone(), config, threads });
+                jobs.push(Job::CacheSim {
+                    spec: spec.clone(),
+                    config,
+                    threads,
+                    sampling: opts.sampling,
+                });
             }
         }
     }

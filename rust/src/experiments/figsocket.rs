@@ -59,7 +59,12 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             for m in &machines {
                 let config = m.clone().with_placement(*pl);
                 let threads = spec.effective_threads(m.total_cores());
-                jobs.push(Job::CacheSim { spec: spec.clone(), config, threads });
+                jobs.push(Job::CacheSim {
+                    spec: spec.clone(),
+                    config,
+                    threads,
+                    sampling: opts.sampling,
+                });
             }
         }
     }

@@ -47,6 +47,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
                 spec: spec.clone(),
                 config: cfg.clone(),
                 threads,
+                sampling: opts.sampling,
             });
         }
     }

@@ -24,6 +24,7 @@ pub mod table_model;
 
 use std::path::PathBuf;
 
+use crate::cachesim::Sampling;
 use crate::coordinator::report::Report;
 use crate::coordinator::store::Store;
 use crate::coordinator::{Campaign, JobOutput};
@@ -51,6 +52,9 @@ pub struct ExpOptions {
     /// accepts `latency | capacity | bankbits | l3` (the last being the
     /// stacked-L3 level-count sweep).
     pub sweep: Option<String>,
+    /// Sampling mode applied to every simulation job of the experiment
+    /// (`--sample`; [`Sampling::Exact`] by default).
+    pub sampling: Sampling,
 }
 
 impl Default for ExpOptions {
@@ -65,6 +69,7 @@ impl Default for ExpOptions {
             store: None,
             resume: false,
             sweep: None,
+            sampling: Sampling::Exact,
         }
     }
 }

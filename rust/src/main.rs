@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use larc::cachesim::{self, configs};
+use larc::cachesim::{self, configs, Sampling};
 use larc::cli::{Cli, USAGE};
 use larc::coordinator::report::{results_dir, Report};
 use larc::coordinator::store::{EntryState, Store};
@@ -57,7 +57,20 @@ fn opts(cli: &Cli) -> Result<ExpOptions> {
         store: cli.flag("store").map(PathBuf::from),
         resume: cli.has("resume"),
         sweep: cli.flag("sweep").map(str::to_string),
+        sampling: sampling_flag(cli)?,
     })
+}
+
+/// `--sample <exact|set:R|interval:W:M>` selects the simulation
+/// estimator; `--exact` is the escape hatch and wins over `--sample`.
+fn sampling_flag(cli: &Cli) -> Result<Sampling> {
+    if cli.has("exact") {
+        return Ok(Sampling::Exact);
+    }
+    match cli.flag("sample") {
+        Some(s) => Sampling::parse(s).map_err(|e| anyhow!(e)),
+        None => Ok(Sampling::Exact),
+    }
 }
 
 fn emit(reports: &[Report], cli: &Cli) -> Result<()> {
@@ -171,9 +184,19 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         );
     }
 
-    let r = cachesim::simulate(&spec, &cfg, threads);
+    let sampling = sampling_flag(cli)?;
+    let r = cachesim::simulate_sampled(&spec, &cfg, threads, sampling);
     println!("workload : {} ({})", r.workload, spec.suite.label());
     println!("config   : {} x{} threads", r.config, r.threads);
+    if let Some(sp) = &r.stats.sampled {
+        println!(
+            "sampled  : {} ({:.1}% detailed, n={}, CI95 ±{:.2}%)",
+            sampling.label(),
+            sp.rate * 100.0,
+            sp.intervals,
+            sp.ci95 * 100.0
+        );
+    }
     if cfg.cmgs > 1 {
         println!(
             "socket   : {} CMGs x {} cores, {} placement, hop {} cyc, bisection {} GB/s",
@@ -303,6 +326,49 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     }
     let out_dir = PathBuf::from(cli.flag_or("out", "."));
     std::fs::create_dir_all(&out_dir)?;
+
+    // --check: validate every baseline up front, with a per-case table,
+    // before any suite burns minutes benching.  A missing, unparsable,
+    // or vacuous baseline fails here — the gate never runs unarmed.
+    if let Some(dir) = cli.flag("check") {
+        let mut problems = Vec::new();
+        eprintln!("baseline check ({dir}):");
+        for suite in &suites {
+            let cases = larc::benchsuite::cases_for(suite).expect("suite validated above");
+            let baseline = Path::new(dir).join(format!("BENCH_{suite}.json"));
+            let floors = std::fs::read_to_string(&baseline)
+                .map_err(|e| format!("cannot read {}: {e}", baseline.display()))
+                .and_then(|t| larc::benchsuite::baseline_floors(&t));
+            match floors {
+                Ok(floors) => {
+                    for case in &cases {
+                        match floors.iter().find(|(n, _)| n == case.name) {
+                            Some((_, f)) => eprintln!(
+                                "  {suite:<10} {:<36} floor {f:.3e} accesses/s",
+                                case.name
+                            ),
+                            None => eprintln!(
+                                "  {suite:<10} {:<36} no floor (gate unarmed for this case)",
+                                case.name
+                            ),
+                        }
+                    }
+                }
+                Err(e) => {
+                    for case in &cases {
+                        eprintln!("  {suite:<10} {:<36} NO BASELINE", case.name);
+                    }
+                    problems.push(e);
+                }
+            }
+        }
+        if !problems.is_empty() {
+            bail!(
+                "bench --check baseline validation failed: {}",
+                problems.join("; ")
+            );
+        }
+    }
 
     let mut failures = Vec::new();
     for suite in suites {

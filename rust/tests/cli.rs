@@ -97,6 +97,61 @@ fn store_verify_survives_adversarial_nesting() {
 }
 
 #[test]
+fn bench_check_with_a_missing_baseline_fails_before_benching() {
+    // the regression gate must refuse to run unarmed: a --check
+    // directory with no BENCH_<suite>.json is a hard error with a
+    // per-case table, not a silently green no-op
+    let d = tmpdir("bench_check_missing");
+    let out = larc(&["bench", "cachesim", "--check", d.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out.status);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("NO BASELINE"), "{stderr}");
+    assert!(stderr.contains("baseline validation failed"), "{stderr}");
+    // and it failed before burning bench minutes: nothing was written
+    assert!(!stderr.contains("wrote "), "{stderr}");
+}
+
+#[test]
+fn bench_check_with_a_vacuous_baseline_fails() {
+    // a baseline whose entries all lack a name or positive throughput
+    // compares nothing — the gate must fail rather than pass vacuously
+    let d = tmpdir("bench_check_vacuous");
+    fs::write(d.join("BENCH_cachesim.json"), r#"{"results": []}"#).unwrap();
+    let out = larc(&["bench", "cachesim", "--check", d.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out.status);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("vacuously"), "{stderr}");
+}
+
+#[test]
+fn run_sample_prints_the_ci_line_and_exact_wins() {
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--sample", "set:8"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("sampled  : set:8"), "{stdout}");
+    assert!(stdout.contains("CI95"), "{stdout}");
+
+    // --exact is the escape hatch and wins over --sample
+    let out = larc(&[
+        "run", "--workload", "ep-omp", "--scale", "tiny", "--sample", "set:8", "--exact",
+    ]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(
+        !String::from_utf8_lossy(&out.stdout).contains("sampled  :"),
+        "--exact run still printed a sampled line"
+    );
+
+    // malformed modes are rejected at parse time
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--sample", "set:3"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("power-of-two"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn unknown_figure_id_exits_nonzero() {
     let out = larc(&["figure", "fig99"]);
     assert_eq!(out.status.code(), Some(1));

@@ -22,7 +22,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use larc::cachesim::{self, configs, MachineConfig, ReplacementPolicy, Scope};
+use larc::cachesim::{self, configs, MachineConfig, ReplacementPolicy, Sampling, Scope};
 use larc::cachesim::cache::{AccessOutcome, Cache};
 use larc::cachesim::configs::LevelConfig;
 use larc::cachesim::dram::Dram;
@@ -1080,6 +1080,75 @@ fn prefetch_enabled_configs_diverge_from_the_reference() {
     assert_eq!(ref_stats.prefetch_issued, 0, "the golden engine cannot prefetch");
     assert!(r.stats.prefetch_issued > 0, "prefetcher never fired");
     assert_ne!(ref_cycles.to_bits(), r.cycles.to_bits());
+}
+
+// ------------------------------------------- sampling-executor gate
+
+#[test]
+fn exact_sampling_dispatch_is_bit_identical_to_the_reference() {
+    // `Sampling::Exact` is a pure dispatch: `simulate_sampled` must reach
+    // the exact engine untouched — cycles and every counter bit-identical
+    // to the golden reference, with no `sampled` CI block attached
+    for cfg in two_and_three_level_machines() {
+        for threads in [1usize, 4, 16] {
+            for spec in [stream_spec(2 * MIB, 2), mixed_spec()] {
+                let (ref_cycles, ref_stats) = ref_simulate(&spec, &cfg, threads);
+                let r = cachesim::simulate_sampled(&spec, &cfg, threads, Sampling::Exact);
+                assert_eq!(
+                    ref_cycles.to_bits(),
+                    r.cycles.to_bits(),
+                    "Exact dispatch cycles diverged on {} x{threads}",
+                    cfg.name
+                );
+                assert_eq!(
+                    format!("{ref_stats:?}"),
+                    format!("{:?}", r.stats),
+                    "Exact dispatch counters diverged on {} x{threads}",
+                    cfg.name
+                );
+                assert!(
+                    r.stats.sampled.is_none(),
+                    "Exact run must not carry a sampled CI block on {}",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_sampling_dispatch_covers_socket_configs_too() {
+    // the socket dispatch path (`cmgs > 1`) must be equally untouched by
+    // an Exact sampling request
+    let cfg = configs::a64fx_sock();
+    let spec = stream_spec(12 * MIB, 1);
+    let a = cachesim::simulate(&spec, &cfg, 16);
+    let b = cachesim::simulate_sampled(&spec, &cfg, 16, Sampling::Exact);
+    assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+    assert_eq!(format!("{:?}", a.stats), format!("{:?}", b.stats));
+    assert!(b.stats.sampled.is_none());
+}
+
+#[test]
+fn sampled_modes_attach_ci_blocks_and_are_not_silently_exact() {
+    // sanity for the gate itself: a sampled run must (a) carry the CI
+    // block and (b) do measurably less detailed work than the exact run —
+    // otherwise the bound tests in sampling_bounds.rs would be vacuous
+    let spec = stream_spec(12 * MIB, 1);
+    let cfg = configs::a64fx_s();
+    let exact = cachesim::simulate(&spec, &cfg, 4);
+
+    let set = cachesim::simulate_sampled(&spec, &cfg, 4, Sampling::Set { rate: 8 });
+    let s = set.stats.sampled.expect("set-sampled run lost its CI block");
+    assert!(s.rate > 0.0 && s.rate < 1.0, "set:8 detailed fraction {}", s.rate);
+    // counters are scaled back to full-run magnitude, so total accesses match
+    assert_eq!(set.stats.accesses, exact.stats.accesses);
+
+    let ivl =
+        cachesim::simulate_sampled(&spec, &cfg, 4, Sampling::Interval { warmup: 512, measure: 128 });
+    let s = ivl.stats.sampled.expect("interval-sampled run lost its CI block");
+    assert!(s.rate > 0.0 && s.rate < 1.0, "interval detailed fraction {}", s.rate);
+    assert!(s.intervals > 0, "no measured windows");
 }
 
 // --------------------------------------------- socket-subsystem gate

@@ -161,16 +161,19 @@ fn a_panicking_job_does_not_take_down_the_campaign() {
             spec: spec.clone(),
             config: configs::a64fx_s(),
             threads: 2,
+            sampling: larc::cachesim::Sampling::Exact,
         },
         Job::CacheSim {
             spec: spec.clone(),
             config: bad,
             threads: 2,
+            sampling: larc::cachesim::Sampling::Exact,
         },
         Job::CacheSim {
             spec,
             config: configs::larc_c(),
             threads: 2,
+            sampling: larc::cachesim::Sampling::Exact,
         },
     ];
     let dir = tmpdir("panic_campaign");

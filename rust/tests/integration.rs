@@ -156,6 +156,7 @@ fn campaign_over_config_matrix_is_consistent() {
                 spec: spec.clone(),
                 config: cfg,
                 threads,
+                sampling: larc::cachesim::Sampling::Exact,
             }
         })
         .collect();

@@ -1,0 +1,194 @@
+//! Golden error-bound gate for the sampled simulation executor.
+//!
+//! The sampled estimators (`set:R`, `interval:W:M`) trade detail for
+//! speed; this gate pins *how much* accuracy the trade is allowed to
+//! cost.  Each of the six fig-prefetch workloads runs exact and sampled
+//! at 1/4/16 threads and the relative cycle error must stay inside a
+//! per-bound-class golden budget.  The bounds are deliberately loose —
+//! they catch estimator *breakage* (a scaling bug, a dropped window, a
+//! mis-predicted latency path turning cycles 10x off), not statistical
+//! noise.  Tightening them is welcome once measured slack justifies it;
+//! loosening them is a semantics change that belongs in its own commit.
+//!
+//! Alongside the error bounds, the gate pins the estimator's statistical
+//! contract: confidence intervals must narrow as the sampling rate
+//! rises, and a sampled run must be exactly reproducible (same mode,
+//! same workload, same bits out — the splitmix64 prediction draws and
+//! the window schedule are deterministic).
+
+use larc::cachesim::{self, configs, Sampling, SimResult};
+use larc::trace::{workloads, BoundClass, Scale, Spec};
+
+/// The fig-prefetch workload set: every bound class the estimators must
+/// survive (compute-, bandwidth-, and latency-dominated).
+const WORKLOADS: [&str; 6] = ["seidel-2d", "cg-omp", "durbin", "mcf", "mvt", "ep-omp"];
+
+const THREADS: [usize; 3] = [1, 4, 16];
+
+/// Golden relative-cycle-error budget per bound class.
+///
+/// Compute-bound workloads barely touch the memory system, so the
+/// estimators have little to mispredict; memory-dominated classes
+/// stack prediction error on top of queueing-model distortion (scaled
+/// DRAM bandwidth, extrapolated windows) and get a wider budget.
+fn golden_bound(class: BoundClass) -> f64 {
+    match class {
+        BoundClass::Compute | BoundClass::CacheFit => 0.30,
+        BoundClass::Bandwidth | BoundClass::Latency | BoundClass::Mixed => 0.50,
+    }
+}
+
+fn spec_for(name: &str) -> Spec {
+    workloads::by_name(name, Scale::Tiny)
+        .unwrap_or_else(|| panic!("gate workload {name} missing"))
+}
+
+fn rel_err(sampled: f64, exact: f64) -> f64 {
+    (sampled - exact).abs() / exact
+}
+
+fn assert_within_bounds(mode: Sampling) {
+    for name in WORKLOADS {
+        let spec = spec_for(name);
+        let cfg = configs::a64fx_s();
+        for threads in THREADS {
+            let exact = cachesim::simulate(&spec, &cfg, threads);
+            let sampled = cachesim::simulate_sampled(&spec, &cfg, threads, mode);
+            assert!(exact.cycles > 0.0, "{name} x{threads}: exact run produced no cycles");
+            let err = rel_err(sampled.cycles, exact.cycles);
+            let bound = golden_bound(spec.class);
+            assert!(
+                err <= bound,
+                "{name} ({:?}) x{threads} {}: relative cycle error {err:.3} \
+                 exceeds the golden bound {bound} (exact {} vs sampled {})",
+                spec.class,
+                mode.label(),
+                exact.cycles,
+                sampled.cycles,
+            );
+            assert!(
+                sampled.stats.sampled.is_some(),
+                "{name} x{threads}: sampled run lost its CI block"
+            );
+        }
+    }
+}
+
+#[test]
+fn set_sampling_is_within_the_golden_bounds() {
+    assert_within_bounds(Sampling::Set { rate: 8 });
+}
+
+#[test]
+fn interval_sampling_is_within_the_golden_bounds() {
+    // small windows so even Tiny-scale per-thread streams close many
+    // measurement windows
+    assert_within_bounds(Sampling::Interval { warmup: 192, measure: 64 });
+}
+
+#[test]
+fn sampled_miss_counters_track_exact_counters() {
+    // the scaled-back miss totals are the figure inputs (miss rates,
+    // DRAM traffic); they must land near the exact totals, not just the
+    // cycle estimate.  mvt streams through DRAM, so its L1 miss count
+    // is large and stable under sampling.
+    let spec = spec_for("mvt");
+    let cfg = configs::a64fx_s();
+    let exact = cachesim::simulate(&spec, &cfg, 4);
+    let sampled = cachesim::simulate_sampled(&spec, &cfg, 4, Sampling::Set { rate: 8 });
+    assert!(exact.stats.l1_misses > 0);
+    let err = rel_err(sampled.stats.l1_misses as f64, exact.stats.l1_misses as f64);
+    assert!(
+        err <= 0.5,
+        "set:8 L1 miss estimate off by {err:.3} ({} vs {})",
+        sampled.stats.l1_misses,
+        exact.stats.l1_misses
+    );
+}
+
+#[test]
+fn ci_width_shrinks_as_the_sampling_rate_rises() {
+    // more detailed coverage => more estimator samples => a narrower
+    // 95% interval.  Compared across widely separated rates (1/4 vs
+    // 1/32) with an epsilon so a near-zero-variance workload (both
+    // widths ~0) still passes.
+    let spec = spec_for("mcf"); // latency-bound: misses with real variance
+    let cfg = configs::a64fx_s();
+    let wide = cachesim::simulate_sampled(&spec, &cfg, 4, Sampling::Set { rate: 32 });
+    let narrow = cachesim::simulate_sampled(&spec, &cfg, 4, Sampling::Set { rate: 4 });
+    let w = wide.stats.sampled.unwrap();
+    let n = narrow.stats.sampled.unwrap();
+    assert!(
+        n.intervals > w.intervals,
+        "1/4 sampling observed fewer misses ({}) than 1/32 ({})",
+        n.intervals,
+        w.intervals
+    );
+    assert!(
+        n.ci95 <= w.ci95 + 0.02,
+        "CI width did not shrink with rate: 1/4 -> {:.4}, 1/32 -> {:.4}",
+        n.ci95,
+        w.ci95
+    );
+
+    // same property for interval mode: more windows, narrower interval
+    let few = cachesim::simulate_sampled(
+        &spec,
+        &cfg,
+        4,
+        Sampling::Interval { warmup: 1024, measure: 32 },
+    );
+    let many = cachesim::simulate_sampled(
+        &spec,
+        &cfg,
+        4,
+        Sampling::Interval { warmup: 96, measure: 32 },
+    );
+    let f = few.stats.sampled.unwrap();
+    let m = many.stats.sampled.unwrap();
+    assert!(m.intervals > f.intervals, "{} vs {}", m.intervals, f.intervals);
+    assert!(
+        m.ci95 <= f.ci95 + 0.02,
+        "interval CI did not shrink with window count: {:.4} vs {:.4}",
+        m.ci95,
+        f.ci95
+    );
+}
+
+#[test]
+fn sampled_runs_are_deterministic() {
+    // prediction draws are a stateless per-line hash and the window
+    // schedule is positional: two identical sampled runs must agree to
+    // the bit, or store resume of sampled cells could never be
+    // byte-identical
+    let spec = spec_for("cg-omp");
+    let cfg = configs::a64fx_s();
+    let digest = |r: &SimResult| (r.cycles.to_bits(), format!("{:?}", r.stats));
+    for mode in [
+        Sampling::Set { rate: 8 },
+        Sampling::Interval { warmup: 192, measure: 64 },
+    ] {
+        let a = cachesim::simulate_sampled(&spec, &cfg, 4, mode);
+        let b = cachesim::simulate_sampled(&spec, &cfg, 4, mode);
+        assert_eq!(digest(&a), digest(&b), "{} run not deterministic", mode.label());
+    }
+}
+
+#[test]
+fn sampling_composes_with_socket_configs() {
+    // the socket scheduler has its own sampled loop; pin that it
+    // produces a CI block and lands inside the same golden budget
+    let spec = spec_for("cg-omp");
+    let cfg = configs::a64fx_sock();
+    let exact = cachesim::simulate(&spec, &cfg, 8);
+    let sampled = cachesim::simulate_sampled(&spec, &cfg, 8, Sampling::Set { rate: 8 });
+    assert!(sampled.stats.sampled.is_some());
+    let err = rel_err(sampled.cycles, exact.cycles);
+    let bound = golden_bound(spec.class);
+    assert!(
+        err <= bound,
+        "socket set:8 relative error {err:.3} exceeds {bound} ({} vs {})",
+        exact.cycles,
+        sampled.cycles
+    );
+}

@@ -12,15 +12,16 @@
 //! Any change that knowingly alters simulation semantics must bump
 //! `SCHEMA_VERSION` and update these constants in the same commit —
 //! this test makes that an explicit decision instead of an accident.
-//! The current pins date from the **v4** bump (the multi-CMG socket
-//! model: `MachineConfig` grew `cmgs` / `interconnect` / `placement`,
-//! `SimStats` grew the two `remote_*` counters); recorded for the
-//! audit trail, the v3 pins were `044fd57562db917d` /
-//! `8732434b1dd14669` and the v2 pins `969fba0d3e439a58` /
-//! `720ce2ae2601aae6`.
+//! The current pins date from the **v5** bump (the sampled simulation
+//! executor: `Job::CacheSim` grew the `sampling` mode, folded into the
+//! canonical string, and `SimStats` grew the optional `sampled` CI
+//! block); recorded for the audit trail, the v4 pins were
+//! `bee5c61b6ea22c53` / `83750c5c5be26aac`, the v3 pins
+//! `044fd57562db917d` / `8732434b1dd14669`, and the v2 pins
+//! `969fba0d3e439a58` / `720ce2ae2601aae6`.
 
 use larc::cachesim::configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, Scope};
-use larc::cachesim::{Prefetcher, ReplacementPolicy};
+use larc::cachesim::{Prefetcher, ReplacementPolicy, Sampling};
 use larc::coordinator::campaign::Job;
 use larc::coordinator::store::{job_key, JobKey, SCHEMA_VERSION};
 use larc::isa::{InstrClass, InstrMix};
@@ -29,10 +30,11 @@ use larc::trace::patterns::Pattern;
 use larc::trace::{BoundClass, Phase, Placement, Spec, Suite};
 
 /// The store schema this engine generation writes.  Bumping it
-/// invalidates every existing store entry; the socket model did so
-/// deliberately (v3 -> v4) because the canonical config string and the
-/// serialized stats layout both changed.
-const PINNED_SCHEMA: u32 = 4;
+/// invalidates every existing store entry; the sampled executor did so
+/// deliberately (v4 -> v5) because the canonical job string grew the
+/// sampling mode and the serialized stats layout grew the optional
+/// `sampled` block.
+const PINNED_SCHEMA: u32 = 5;
 
 /// Frozen `Debug` form of [`pin_spec`].
 const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latency, threads: 2, \
@@ -50,10 +52,10 @@ const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, 
      dram_latency_cycles: 100.0, rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, \
      adjacent_prefetch: false, port_arch: A64fxLike }";
 
-/// Frozen key of the pinned CacheSim job (schema v4).
-const PINNED_SIM_KEY: &str = "bee5c61b6ea22c53";
-/// Frozen key of the pinned Mca job (schema v4).
-const PINNED_MCA_KEY: &str = "83750c5c5be26aac";
+/// Frozen key of the pinned CacheSim job (schema v5, exact sampling).
+const PINNED_SIM_KEY: &str = "749fe0ec3a9c5f16";
+/// Frozen key of the pinned Mca job (schema v5).
+const PINNED_MCA_KEY: &str = "322f1cabfe7a518f";
 
 fn pin_spec() -> Spec {
     Spec {
@@ -144,6 +146,7 @@ fn cachesim_job_key_is_frozen() {
         spec: pin_spec(),
         config: pin_config(),
         threads: 3,
+        sampling: Sampling::Exact,
     };
     let key = job_key(&job);
     assert_eq!(
@@ -152,7 +155,9 @@ fn cachesim_job_key_is_frozen() {
         "CacheSim JobKey drifted — resume caches from previous builds would go cold"
     );
     // cross-check the canonical construction end-to-end
-    let canonical = format!("v{PINNED_SCHEMA};sim;threads=3;{PINNED_SPEC_DEBUG};{PINNED_CFG_DEBUG}");
+    let canonical = format!(
+        "v{PINNED_SCHEMA};sim;threads=3;sampling=Exact;{PINNED_SPEC_DEBUG};{PINNED_CFG_DEBUG}"
+    );
     assert_eq!(key, JobKey(fnv1a(canonical.as_bytes())));
 }
 
@@ -182,9 +187,40 @@ fn prefetcher_field_participates_in_the_key() {
     // baseline campaign entries in a shared store
     let mut pf_cfg = pin_config();
     pf_cfg.levels[0].prefetcher = Prefetcher::Stream { streams: 8, degree: 4 };
-    let base = Job::CacheSim { spec: pin_spec(), config: pin_config(), threads: 3 };
-    let pf = Job::CacheSim { spec: pin_spec(), config: pf_cfg, threads: 3 };
+    let base = Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+        sampling: Sampling::Exact,
+    };
+    let pf = Job::CacheSim {
+        spec: pin_spec(),
+        config: pf_cfg,
+        threads: 3,
+        sampling: Sampling::Exact,
+    };
     assert_ne!(job_key(&base), job_key(&pf));
+}
+
+#[test]
+fn sampling_mode_participates_in_the_key() {
+    // a sampled approximation must never be served where an exact result
+    // was requested (or vice versa), and distinct sampling parameters
+    // are distinct cells
+    let cell = |sampling| Job::CacheSim {
+        spec: pin_spec(),
+        config: pin_config(),
+        threads: 3,
+        sampling,
+    };
+    let exact = job_key(&cell(Sampling::Exact));
+    let set8 = job_key(&cell(Sampling::Set { rate: 8 }));
+    let set16 = job_key(&cell(Sampling::Set { rate: 16 }));
+    let ivl = job_key(&cell(Sampling::Interval { warmup: 512, measure: 128 }));
+    assert_ne!(exact, set8);
+    assert_ne!(set8, set16);
+    assert_ne!(set8, ivl);
+    assert_ne!(exact, ivl);
 }
 
 #[test]
@@ -196,6 +232,7 @@ fn socket_fields_participate_in_the_key() {
         spec: pin_spec(),
         config: pin_config(),
         threads: 3,
+        sampling: Sampling::Exact,
     };
     let mut sock_cfg = pin_config();
     sock_cfg.cmgs = 4;
@@ -203,6 +240,7 @@ fn socket_fields_participate_in_the_key() {
         spec: pin_spec(),
         config: sock_cfg,
         threads: 3,
+        sampling: Sampling::Exact,
     };
     assert_ne!(job_key(&base), job_key(&sock));
 
@@ -210,6 +248,7 @@ fn socket_fields_participate_in_the_key() {
         spec: pin_spec(),
         config: pin_config().with_placement(Placement::Interleave),
         threads: 3,
+        sampling: Sampling::Exact,
     };
     assert_ne!(job_key(&base), job_key(&placed));
 
@@ -219,6 +258,7 @@ fn socket_fields_participate_in_the_key() {
         spec: pin_spec(),
         config: fabric_cfg,
         threads: 3,
+        sampling: Sampling::Exact,
     };
     assert_ne!(job_key(&base), job_key(&fabric));
 }
@@ -231,11 +271,13 @@ fn real_campaign_jobs_key_stably_across_processes() {
         spec: pin_spec(),
         config: pin_config(),
         threads: 3,
+        sampling: Sampling::Exact,
     };
     let again = Job::CacheSim {
         spec: pin_spec(),
         config: pin_config(),
         threads: 3,
+        sampling: Sampling::Exact,
     };
     assert_eq!(job_key(&job), job_key(&again));
     assert_eq!(JobKey::from_hex(&job_key(&job).hex()), Some(job_key(&job)));

@@ -27,6 +27,7 @@ fn mini_matrix_jobs() -> Vec<Job> {
                 spec: spec.clone(),
                 config: cfg,
                 threads,
+                sampling: larc::cachesim::Sampling::Exact,
             });
         }
     }
