@@ -1,0 +1,25 @@
+//! Result-store micro-benchmarks: cold scan, warm manifest-only resume,
+//! and parallel verify against a 1000-cell synthetic store.
+//!
+//! Cases live in `larc::benchsuite` (shared with `larc bench store`).
+//!
+//! Run: `cargo bench --bench bench_store` — also writes a
+//! `BENCH_store.json` baseline (bench-runner JSON, throughput in
+//! cells/s) into the working directory for CI to archive and gate
+//! against `benches/baselines/BENCH_store.json`.
+
+use larc::benchsuite;
+
+fn main() {
+    let results = match benchsuite::run_store_suite(3) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("store bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    match benchsuite::write_suite_json(std::path::Path::new("."), "store", &results) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_store.json: {e}"),
+    }
+}

@@ -1,17 +1,22 @@
-//! The cachesim / hierarchy benchmark suites, shared between the
+//! The cachesim / hierarchy / store benchmark suites, shared between the
 //! `cargo bench` binaries (`benches/bench_cachesim.rs`,
-//! `benches/bench_hierarchy.rs`) and the `larc bench` CLI subcommand —
-//! one definition of the cases, two entry points.
+//! `benches/bench_hierarchy.rs`, `benches/bench_store.rs`) and the
+//! `larc bench` CLI subcommand — one definition of the cases, two entry
+//! points.
 //!
 //! Each suite writes a `BENCH_<suite>.json` baseline (the bench runner's
-//! JSON form, with `throughput` in simulated **accesses per second**).
+//! JSON form, with `throughput` in simulated **accesses per second** for
+//! the simulator suites and **cells per second** for the store suite).
 //! CI archives the artifacts on every push and fails the build when a
 //! suite's throughput regresses more than 25% against the committed
 //! floors in `rust/benches/baselines/` — see [`compare_to_baseline`].
 
 use std::path::{Path, PathBuf};
 
-use crate::cachesim::{self, configs, MachineConfig, Prefetcher};
+use crate::cachesim::stats::SimStats;
+use crate::cachesim::{self, configs, MachineConfig, Prefetcher, SimResult};
+use crate::coordinator::store::{EntryState, JobKey, Lookup, Store};
+use crate::coordinator::JobOutput;
 use crate::isa::{InstrClass, InstrMix};
 use crate::trace::patterns::Pattern;
 use crate::trace::{BoundClass, Phase, Placement, Spec, Suite};
@@ -207,15 +212,61 @@ pub fn hierarchy_cases() -> Vec<BenchCase> {
     ]
 }
 
-/// Suite names accepted by [`cases_for`] / `larc bench`.
-pub const SUITES: [&str; 2] = ["cachesim", "hierarchy"];
+/// Suite names accepted by [`run_named_suite`] / `larc bench`.
+pub const SUITES: [&str; 3] = ["cachesim", "hierarchy", "store"];
 
-/// Look a suite's cases up by name.
+/// Case names of the store suite (it has no [`BenchCase`] simulator
+/// specs; the cases drive [`Store`] operations on a synthetic store).
+pub const STORE_CASES: [&str; 3] = [
+    "store_cold_scan_1k",
+    "store_warm_manifest_resume_1k",
+    "store_parallel_verify_1k",
+];
+
+/// Cells in the synthetic store the `store` suite benchmarks against.
+pub const STORE_BENCH_CELLS: usize = 1000;
+
+/// Look a simulator suite's cases up by name (`None` for unknown suites
+/// and for `store`, whose cases are not simulator specs).
 pub fn cases_for(suite: &str) -> Option<Vec<BenchCase>> {
     match suite {
         "cachesim" => Some(cachesim_cases()),
         "hierarchy" => Some(hierarchy_cases()),
         _ => None,
+    }
+}
+
+/// Case names of any suite in [`SUITES`], for baseline pre-validation.
+pub fn case_names(suite: &str) -> Option<Vec<&'static str>> {
+    match suite {
+        "store" => Some(STORE_CASES.to_vec()),
+        _ => cases_for(suite).map(|cs| cs.iter().map(|c| c.name).collect()),
+    }
+}
+
+/// Throughput unit a suite reports (baseline floors are in this unit
+/// per second).
+pub fn suite_unit(suite: &str) -> &'static str {
+    if suite == "store" {
+        "cells"
+    } else {
+        "accesses"
+    }
+}
+
+/// Run any suite in [`SUITES`] by name.  Simulator suites dispatch to
+/// [`run_suite`]; `store` runs [`run_store_suite`] (which builds and
+/// tears down its synthetic store, hence the `io::Result`).
+pub fn run_named_suite(suite: &str, iters: usize) -> std::io::Result<Vec<BenchResult>> {
+    match suite {
+        "store" => run_store_suite(iters),
+        other => match cases_for(other) {
+            Some(cases) => Ok(run_suite(other, &cases, iters)),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown bench suite {other:?}"),
+            )),
+        },
     }
 }
 
@@ -234,6 +285,87 @@ pub fn run_suite(suite: &str, cases: &[BenchCase], iters: usize) -> Vec<BenchRes
         results.push(r);
     }
     results
+}
+
+/// Fill `store` with `n` synthetic simulation cells (distinct keys spread
+/// uniformly across shards by a Weyl sequence) and return their keys.
+pub fn populate_synth_store(store: &Store, n: usize) -> std::io::Result<Vec<JobKey>> {
+    let mut keys = Vec::with_capacity(n);
+    for i in 0..n {
+        let key = JobKey((i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let out = JobOutput::Sim(SimResult {
+            workload: format!("synth-{i}"),
+            config: "synth".into(),
+            threads: 1,
+            cycles: 1.0e6 + i as f64,
+            runtime_s: 1.0e-3 + i as f64 * 1e-6,
+            stats: SimStats {
+                accesses: 1000 + i as u64,
+                line_touches: 2000 + i as u64,
+                ..SimStats::default()
+            },
+        });
+        store.save(key, &format!("synth:{i}"), &out)?;
+        keys.push(key);
+    }
+    Ok(keys)
+}
+
+/// The store operations suite: cold full-store scan, warm manifest-only
+/// resume (must open **zero** cell bodies), and a parallel verify walk —
+/// all against a [`STORE_BENCH_CELLS`]-cell synthetic store built in a
+/// temp directory and removed afterwards.  Throughput is cells/s.
+pub fn run_store_suite(iters: usize) -> std::io::Result<Vec<BenchResult>> {
+    println!(
+        "# store micro-benchmarks ({iters} timed iters/case, {STORE_BENCH_CELLS}-cell synthetic store)"
+    );
+    let dir = std::env::temp_dir().join(format!("larc_bench_store_{}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir)?;
+    }
+    let store = Store::open(&dir)?;
+    let keys = populate_synth_store(&store, STORE_BENCH_CELLS)?;
+    let count_valid = |entries: &[crate::coordinator::store::ScanEntry]| {
+        entries.iter().filter(|e| matches!(e.state, EntryState::Valid { .. })).count()
+    };
+    let mut results = Vec::with_capacity(STORE_CASES.len());
+
+    let r = bench_unit(STORE_CASES[0], iters, "cells", || {
+        let entries = store.scan_with_workers(1).expect("cold scan");
+        let valid = count_valid(&entries);
+        assert_eq!(valid, STORE_BENCH_CELLS, "cold scan lost cells");
+        valid as u64
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    let r = bench_unit(STORE_CASES[1], iters, "cells", || {
+        // fresh handle per iteration: the body-open counter starts at
+        // zero, so the assert pins the manifest-only warm path
+        let warm = Store::open(&dir).expect("open");
+        let index = warm.load_manifest().expect("manifest");
+        let mut hits = 0u64;
+        for &k in &keys {
+            if matches!(warm.load_indexed(k, &index), Lookup::Hit(_)) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits as usize, STORE_BENCH_CELLS, "warm resume missed cells");
+        assert_eq!(warm.bodies_opened(), 0, "warm resume opened cell bodies");
+        hits
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    let r = bench_unit(STORE_CASES[2], iters, "cells", || {
+        let entries = store.scan().expect("parallel verify");
+        count_valid(&entries) as u64
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    std::fs::remove_dir_all(&dir)?;
+    Ok(results)
 }
 
 /// Write a suite's `BENCH_<suite>.json` into `out_dir`; returns the path.
@@ -268,11 +400,11 @@ pub fn compare_to_baseline(
     for (name, floor) in &floors {
         let cur = current.iter().find(|r| &r.name == name);
         match cur.and_then(|r| r.throughput) {
-            Some((rate, _)) => {
+            Some((rate, unit)) => {
                 let min = floor * (1.0 - tolerance);
                 if rate < min {
                     violations.push(format!(
-                        "{name}: {rate:.3e} accesses/s < {min:.3e} \
+                        "{name}: {rate:.3e} {unit}/s < {min:.3e} \
                          (baseline {floor:.3e} - {:.0}%)",
                         tolerance * 100.0
                     ));
@@ -326,15 +458,23 @@ mod tests {
     #[test]
     fn suites_are_named_and_non_empty() {
         for s in SUITES {
-            let cases = cases_for(s).unwrap();
-            assert!(!cases.is_empty(), "{s}");
+            let names = case_names(s).unwrap();
+            assert!(!names.is_empty(), "{s}");
             // names unique within the suite (baseline matching is by name)
-            let mut names: Vec<_> = cases.iter().map(|c| c.name).collect();
+            let total = names.len();
+            let mut names = names;
             names.sort_unstable();
             names.dedup();
-            assert_eq!(names.len(), cases.len(), "{s} has duplicate case names");
+            assert_eq!(names.len(), total, "{s} has duplicate case names");
+            assert!(!suite_unit(s).is_empty(), "{s}");
         }
         assert!(cases_for("nope").is_none());
+        assert!(case_names("nope").is_none());
+        assert!(run_named_suite("nope", 1).is_err());
+        // the store suite's cases are name-registered but not spec-backed
+        assert!(cases_for("store").is_none());
+        assert_eq!(case_names("store").unwrap(), STORE_CASES.to_vec());
+        assert_eq!(suite_unit("store"), "cells");
     }
 
     #[test]

@@ -105,6 +105,20 @@ impl Sampling {
             Sampling::Interval { warmup, measure } => format!("interval:{warmup}:{measure}"),
         }
     }
+
+    /// Fraction of the work simulated in detail (1 for exact, 1/R for
+    /// `set:R`, M/(W+M) for `interval:W:M`) — the same quantity reported
+    /// in [`SamplingStats::rate`].  Feeds the scheduler's per-job cost
+    /// estimate.
+    pub fn detailed_fraction(&self) -> f64 {
+        match self {
+            Sampling::Exact => 1.0,
+            Sampling::Set { rate } => 1.0 / *rate as f64,
+            Sampling::Interval { warmup, measure } => {
+                *measure as f64 / (*warmup + *measure) as f64
+            }
+        }
+    }
 }
 
 /// Point-estimate metadata of a sampled run, carried in

@@ -8,8 +8,9 @@
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
 //!              |fig-socket|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--csv] [--store DIR] [--resume]
-//! larc store <ls|verify|gc> --store DIR [--tmp-age SECS] # inspect the store
-//! larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
+//! larc store <ls|verify|gc|migrate|reindex> --store DIR [--json] [--deep]
+//!            [--tmp-age SECS] [--dry-run]              # inspect/maintain the store
+//! larc bench [all|cachesim|hierarchy|store] [--iters N] [--out DIR] [--check DIR]
 //! larc model                                           # section-2 tables
 //! ```
 
@@ -109,10 +110,12 @@ USAGE:
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
               [--store DIR] [--resume] [--sample mode] [--exact]
+              [--progress] [--quiet]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
-                [--sample mode] [--exact]
-  larc store <ls|verify|gc> --store DIR [--tmp-age SECS]
-  larc bench [all|cachesim|hierarchy] [--iters N] [--out DIR] [--check DIR]
+                [--sample mode] [--exact] [--progress] [--quiet]
+  larc store <ls|verify|gc|migrate|reindex> --store DIR [--json] [--deep]
+             [--tmp-age SECS] [--dry-run]
+  larc bench [all|cachesim|hierarchy|store] [--iters N] [--out DIR] [--check DIR]
   larc model
 
 HIERARCHY:
@@ -160,10 +163,26 @@ BENCH:
                 any >25% throughput regression (CI gate)
 
 STORE:
-  --store DIR   persist each finished job as DIR/<key>.json (content-addressed)
+  --store DIR   persist each finished job as DIR/<shard>/<key>.json, where
+                <shard> is the key's first two hex digits (content-addressed,
+                prefix-sharded); flat v1 stores (DIR/<key>.json) stay readable
   --resume      reuse valid store entries; only missing/invalid keys recompute
+                (warm resumes resolve through the per-shard manifest.jsonl
+                index without opening cell bodies)
+  --progress    throttled one-line progress meter on stderr (done/total,
+                hit/miss/recomputed, jobs/s, cost-model ETA)
+  --quiet       suppress the progress meter (wins over --progress)
+  --json        (ls) machine-readable listing on stdout, key-sorted
+  --deep        (verify) read and re-validate every cell body and cross-check
+                it against the manifest, instead of the manifest-first check
+  --dry-run     (gc) report what would be reclaimed without deleting
   --tmp-age S   (gc) reclaim `*.tmp*` litter older than S seconds (default
                 3600; 0 reclaims immediately — only safe with no live writers)
+  store migrate rewrites a flat v1 store into the sharded v2 layout in place
+                (atomic per-cell rename; idempotent and crash-resumable),
+                then rebuilds the manifests
+  store reindex rebuilds every shard's manifest.jsonl from the cell bodies
+                (after hand edits, gc of corrupt cells, or manifest damage)
   (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 fig-prefetch
    fig-socket headline; other experiments are closed-form or direct and note
    that the flags are ignored)
@@ -253,5 +272,31 @@ mod tests {
         let c = parse(&["store", "gc", "--store", "/tmp/s", "--tmp-age", "0"]);
         assert_eq!(c.flag("tmp-age"), Some("0"));
         assert_eq!(c.usize_flag("tmp-age", 3600).unwrap(), 0);
+    }
+
+    #[test]
+    fn store_maintenance_and_progress_flags_parse() {
+        let c = parse(&["store", "ls", "--store", "/tmp/s", "--json"]);
+        assert_eq!(c.positional, vec!["ls"]);
+        assert!(c.has("json"));
+
+        let c = parse(&["store", "gc", "--store", "/tmp/s", "--tmp-age", "0", "--dry-run"]);
+        assert!(c.has("dry-run"));
+
+        let c = parse(&["store", "verify", "--store", "/tmp/s", "--deep"]);
+        assert!(c.has("deep"));
+
+        let c = parse(&["store", "migrate", "--store", "/tmp/s"]);
+        assert_eq!(c.positional, vec!["migrate"]);
+        let c = parse(&["store", "reindex", "--store=/tmp/s"]);
+        assert_eq!(c.positional, vec!["reindex"]);
+
+        let c = parse(&["figure", "fig7a", "--store", "/tmp/s", "--resume", "--progress"]);
+        assert!(c.has("progress"));
+        let c = parse(&["campaign", "--progress", "--quiet"]);
+        assert!(c.has("progress") && c.has("quiet"));
+
+        let c = parse(&["bench", "store", "--iters", "1"]);
+        assert_eq!(c.positional, vec!["store"]);
     }
 }

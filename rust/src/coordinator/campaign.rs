@@ -5,11 +5,19 @@
 //! threads over a lock-free-enough work queue (an atomic cursor into a
 //! frozen job vector).  Results are collected per-index so the output
 //! order is independent of scheduling — campaigns must be reproducible.
+//!
+//! The queue is drained longest-processing-time-first: each job gets a
+//! deterministic relative cost estimate ([`Job::cost_estimate`]) and the
+//! todo list is sorted by it descending before the cursor starts, so one
+//! heavy exact cell is picked up first instead of straggling an
+//! otherwise-idle pool at the end of the sweep.  Ordering the *queue*
+//! never changes the *results* — slots are per-index.
 
 use std::io;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::cachesim::{self, MachineConfig, Sampling, SimResult};
 use crate::mca::{self, McaEstimate, PortModel};
@@ -48,6 +56,31 @@ impl Job {
                 }
             }
             Job::Mca { spec, arch, .. } => format!("mca:{}@{arch:?}", spec.name),
+        }
+    }
+
+    /// Deterministic relative cost estimate for LPT scheduling: the
+    /// job's detailed simulated work, approximated as per-thread chunk
+    /// count × threads × CMGs, scaled by the fraction of chunks the
+    /// sampling mode simulates in detail.  Units are arbitrary — only
+    /// the ordering (and the ratio feeding the progress ETA) matters.
+    pub fn cost_estimate(&self) -> f64 {
+        match self {
+            Job::CacheSim { spec, config, threads, sampling } => {
+                let chunks: u64 = spec
+                    .phases
+                    .iter()
+                    .map(|p| p.pattern.chunks_per_thread(*threads))
+                    .sum();
+                (chunks as f64
+                    * *threads as f64
+                    * config.cmgs as f64
+                    * sampling.detailed_fraction())
+                .max(1.0)
+            }
+            // MCA runs sample a handful of basic blocks per phase —
+            // orders of magnitude cheaper than any cachesim cell
+            Job::Mca { spec, .. } => spec.phases.len() as f64,
         }
     }
 }
@@ -93,8 +126,11 @@ pub struct Campaign {
     pub jobs: Vec<Job>,
     /// Worker-thread count.
     pub workers: usize,
-    /// Progress lines to stderr.
+    /// Per-job completion lines to stderr.
     pub verbose: bool,
+    /// Throttled one-line progress meter to stderr (done/total, rate,
+    /// cost-model ETA).
+    pub progress: bool,
 }
 
 impl Campaign {
@@ -107,6 +143,7 @@ impl Campaign {
             jobs,
             workers,
             verbose: false,
+            progress: false,
         }
     }
 
@@ -116,9 +153,15 @@ impl Campaign {
         self
     }
 
-    /// Toggle progress lines to stderr.
+    /// Toggle per-job completion lines to stderr.
     pub fn verbose(mut self, v: bool) -> Self {
         self.verbose = v;
+        self
+    }
+
+    /// Toggle the throttled progress meter on stderr.
+    pub fn progress(mut self, p: bool) -> Self {
+        self.progress = p;
         self
     }
 
@@ -138,11 +181,25 @@ impl Campaign {
         collect_results(results)
     }
 
+    /// [`Campaign::run_indices_tracked`] with a progress meter derived
+    /// from this campaign's own settings (no store preload counts).
+    pub(crate) fn run_indices(
+        &self,
+        todo: &[usize],
+        results: &[Mutex<Option<JobOutput>>],
+        on_done: &(dyn Fn(usize, &JobOutput) -> io::Result<()> + Sync),
+    ) -> io::Result<()> {
+        let progress = Progress::new(self.progress, &self.jobs, todo, 0, None);
+        self.run_indices_tracked(todo, results, on_done, &progress)
+    }
+
     /// Shared worker pool: execute `self.jobs[i]` for each `i` in `todo`,
-    /// storing outputs into `results[i]`.  `on_done` runs on the worker
-    /// thread after each job (the store-backed executor persists the
-    /// entry there); its first error aborts the remaining queue and is
-    /// returned.
+    /// storing outputs into `results[i]`.  The queue is sorted longest
+    /// estimated cost first before the atomic cursor starts (ties break
+    /// on index, so the order is fully deterministic).  `on_done` runs on
+    /// the worker thread after each job (the store-backed executor
+    /// persists the entry there); its first error aborts the remaining
+    /// queue and is returned.
     ///
     /// Per-job **panics are caught**: a panicking job must not poison
     /// the result slots or tear down the other workers (losing a whole
@@ -151,12 +208,19 @@ impl Campaign {
     /// every successful cell; after the queue drains, the collected
     /// failures come back as one error naming each cell — a
     /// `--store --resume` rerun then recomputes only those.
-    pub(crate) fn run_indices(
+    pub(crate) fn run_indices_tracked(
         &self,
         todo: &[usize],
         results: &[Mutex<Option<JobOutput>>],
         on_done: &(dyn Fn(usize, &JobOutput) -> io::Result<()> + Sync),
+        progress: &Progress,
     ) -> io::Result<()> {
+        // longest-processing-time-first: heavy cells start early so they
+        // overlap the rest of the sweep instead of trailing it
+        let mut ordered: Vec<(usize, f64)> =
+            todo.iter().map(|&i| (i, self.jobs[i].cost_estimate())).collect();
+        ordered.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+
         let cursor = AtomicUsize::new(0);
         let abort = AtomicBool::new(false);
         let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
@@ -168,10 +232,10 @@ impl Campaign {
                         break;
                     }
                     let t = cursor.fetch_add(1, Ordering::Relaxed);
-                    if t >= todo.len() {
+                    if t >= ordered.len() {
                         break;
                     }
-                    let i = todo[t];
+                    let (i, cost) = ordered[t];
                     // `run_job` takes `&Job` and owns everything else it
                     // touches, so resuming the pool after a caught panic
                     // observes no broken invariants
@@ -184,6 +248,7 @@ impl Campaign {
                                 eprintln!("  [{}/{}] {label} PANICKED: {msg}", t + 1, todo.len());
                             }
                             panics.lock().unwrap().push((i, format!("{label}: {msg}")));
+                            progress.job_done(cost);
                             continue;
                         }
                     };
@@ -205,6 +270,7 @@ impl Campaign {
                         break;
                     }
                     *results[i].lock().unwrap() = Some(out);
+                    progress.job_done(cost);
                 });
             }
         });
@@ -223,6 +289,148 @@ impl Campaign {
         }
         Ok(())
     }
+}
+
+// ----------------------------------------------------------- progress meter
+
+/// Throttled stderr progress line shared by the pool workers.  The ETA
+/// comes from the cost model: elapsed time is scaled by the ratio of
+/// remaining to completed estimated cost, so a front-loaded LPT queue
+/// does not fake an early finish.
+pub(crate) struct Progress {
+    enabled: bool,
+    todo_total: usize,
+    /// Jobs already satisfied before the pool started (store hits).
+    preload: usize,
+    /// `(misses, recomputed)` when running store-backed; adds the
+    /// hit/miss/recomputed triple to the line.
+    store_counts: Option<(usize, usize)>,
+    total_cost: f64,
+    state: Mutex<ProgressState>,
+}
+
+struct ProgressState {
+    done: usize,
+    done_cost: f64,
+    started: Instant,
+    last_line: Option<Instant>,
+}
+
+impl Progress {
+    pub(crate) fn new(
+        enabled: bool,
+        jobs: &[Job],
+        todo: &[usize],
+        preload: usize,
+        store_counts: Option<(usize, usize)>,
+    ) -> Progress {
+        let total_cost = todo.iter().map(|&i| jobs[i].cost_estimate()).sum();
+        Progress {
+            enabled,
+            todo_total: todo.len(),
+            preload,
+            store_counts,
+            total_cost,
+            state: Mutex::new(ProgressState {
+                done: 0,
+                done_cost: 0.0,
+                started: Instant::now(),
+                last_line: None,
+            }),
+        }
+    }
+
+    /// Record one finished job (cost per the estimate that ordered the
+    /// queue) and emit a throttled progress line — at most one per
+    /// 200 ms, plus always the final one.
+    pub(crate) fn job_done(&self, cost: f64) {
+        if !self.enabled {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.done += 1;
+        st.done_cost += cost;
+        let last = st.done == self.todo_total;
+        let due = st
+            .last_line
+            .map(|t| t.elapsed() >= Duration::from_millis(200))
+            .unwrap_or(true);
+        if !last && !due {
+            return;
+        }
+        st.last_line = Some(Instant::now());
+        let elapsed = st.started.elapsed().as_secs_f64();
+        let rate = if elapsed > 0.0 { st.done as f64 / elapsed } else { 0.0 };
+        let eta = if st.done_cost > 0.0 {
+            (self.total_cost - st.done_cost).max(0.0) * elapsed / st.done_cost
+        } else {
+            f64::INFINITY
+        };
+        let counts = match self.store_counts {
+            Some((misses, recomputed)) => {
+                format!(" ({} hit, {misses} miss, {recomputed} recomputed)", self.preload)
+            }
+            None => String::new(),
+        };
+        eprintln!(
+            "progress: {}/{} jobs{counts} | {rate:.1} jobs/s | ETA {}",
+            self.preload + st.done,
+            self.preload + self.todo_total,
+            fmt_eta(eta)
+        );
+    }
+}
+
+/// Compact ETA rendering: `--` when unknown, else `37s` / `4m05s` /
+/// `2h12m` depending on magnitude.
+fn fmt_eta(eta_s: f64) -> String {
+    if !eta_s.is_finite() {
+        return "--".to_string();
+    }
+    let s = eta_s.round() as u64;
+    if s >= 3600 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else if s >= 60 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{s}s")
+    }
+}
+
+// ------------------------------------------------------------- shared pool
+
+/// Run `f` over `items` on a scoped worker pool (the same atomic-cursor /
+/// per-slot-mutex shape as the campaign queue).  Used by the store to
+/// parallelize per-shard directory walks; a panic inside `f` propagates
+/// when the scope joins.
+pub(crate) fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, items.len());
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
 }
 
 /// Best-effort text of a caught panic payload (`&str` / `String`
@@ -263,9 +471,11 @@ pub(crate) fn run_job(job: &Job) -> JobOutput {
 mod tests {
     use super::*;
     use crate::cachesim::configs;
+    use crate::isa::{InstrClass, InstrMix};
     use crate::mca::PortArch;
+    use crate::trace::patterns::Pattern;
     use crate::trace::workloads;
-    use crate::trace::Scale;
+    use crate::trace::{BoundClass, Phase, Scale, Suite};
 
     fn tiny_jobs() -> Vec<Job> {
         let spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
@@ -344,5 +554,84 @@ mod tests {
     #[should_panic(expected = "campaign failed")]
     fn plain_run_panics_with_the_cell_list() {
         Campaign::new(vec![panicking_job()]).with_workers(1).run();
+    }
+
+    /// A synthetic stream job whose footprint (and therefore cost
+    /// estimate) is directly proportional to `kib`.
+    fn stream_job(kib: u64) -> Job {
+        let spec = Spec {
+            name: format!("stream{kib}k"),
+            suite: Suite::PolyBench,
+            class: BoundClass::Bandwidth,
+            threads: 2,
+            max_threads: 2,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "stream",
+                pattern: Pattern::Stream {
+                    bytes: kib * 1024,
+                    passes: 1,
+                    streams: 1,
+                    write_fraction: 0.25,
+                },
+                mix: InstrMix::new().with(InstrClass::Load, 1.0),
+                ilp: 4.0,
+            }],
+        };
+        Job::CacheSim {
+            spec,
+            config: configs::a64fx_s(),
+            threads: 2,
+            sampling: Sampling::Exact,
+        }
+    }
+
+    #[test]
+    fn cost_estimates_rank_jobs_sensibly() {
+        // more bytes, more cost
+        assert!(stream_job(1024).cost_estimate() > stream_job(64).cost_estimate());
+        // sampling divides detailed work
+        let jobs = tiny_jobs();
+        if let Job::CacheSim { spec, config, .. } = &jobs[0] {
+            let sampled = Job::CacheSim {
+                spec: spec.clone(),
+                config: config.clone(),
+                threads: 4,
+                sampling: Sampling::Set { rate: 8 },
+            };
+            assert!(sampled.cost_estimate() < jobs[0].cost_estimate());
+            // more CMGs, more simulated traffic
+            let mut sock_cfg = config.clone();
+            sock_cfg.cmgs = 4;
+            let sock = Job::CacheSim {
+                spec: spec.clone(),
+                config: sock_cfg,
+                threads: 4,
+                sampling: Sampling::Exact,
+            };
+            assert!(sock.cost_estimate() > jobs[0].cost_estimate());
+        }
+        // MCA estimates are far cheaper than any simulation
+        assert!(jobs[1].cost_estimate() < jobs[0].cost_estimate());
+    }
+
+    #[test]
+    fn the_pool_drains_longest_estimated_jobs_first() {
+        // submission order: middle job is the heaviest, first the lightest
+        let jobs = vec![stream_job(64), stream_job(1024), stream_job(256)];
+        let c = Campaign::new(jobs).with_workers(1);
+        let todo: Vec<usize> = vec![0, 1, 2];
+        let results: Vec<Mutex<Option<JobOutput>>> = (0..3).map(|_| Mutex::new(None)).collect();
+        let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        c.run_indices(&todo, &results, &|i, _| {
+            order.lock().unwrap().push(i);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 0], "expected LPT drain order");
+        // results still align positionally
+        for slot in &results {
+            assert!(slot.lock().unwrap().is_some());
+        }
     }
 }

@@ -5,11 +5,15 @@
 //! backend, and aggregate per-figure results".  This module owns that:
 //!
 //! * [`campaign`] — a worker-pool job scheduler over simulation jobs with
-//!   deterministic result collection;
+//!   deterministic result collection; the queue drains longest estimated
+//!   cost first and can emit a throttled progress meter;
 //! * [`batcher`] — dynamic batching of MCA port-pressure requests into the
 //!   fixed-shape PJRT executables (pad-to-batch, route-to-size);
 //! * [`store`] — persistent content-addressed result store making
 //!   campaigns resumable (skip already-computed jobs across invocations);
+//!   cells live in a prefix-sharded layout with an append-only per-shard
+//!   manifest index, so warm resumes and listings are O(changed) instead
+//!   of O(cells);
 //! * [`report`] — CSV/markdown emission for the experiment drivers.
 
 pub mod batcher;

@@ -6,8 +6,20 @@
 //! is only tractable when partial results survive across invocations.
 //! This module gives every [`Job`] a stable [`JobKey`] — an FNV-1a hash
 //! over the canonicalized job description plus a schema-version tag — and
-//! persists completed [`JobOutput`]s as `store/<key>.json`, written with
-//! the in-tree JSON writer (the vendored crate set has no serde).
+//! persists completed [`JobOutput`]s as JSON entries, written with the
+//! in-tree JSON writer (the vendored crate set has no serde).
+//!
+//! On-disk layout (v2, sharded): cells live under prefix-fanout
+//! directories, `DIR/<first-2-hex-of-key>/<key>.json`, so no single
+//! directory ever holds the full 10⁴–10⁵-cell campaign grid.  Each shard
+//! also carries an append-only `manifest.jsonl` index: one line per
+//! committed cell recording its key, schema, byte length, body FNV, and
+//! the serialized entry itself.  Warm operations (`--resume`,
+//! `store ls`) consult the manifest first and only open cell bodies that
+//! are missing from it or fail its cheap checks, making them O(changed)
+//! instead of O(cells).  Flat v1 stores (cells directly in `DIR/`) are
+//! detected and read transparently; [`Store::migrate`] rewrites them in
+//! place and [`Store::reindex`] rebuilds a stale or absent manifest.
 //!
 //! Guarantees:
 //!
@@ -17,13 +29,17 @@
 //!   changes the key, so stale results are never reused.
 //! * **Crash safety** — entries are written to a unique temp file and
 //!   renamed into place, so a killed campaign loses at most its in-flight
-//!   jobs; everything already renamed is valid.
+//!   jobs; everything already renamed is valid.  The manifest is advisory:
+//!   a torn or missing manifest line only costs a body read, never a
+//!   wrong result.
 //! * **Self-validation** — entries embed their schema version and key;
 //!   [`Store::scan`] flags corrupt or stale files, and [`Store::gc`]
 //!   removes them.
 
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::io;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -31,7 +47,9 @@ use std::time::Duration;
 
 use crate::cachesim::stats::{LevelStats, SimStats};
 use crate::cachesim::{SamplingStats, SimResult};
-use crate::coordinator::campaign::{collect_results, Campaign, Job, JobOutput};
+use crate::coordinator::campaign::{
+    collect_results, parallel_map, Campaign, Job, JobOutput, Progress,
+};
 use crate::mca::McaEstimate;
 use crate::util::json::{self, Json};
 
@@ -61,7 +79,19 @@ use crate::util::json::{self, Json};
 ///   exact cells of the same (workload, machine, threads) triple address
 ///   different entries) and `SimStats` gained the optional `sampled`
 ///   confidence-interval block.
+///
+/// The sharded directory layout and the manifest index are *not* part of
+/// the schema: they change where a cell lives and how fast it is found,
+/// never what it means, so the v2 layout migration preserves every key.
 pub const SCHEMA_VERSION: u32 = 5;
+
+/// Per-shard index file name (one JSON record per line, append-only).
+pub const MANIFEST_NAME: &str = "manifest.jsonl";
+
+/// Marker splitting a manifest line's cheap head from its embedded entry.
+/// The entry field is serialized last precisely so the head can be parsed
+/// without touching the (much larger) entry text.
+const ENTRY_MARKER: &str = ",\"entry\":";
 
 // ---------------------------------------------------------------- job keys
 
@@ -307,6 +337,135 @@ fn parse_entry(text: &str, expect: JobKey) -> Result<(JobOutput, String), String
     Ok((out, label))
 }
 
+fn kind_of(out: &JobOutput) -> &'static str {
+    match out {
+        JobOutput::Sim(_) => "sim",
+        JobOutput::Mca(_) => "mca",
+    }
+}
+
+// ---------------------------------------------------------------- manifest
+
+/// One replayed manifest record: the cheap head fields plus the embedded
+/// entry text (parsed lazily, only when a lookup actually needs it).
+#[derive(Clone, Debug)]
+pub struct ManifestRecord {
+    /// Byte length of the cell body when the record was appended.
+    pub len: u64,
+    /// FNV-1a of the cell body when the record was appended.
+    pub fnv: u64,
+    /// Output kind, `"sim"` or `"mca"`.
+    pub kind: String,
+    /// Human-readable job label.
+    pub label: String,
+    /// Simulated runtime of the cell's output, seconds.
+    pub runtime_s: f64,
+    /// The serialized store entry, verbatim; parsed on demand.
+    pub entry: String,
+}
+
+/// Replayed manifest state for a store: last record wins per key.
+#[derive(Debug, Default)]
+pub struct ManifestIndex {
+    records: HashMap<u64, ManifestRecord>,
+    /// Manifest files found (one per populated shard).
+    pub files: usize,
+    /// Lines that failed to parse (torn writes, hand edits).  Affected
+    /// cells silently fall back to body reads.
+    pub malformed: usize,
+    /// Well-formed lines written under a different [`SCHEMA_VERSION`].
+    pub stale_schema: usize,
+}
+
+impl ManifestIndex {
+    /// The record for `key`, if any line mentioned it.
+    pub fn get(&self, key: JobKey) -> Option<&ManifestRecord> {
+        self.records.get(&key.0)
+    }
+
+    /// Number of distinct keys with a current-schema record.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether no key has a record.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// All keys with a record, in unspecified order.
+    pub fn keys(&self) -> impl Iterator<Item = JobKey> + '_ {
+        self.records.keys().map(|&k| JobKey(k))
+    }
+}
+
+/// Build one manifest line.  The entry field is last so readers can split
+/// the line at [`ENTRY_MARKER`] and parse only the head.
+fn manifest_line(
+    key: JobKey,
+    kind: &str,
+    label: &str,
+    runtime_s: f64,
+    len: u64,
+    fnv: u64,
+    entry: &str,
+) -> String {
+    format!(
+        "{{\"key\":{},\"schema\":{SCHEMA_VERSION},\"len\":{len},\"fnv\":\"{fnv:016x}\",\
+         \"kind\":{},\"label\":{},\"runtime_s\":{},\"entry\":{entry}}}\n",
+        json::s(&key.hex()),
+        json::s(kind),
+        json::s(label),
+        json::num(runtime_s),
+    )
+}
+
+enum ManifestLine {
+    Record(JobKey, ManifestRecord),
+    Stale,
+    Malformed,
+}
+
+fn parse_manifest_line(line: &str) -> ManifestLine {
+    let Some(pos) = line.find(ENTRY_MARKER) else {
+        return ManifestLine::Malformed;
+    };
+    if !line.ends_with('}') {
+        return ManifestLine::Malformed;
+    }
+    let entry = &line[pos + ENTRY_MARKER.len()..line.len() - 1];
+    let head = format!("{}}}", &line[..pos]);
+    let Ok(v) = json::parse(&head) else {
+        return ManifestLine::Malformed;
+    };
+    let Ok(schema) = req_u64(&v, "schema") else {
+        return ManifestLine::Malformed;
+    };
+    if schema as u32 != SCHEMA_VERSION {
+        return ManifestLine::Stale;
+    }
+    let parsed = (|| -> Result<(JobKey, ManifestRecord), String> {
+        let key = JobKey::from_hex(&req_str(&v, "key")?).ok_or("bad key field")?;
+        let fnv =
+            u64::from_str_radix(&req_str(&v, "fnv")?, 16).map_err(|_| "bad fnv field".to_string())?;
+        Ok((
+            key,
+            ManifestRecord {
+                len: req_u64(&v, "len")?,
+                fnv,
+                kind: req_str(&v, "kind")?,
+                label: req_str(&v, "label")?,
+                runtime_s: req_f64(&v, "runtime_s")?,
+                entry: entry.to_string(),
+            },
+        ))
+    })();
+    match parsed {
+        Ok((key, rec)) => ManifestLine::Record(key, rec),
+        Err(_) => ManifestLine::Malformed,
+    }
+}
+
 // ---------------------------------------------------------------- the store
 
 /// Result of looking one key up in the store.
@@ -328,12 +487,16 @@ pub enum EntryState {
         label: String,
         kind: &'static str,
         runtime_s: f64,
+        bytes: u64,
+        body_fnv: u64,
     },
-    /// A store-named entry (`<16-hex>.json`) that fails validation.
+    /// A store-named entry (`<16-hex>.json`) that fails validation, or a
+    /// well-formed cell filed under the wrong shard directory.
     Corrupt {
         reason: String,
     },
-    /// Temp file (`<16-hex>.tmpN`) left behind by a killed writer.
+    /// Temp file (`<16-hex>.tmpN` or `manifest.jsonl.tmpN`) left behind
+    /// by a killed writer.
     TmpLeftover,
     /// Not a store file at all (unrecognized name).  Reported for
     /// visibility but never touched by [`Store::gc`] — the directory may
@@ -363,10 +526,105 @@ pub struct GcReport {
     pub in_flight: usize,
 }
 
-/// On-disk store: one `<key>.json` per completed job.
+/// What [`Store::gc`] *would* do, computed without deleting anything.
+#[derive(Debug, Default)]
+pub struct GcPlan {
+    /// Corrupt entries (path, reason) slated for removal.
+    pub remove_corrupt: Vec<(PathBuf, String)>,
+    /// Stale temp litter slated for removal.
+    pub remove_tmp: Vec<PathBuf>,
+    /// Valid entries that would be kept.
+    pub kept: usize,
+    /// Unrecognized files that would be left untouched.
+    pub foreign: usize,
+    /// Fresh temp files that would be left alone.
+    pub in_flight: usize,
+}
+
+impl GcPlan {
+    /// Total number of files the plan would delete.
+    pub fn would_remove(&self) -> usize {
+        self.remove_corrupt.len() + self.remove_tmp.len()
+    }
+}
+
+/// One listed cell from [`Store::ls`].
+#[derive(Clone, Debug)]
+pub struct LsEntry {
+    /// The cell's job key.
+    pub key: JobKey,
+    /// Output kind, `"sim"` or `"mca"`.
+    pub kind: String,
+    /// Human-readable job label.
+    pub label: String,
+    /// Simulated runtime of the cell's output, seconds.
+    pub runtime_s: f64,
+}
+
+/// Manifest-first store listing (see [`Store::ls`]).
+#[derive(Debug, Default)]
+pub struct LsReport {
+    /// Valid cells, sorted by key.
+    pub entries: Vec<LsEntry>,
+    /// Corrupt cells (path, reason), sorted by path.
+    pub corrupt: Vec<(PathBuf, String)>,
+    /// Temp litter, sorted by path.
+    pub tmp: Vec<PathBuf>,
+    /// Files the store does not own, sorted by path.
+    pub foreign: Vec<PathBuf>,
+    /// How many of `entries` were served from the manifest without
+    /// opening the cell body.
+    pub from_manifest: usize,
+    /// Malformed manifest lines encountered (see [`ManifestIndex`]).
+    pub manifest_malformed: usize,
+    /// Manifest records that no longer match the on-disk state (length
+    /// drift or deleted cells); `store reindex` clears them.
+    pub manifest_stale: usize,
+}
+
+/// Counts from [`Store::reindex`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReindexReport {
+    /// Valid cells written into the rebuilt manifests.
+    pub indexed: usize,
+    /// Cells skipped because their body failed validation (or was filed
+    /// under the wrong shard); `store gc` removes them.
+    pub corrupt_skipped: usize,
+    /// Shard directories processed.
+    pub shards: usize,
+}
+
+/// Counts from [`Store::migrate`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MigrateReport {
+    /// Flat v1 cells renamed into their shard directory.
+    pub moved: usize,
+    /// Flat v1 cells removed because the sharded copy already existed
+    /// (an interrupted earlier migration; the sharded copy wins).
+    pub duplicate_flat_removed: usize,
+    /// Result of the manifest rebuild that follows the renames.
+    pub reindex: ReindexReport,
+}
+
+/// On-disk store: one `<shard>/<key>.json` per completed job.
 pub struct Store {
     dir: PathBuf,
     tmp_seq: AtomicU64,
+    manifest_lock: Mutex<()>,
+    bodies_opened: AtomicU64,
+}
+
+/// First two hex digits of the key: the cell's shard directory name.
+fn shard_name(key: JobKey) -> String {
+    format!("{:02x}", key.0 >> 56)
+}
+
+fn is_shard_name(name: &str) -> bool {
+    name.len() == 2 && name.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+}
+
+fn file_name_of(path: &Path) -> String {
+    path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string()
 }
 
 impl Store {
@@ -376,6 +634,8 @@ impl Store {
         Ok(Store {
             dir: dir.to_path_buf(),
             tmp_seq: AtomicU64::new(0),
+            manifest_lock: Mutex::new(()),
+            bodies_opened: AtomicU64::new(0),
         })
     }
 
@@ -384,14 +644,33 @@ impl Store {
         &self.dir
     }
 
-    /// Path of the entry file for `key`.
+    /// Path of the entry file for `key` in the sharded v2 layout (where
+    /// all writes go).
     pub fn path_for(&self, key: JobKey) -> PathBuf {
+        self.dir.join(shard_name(key)).join(format!("{}.json", key.hex()))
+    }
+
+    /// Legacy flat v1 path for `key` (read-compatibility only; new cells
+    /// are never written here).
+    pub fn flat_path_for(&self, key: JobKey) -> PathBuf {
         self.dir.join(format!("{}.json", key.hex()))
     }
 
-    /// Look up one key; corrupt or stale entries read as [`Lookup::Invalid`].
-    pub fn load(&self, key: JobKey) -> Lookup {
-        let text = match fs::read_to_string(self.path_for(key)) {
+    /// Number of cell bodies this handle has opened and fully read.
+    /// Manifest reads and `stat` probes are not counted — this is the
+    /// observable that pins the manifest-only warm path in tests.
+    pub fn bodies_opened(&self) -> u64 {
+        self.bodies_opened.load(Ordering::Relaxed)
+    }
+
+    fn read_body(&self, path: &Path) -> io::Result<String> {
+        let text = fs::read_to_string(path)?;
+        self.bodies_opened.fetch_add(1, Ordering::Relaxed);
+        Ok(text)
+    }
+
+    fn load_at(&self, path: &Path, key: JobKey) -> Lookup {
+        let text = match self.read_body(path) {
             Ok(t) => t,
             Err(e) if e.kind() == io::ErrorKind::NotFound => return Lookup::Miss,
             Err(_) => return Lookup::Invalid,
@@ -402,78 +681,475 @@ impl Store {
         }
     }
 
-    /// Persist one result atomically: write to a unique temp file in the
-    /// same directory, then rename over the final path.  A killed process
-    /// leaves at most `*.tmp*` litter (removed by [`Store::gc`]), never a
-    /// truncated entry.  The temp name embeds the process id plus a
-    /// per-process sequence number, so concurrent `larc` invocations
-    /// sharing one store never collide on the same temp path.
-    pub fn save(&self, key: JobKey, label: &str, out: &JobOutput) -> io::Result<()> {
-        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
-        let pid = std::process::id();
-        let tmp = self.dir.join(format!("{}.tmp{pid}-{seq}", key.hex()));
-        fs::write(&tmp, entry_json(key, label, out).to_string())?;
-        fs::rename(&tmp, self.path_for(key))
+    /// Look up one key; corrupt or stale entries read as [`Lookup::Invalid`].
+    /// The sharded v2 path is tried first, then the flat v1 fallback.
+    pub fn load(&self, key: JobKey) -> Lookup {
+        match self.load_at(&self.path_for(key), key) {
+            Lookup::Miss => self.load_at(&self.flat_path_for(key), key),
+            found => found,
+        }
     }
 
-    /// Validate every file in the store directory.
-    pub fn scan(&self) -> io::Result<Vec<ScanEntry>> {
-        let mut entries = Vec::new();
+    /// Manifest-first lookup: if `index` has a current-schema record for
+    /// `key` and the on-disk byte length still matches it, the result is
+    /// decoded from the record's embedded entry without opening the cell
+    /// body.  Any mismatch falls back to [`Store::load`] — the manifest
+    /// can cost a body read, never a wrong result.
+    pub fn load_indexed(&self, key: JobKey, index: &ManifestIndex) -> Lookup {
+        if let Some(rec) = index.get(key) {
+            let len = fs::metadata(self.path_for(key))
+                .or_else(|_| fs::metadata(self.flat_path_for(key)))
+                .map(|m| m.len());
+            if len.ok() == Some(rec.len) {
+                if let Ok((out, _)) = parse_entry(&rec.entry, key) {
+                    return Lookup::Hit(out);
+                }
+            }
+        }
+        self.load(key)
+    }
+
+    /// Whether any entry file (sharded or flat) exists for `key`.
+    fn entry_exists(&self, key: JobKey) -> bool {
+        self.path_for(key).exists() || self.flat_path_for(key).exists()
+    }
+
+    /// Replay every shard manifest into an in-memory index (last record
+    /// per key wins).  Missing manifests are not an error — the affected
+    /// shards simply resolve through body reads until `store reindex`.
+    pub fn load_manifest(&self) -> io::Result<ManifestIndex> {
+        let mut index = ManifestIndex::default();
+        for (_, dir) in self.shard_dirs()? {
+            let text = match fs::read_to_string(dir.join(MANIFEST_NAME)) {
+                Ok(t) => t,
+                Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e),
+            };
+            index.files += 1;
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match parse_manifest_line(line) {
+                    ManifestLine::Record(key, rec) => {
+                        index.records.insert(key.0, rec);
+                    }
+                    ManifestLine::Stale => index.stale_schema += 1,
+                    ManifestLine::Malformed => index.malformed += 1,
+                }
+            }
+        }
+        Ok(index)
+    }
+
+    /// Persist one result atomically: write to a unique temp file in the
+    /// target shard directory, then rename over the final path, then
+    /// append the cell's manifest record.  A killed process leaves at
+    /// most `*.tmp*` litter (removed by [`Store::gc`]) or a cell missing
+    /// its manifest line (healed by reads falling back to the body and by
+    /// `store reindex`), never a truncated entry.  The temp name embeds
+    /// the process id plus a per-process sequence number, so concurrent
+    /// `larc` invocations sharing one store never collide on the same
+    /// temp path.
+    pub fn save(&self, key: JobKey, label: &str, out: &JobOutput) -> io::Result<()> {
+        let body = entry_json(key, label, out).to_string();
+        let shard = self.dir.join(shard_name(key));
+        fs::create_dir_all(&shard)?;
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let tmp = shard.join(format!("{}.tmp{pid}-{seq}", key.hex()));
+        fs::write(&tmp, &body)?;
+        fs::rename(&tmp, self.path_for(key))?;
+        self.append_manifest(key, label, out, &body)
+    }
+
+    fn append_manifest(
+        &self,
+        key: JobKey,
+        label: &str,
+        out: &JobOutput,
+        body: &str,
+    ) -> io::Result<()> {
+        let line = manifest_line(
+            key,
+            kind_of(out),
+            label,
+            out.runtime_s(),
+            body.len() as u64,
+            fnv1a(body.as_bytes()),
+            body,
+        );
+        let path = self.dir.join(shard_name(key)).join(MANIFEST_NAME);
+        let _guard = self.manifest_lock.lock().unwrap();
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(line.as_bytes())
+    }
+
+    fn shard_dirs(&self) -> io::Result<Vec<(String, PathBuf)>> {
+        let mut shards = Vec::new();
         for dirent in fs::read_dir(&self.dir)? {
             let path = dirent?.path();
+            let name = file_name_of(&path);
+            if path.is_dir() && is_shard_name(&name) {
+                shards.push((name, path));
+            }
+        }
+        shards.sort();
+        Ok(shards)
+    }
+
+    fn default_workers() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Validate every file in the store directory (shards walked on a
+    /// worker pool).  Every cell body is opened — this is the deep path;
+    /// warm consumers use [`Store::ls`] / [`Store::load_indexed`].
+    pub fn scan(&self) -> io::Result<Vec<ScanEntry>> {
+        self.scan_with_workers(Self::default_workers())
+    }
+
+    /// [`Store::scan`] with an explicit worker count (used by benches to
+    /// pin the single-threaded cold-scan baseline).
+    pub fn scan_with_workers(&self, workers: usize) -> io::Result<Vec<ScanEntry>> {
+        let mut entries = Vec::new();
+        let mut shards = Vec::new();
+        for dirent in fs::read_dir(&self.dir)? {
+            let path = dirent?.path();
+            let name = file_name_of(&path);
             if path.is_dir() {
+                if is_shard_name(&name) {
+                    shards.push((name, path));
+                }
                 continue;
             }
-            let name = path
-                .file_name()
-                .and_then(|n| n.to_str())
-                .unwrap_or("")
-                .to_string();
-            let state = if is_tmp_name(&name) {
-                EntryState::TmpLeftover
-            } else {
-                scan_file(&path, &name)
-            };
+            let state = self.classify(&path, &name, None);
             entries.push(ScanEntry { path, state });
+        }
+        shards.sort();
+        for scanned in parallel_map(&shards, workers, |(shard, dir)| self.scan_shard(shard, dir)) {
+            entries.extend(scanned?);
         }
         entries.sort_by(|a, b| a.path.cmp(&b.path));
         Ok(entries)
     }
 
+    fn scan_shard(&self, shard: &str, dir: &Path) -> io::Result<Vec<ScanEntry>> {
+        let mut entries = Vec::new();
+        for dirent in fs::read_dir(dir)? {
+            let path = dirent?.path();
+            if path.is_dir() {
+                continue;
+            }
+            let name = file_name_of(&path);
+            if name == MANIFEST_NAME {
+                continue;
+            }
+            let state = self.classify(&path, &name, Some(shard));
+            entries.push(ScanEntry { path, state });
+        }
+        Ok(entries)
+    }
+
+    fn classify(&self, path: &Path, name: &str, shard: Option<&str>) -> EntryState {
+        if is_store_tmp(name) {
+            return EntryState::TmpLeftover;
+        }
+        let key = match name.strip_suffix(".json").and_then(JobKey::from_hex) {
+            Some(k) => k,
+            None => return EntryState::Foreign,
+        };
+        if let Some(shard) = shard {
+            if shard_name(key) != shard {
+                return EntryState::Corrupt {
+                    reason: format!("misplaced: key {} does not belong in {shard}/", key.hex()),
+                };
+            }
+        }
+        let text = match self.read_body(path) {
+            Ok(t) => t,
+            Err(e) => {
+                return EntryState::Corrupt {
+                    reason: format!("unreadable: {e}"),
+                }
+            }
+        };
+        match parse_entry(&text, key) {
+            Ok((out, label)) => EntryState::Valid {
+                key,
+                label,
+                kind: kind_of(&out),
+                runtime_s: out.runtime_s(),
+                bytes: text.len() as u64,
+                body_fnv: fnv1a(text.as_bytes()),
+            },
+            Err(reason) => EntryState::Corrupt { reason },
+        }
+    }
+
+    /// Manifest-first listing: cells whose manifest record still matches
+    /// their on-disk byte length are reported straight from the manifest
+    /// (no body open); everything else takes the validation path of
+    /// [`Store::scan`].  `entries` come back key-sorted, so output is
+    /// deterministic regardless of directory iteration order.
+    pub fn ls(&self) -> io::Result<LsReport> {
+        let index = self.load_manifest()?;
+        let mut report = LsReport {
+            manifest_malformed: index.malformed,
+            ..LsReport::default()
+        };
+        let mut seen: HashSet<u64> = HashSet::new();
+        for (path, name, shard) in self.list_files()? {
+            if is_store_tmp(&name) {
+                report.tmp.push(path);
+                continue;
+            }
+            let key = match name.strip_suffix(".json").and_then(JobKey::from_hex) {
+                Some(k) => k,
+                None => {
+                    report.foreign.push(path);
+                    continue;
+                }
+            };
+            if let Some(shard) = &shard {
+                if &shard_name(key) != shard {
+                    let reason =
+                        format!("misplaced: key {} does not belong in {shard}/", key.hex());
+                    report.corrupt.push((path, reason));
+                    continue;
+                }
+            }
+            if let Some(rec) = index.get(key) {
+                if fs::metadata(&path).map(|m| m.len()).ok() == Some(rec.len) {
+                    report.entries.push(LsEntry {
+                        key,
+                        kind: rec.kind.clone(),
+                        label: rec.label.clone(),
+                        runtime_s: rec.runtime_s,
+                    });
+                    report.from_manifest += 1;
+                    seen.insert(key.0);
+                    continue;
+                }
+                report.manifest_stale += 1;
+            }
+            match self.classify(&path, &name, shard.as_deref()) {
+                EntryState::Valid { key, label, kind, runtime_s, .. } => {
+                    report.entries.push(LsEntry {
+                        key,
+                        kind: kind.to_string(),
+                        label,
+                        runtime_s,
+                    });
+                    seen.insert(key.0);
+                }
+                EntryState::Corrupt { reason } => report.corrupt.push((path, reason)),
+                EntryState::TmpLeftover => report.tmp.push(path),
+                EntryState::Foreign => report.foreign.push(path),
+            }
+        }
+        report.manifest_stale += index.keys().filter(|k| !seen.contains(&k.0)).count();
+        report.entries.sort_by_key(|e| e.key);
+        report.corrupt.sort_by(|a, b| a.0.cmp(&b.0));
+        report.tmp.sort();
+        report.foreign.sort();
+        Ok(report)
+    }
+
+    fn list_files(&self) -> io::Result<Vec<(PathBuf, String, Option<String>)>> {
+        let mut files = Vec::new();
+        for dirent in fs::read_dir(&self.dir)? {
+            let path = dirent?.path();
+            let name = file_name_of(&path);
+            if path.is_dir() {
+                if !is_shard_name(&name) {
+                    continue;
+                }
+                for sub in fs::read_dir(&path)? {
+                    let sub_path = sub?.path();
+                    if sub_path.is_dir() {
+                        continue;
+                    }
+                    let sub_name = file_name_of(&sub_path);
+                    if sub_name == MANIFEST_NAME {
+                        continue;
+                    }
+                    files.push((sub_path, sub_name, Some(name.clone())));
+                }
+                continue;
+            }
+            files.push((path, name, None));
+        }
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(files)
+    }
+
     /// Remove corrupt entries and stale temp litter.  Only files the
-    /// store owns (`<16-hex>.json` / `<16-hex>.tmp*`) are ever deleted;
-    /// anything else in the directory is left untouched, and temp files
-    /// younger than one hour are assumed to belong to a campaign that is
-    /// still running (concurrent invocations may share a store).
+    /// store owns (`<16-hex>.json` / `*.tmp*` in store-owned spellings)
+    /// are ever deleted; anything else in the directory is left
+    /// untouched, and temp files younger than one hour are assumed to
+    /// belong to a campaign that is still running (concurrent invocations
+    /// may share a store).
     pub fn gc(&self) -> io::Result<GcReport> {
         self.gc_with_max_tmp_age(Duration::from_secs(3600))
     }
 
-    /// [`Store::gc`] with an explicit staleness threshold for temp files.
-    pub fn gc_with_max_tmp_age(&self, max_tmp_age: Duration) -> io::Result<GcReport> {
-        let mut report = GcReport::default();
+    /// Compute what [`Store::gc_with_max_tmp_age`] would delete, without
+    /// deleting anything (`larc store gc --dry-run`).
+    pub fn gc_plan(&self, max_tmp_age: Duration) -> io::Result<GcPlan> {
+        let mut plan = GcPlan::default();
         for e in self.scan()? {
             match e.state {
-                EntryState::Valid { .. } => report.kept += 1,
-                EntryState::Foreign => report.foreign += 1,
-                EntryState::Corrupt { .. } => {
-                    fs::remove_file(&e.path)?;
-                    report.removed += 1;
-                }
+                EntryState::Valid { .. } => plan.kept += 1,
+                EntryState::Foreign => plan.foreign += 1,
+                EntryState::Corrupt { reason } => plan.remove_corrupt.push((e.path, reason)),
                 EntryState::TmpLeftover => {
                     if tmp_at_least(&e.path, max_tmp_age) {
-                        // best effort: a live writer may rename it away
-                        // between scan and removal
-                        if fs::remove_file(&e.path).is_ok() {
-                            report.removed += 1;
-                        }
+                        plan.remove_tmp.push(e.path);
                     } else {
-                        report.in_flight += 1;
+                        plan.in_flight += 1;
                     }
                 }
             }
         }
+        Ok(plan)
+    }
+
+    /// [`Store::gc`] with an explicit staleness threshold for temp files.
+    pub fn gc_with_max_tmp_age(&self, max_tmp_age: Duration) -> io::Result<GcReport> {
+        let plan = self.gc_plan(max_tmp_age)?;
+        let mut report = GcReport {
+            removed: 0,
+            kept: plan.kept,
+            foreign: plan.foreign,
+            in_flight: plan.in_flight,
+        };
+        for (path, _) in &plan.remove_corrupt {
+            fs::remove_file(path)?;
+            report.removed += 1;
+        }
+        for path in &plan.remove_tmp {
+            // best effort: a live writer may rename it away between scan
+            // and removal
+            if fs::remove_file(path).is_ok() {
+                report.removed += 1;
+            }
+        }
         Ok(report)
+    }
+
+    /// Rewrite a flat v1 store into the sharded v2 layout in place: each
+    /// top-level `<key>.json` is renamed into its shard directory (an
+    /// atomic same-filesystem rename per cell — bytes are never copied,
+    /// so migration is byte-identical by construction), then the
+    /// manifests are rebuilt.  Idempotent and crash-resumable: rerunning
+    /// after an interruption moves only what is left, and a flat cell
+    /// whose sharded copy already exists is deleted as a duplicate.
+    pub fn migrate(&self) -> io::Result<MigrateReport> {
+        let mut report = MigrateReport::default();
+        for dirent in fs::read_dir(&self.dir)? {
+            let path = dirent?.path();
+            if path.is_dir() {
+                continue;
+            }
+            let name = file_name_of(&path);
+            let Some(key) = name.strip_suffix(".json").and_then(JobKey::from_hex) else {
+                continue;
+            };
+            let target = self.path_for(key);
+            fs::create_dir_all(target.parent().expect("sharded paths have a parent"))?;
+            if target.exists() {
+                fs::remove_file(&path)?;
+                report.duplicate_flat_removed += 1;
+            } else {
+                fs::rename(&path, &target)?;
+                report.moved += 1;
+            }
+        }
+        report.reindex = self.reindex()?;
+        Ok(report)
+    }
+
+    /// Rebuild every shard's manifest from the cell bodies on disk
+    /// (shards processed on a worker pool).  Each manifest is written to
+    /// a temp file and renamed into place; corrupt cells are skipped (and
+    /// counted) rather than indexed.
+    pub fn reindex(&self) -> io::Result<ReindexReport> {
+        let shards = self.shard_dirs()?;
+        let mut report = ReindexReport::default();
+        let per_shard = parallel_map(&shards, Self::default_workers(), |(name, dir)| {
+            self.reindex_shard(name, dir)
+        });
+        for shard_counts in per_shard {
+            let (indexed, skipped) = shard_counts?;
+            report.indexed += indexed;
+            report.corrupt_skipped += skipped;
+            report.shards += 1;
+        }
+        Ok(report)
+    }
+
+    fn reindex_shard(&self, shard: &str, dir: &Path) -> io::Result<(usize, usize)> {
+        let mut cells: Vec<(JobKey, PathBuf)> = Vec::new();
+        let mut skipped = 0usize;
+        for dirent in fs::read_dir(dir)? {
+            let path = dirent?.path();
+            if path.is_dir() {
+                continue;
+            }
+            let name = file_name_of(&path);
+            let Some(key) = name.strip_suffix(".json").and_then(JobKey::from_hex) else {
+                continue;
+            };
+            if shard_name(key) != shard {
+                skipped += 1;
+                continue;
+            }
+            cells.push((key, path));
+        }
+        cells.sort_by_key(|&(key, _)| key);
+        let mut lines = String::new();
+        let mut indexed = 0usize;
+        for (key, path) in &cells {
+            let Ok(text) = self.read_body(path) else {
+                skipped += 1;
+                continue;
+            };
+            match parse_entry(&text, *key) {
+                Ok((out, label)) => {
+                    // len/fnv describe the on-disk bytes (the cheap-check
+                    // inputs); the embedded entry is re-serialized so the
+                    // manifest line is single-line by construction
+                    let entry = entry_json(*key, &label, &out).to_string();
+                    lines.push_str(&manifest_line(
+                        *key,
+                        kind_of(&out),
+                        &label,
+                        out.runtime_s(),
+                        text.len() as u64,
+                        fnv1a(text.as_bytes()),
+                        &entry,
+                    ));
+                    indexed += 1;
+                }
+                Err(_) => skipped += 1,
+            }
+        }
+        let manifest = dir.join(MANIFEST_NAME);
+        if lines.is_empty() {
+            match fs::remove_file(&manifest) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e),
+            }
+            return Ok((0, skipped));
+        }
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!("{MANIFEST_NAME}.tmp{}-{seq}", std::process::id()));
+        fs::write(&tmp, lines)?;
+        fs::rename(&tmp, manifest)?;
+        Ok((indexed, skipped))
     }
 }
 
@@ -490,7 +1166,7 @@ fn tmp_at_least(path: &Path, age: Duration) -> bool {
     }
 }
 
-/// `<16-hex>.tmp<pid>-<seq>` — an in-flight write the store owns.
+/// `<16-hex>.tmp<pid>-<seq>` — an in-flight entry write the store owns.
 fn is_tmp_name(name: &str) -> bool {
     let Some((stem, seq)) = name.split_once(".tmp") else {
         return false;
@@ -498,31 +1174,15 @@ fn is_tmp_name(name: &str) -> bool {
     JobKey::from_hex(stem).is_some() && seq.chars().all(|c| c.is_ascii_digit() || c == '-')
 }
 
-fn scan_file(path: &Path, name: &str) -> EntryState {
-    let key = match name.strip_suffix(".json").and_then(JobKey::from_hex) {
-        Some(k) => k,
-        None => return EntryState::Foreign,
-    };
-    let text = match fs::read_to_string(path) {
-        Ok(t) => t,
-        Err(e) => {
-            return EntryState::Corrupt {
-                reason: format!("unreadable: {e}"),
-            }
+/// Any in-flight write the store owns: entry temps plus manifest temps
+/// (`manifest.jsonl.tmp<pid>-<seq>` from [`Store::reindex`]).
+fn is_store_tmp(name: &str) -> bool {
+    if let Some(rest) = name.strip_prefix(MANIFEST_NAME) {
+        if let Some(seq) = rest.strip_prefix(".tmp") {
+            return seq.chars().all(|c| c.is_ascii_digit() || c == '-');
         }
-    };
-    match parse_entry(&text, key) {
-        Ok((out, label)) => EntryState::Valid {
-            key,
-            label,
-            kind: match out {
-                JobOutput::Sim(_) => "sim",
-                JobOutput::Mca(_) => "mca",
-            },
-            runtime_s: out.runtime_s(),
-        },
-        Err(reason) => EntryState::Corrupt { reason },
     }
+    is_tmp_name(name)
 }
 
 // ------------------------------------------------------ resumable execution
@@ -542,9 +1202,13 @@ pub struct StoreRunStats {
 impl Campaign {
     /// Execute the campaign through a result store.
     ///
-    /// With `resume` set, jobs whose key has a valid store entry are
-    /// served from disk; everything else is computed on the worker pool
-    /// and written to the store as each worker finishes (atomically, so a
+    /// With `resume` set, the shard manifests are replayed once and jobs
+    /// whose key has a valid record (confirmed by a cheap length probe)
+    /// are served from the manifest without opening their cell body;
+    /// cells the manifest cannot vouch for fall back to a body read.
+    /// Everything else is computed on the worker pool — longest estimated
+    /// job first, so one heavy cell cannot straggle an idle pool — and
+    /// written to the store as each worker finishes (atomically, so a
     /// killed run loses only in-flight jobs).  With `resume` off, every
     /// job is recomputed and its entry rewritten, but the store is still
     /// populated for future resumable runs.
@@ -562,21 +1226,36 @@ impl Campaign {
         let keys: Vec<JobKey> = self.jobs.iter().map(job_key).collect();
         let results: Vec<Mutex<Option<JobOutput>>> = (0..n).map(|_| Mutex::new(None)).collect();
 
+        let index = if resume {
+            let index = store.load_manifest()?;
+            if index.malformed > 0 {
+                eprintln!(
+                    "warning: {} malformed manifest line(s) in {} — affected cells fall back \
+                     to body reads (run `larc store reindex`)",
+                    index.malformed,
+                    store.dir().display()
+                );
+            }
+            Some(index)
+        } else {
+            None
+        };
+
         let mut stats = StoreRunStats::default();
         let mut todo: Vec<usize> = Vec::new();
         for (i, key) in keys.iter().enumerate() {
-            if !resume {
+            let Some(index) = &index else {
                 // everything recomputes; a cheap existence probe is enough
                 // to tell overwrites from first-time computes
-                if store.path_for(*key).exists() {
+                if store.entry_exists(*key) {
                     stats.recomputed += 1;
                 } else {
                     stats.misses += 1;
                 }
                 todo.push(i);
                 continue;
-            }
-            match store.load(*key) {
+            };
+            match store.load_indexed(*key, index) {
                 Lookup::Hit(out) => {
                     stats.hits += 1;
                     *results[i].lock().unwrap() = Some(out);
@@ -593,7 +1272,14 @@ impl Campaign {
         }
 
         let save = |i: usize, out: &JobOutput| store.save(keys[i], &self.jobs[i].label(), out);
-        self.run_indices(&todo, &results, &save)?;
+        let progress = Progress::new(
+            self.progress,
+            &self.jobs,
+            &todo,
+            stats.hits,
+            Some((stats.misses, stats.recomputed)),
+        );
+        self.run_indices_tracked(&todo, &results, &save, &progress)?;
         Ok((collect_results(results), stats))
     }
 }
@@ -740,9 +1426,150 @@ mod tests {
         }
 
         // copying an entry to a different key must read as Invalid
+        // (key ^ 1 flips the low bit, so both keys share a shard)
         let wrong = JobKey(key.0 ^ 1);
         fs::copy(store.path_for(key), store.path_for(wrong)).unwrap();
         assert!(matches!(store.load(wrong), Lookup::Invalid));
+    }
+
+    #[test]
+    fn cells_land_in_sharded_layout_and_flat_v1_reads_back() {
+        let store = tmp_store("sharded_layout");
+        let job = &tiny_jobs()[0];
+        let key = job_key(job);
+        store.save(key, &job.label(), &run_job(job)).unwrap();
+
+        // v2: the cell lives under DIR/<first-2-hex>/, with the shard
+        // manifest beside it
+        let path = store.path_for(key);
+        let shard = path.parent().unwrap();
+        assert_eq!(shard.file_name().unwrap().to_str().unwrap(), &key.hex()[..2]);
+        assert!(path.exists());
+        assert!(shard.join(MANIFEST_NAME).exists());
+
+        // flat v1 read-compatibility: move the cell to the top level and
+        // drop the manifest — the store still serves it
+        fs::rename(&path, store.flat_path_for(key)).unwrap();
+        fs::remove_file(shard.join(MANIFEST_NAME)).unwrap();
+        assert!(matches!(store.load(key), Lookup::Hit(_)));
+    }
+
+    #[test]
+    fn warm_manifest_resume_opens_zero_cell_bodies() {
+        let store = tmp_store("manifest_warm");
+        let c = Campaign::new(tiny_jobs()).with_workers(2);
+        let reference = c.run();
+        c.run_with_store(&store, true).unwrap();
+
+        // fresh handle: its body-open counter starts at zero
+        let dir = store.dir().to_path_buf();
+        let warm = Store::open(&dir).unwrap();
+        let (out, stats) = c.run_with_store(&warm, true).unwrap();
+        assert_eq!(stats, StoreRunStats { hits: 2, misses: 0, recomputed: 0 });
+        assert_eq!(warm.bodies_opened(), 0, "warm resume must be manifest-only");
+        for (a, b) in reference.iter().zip(&out) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+
+    #[test]
+    fn stale_manifest_lines_lose_to_the_latest_record() {
+        let store = tmp_store("manifest_last_wins");
+        let job = &tiny_jobs()[0];
+        let key = job_key(job);
+        let out = run_job(job);
+        store.save(key, "first", &out).unwrap();
+        store.save(key, "second", &out).unwrap();
+        let index = store.load_manifest().unwrap();
+        assert_eq!(index.len(), 1, "append-only manifest replays to last record per key");
+        assert_eq!(index.get(key).unwrap().label, "second");
+        assert!(matches!(store.load_indexed(key, &index), Lookup::Hit(_)));
+    }
+
+    #[test]
+    fn migrate_moves_flat_cells_byte_identically_and_is_idempotent() {
+        let store = tmp_store("migrate");
+        let jobs = tiny_jobs();
+        for job in &jobs {
+            store.save(job_key(job), &job.label(), &run_job(job)).unwrap();
+        }
+        // fabricate a flat v1 store: demote every cell, drop shard dirs
+        let mut flat_bytes = Vec::new();
+        for job in &jobs {
+            let key = job_key(job);
+            let bytes = fs::read(store.path_for(key)).unwrap();
+            fs::rename(store.path_for(key), store.flat_path_for(key)).unwrap();
+            flat_bytes.push((key, bytes));
+        }
+        for dirent in fs::read_dir(store.dir()).unwrap() {
+            let path = dirent.unwrap().path();
+            if path.is_dir() {
+                fs::remove_dir_all(&path).unwrap();
+            }
+        }
+
+        let report = store.migrate().unwrap();
+        assert_eq!(report.moved, 2);
+        assert_eq!(report.duplicate_flat_removed, 0);
+        assert_eq!(report.reindex.indexed, 2);
+        for (key, bytes) in &flat_bytes {
+            assert_eq!(
+                &fs::read(store.path_for(*key)).unwrap(),
+                bytes,
+                "migration must preserve cell bytes exactly"
+            );
+            assert!(!store.flat_path_for(*key).exists());
+        }
+
+        // a second migrate is a no-op
+        let again = store.migrate().unwrap();
+        assert_eq!(again.moved, 0);
+        assert_eq!(again.duplicate_flat_removed, 0);
+        assert_eq!(again.reindex.indexed, 2);
+    }
+
+    #[test]
+    fn gc_plan_reports_without_deleting() {
+        let store = tmp_store("gc_plan");
+        let job = &tiny_jobs()[0];
+        store.save(job_key(job), &job.label(), &run_job(job)).unwrap();
+        let corrupt = store.dir().join(format!("{:016x}.json", 0u64));
+        let tmp = store.dir().join("0123456789abcdef.tmp7");
+        fs::write(&corrupt, "{ nope").unwrap();
+        fs::write(&tmp, "partial").unwrap();
+
+        let plan = store.gc_plan(Duration::ZERO).unwrap();
+        assert_eq!(plan.would_remove(), 2);
+        assert_eq!(plan.remove_corrupt.len(), 1);
+        assert_eq!(plan.remove_tmp.len(), 1);
+        assert_eq!(plan.kept, 1);
+        assert!(corrupt.exists(), "gc_plan must not delete");
+        assert!(tmp.exists(), "gc_plan must not delete");
+    }
+
+    #[test]
+    fn misplaced_cells_are_flagged_corrupt() {
+        let store = tmp_store("misplaced");
+        let job = &tiny_jobs()[0];
+        let key = job_key(job);
+        store.save(key, &job.label(), &run_job(job)).unwrap();
+
+        // copy the (valid) cell into a shard it does not belong to
+        let wrong = if key.hex().starts_with("00") { "01" } else { "00" };
+        let wrong_dir = store.dir().join(wrong);
+        fs::create_dir_all(&wrong_dir).unwrap();
+        fs::copy(store.path_for(key), wrong_dir.join(format!("{}.json", key.hex()))).unwrap();
+
+        let scan = store.scan().unwrap();
+        let misplaced: Vec<_> = scan
+            .iter()
+            .filter_map(|e| match &e.state {
+                EntryState::Corrupt { reason } => Some(reason.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(misplaced.len(), 1);
+        assert!(misplaced[0].contains("misplaced"), "{misplaced:?}");
     }
 
     #[test]
@@ -752,13 +1579,23 @@ mod tests {
         let key = job_key(job);
         store.save(key, &job.label(), &run_job(job)).unwrap();
 
-        // rewrite the entry as if produced by an older schema
+        // rewrite the entry *and its manifest line* as if produced by an
+        // older schema — a real schema bump stales both, since manifest
+        // records embed the schema they were written under
         let path = store.path_for(key);
         let stale = fs::read_to_string(&path)
             .unwrap()
             .replace(&format!("\"schema\":{SCHEMA_VERSION}"), "\"schema\":0");
         fs::write(&path, stale).unwrap();
+        let manifest = path.parent().unwrap().join(MANIFEST_NAME);
+        let stale = fs::read_to_string(&manifest)
+            .unwrap()
+            .replace(&format!("\"schema\":{SCHEMA_VERSION}"), "\"schema\":0");
+        fs::write(&manifest, stale).unwrap();
         assert!(matches!(store.load(key), Lookup::Invalid));
+        let index = store.load_manifest().unwrap();
+        assert_eq!(index.stale_schema, 1);
+        assert!(index.get(key).is_none());
 
         // a resumed campaign recomputes it rather than trusting it
         let c = Campaign::new(vec![job.clone()]).with_workers(1);
@@ -917,5 +1754,36 @@ mod tests {
             .filter(|e| matches!(e.state, EntryState::TmpLeftover))
             .count();
         assert_eq!(leftover, 0);
+    }
+
+    #[test]
+    fn manifest_lines_survive_torn_writes_without_wrong_results() {
+        let store = tmp_store("torn_manifest");
+        let jobs = tiny_jobs();
+        let c = Campaign::new(jobs.clone()).with_workers(2);
+        let (reference, _) = c.run_with_store(&store, true).unwrap();
+
+        // tear every manifest: truncate each to half its bytes and append
+        // garbage — the cheap path must degrade to body reads, never to
+        // wrong results
+        for (_, dir) in store.shard_dirs().unwrap() {
+            let path = dir.join(MANIFEST_NAME);
+            if let Ok(text) = fs::read_to_string(&path) {
+                let torn = format!("{}\nnot json at all\n", &text[..text.len() / 2]);
+                fs::write(&path, torn).unwrap();
+            }
+        }
+        let index = store.load_manifest().unwrap();
+        assert!(index.malformed > 0, "the tear must be visible as malformed lines");
+        let (out, stats) = c.run_with_store(&store, true).unwrap();
+        assert_eq!(stats, StoreRunStats { hits: 2, misses: 0, recomputed: 0 });
+        for (a, b) in reference.iter().zip(&out) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+
+        // reindex rebuilds a clean manifest
+        let report = store.reindex().unwrap();
+        assert_eq!(report.indexed, 2);
+        assert_eq!(store.load_manifest().unwrap().malformed, 0);
     }
 }

@@ -106,7 +106,10 @@ fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> 
             sampling: opts.sampling,
         })
         .collect();
-    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let campaign = Campaign::new(jobs)
+        .with_workers(opts.workers)
+        .verbose(opts.verbose)
+        .progress(opts.progress);
     let out = super::run_campaign(&campaign, opts)?;
     Ok(cases
         .iter()

@@ -103,7 +103,10 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             });
         }
     }
-    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let campaign = Campaign::new(jobs)
+        .with_workers(opts.workers)
+        .verbose(opts.verbose)
+        .progress(opts.progress);
     let out = super::run_campaign(&campaign, opts)?;
 
     let mut report = Report::new(

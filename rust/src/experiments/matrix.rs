@@ -52,7 +52,10 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
         }
     }
 
-    let campaign = Campaign::new(jobs).with_workers(opts.workers).verbose(opts.verbose);
+    let campaign = Campaign::new(jobs)
+        .with_workers(opts.workers)
+        .verbose(opts.verbose)
+        .progress(opts.progress);
     let outputs = super::run_campaign(&campaign, opts)?;
 
     let mut rows = Vec::with_capacity(specs.len());

@@ -55,6 +55,9 @@ pub struct ExpOptions {
     /// Sampling mode applied to every simulation job of the experiment
     /// (`--sample`; [`Sampling::Exact`] by default).
     pub sampling: Sampling,
+    /// Throttled one-line campaign progress meter on stderr
+    /// (`--progress`; `--quiet` forces it off).
+    pub progress: bool,
 }
 
 impl Default for ExpOptions {
@@ -70,6 +73,7 @@ impl Default for ExpOptions {
             resume: false,
             sweep: None,
             sampling: Sampling::Exact,
+            progress: false,
         }
     }
 }

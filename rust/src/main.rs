@@ -14,6 +14,7 @@ use larc::coordinator::store::{EntryState, Store};
 use larc::experiments::{self, ExpOptions};
 use larc::mca::{self, PortArch, PortModel};
 use larc::trace::workloads;
+use larc::util::json::{self, Json};
 use larc::util::units::fmt_bytes;
 
 fn main() {
@@ -58,6 +59,7 @@ fn opts(cli: &Cli) -> Result<ExpOptions> {
         resume: cli.has("resume"),
         sweep: cli.flag("sweep").map(str::to_string),
         sampling: sampling_flag(cli)?,
+        progress: cli.has("progress") && !cli.has("quiet"),
     })
 }
 
@@ -305,7 +307,7 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// `larc bench [cachesim|hierarchy|all] [--iters N] [--out DIR]
+/// `larc bench [cachesim|hierarchy|store|all] [--iters N] [--out DIR]
 /// [--check DIR]` — run the micro-benchmark suites without cargo,
 /// writing store-friendly `BENCH_<suite>.json` files and optionally
 /// gating against committed baselines (fail on >25% throughput
@@ -314,7 +316,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     let which = cli.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let suites: Vec<&str> = match which {
         "all" => larc::benchsuite::SUITES.to_vec(),
-        s if larc::benchsuite::cases_for(s).is_some() => vec![which],
+        s if larc::benchsuite::SUITES.contains(&s) => vec![which],
         other => bail!(
             "unknown bench suite {other:?} (expected all | {})",
             larc::benchsuite::SUITES.join(" | ")
@@ -334,7 +336,8 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
         let mut problems = Vec::new();
         eprintln!("baseline check ({dir}):");
         for suite in &suites {
-            let cases = larc::benchsuite::cases_for(suite).expect("suite validated above");
+            let cases = larc::benchsuite::case_names(suite).expect("suite validated above");
+            let unit = larc::benchsuite::suite_unit(suite);
             let baseline = Path::new(dir).join(format!("BENCH_{suite}.json"));
             let floors = std::fs::read_to_string(&baseline)
                 .map_err(|e| format!("cannot read {}: {e}", baseline.display()))
@@ -342,21 +345,19 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
             match floors {
                 Ok(floors) => {
                     for case in &cases {
-                        match floors.iter().find(|(n, _)| n == case.name) {
-                            Some((_, f)) => eprintln!(
-                                "  {suite:<10} {:<36} floor {f:.3e} accesses/s",
-                                case.name
-                            ),
+                        match floors.iter().find(|(n, _)| n == *case) {
+                            Some((_, f)) => {
+                                eprintln!("  {suite:<10} {case:<36} floor {f:.3e} {unit}/s")
+                            }
                             None => eprintln!(
-                                "  {suite:<10} {:<36} no floor (gate unarmed for this case)",
-                                case.name
+                                "  {suite:<10} {case:<36} no floor (gate unarmed for this case)"
                             ),
                         }
                     }
                 }
                 Err(e) => {
                     for case in &cases {
-                        eprintln!("  {suite:<10} {:<36} NO BASELINE", case.name);
+                        eprintln!("  {suite:<10} {case:<36} NO BASELINE");
                     }
                     problems.push(e);
                 }
@@ -372,8 +373,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
 
     let mut failures = Vec::new();
     for suite in suites {
-        let cases = larc::benchsuite::cases_for(suite).expect("suite validated above");
-        let results = larc::benchsuite::run_suite(suite, &cases, iters);
+        let results = larc::benchsuite::run_named_suite(suite, iters)?;
         let path = larc::benchsuite::write_suite_json(&out_dir, suite, &results)?;
         eprintln!("wrote {}", path.display());
 
@@ -404,52 +404,19 @@ fn cmd_store(cli: &Cli) -> Result<()> {
         .positional
         .first()
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow!("store subcommand required: ls | verify | gc"))?;
+        .ok_or_else(|| anyhow!("store subcommand required: ls | verify | gc | migrate | reindex"))?;
     let dir = cli
         .flag("store")
         .ok_or_else(|| anyhow!("--store DIR required"))?;
     let store = Store::open(Path::new(dir))?;
     match op {
-        "ls" => {
-            for e in store.scan()? {
-                match e.state {
-                    EntryState::Valid { key, label, kind, runtime_s } => {
-                        println!("{}  {:<4} {:<40} {:.6}s", key.hex(), kind, label, runtime_s);
-                    }
-                    EntryState::Corrupt { reason } => {
-                        println!("CORRUPT  {} ({reason})", e.path.display());
-                    }
-                    EntryState::TmpLeftover => {
-                        println!("TMP      {} (interrupted write)", e.path.display());
-                    }
-                    EntryState::Foreign => {
-                        println!("FOREIGN  {} (not a store file; ignored)", e.path.display());
-                    }
-                }
-            }
-            Ok(())
-        }
+        "ls" => store_ls(cli, &store, dir),
         "verify" => {
-            let scan = store.scan()?;
-            let count = |f: fn(&EntryState) -> bool| scan.iter().filter(|e| f(&e.state)).count();
-            let valid = count(|s| matches!(s, EntryState::Valid { .. }));
-            let foreign = count(|s| matches!(s, EntryState::Foreign));
-            let tmp = count(|s| matches!(s, EntryState::TmpLeftover));
-            let bad = count(|s| matches!(s, EntryState::Corrupt { .. }));
-            for e in &scan {
-                if let EntryState::Corrupt { reason } = &e.state {
-                    eprintln!("corrupt: {} ({reason})", e.path.display());
-                }
+            if cli.has("deep") {
+                store_verify_deep(&store, dir)
+            } else {
+                store_verify(&store, dir)
             }
-            if tmp > 0 {
-                // not corruption: an interrupted (or still running) writer
-                eprintln!("note: {tmp} temp files present (interrupted or in-flight writes)");
-            }
-            if bad > 0 {
-                bail!("{bad} corrupt entries in {} ({valid} valid); run `larc store gc`", dir);
-            }
-            println!("{valid} entries OK in {dir} ({foreign} foreign files ignored)");
-            Ok(())
         }
         "gc" => {
             // --tmp-age SECS: staleness threshold for `*.tmp*` litter
@@ -457,13 +424,180 @@ fn cmd_store(cli: &Cli) -> Result<()> {
             // everything immediately — only safe when no campaign is
             // writing to the store)
             let secs = cli.usize_flag("tmp-age", 3600).map_err(|e| anyhow!(e))?;
-            let r = store.gc_with_max_tmp_age(std::time::Duration::from_secs(secs as u64))?;
+            let age = std::time::Duration::from_secs(secs as u64);
+            if cli.has("dry-run") {
+                let plan = store.gc_plan(age)?;
+                for (path, reason) in &plan.remove_corrupt {
+                    println!("would remove {} ({reason})", path.display());
+                }
+                for path in &plan.remove_tmp {
+                    println!("would remove {} (stale temp)", path.display());
+                }
+                println!(
+                    "would remove {} invalid files, keep {} entries in {dir} ({} foreign, {} in-flight temps untouched)",
+                    plan.would_remove(),
+                    plan.kept,
+                    plan.foreign,
+                    plan.in_flight
+                );
+            } else {
+                let r = store.gc_with_max_tmp_age(age)?;
+                println!(
+                    "removed {} invalid files, kept {} entries in {dir} ({} foreign, {} in-flight temps untouched)",
+                    r.removed, r.kept, r.foreign, r.in_flight
+                );
+            }
+            Ok(())
+        }
+        "migrate" => {
+            let r = store.migrate()?;
             println!(
-                "removed {} invalid files, kept {} entries in {dir} ({} foreign, {} in-flight temps untouched)",
-                r.removed, r.kept, r.foreign, r.in_flight
+                "migrated {} cells into sharded layout in {dir} ({} duplicate flat cells removed, {} indexed across {} shards)",
+                r.moved, r.duplicate_flat_removed, r.reindex.indexed, r.reindex.shards
             );
             Ok(())
         }
-        other => bail!("unknown store subcommand {other:?} (ls | verify | gc)"),
+        "reindex" => {
+            let r = store.reindex()?;
+            println!(
+                "reindexed {} cells across {} shards in {dir} ({} corrupt cells skipped)",
+                r.indexed, r.shards, r.corrupt_skipped
+            );
+            Ok(())
+        }
+        other => bail!("unknown store subcommand {other:?} (ls | verify | gc | migrate | reindex)"),
     }
+}
+
+/// `larc store ls` — key-sorted listing, manifest-backed where possible.
+/// `--json` emits a machine-readable document instead of the text table.
+fn store_ls(cli: &Cli, store: &Store, dir: &str) -> Result<()> {
+    let r = store.ls()?;
+    if r.manifest_malformed > 0 {
+        eprintln!(
+            "warning: {} malformed manifest line(s) in {dir} — affected cells listed from body reads (run `larc store reindex`)",
+            r.manifest_malformed
+        );
+    }
+    if cli.has("json") {
+        let entries: Vec<Json> = r
+            .entries
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("key", json::s(&e.key.hex())),
+                    ("kind", json::s(&e.kind)),
+                    ("label", json::s(&e.label)),
+                    ("runtime_s", json::num(e.runtime_s)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("store", json::s(dir)),
+            ("entries", json::arr(entries)),
+            (
+                "counts",
+                json::obj(vec![
+                    ("valid", json::num(r.entries.len() as f64)),
+                    ("corrupt", json::num(r.corrupt.len() as f64)),
+                    ("tmp", json::num(r.tmp.len() as f64)),
+                    ("foreign", json::num(r.foreign.len() as f64)),
+                    ("from_manifest", json::num(r.from_manifest as f64)),
+                ]),
+            ),
+        ]);
+        println!("{doc}");
+        return Ok(());
+    }
+    for e in &r.entries {
+        println!("{}  {:<4} {:<40} {:.6}s", e.key.hex(), e.kind, e.label, e.runtime_s);
+    }
+    for (path, reason) in &r.corrupt {
+        println!("CORRUPT  {} ({reason})", path.display());
+    }
+    for path in &r.tmp {
+        println!("TMP      {} (interrupted write)", path.display());
+    }
+    for path in &r.foreign {
+        println!("FOREIGN  {} (not a store file; ignored)", path.display());
+    }
+    Ok(())
+}
+
+/// Shallow verify: manifest-backed listing plus cheap length checks; body
+/// reads only where the manifest is missing or disagrees.
+fn store_verify(store: &Store, dir: &str) -> Result<()> {
+    let r = store.ls()?;
+    let valid = r.entries.len();
+    let bad = r.corrupt.len();
+    for (path, reason) in &r.corrupt {
+        eprintln!("corrupt: {} ({reason})", path.display());
+    }
+    if !r.tmp.is_empty() {
+        // not corruption: an interrupted (or still running) writer
+        eprintln!(
+            "note: {} temp files present (interrupted or in-flight writes)",
+            r.tmp.len()
+        );
+    }
+    if bad > 0 {
+        bail!("{bad} corrupt entries in {} ({valid} valid); run `larc store gc`", dir);
+    }
+    println!(
+        "{valid} entries OK in {dir} ({} foreign files ignored, {} listed from manifest)",
+        r.foreign.len(),
+        r.from_manifest
+    );
+    Ok(())
+}
+
+/// Deep verify: open and parse every cell body, then cross-check each
+/// against its manifest record (byte length and FNV of the body).
+fn store_verify_deep(store: &Store, dir: &str) -> Result<()> {
+    let scan = store.scan()?;
+    let index = store.load_manifest()?;
+    let mut valid = 0usize;
+    let mut foreign = 0usize;
+    let mut tmp = 0usize;
+    let mut bad = 0usize;
+    let mut unindexed = 0usize;
+    for e in &scan {
+        match &e.state {
+            EntryState::Valid { key, bytes, body_fnv, .. } => {
+                valid += 1;
+                match index.get(*key) {
+                    Some(rec) if rec.len == *bytes && rec.fnv == *body_fnv => {}
+                    Some(rec) => {
+                        bad += 1;
+                        eprintln!(
+                            "corrupt: {} (manifest disagrees: recorded {} bytes fnv {:016x}, body is {} bytes fnv {:016x})",
+                            e.path.display(),
+                            rec.len,
+                            rec.fnv,
+                            bytes,
+                            body_fnv
+                        );
+                    }
+                    None => unindexed += 1,
+                }
+            }
+            EntryState::Corrupt { reason } => {
+                bad += 1;
+                eprintln!("corrupt: {} ({reason})", e.path.display());
+            }
+            EntryState::TmpLeftover => tmp += 1,
+            EntryState::Foreign => foreign += 1,
+        }
+    }
+    if tmp > 0 {
+        eprintln!("note: {tmp} temp files present (interrupted or in-flight writes)");
+    }
+    if unindexed > 0 {
+        eprintln!("note: {unindexed} valid cells missing from the manifest (run `larc store reindex`)");
+    }
+    if bad > 0 {
+        bail!("{bad} corrupt entries in {} ({valid} valid); run `larc store gc`", dir);
+    }
+    println!("{valid} entries OK in {dir} (deep: bodies parsed and checked against manifest, {foreign} foreign files ignored)");
+    Ok(())
 }

@@ -152,6 +152,101 @@ fn run_sample_prints_the_ci_line_and_exact_wins() {
 }
 
 #[test]
+fn store_gc_dry_run_reports_without_deleting() {
+    let d = tmpdir("gc_dry_run");
+    let corrupt = d.join("0000000000000abc.json");
+    let orphan = d.join("00000000deadbeef.tmp99-0");
+    fs::write(&corrupt, "not json").unwrap();
+    fs::write(&orphan, "partial").unwrap();
+    let dir = d.to_str().unwrap();
+
+    let out = larc(&["store", "gc", "--store", dir, "--tmp-age", "0", "--dry-run"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("would remove"), "{stdout}");
+    assert!(corrupt.exists(), "--dry-run deleted a corrupt cell");
+    assert!(orphan.exists(), "--dry-run deleted a temp file");
+
+    // the real gc removes exactly what the plan reported
+    let out = larc(&["store", "gc", "--store", dir, "--tmp-age", "0"]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("removed 2 invalid files"));
+    assert!(!corrupt.exists() && !orphan.exists());
+}
+
+#[test]
+fn store_ls_json_migrate_and_warm_resume_via_the_binary() {
+    let d = tmpdir("ls_json_migrate");
+    let dir = d.to_str().unwrap();
+
+    // populate the store through a real (tiny, sampled) figure run; the
+    // cold campaign must emit the progress meter's final line
+    let fig = [
+        "figure", "fig7a", "--scale", "tiny", "--sample", "set:8", "--workers", "2", "--store",
+        dir, "--resume", "--progress",
+    ];
+    let out = larc(&fig);
+    assert!(out.status.success(), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("progress: "), "no progress line: {stderr}");
+
+    // ls --json: machine-readable, key-sorted, counts consistent
+    let out = larc(&["store", "ls", "--store", dir, "--json"]);
+    assert!(out.status.success(), "{:?}", out);
+    let doc = larc::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
+    assert!(!entries.is_empty());
+    let keys: Vec<String> = entries
+        .iter()
+        .map(|e| e.get("key").and_then(|k| k.as_str()).unwrap().to_string())
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "ls --json not key-sorted");
+    let counts = doc.get("counts").unwrap();
+    assert_eq!(counts.get("valid").and_then(|v| v.as_usize()).unwrap(), entries.len());
+    assert_eq!(counts.get("corrupt").and_then(|v| v.as_usize()).unwrap(), 0);
+
+    // flatten to the legacy v1 layout, then migrate it back via the CLI
+    for e in fs::read_dir(&d).unwrap() {
+        let p = e.unwrap().path();
+        if p.is_dir() {
+            for c in fs::read_dir(&p).unwrap() {
+                let c = c.unwrap().path();
+                if c.file_name().unwrap() == "manifest.jsonl" {
+                    fs::remove_file(&c).unwrap();
+                } else {
+                    fs::rename(&c, d.join(c.file_name().unwrap())).unwrap();
+                }
+            }
+            fs::remove_dir(&p).unwrap();
+        }
+    }
+    let out = larc(&["store", "migrate", "--store", dir]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("migrated "), "{stdout}");
+    assert!(!stdout.contains("migrated 0 cells"), "{stdout}");
+
+    // a second migrate is a no-op
+    let out = larc(&["store", "migrate", "--store", dir]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("migrated 0 cells"));
+
+    // warm resume after migration: every job is a store hit
+    let out = larc(&fig);
+    assert!(out.status.success(), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains(" 0 misses, 0 recomputed"), "not all-hit: {stderr}");
+
+    // both verify depths pass on the migrated store
+    let out = larc(&["store", "verify", "--store", dir]);
+    assert!(out.status.success(), "{:?}", out);
+    let out = larc(&["store", "verify", "--store", dir, "--deep"]);
+    assert!(out.status.success(), "{:?}", out);
+}
+
+#[test]
 fn unknown_figure_id_exits_nonzero() {
     let out = larc(&["figure", "fig99"]);
     assert_eq!(out.status.code(), Some(1));

@@ -93,15 +93,30 @@ fn job_keys_do_not_depend_on_worker_count_or_job_order() {
     c1.run_with_store(&Store::open(&d1).unwrap(), true).unwrap();
     let c4 = Campaign::new(jobs).with_workers(4);
     c4.run_with_store(&Store::open(&d4).unwrap(), true).unwrap();
+    // compare cell files recursively (cells live in shard subdirectories);
+    // the per-shard manifests are derived state, not cells
     let names = |d: &PathBuf| -> Vec<String> {
-        let mut v: Vec<String> = fs::read_dir(d)
-            .unwrap()
-            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
-            .collect();
+        let mut v = Vec::new();
+        let mut stack = vec![d.clone()];
+        while let Some(dir) = stack.pop() {
+            for e in fs::read_dir(&dir).unwrap() {
+                let e = e.unwrap();
+                let path = e.path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else {
+                    let name = e.file_name().to_string_lossy().into_owned();
+                    if name != "manifest.jsonl" {
+                        v.push(name);
+                    }
+                }
+            }
+        }
         v.sort();
         v
     };
     assert_eq!(names(&d1), names(&d4));
+    assert!(!names(&d1).is_empty());
 }
 
 #[test]

@@ -1,0 +1,231 @@
+//! Scale and migration tests for the sharded store layout: thousand-cell
+//! manifest-only listings, flat-v1 -> sharded-v2 migration that preserves
+//! cell bytes, and manifest corruption falling back to body reads without
+//! ever changing results.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use larc::benchsuite;
+use larc::cachesim::configs;
+use larc::coordinator::store::{Lookup, Store, StoreRunStats};
+use larc::coordinator::{Campaign, Job};
+use larc::trace::{workloads, Scale};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("larc_store_scale_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn mini_jobs() -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for name in ["minife", "ep-omp"] {
+        let spec = workloads::by_name(name, Scale::Tiny).unwrap();
+        for cfg in configs::table2_configs() {
+            let threads = spec.effective_threads(cfg.cores);
+            jobs.push(Job::CacheSim {
+                spec: spec.clone(),
+                config: cfg,
+                threads,
+                sampling: larc::cachesim::Sampling::Exact,
+            });
+        }
+    }
+    jobs
+}
+
+/// Every cell file in the store (recursively), keyed by file name, with
+/// its exact bytes.  Manifests are derived state and excluded.
+fn cell_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut cells = BTreeMap::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for e in fs::read_dir(&d).unwrap() {
+            let path = e.unwrap().path();
+            if path.is_dir() {
+                stack.push(path);
+            } else {
+                let name = path.file_name().unwrap().to_string_lossy().into_owned();
+                if name != "manifest.jsonl" {
+                    cells.insert(name, fs::read(&path).unwrap());
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Paths of every per-shard `manifest.jsonl` currently on disk.
+fn shard_manifests(dir: &Path) -> Vec<PathBuf> {
+    let mut v = Vec::new();
+    for e in fs::read_dir(dir).unwrap() {
+        let p = e.unwrap().path();
+        if p.is_dir() {
+            let m = p.join("manifest.jsonl");
+            if m.exists() {
+                v.push(m);
+            }
+        }
+    }
+    v
+}
+
+/// Rewrite a sharded store into the legacy flat v1 layout: every cell
+/// moves to the store root, manifests and shard directories are removed.
+fn flatten_to_v1(dir: &Path) {
+    for e in fs::read_dir(dir).unwrap() {
+        let p = e.unwrap().path();
+        if p.is_dir() {
+            for c in fs::read_dir(&p).unwrap() {
+                let c = c.unwrap().path();
+                let name = c.file_name().unwrap().to_owned();
+                if name == "manifest.jsonl" {
+                    fs::remove_file(&c).unwrap();
+                } else {
+                    fs::rename(&c, dir.join(name)).unwrap();
+                }
+            }
+            fs::remove_dir(&p).unwrap();
+        }
+    }
+}
+
+#[test]
+fn thousand_cell_listing_reads_the_manifest_not_the_bodies() {
+    let dir = tmpdir("ls1k");
+    let store = Store::open(&dir).unwrap();
+    let keys = benchsuite::populate_synth_store(&store, 1000).unwrap();
+
+    // fresh handle: its body-open counter starts at zero, so the listing
+    // itself is what gets measured
+    let fresh = Store::open(&dir).unwrap();
+    let r = fresh.ls().unwrap();
+    assert_eq!(r.entries.len(), 1000);
+    assert_eq!(r.from_manifest, 1000, "listing fell back to body reads");
+    assert_eq!(r.manifest_malformed, 0);
+    assert_eq!(r.manifest_stale, 0);
+    assert!(r.corrupt.is_empty());
+    assert_eq!(fresh.bodies_opened(), 0, "listing opened cell bodies");
+
+    // key-sorted, and exactly the saved key set
+    let listed: Vec<String> = r.entries.iter().map(|e| e.key.hex()).collect();
+    let mut expected: Vec<String> = keys.iter().map(|k| k.hex()).collect();
+    expected.sort();
+    assert_eq!(listed, expected);
+}
+
+#[test]
+fn flat_v1_migration_is_byte_identical_and_resume_compatible() {
+    let dir = tmpdir("migrate");
+    let store = Store::open(&dir).unwrap();
+    let jobs = mini_jobs();
+    let reference = Campaign::new(jobs.clone()).with_workers(2).run();
+    let c = Campaign::new(jobs.clone()).with_workers(2);
+    c.run_with_store(&store, true).unwrap();
+    let before = cell_bytes(&dir);
+    assert_eq!(before.len(), jobs.len());
+
+    // a flat v1 store resumes all-hit through the legacy fallback path
+    flatten_to_v1(&dir);
+    let flat = Store::open(&dir).unwrap();
+    let (_, s1) = c.run_with_store(&flat, true).unwrap();
+    assert_eq!(s1, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+
+    // migrate moves every cell without changing a byte, and is idempotent
+    let store = Store::open(&dir).unwrap();
+    let m = store.migrate().unwrap();
+    assert_eq!(m.moved, jobs.len());
+    assert_eq!(m.duplicate_flat_removed, 0);
+    assert_eq!(m.reindex.indexed, jobs.len());
+    assert_eq!(cell_bytes(&dir), before);
+    let m2 = store.migrate().unwrap();
+    assert_eq!(m2.moved, 0);
+    assert_eq!(m2.duplicate_flat_removed, 0);
+    assert_eq!(cell_bytes(&dir), before);
+
+    // post-migration warm resume: all hits, zero bodies opened, outputs
+    // identical to an uninterrupted in-memory run
+    let warm = Store::open(&dir).unwrap();
+    let (out, s2) = c.run_with_store(&warm, true).unwrap();
+    assert_eq!(s2, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+    assert_eq!(warm.bodies_opened(), 0, "warm resume opened cell bodies");
+    assert_eq!(out.len(), reference.len());
+    for (a, b) in reference.iter().zip(&out) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}
+
+#[test]
+fn manifest_corruption_or_absence_never_changes_results() {
+    let dir = tmpdir("manifest_garbage");
+    let store = Store::open(&dir).unwrap();
+    let jobs = mini_jobs();
+    let c = Campaign::new(jobs.clone()).with_workers(2);
+    let (reference, _) = c.run_with_store(&store, true).unwrap();
+
+    // garbage manifests: the index reports malformed lines and resume
+    // falls back to body reads — results unchanged, nothing recomputed
+    let manifests = shard_manifests(&dir);
+    assert!(!manifests.is_empty());
+    for m in &manifests {
+        fs::write(m, "not a manifest line\n{\"key\":").unwrap();
+    }
+    let s = Store::open(&dir).unwrap();
+    assert!(s.load_manifest().unwrap().malformed > 0);
+    let (out, stats) = c.run_with_store(&s, true).unwrap();
+    assert_eq!(stats, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+    for (a, b) in reference.iter().zip(&out) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    // absent manifests: same story
+    for m in &manifests {
+        fs::remove_file(m).unwrap();
+    }
+    let s = Store::open(&dir).unwrap();
+    assert!(s.load_manifest().unwrap().is_empty());
+    let (out, stats) = c.run_with_store(&s, true).unwrap();
+    assert_eq!(stats, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+    for (a, b) in reference.iter().zip(&out) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    // reindex rebuilds the manifests and restores the zero-body warm path
+    let s = Store::open(&dir).unwrap();
+    let r = s.reindex().unwrap();
+    assert_eq!(r.indexed, jobs.len());
+    assert_eq!(r.corrupt_skipped, 0);
+    let warm = Store::open(&dir).unwrap();
+    let (_, stats) = c.run_with_store(&warm, true).unwrap();
+    assert_eq!(stats, StoreRunStats { hits: jobs.len(), misses: 0, recomputed: 0 });
+    assert_eq!(warm.bodies_opened(), 0, "post-reindex resume opened cell bodies");
+}
+
+#[test]
+#[ignore = "10k-cell migration stress; run with `cargo test -- --ignored`"]
+fn ten_thousand_cell_flat_to_v2_migration_stress() {
+    let dir = tmpdir("stress10k");
+    let store = Store::open(&dir).unwrap();
+    let keys = benchsuite::populate_synth_store(&store, 10_000).unwrap();
+    let before = cell_bytes(&dir);
+    assert_eq!(before.len(), 10_000);
+
+    flatten_to_v1(&dir);
+    let store = Store::open(&dir).unwrap();
+    let m = store.migrate().unwrap();
+    assert_eq!(m.moved, 10_000);
+    assert_eq!(m.reindex.indexed, 10_000);
+    assert_eq!(cell_bytes(&dir), before);
+
+    let warm = Store::open(&dir).unwrap();
+    let index = warm.load_manifest().unwrap();
+    assert_eq!(index.len(), 10_000);
+    let hits = keys
+        .iter()
+        .filter(|&&k| matches!(warm.load_indexed(k, &index), Lookup::Hit(_)))
+        .count();
+    assert_eq!(hits, 10_000);
+    assert_eq!(warm.bodies_opened(), 0, "warm stress resume opened cell bodies");
+}
