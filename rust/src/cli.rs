@@ -8,6 +8,8 @@
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
 //!              |fig-socket|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--csv] [--store DIR] [--resume]
+//! larc serve <id> --store DIR [--spawn K] [--lease-ms N] [--max-retries N] ...
+//! larc work --store DIR [--worker-id ID]          # join a served campaign
 //! larc store <ls|verify|gc|migrate|reindex> --store DIR [--json] [--deep]
 //!            [--tmp-age SECS] [--dry-run]              # inspect/maintain the store
 //! larc bench [all|cachesim|hierarchy|store] [--iters N] [--out DIR] [--check DIR]
@@ -113,6 +115,11 @@ USAGE:
               [--progress] [--quiet]
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
                 [--sample mode] [--exact] [--progress] [--quiet]
+  larc serve <id> --store DIR [--spawn K] [--scale ...] [--sample mode]
+             [--sweep fam] [--lease-ms N] [--heartbeat-ms N] [--max-retries N]
+             [--backoff-ms N] [--timeout-floor-ms N] [--timeout-ms-per-cost X]
+             [--csv] [--quiet]
+  larc work --store DIR [--worker-id ID] [--wait-ms N] [--verbose]
   larc store <ls|verify|gc|migrate|reindex> --store DIR [--json] [--deep]
              [--tmp-age SECS] [--dry-run]
   larc bench [all|cachesim|hierarchy|store] [--iters N] [--out DIR] [--check DIR]
@@ -161,6 +168,27 @@ BENCH:
   --out DIR     where BENCH_<suite>.json baselines are written (default .)
   --check DIR   compare against DIR/BENCH_<suite>.json and exit nonzero on
                 any >25% throughput regression (CI gate)
+
+SERVICE (crash-tolerant multi-process campaigns):
+  larc serve publishes the campaign descriptor in DIR/service/campaign.json
+  and watches the store until every cell is computed or quarantined; any
+  number of `larc work` processes sharing DIR (same machine or a shared
+  filesystem) claim cells through per-job lease files in DIR/leases/.
+  Workers heartbeat their leases; a SIGKILL'd or stalled worker's lease
+  expires and its job is re-leased.  Failing jobs retry with exponential
+  backoff up to --max-retries, then quarantine into DIR/failed/ and the
+  campaign completes degraded (serve exits 2 with a dead-letter report).
+  --spawn K             (serve) also launch K local worker processes
+  --lease-ms N          lease expiry with no heartbeat (default 15000)
+  --heartbeat-ms N      renewal interval (default 3000; must be < lease)
+  --max-retries N       attempt budget per job before dead-letter (default 3)
+  --backoff-ms N        base of the exponential retry backoff (default 500)
+  --timeout-floor-ms N  minimum per-job wall-clock timeout (default 600000)
+  --timeout-ms-per-cost X  timeout scaling per unit of job cost estimate
+  --worker-id ID        (work) stable worker name (default: pid + time)
+  --wait-ms N           (work) how long to wait for a descriptor (default 60000)
+  service state lives in DIR/service, DIR/leases, DIR/failed — store
+  verify/ls/gc ignore those subdirectories entirely
 
 STORE:
   --store DIR   persist each finished job as DIR/<shard>/<key>.json, where
@@ -298,5 +326,32 @@ mod tests {
 
         let c = parse(&["bench", "store", "--iters", "1"]);
         assert_eq!(c.positional, vec!["store"]);
+    }
+
+    #[test]
+    fn service_flags_parse() {
+        let c = parse(&[
+            "serve", "fig7a", "--store", "/tmp/s", "--spawn", "2", "--lease-ms", "5000",
+            "--heartbeat-ms", "1000", "--max-retries", "4", "--backoff-ms", "250",
+            "--timeout-floor-ms", "30000", "--timeout-ms-per-cost", "10.5",
+        ]);
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.positional, vec!["fig7a"]);
+        assert_eq!(c.usize_flag("spawn", 0).unwrap(), 2);
+        assert_eq!(c.usize_flag("lease-ms", 15000).unwrap(), 5000);
+        assert_eq!(c.usize_flag("heartbeat-ms", 3000).unwrap(), 1000);
+        assert_eq!(c.usize_flag("max-retries", 3).unwrap(), 4);
+        assert_eq!(c.usize_flag("backoff-ms", 500).unwrap(), 250);
+        assert_eq!(c.usize_flag("timeout-floor-ms", 600000).unwrap(), 30000);
+        assert_eq!(c.flag("timeout-ms-per-cost"), Some("10.5"));
+
+        let c = parse(&["work", "--store", "/tmp/s", "--worker-id", "w7", "--wait-ms", "500"]);
+        assert_eq!(c.command, "work");
+        assert_eq!(c.flag("worker-id"), Some("w7"));
+        assert_eq!(c.usize_flag("wait-ms", 60000).unwrap(), 500);
+        // defaults when the tuning flags are absent
+        let c = parse(&["work", "--store", "/tmp/s"]);
+        assert_eq!(c.flag("worker-id"), None);
+        assert_eq!(c.usize_flag("wait-ms", 60000).unwrap(), 60000);
     }
 }

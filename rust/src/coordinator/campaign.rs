@@ -360,12 +360,7 @@ impl Progress {
         }
         st.last_line = Some(Instant::now());
         let elapsed = st.started.elapsed().as_secs_f64();
-        let rate = if elapsed > 0.0 { st.done as f64 / elapsed } else { 0.0 };
-        let eta = if st.done_cost > 0.0 {
-            (self.total_cost - st.done_cost).max(0.0) * elapsed / st.done_cost
-        } else {
-            f64::INFINITY
-        };
+        let (rate, eta) = progress_metrics(st.done, elapsed, st.done_cost, self.total_cost);
         let counts = match self.store_counts {
             Some((misses, recomputed)) => {
                 format!(" ({} hit, {misses} miss, {recomputed} recomputed)", self.preload)
@@ -373,19 +368,50 @@ impl Progress {
             None => String::new(),
         };
         eprintln!(
-            "progress: {}/{} jobs{counts} | {rate:.1} jobs/s | ETA {}",
+            "progress: {}/{} jobs{counts} | {rate} jobs/s | ETA {eta}",
             self.preload + st.done,
             self.preload + self.todo_total,
-            fmt_eta(eta)
         );
     }
 }
 
-/// Compact ETA rendering: `--` when unknown, else `37s` / `4m05s` /
-/// `2h12m` depending on magnitude.
+/// Minimum wall-clock signal (one throttle window) before the rate and
+/// ETA denominators are trusted.  Below it, `done / elapsed` and
+/// `elapsed / done_cost` amplify scheduler noise into absurd readings
+/// (thousands of jobs/s, multi-hour ETAs for a second of work).
+const PROGRESS_SIGNAL_S: f64 = 0.2;
+
+/// Compute the rendered `(rate, eta)` pair for a progress line from the
+/// raw counters.  Pure so the clamping rules are unit-testable: until
+/// there is at least one completed job and [`PROGRESS_SIGNAL_S`] of
+/// elapsed time, both render as unknown (`--.-` / `--:--`) rather than
+/// dividing noise by noise; a zero completed-cost sum (all finished jobs
+/// had zero estimate) also leaves the ETA unknown instead of infinite.
+fn progress_metrics(
+    done: usize,
+    elapsed_s: f64,
+    done_cost: f64,
+    total_cost: f64,
+) -> (String, String) {
+    let no_signal = done == 0 || !elapsed_s.is_finite() || elapsed_s < PROGRESS_SIGNAL_S;
+    let rate = if no_signal {
+        "--.-".to_string()
+    } else {
+        format!("{:.1}", done as f64 / elapsed_s)
+    };
+    let eta = if no_signal || done_cost <= 0.0 || !done_cost.is_finite() {
+        fmt_eta(f64::NAN)
+    } else {
+        fmt_eta((total_cost - done_cost).max(0.0) * elapsed_s / done_cost)
+    };
+    (rate, eta)
+}
+
+/// Compact ETA rendering: `--:--` when unknown (non-finite input), else
+/// `37s` / `4m05s` / `2h12m` depending on magnitude.
 fn fmt_eta(eta_s: f64) -> String {
     if !eta_s.is_finite() {
-        return "--".to_string();
+        return "--:--".to_string();
     }
     let s = eta_s.round() as u64;
     if s >= 3600 {
@@ -435,7 +461,7 @@ where
 
 /// Best-effort text of a caught panic payload (`&str` / `String`
 /// payloads cover every `panic!`/`assert!` in this crate).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -633,5 +659,53 @@ mod tests {
         for slot in &results {
             assert!(slot.lock().unwrap().is_some());
         }
+    }
+
+    // ------------------------------------------- progress metric clamping
+
+    #[test]
+    fn progress_metrics_render_unknown_until_there_is_signal() {
+        // first throttle window: elapsed below the signal floor must not
+        // divide by (almost) zero — no 5000.0 jobs/s, no absurd ETA
+        let (rate, eta) = progress_metrics(3, 0.001, 1.5, 100.0);
+        assert_eq!(rate, "--.-");
+        assert_eq!(eta, "--:--");
+
+        // zero completed jobs: nothing to extrapolate from
+        let (rate, eta) = progress_metrics(0, 10.0, 0.0, 100.0);
+        assert_eq!(rate, "--.-");
+        assert_eq!(eta, "--:--");
+
+        // completed jobs all had zero cost estimate: the rate is real but
+        // the cost-scaled ETA has no denominator — unknown, not inf/NaN
+        let (rate, eta) = progress_metrics(4, 2.0, 0.0, 0.0);
+        assert_eq!(rate, "2.0");
+        assert_eq!(eta, "--:--");
+
+        // non-finite elapsed (a clock gone wrong) never panics or leaks NaN
+        let (rate, eta) = progress_metrics(4, f64::NAN, 1.0, 2.0);
+        assert_eq!(rate, "--.-");
+        assert_eq!(eta, "--:--");
+    }
+
+    #[test]
+    fn progress_metrics_report_real_numbers_once_signal_exists() {
+        // half the cost done in 10s -> 10s remain
+        let (rate, eta) = progress_metrics(5, 10.0, 50.0, 100.0);
+        assert_eq!(rate, "0.5");
+        assert_eq!(eta, "10s");
+
+        // overshoot (done_cost > total_cost) clamps to zero remaining
+        let (_, eta) = progress_metrics(5, 10.0, 120.0, 100.0);
+        assert_eq!(eta, "0s");
+    }
+
+    #[test]
+    fn fmt_eta_spans_magnitudes_and_rejects_non_finite() {
+        assert_eq!(fmt_eta(f64::INFINITY), "--:--");
+        assert_eq!(fmt_eta(f64::NAN), "--:--");
+        assert_eq!(fmt_eta(37.4), "37s");
+        assert_eq!(fmt_eta(245.0), "4m05s");
+        assert_eq!(fmt_eta(2.0 * 3600.0 + 12.0 * 60.0), "2h12m");
     }
 }

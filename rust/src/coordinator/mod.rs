@@ -14,11 +14,17 @@
 //!   cells live in a prefix-sharded layout with an append-only per-shard
 //!   manifest index, so warm resumes and listings are O(changed) instead
 //!   of O(cells);
+//! * [`service`] — crash-tolerant multi-process campaign execution: a
+//!   coordinator (`larc serve`) and workers (`larc work`) share a store
+//!   through a filesystem lease protocol with heartbeats, expiry-based
+//!   reclamation, bounded retries with backoff, and dead-letter
+//!   quarantine for permanently failing cells;
 //! * [`report`] — CSV/markdown emission for the experiment drivers.
 
 pub mod batcher;
 pub mod campaign;
 pub mod report;
+pub mod service;
 pub mod store;
 
 pub use batcher::McaBatcher;

@@ -1,0 +1,1205 @@
+//! Crash-tolerant multi-process campaign service.
+//!
+//! PR 7 made campaigns resumable (content-addressed store, manifest
+//! index, LPT queue) but every run still lived or died with a single
+//! process.  This module promotes the campaign layer to a coordinator /
+//! worker service sharing nothing but the store directory:
+//!
+//! * `larc serve --store DIR` materializes the campaign's job set (by
+//!   [`JobKey`]), publishes a campaign descriptor, and watches the store
+//!   until every cell is computed or quarantined;
+//! * any number of `larc work --store DIR` processes — on any machine
+//!   sharing the filesystem — reconstruct the same job set from the
+//!   descriptor and execute cells under a lease protocol.
+//!
+//! # Lease protocol
+//!
+//! One lease file per in-flight job, `DIR/leases/<key>.json`, holding
+//! the owner id, acquire time, and latest heartbeat (epoch ms):
+//!
+//! ```text
+//!         claim: tmp write + hard_link (atomic create-exclusive)
+//!  FREE ───────────────────────────────────────────────▶ LEASED
+//!    ▲                                                     │
+//!    │ reclaim: remove after                               │ heartbeat
+//!    │ max(acquired, heartbeat) + lease_ms < now           │ tmp+rename
+//!    │                                                     ▼
+//!  EXPIRED ◀──────────────────────────────────────────── LEASED
+//!                 worker stops renewing (crash, stall, timeout)
+//! ```
+//!
+//! The claim uses `hard_link`, not `rename`: rename silently overwrites,
+//! so both racers of a free lease would believe they won; `hard_link`
+//! fails with `AlreadyExists` for exactly one of them, and the loser
+//! backs off.  Expiry compares against `max(acquired, heartbeat)`, so a
+//! heartbeat stamped in the future by a clock-skewed worker reads as
+//! fresh — skew can only delay reclamation, never cause a double-claim
+//! of a live lease.  Double *runs* remain possible by design (a worker
+//! that stalls past expiry finishes alongside the reclaimer): jobs are
+//! deterministic and cell writes are atomic and content-addressed, so
+//! the second writer produces byte-identical bytes and at most one
+//! result is ever visible per key.
+//!
+//! # Retry, backoff, dead letters
+//!
+//! Failed attempts are persisted in `DIR/service/attempts/<key>.json`.
+//! Transient IO failures (ENOSPC, EINTR, lock contention) back off
+//! exponentially (`backoff_ms * 2^(attempts-1)`) before the job becomes
+//! claimable again; deterministic panics fail fast with no cool-down —
+//! retrying sooner cannot hurt and quarantines a doomed cell in
+//! milliseconds instead of minutes.  Either way the attempt budget is
+//! bounded: after `max_retries` failures the job is quarantined into
+//! `DIR/failed/<key>.json` with its error history, and the campaign
+//! *completes degraded* with an explicit report instead of aborting the
+//! rest of the sweep.  Runaway cells are killed by a per-job wall-clock
+//! timeout scaled from the job's [`Job::cost_estimate`].
+//!
+//! The fault-injection points compiled into these paths (feature
+//! `fault-injection`, env `LARC_FAULTPOINTS`) are cataloged in
+//! [`crate::util::faultpoint`]; `tests/service_chaos.rs` uses them to
+//! kill workers at every protocol step and assert byte-identical
+//! convergence.
+
+use std::collections::HashSet;
+use std::fs;
+use std::io;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::cachesim::Sampling;
+use crate::coordinator::campaign::{panic_message, run_job};
+use crate::coordinator::store::{job_key, JobKey, Lookup, Store, SCHEMA_VERSION};
+use crate::coordinator::Job;
+use crate::trace::Scale;
+use crate::util::faultpoint;
+use crate::util::json::{self, Json};
+
+// ------------------------------------------------------------- parameters
+
+/// Tunable protocol parameters, shared by coordinator and workers via
+/// the campaign descriptor (so every process agrees on expiry math).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceParams {
+    /// A lease with no heartbeat for this long is expired and reclaimable.
+    pub lease_ms: u64,
+    /// Interval between heartbeat renewals (must be well under `lease_ms`).
+    pub heartbeat_ms: u64,
+    /// Attempt budget per job before dead-letter quarantine.
+    pub max_retries: u32,
+    /// Base of the exponential retry backoff for transient failures.
+    pub backoff_ms: u64,
+    /// Minimum per-job wall-clock timeout.
+    pub timeout_floor_ms: u64,
+    /// Timeout scaling: milliseconds granted per unit of
+    /// [`Job::cost_estimate`], added on top of the floor via `max`.
+    pub timeout_ms_per_cost: f64,
+    /// Idle poll interval of the worker/coordinator loops.
+    pub poll_ms: u64,
+    /// Whether a timed-out worker process exits (the only way to stop a
+    /// runaway simulation thread).  On for the CLI; off for in-process
+    /// library use, where the lease is simply allowed to expire.
+    pub exit_on_timeout: bool,
+}
+
+impl Default for ServiceParams {
+    fn default() -> Self {
+        ServiceParams {
+            lease_ms: 15_000,
+            heartbeat_ms: 3_000,
+            max_retries: 3,
+            backoff_ms: 500,
+            timeout_floor_ms: 600_000,
+            timeout_ms_per_cost: 50.0,
+            poll_ms: 100,
+            exit_on_timeout: true,
+        }
+    }
+}
+
+impl ServiceParams {
+    /// Wall-clock timeout for a job of estimated cost `cost`.
+    pub fn timeout_ms(&self, cost: f64) -> u64 {
+        let scaled = (cost.max(0.0) * self.timeout_ms_per_cost) as u64;
+        self.timeout_floor_ms.max(scaled)
+    }
+
+    /// Backoff before attempt `attempts + 1` of a job that has failed
+    /// `attempts` times: exponential for transient failures, zero (fail
+    /// fast) for deterministic ones.
+    pub fn backoff_for(&self, attempts: u32, transient: bool) -> u64 {
+        if !transient || attempts == 0 {
+            return 0;
+        }
+        self.backoff_ms.saturating_mul(1u64 << (attempts - 1).min(20))
+    }
+}
+
+// ------------------------------------------------------------ file layout
+
+fn service_dir(store_dir: &Path) -> PathBuf {
+    store_dir.join("service")
+}
+
+fn leases_dir(store_dir: &Path) -> PathBuf {
+    store_dir.join("leases")
+}
+
+fn attempts_dir(store_dir: &Path) -> PathBuf {
+    service_dir(store_dir).join("attempts")
+}
+
+fn failed_dir(store_dir: &Path) -> PathBuf {
+    store_dir.join("failed")
+}
+
+/// Lease file path for `key`.
+pub fn lease_path(store_dir: &Path, key: JobKey) -> PathBuf {
+    leases_dir(store_dir).join(format!("{}.json", key.hex()))
+}
+
+/// Dead-letter file path for `key`.
+pub fn dead_letter_path(store_dir: &Path, key: JobKey) -> PathBuf {
+    failed_dir(store_dir).join(format!("{}.json", key.hex()))
+}
+
+fn attempts_path(store_dir: &Path, key: JobKey) -> PathBuf {
+    attempts_dir(store_dir).join(format!("{}.json", key.hex()))
+}
+
+/// Current time as epoch milliseconds (the protocol's shared clock).
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Unique-per-process temp-name sequence (same scheme as the store's
+/// cell writes: `<name>.tmp<pid>-<seq>` never collides across processes).
+fn next_tmp(dir: &Path, stem: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("{stem}.tmp{}-{seq}", std::process::id()))
+}
+
+fn write_atomic(path: &Path, text: &str) -> io::Result<()> {
+    let dir = path.parent().expect("service file paths always have a parent");
+    fs::create_dir_all(dir)?;
+    let stem = path.file_name().and_then(|n| n.to_str()).unwrap_or("file");
+    let tmp = next_tmp(dir, stem);
+    fs::write(&tmp, text)?;
+    fs::rename(&tmp, path)
+}
+
+// ------------------------------------------------------------- descriptor
+
+/// The published campaign: everything a worker needs to reconstruct the
+/// exact job set (and agree on protocol parameters).  Stored as
+/// `DIR/service/campaign.json`.  Jobs are *reconstructed* from the
+/// experiment id + options through `experiments::campaign_jobs`, never
+/// serialized: round-tripping a `Spec`/`MachineConfig` through JSON
+/// could drift from the Debug-canonical string the [`JobKey`] hashes,
+/// silently forking the key space between processes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Descriptor {
+    /// Store-backed experiment id (e.g. `fig7a`).
+    pub experiment: String,
+    /// Workload input scale.
+    pub scale: Scale,
+    /// Sampling mode applied to every simulation job.
+    pub sampling: Sampling,
+    /// Sweep-family restriction (fig8's `--sweep`).
+    pub sweep: Option<String>,
+    /// Protocol parameters all processes must share.
+    pub params: ServiceParams,
+}
+
+/// Scale's CLI spelling (inverse of the `--scale` flag parser).
+fn scale_label(s: Scale) -> &'static str {
+    match s {
+        Scale::Tiny => "tiny",
+        Scale::Small => "small",
+        Scale::Paper => "paper",
+    }
+}
+
+fn parse_scale(s: &str) -> Option<Scale> {
+    match s {
+        "tiny" => Some(Scale::Tiny),
+        "small" => Some(Scale::Small),
+        "paper" => Some(Scale::Paper),
+        _ => None,
+    }
+}
+
+impl Descriptor {
+    /// Descriptor file path under `store_dir`.
+    pub fn path(store_dir: &Path) -> PathBuf {
+        service_dir(store_dir).join("campaign.json")
+    }
+
+    /// Publish the descriptor atomically (tmp + rename).
+    pub fn save(&self, store_dir: &Path) -> io::Result<()> {
+        let p = &self.params;
+        let doc = json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("experiment", json::s(&self.experiment)),
+            ("scale", json::s(scale_label(self.scale))),
+            ("sampling", json::s(&self.sampling.label())),
+            (
+                "sweep",
+                match &self.sweep {
+                    Some(s) => json::s(s),
+                    None => Json::Null,
+                },
+            ),
+            ("lease_ms", json::num(p.lease_ms as f64)),
+            ("heartbeat_ms", json::num(p.heartbeat_ms as f64)),
+            ("max_retries", json::num(p.max_retries as f64)),
+            ("backoff_ms", json::num(p.backoff_ms as f64)),
+            ("timeout_floor_ms", json::num(p.timeout_floor_ms as f64)),
+            ("timeout_ms_per_cost", json::num(p.timeout_ms_per_cost)),
+            ("poll_ms", json::num(p.poll_ms as f64)),
+        ]);
+        write_atomic(&Self::path(store_dir), &doc.to_string())
+    }
+
+    /// Load the descriptor, failing loudly on a missing file, malformed
+    /// JSON, or a schema written by an incompatible binary (a worker
+    /// from another schema would compute *different keys* for the same
+    /// jobs — better to refuse than to silently fork the store).
+    pub fn load(store_dir: &Path) -> anyhow::Result<Descriptor> {
+        let path = Self::path(store_dir);
+        let text = fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("no campaign descriptor at {}: {e}", path.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("malformed campaign descriptor: {e}"))?;
+        let schema = doc.get("schema").and_then(|v| v.as_usize()).unwrap_or(0);
+        anyhow::ensure!(
+            schema == SCHEMA_VERSION as usize,
+            "campaign descriptor schema v{schema} does not match this binary (v{SCHEMA_VERSION})"
+        );
+        let str_field = |k: &str| -> anyhow::Result<&str> {
+            doc.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("campaign descriptor missing '{k}'"))
+        };
+        let num_field = |k: &str| -> anyhow::Result<f64> {
+            doc.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("campaign descriptor missing '{k}'"))
+        };
+        let scale = parse_scale(str_field("scale")?)
+            .ok_or_else(|| anyhow::anyhow!("campaign descriptor has unknown scale"))?;
+        let sampling = Sampling::parse(str_field("sampling")?)
+            .map_err(|e| anyhow::anyhow!("campaign descriptor sampling: {e}"))?;
+        let sweep = doc.get("sweep").and_then(|v| v.as_str()).map(str::to_string);
+        let params = ServiceParams {
+            lease_ms: num_field("lease_ms")? as u64,
+            heartbeat_ms: num_field("heartbeat_ms")? as u64,
+            max_retries: num_field("max_retries")? as u32,
+            backoff_ms: num_field("backoff_ms")? as u64,
+            timeout_floor_ms: num_field("timeout_floor_ms")? as u64,
+            timeout_ms_per_cost: num_field("timeout_ms_per_cost")?,
+            poll_ms: num_field("poll_ms")? as u64,
+            ..ServiceParams::default()
+        };
+        Ok(Descriptor {
+            experiment: str_field("experiment")?.to_string(),
+            scale,
+            sampling,
+            sweep,
+            params,
+        })
+    }
+
+    /// Like [`Descriptor::load`], but polls until the coordinator has
+    /// published the descriptor (workers may start first), giving up
+    /// after `wait_ms`.
+    pub fn load_waiting(store_dir: &Path, wait_ms: u64) -> anyhow::Result<Descriptor> {
+        let deadline = Instant::now() + Duration::from_millis(wait_ms);
+        loop {
+            if Self::path(store_dir).exists() {
+                return Self::load(store_dir);
+            }
+            if Instant::now() >= deadline {
+                anyhow::bail!(
+                    "no campaign descriptor appeared in {} within {wait_ms} ms — is `larc serve` running?",
+                    store_dir.display()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+// ------------------------------------------------------------------ lease
+
+/// One parsed lease file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lease {
+    /// Worker id that holds the lease.
+    pub owner: String,
+    /// Epoch ms the lease was claimed.
+    pub acquired_ms: u64,
+    /// Epoch ms of the latest heartbeat renewal.
+    pub heartbeat_ms: u64,
+}
+
+impl Lease {
+    /// Whether this lease is expired at `now` under `lease_ms`:
+    /// `max(acquired, heartbeat) + lease_ms < now`.  A heartbeat stamped
+    /// in the future (clock skew) reads as fresh — skew delays
+    /// reclamation, it never causes a double-claim of a live lease.
+    pub fn expired(&self, lease_ms: u64, now: u64) -> bool {
+        self.acquired_ms.max(self.heartbeat_ms).saturating_add(lease_ms) < now
+    }
+}
+
+fn lease_json(key: JobKey, lease: &Lease) -> String {
+    json::obj(vec![
+        ("key", json::s(&key.hex())),
+        ("owner", json::s(&lease.owner)),
+        ("acquired_ms", json::num(lease.acquired_ms as f64)),
+        ("heartbeat_ms", json::num(lease.heartbeat_ms as f64)),
+    ])
+    .to_string()
+}
+
+fn parse_lease(text: &str) -> Option<Lease> {
+    let doc = json::parse(text).ok()?;
+    Some(Lease {
+        owner: doc.get("owner")?.as_str()?.to_string(),
+        acquired_ms: doc.get("acquired_ms")?.as_f64()? as u64,
+        heartbeat_ms: doc.get("heartbeat_ms")?.as_f64()? as u64,
+    })
+}
+
+/// Read and parse a lease file; `None` when missing or unreadable.
+pub fn read_lease(store_dir: &Path, key: JobKey) -> Option<Lease> {
+    let text = fs::read_to_string(lease_path(store_dir, key)).ok()?;
+    parse_lease(&text)
+}
+
+/// Outcome of a claim attempt.
+#[derive(Debug, PartialEq)]
+pub enum Claim {
+    /// The caller now holds the lease.
+    Acquired(Lease),
+    /// Someone else holds a live lease — back off.
+    Busy,
+}
+
+/// Try to claim the lease for `key`.  An existing live lease loses the
+/// race; an expired (or unparseable) one is reclaimed first.  The claim
+/// itself is a tmp write + `hard_link`, which atomically fails with
+/// `AlreadyExists` for all but exactly one racer — the documented reason
+/// this is not tmp+rename (rename overwrites; both racers would win).
+pub fn try_claim(store_dir: &Path, key: JobKey, owner: &str, lease_ms: u64) -> io::Result<Claim> {
+    let dir = leases_dir(store_dir);
+    fs::create_dir_all(&dir)?;
+    let path = lease_path(store_dir, key);
+    match fs::read_to_string(&path) {
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+        Err(_) => {} // transient read error: fall through, the link arbitrates
+        Ok(text) => match parse_lease(&text) {
+            Some(l) if !l.expired(lease_ms, now_ms()) => return Ok(Claim::Busy),
+            // expired or corrupt: reclaim; concurrent removers are fine
+            // (NotFound) and the hard_link below arbitrates the re-claim
+            _ => match fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e),
+            },
+        },
+    }
+    let lease = Lease {
+        owner: owner.to_string(),
+        acquired_ms: now_ms(),
+        heartbeat_ms: now_ms(),
+    };
+    let tmp = next_tmp(&dir, &key.hex());
+    fs::write(&tmp, lease_json(key, &lease))?;
+    let linked = fs::hard_link(&tmp, &path);
+    let _ = fs::remove_file(&tmp);
+    match linked {
+        Ok(()) => {
+            faultpoint::hit("crash-after-lease");
+            Ok(Claim::Acquired(lease))
+        }
+        Err(e) if e.kind() == io::ErrorKind::AlreadyExists => Ok(Claim::Busy),
+        Err(e) => Err(e),
+    }
+}
+
+/// Renew the heartbeat of a lease we own.  Returns `false` when the
+/// lease no longer names `owner` (it expired and was reclaimed) — the
+/// caller should stop renewing; its in-flight run stays harmless because
+/// cell writes are idempotent.
+pub fn renew_lease(store_dir: &Path, key: JobKey, owner: &str, acquired_ms: u64) -> bool {
+    match read_lease(store_dir, key) {
+        Some(l) if l.owner == owner => {}
+        _ => return false,
+    }
+    let lease = Lease {
+        owner: owner.to_string(),
+        acquired_ms,
+        heartbeat_ms: now_ms(),
+    };
+    write_atomic(&lease_path(store_dir, key), &lease_json(key, &lease)).is_ok()
+}
+
+/// Release a lease we own (no-op when it is no longer ours).
+pub fn release_lease(store_dir: &Path, key: JobKey, owner: &str) {
+    if matches!(read_lease(store_dir, key), Some(l) if l.owner == owner) {
+        let _ = fs::remove_file(lease_path(store_dir, key));
+    }
+}
+
+/// Remove every expired lease under `store_dir`; returns how many were
+/// reclaimed.  Workers reclaim lazily on claim; the coordinator sweeps
+/// too so a store with *no* live workers still converges on restart.
+pub fn reap_expired_leases(store_dir: &Path, lease_ms: u64) -> io::Result<usize> {
+    let dir = leases_dir(store_dir);
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e),
+    };
+    let mut reaped = 0;
+    let now = now_ms();
+    for dirent in entries {
+        let path = dirent?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !name.ends_with(".json") {
+            continue; // tmp litter from in-flight claims
+        }
+        let stale = match fs::read_to_string(&path).ok().and_then(|t| parse_lease(&t)) {
+            Some(l) => l.expired(lease_ms, now),
+            None => true, // unparseable lease blocks claims: reclaim it
+        };
+        if stale && fs::remove_file(&path).is_ok() {
+            reaped += 1;
+        }
+    }
+    Ok(reaped)
+}
+
+// ------------------------------------------------- attempts / dead letters
+
+/// Persisted retry state of a failing job.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Attempts {
+    /// Failures recorded so far.
+    pub count: u32,
+    /// Epoch ms before which the job must not be re-claimed (backoff).
+    pub next_eligible_ms: u64,
+    /// Message of the most recent failure.
+    pub last_error: String,
+}
+
+/// Read the retry state for `key` (`None` = no recorded failures).
+pub fn read_attempts(store_dir: &Path, key: JobKey) -> Option<Attempts> {
+    let text = fs::read_to_string(attempts_path(store_dir, key)).ok()?;
+    let doc = json::parse(&text).ok()?;
+    Some(Attempts {
+        count: doc.get("count")?.as_f64()? as u32,
+        next_eligible_ms: doc.get("next_eligible_ms")?.as_f64()? as u64,
+        last_error: doc.get("last_error")?.as_str()?.to_string(),
+    })
+}
+
+/// Forget the retry state for `key` (called after a successful save, so
+/// a cell that eventually succeeded leaves no residue).
+pub fn clear_attempts(store_dir: &Path, key: JobKey) {
+    let _ = fs::remove_file(attempts_path(store_dir, key));
+}
+
+/// One quarantined job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeadLetter {
+    /// Job label (for the report; the key alone is opaque).
+    pub label: String,
+    /// Total attempts burned before quarantine.
+    pub attempts: u32,
+    /// Message of the final failure.
+    pub error: String,
+    /// `"panic"` or `"io"` — what kind of failure exhausted the budget.
+    pub kind: String,
+}
+
+/// Read one dead letter, if `key` is quarantined.
+pub fn read_dead_letter(store_dir: &Path, key: JobKey) -> Option<DeadLetter> {
+    let text = fs::read_to_string(dead_letter_path(store_dir, key)).ok()?;
+    let doc = json::parse(&text).ok()?;
+    Some(DeadLetter {
+        label: doc.get("label")?.as_str()?.to_string(),
+        attempts: doc.get("attempts")?.as_f64()? as u32,
+        error: doc.get("error")?.as_str()?.to_string(),
+        kind: doc.get("kind")?.as_str()?.to_string(),
+    })
+}
+
+/// All quarantined jobs, key-sorted (the degraded-completion report).
+pub fn dead_letters(store_dir: &Path) -> Vec<(JobKey, DeadLetter)> {
+    let mut out = Vec::new();
+    let Ok(entries) = fs::read_dir(failed_dir(store_dir)) else {
+        return out;
+    };
+    for dirent in entries.flatten() {
+        let name = dirent.file_name().to_string_lossy().into_owned();
+        let Some(key) = name.strip_suffix(".json").and_then(JobKey::from_hex) else {
+            continue;
+        };
+        if let Some(dl) = read_dead_letter(store_dir, key) {
+            out.push((key, dl));
+        }
+    }
+    out.sort_by_key(|(k, _)| *k);
+    out
+}
+
+/// What became of a failed attempt.
+#[derive(Debug, PartialEq)]
+pub enum FailureOutcome {
+    /// The job stays in the queue; claimable again at the given epoch ms.
+    WillRetry {
+        /// Epoch ms of re-eligibility (now + backoff).
+        next_eligible_ms: u64,
+    },
+    /// The attempt budget is exhausted; the job is quarantined.
+    DeadLettered,
+}
+
+/// Record one failed attempt for `key`.  Transient failures (IO) back
+/// off exponentially before the next attempt; deterministic ones
+/// (panics) are immediately re-eligible.  The `max_retries`-th failure
+/// quarantines the job into `DIR/failed/` instead.
+pub fn record_failure(
+    store_dir: &Path,
+    key: JobKey,
+    label: &str,
+    error: &str,
+    transient: bool,
+    params: &ServiceParams,
+) -> io::Result<FailureOutcome> {
+    let count = read_attempts(store_dir, key).map(|a| a.count).unwrap_or(0) + 1;
+    let kind = if transient { "io" } else { "panic" };
+    if count >= params.max_retries {
+        let doc = json::obj(vec![
+            ("key", json::s(&key.hex())),
+            ("label", json::s(label)),
+            ("attempts", json::num(count as f64)),
+            ("error", json::s(error)),
+            ("kind", json::s(kind)),
+        ]);
+        write_atomic(&dead_letter_path(store_dir, key), &doc.to_string())?;
+        // keep the attempts file consistent with the quarantine record
+        let _ = write_attempt_file(store_dir, key, count, now_ms(), error);
+        return Ok(FailureOutcome::DeadLettered);
+    }
+    let next = now_ms().saturating_add(params.backoff_for(count, transient));
+    write_attempt_file(store_dir, key, count, next, error)?;
+    Ok(FailureOutcome::WillRetry { next_eligible_ms: next })
+}
+
+fn write_attempt_file(
+    store_dir: &Path,
+    key: JobKey,
+    count: u32,
+    next_eligible_ms: u64,
+    error: &str,
+) -> io::Result<()> {
+    let doc = json::obj(vec![
+        ("count", json::num(count as f64)),
+        ("next_eligible_ms", json::num(next_eligible_ms as f64)),
+        ("last_error", json::s(error)),
+    ]);
+    write_atomic(&attempts_path(store_dir, key), &doc.to_string())
+}
+
+// ------------------------------------------------------------ worker loop
+
+/// What a worker did over its lifetime (its exit summary).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerOutcome {
+    /// Cells this worker computed and saved.
+    pub completed: usize,
+    /// Cells that failed in this worker (attempt recorded).
+    pub failed_attempts: usize,
+    /// Cells this worker quarantined (subset of `failed_attempts`).
+    pub dead_lettered: usize,
+}
+
+/// How one leased run ended.
+enum RunDisposition {
+    Completed,
+    Failed { dead: bool },
+}
+
+/// Sleep up to `total_ms`, waking early when `stop` is set.
+fn sleep_interruptible(total_ms: u64, stop: &AtomicBool) {
+    let mut left = total_ms;
+    while left > 0 && !stop.load(Ordering::Relaxed) {
+        let step = left.min(25);
+        std::thread::sleep(Duration::from_millis(step));
+        left -= step;
+    }
+}
+
+/// Run one claimed job under heartbeat, timeout, and failure recording.
+fn run_leased(
+    store: &Store,
+    key: JobKey,
+    job: &Job,
+    cost: f64,
+    lease: &Lease,
+    params: &ServiceParams,
+    verbose: bool,
+) -> RunDisposition {
+    let store_dir = store.dir().to_path_buf();
+    let owner = lease.owner.clone();
+    let label = job.label();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Detached heartbeat/watchdog thread.  Detached, not joined: a
+    // `stall-heartbeat` faultpoint (or a genuinely wedged renewal) must
+    // not be able to hang the worker's main loop on a join.
+    {
+        let store_dir = store_dir.clone();
+        let owner = owner.clone();
+        let label = label.clone();
+        let stop = Arc::clone(&stop);
+        let params = *params;
+        let acquired_ms = lease.acquired_ms;
+        let timeout = Duration::from_millis(params.timeout_ms(cost));
+        std::thread::spawn(move || {
+            let started = Instant::now();
+            loop {
+                sleep_interruptible(params.heartbeat_ms, &stop);
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                faultpoint::hit("stall-heartbeat");
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if started.elapsed() >= timeout {
+                    let msg = format!(
+                        "timed out after {:.1}s (budget {:.1}s for cost {cost:.0})",
+                        started.elapsed().as_secs_f64(),
+                        timeout.as_secs_f64()
+                    );
+                    eprintln!("work[{owner}]: {label} {msg}");
+                    // a timeout on this machine may succeed elsewhere:
+                    // transient, so the retry backs off before re-claim
+                    let _ = record_failure(&store_dir, key, &label, &msg, true, &params);
+                    release_lease(&store_dir, key, &owner);
+                    if params.exit_on_timeout {
+                        // the only way to stop a runaway simulation
+                        // thread is to end the process; the worker is
+                        // the unit of execution by design
+                        std::process::exit(3);
+                    }
+                    return; // stop renewing; the lease expires naturally
+                }
+                if !renew_lease(&store_dir, key, &owner, acquired_ms) {
+                    // lease reclaimed from under us (we stalled past
+                    // expiry): stop renewing, let the run finish — the
+                    // save is idempotent and byte-identical
+                    return;
+                }
+            }
+        });
+    }
+
+    // Failure recording must not be able to skip the stop/release below
+    // (that would leak a renewing heartbeat thread), so recording errors
+    // degrade to "attempt not persisted" instead of propagating.
+    let record = |msg: &str, transient: bool| -> RunDisposition {
+        eprintln!("work[{owner}]: {label} {msg}");
+        match record_failure(&store_dir, key, &label, msg, transient, params) {
+            Ok(out) => RunDisposition::Failed { dead: out == FailureOutcome::DeadLettered },
+            Err(e) => {
+                eprintln!("work[{owner}]: recording failure for {} failed: {e}", key.hex());
+                RunDisposition::Failed { dead: false }
+            }
+        }
+    };
+    let result = catch_unwind(AssertUnwindSafe(|| run_job(job)));
+    let disposition = match result {
+        Ok(out) => match store.save(key, &label, &out) {
+            Ok(()) => {
+                clear_attempts(&store_dir, key);
+                RunDisposition::Completed
+            }
+            Err(e) => record(&format!("save failed: {e}"), true),
+        },
+        Err(payload) => record(&format!("panicked: {}", panic_message(payload.as_ref())), false),
+    };
+    stop.store(true, Ordering::Relaxed);
+    release_lease(&store_dir, key, &owner);
+    if verbose {
+        if let RunDisposition::Completed = &disposition {
+            eprintln!("work[{owner}]: {label} done");
+        }
+    }
+    disposition
+}
+
+/// Worker main loop: repeatedly claim and execute jobs until every job
+/// in the campaign has a valid cell or a dead letter.  Safe to run in
+/// any number of processes (or threads, for tests) against one store.
+pub fn work(
+    store: &Store,
+    jobs: &[Job],
+    params: &ServiceParams,
+    owner: &str,
+    verbose: bool,
+) -> io::Result<WorkerOutcome> {
+    // LPT over the cost model, exactly like the in-process pool: heavy
+    // cells first, so one straggler doesn't trail an idle fleet.
+    let mut items: Vec<(JobKey, &Job, f64)> =
+        jobs.iter().map(|j| (job_key(j), j, j.cost_estimate())).collect();
+    items.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+
+    let store_dir = store.dir().to_path_buf();
+    let mut settled: HashSet<u64> = HashSet::new();
+    let mut outcome = WorkerOutcome::default();
+    loop {
+        let mut all_settled = true;
+        let mut progressed = false;
+        for (key, job, cost) in &items {
+            if settled.contains(&key.0) {
+                continue;
+            }
+            if let Lookup::Hit(_) = store.load(*key) {
+                settled.insert(key.0);
+                continue;
+            }
+            if read_dead_letter(&store_dir, *key).is_some() {
+                settled.insert(key.0);
+                continue;
+            }
+            all_settled = false;
+            if let Some(a) = read_attempts(&store_dir, *key) {
+                if a.next_eligible_ms > now_ms() {
+                    continue; // backing off
+                }
+            }
+            let claim = match try_claim(&store_dir, *key, owner, params.lease_ms) {
+                Ok(c) => c,
+                Err(e) => {
+                    // transient claim trouble (contention, ENOSPC): skip
+                    // this cell for now rather than killing the worker
+                    eprintln!("work[{owner}]: claim {} failed: {e}", key.hex());
+                    continue;
+                }
+            };
+            let lease = match claim {
+                Claim::Busy => continue,
+                Claim::Acquired(l) => l,
+            };
+            progressed = true;
+            match run_leased(store, *key, job, *cost, &lease, params, verbose) {
+                RunDisposition::Completed => {
+                    outcome.completed += 1;
+                    settled.insert(key.0);
+                }
+                RunDisposition::Failed { dead } => {
+                    outcome.failed_attempts += 1;
+                    if dead {
+                        outcome.dead_lettered += 1;
+                        settled.insert(key.0);
+                    }
+                }
+            }
+        }
+        if all_settled {
+            return Ok(outcome);
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(params.poll_ms));
+        }
+    }
+}
+
+// ------------------------------------------------------- coordinator loop
+
+/// Final state of a served campaign.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Campaign size (distinct job keys).
+    pub total: usize,
+    /// Cells with a valid result.
+    pub completed: usize,
+    /// Quarantined cells, key-sorted.
+    pub failed: Vec<(JobKey, DeadLetter)>,
+    /// Expired leases the coordinator reclaimed.
+    pub reclaimed: usize,
+}
+
+impl ServeReport {
+    /// Whether the campaign converged with every cell computed.
+    pub fn clean(&self) -> bool {
+        self.failed.is_empty() && self.completed == self.total
+    }
+}
+
+/// Coordinator loop: watch the store until every campaign key has a
+/// valid cell or a dead letter, reclaiming expired leases along the way.
+/// Does no simulation work itself — workers are the unit of execution.
+pub fn serve(
+    store: &Store,
+    jobs: &[Job],
+    params: &ServiceParams,
+    progress: bool,
+) -> io::Result<ServeReport> {
+    let keys: Vec<JobKey> = jobs.iter().map(job_key).collect();
+    let store_dir = store.dir().to_path_buf();
+    let mut done: HashSet<u64> = HashSet::new();
+    let mut reclaimed = 0usize;
+    let mut last_line: Option<Instant> = None;
+    loop {
+        for key in &keys {
+            if done.contains(&key.0) {
+                continue;
+            }
+            if let Lookup::Hit(_) = store.load(*key) {
+                done.insert(key.0);
+            }
+        }
+        let failed = dead_letters(&store_dir);
+        let failed_keys: HashSet<u64> = failed.iter().map(|(k, _)| k.0).collect();
+        reclaimed += reap_expired_leases(&store_dir, params.lease_ms)?;
+        let settled =
+            keys.iter().filter(|k| done.contains(&k.0) || failed_keys.contains(&k.0)).count();
+        if progress
+            && last_line.map(|t| t.elapsed() >= Duration::from_millis(1000)).unwrap_or(true)
+        {
+            eprintln!(
+                "serve: {settled}/{} cells settled ({} computed, {} failed)",
+                keys.len(),
+                done.len(),
+                failed.len()
+            );
+            last_line = Some(Instant::now());
+        }
+        if settled == keys.len() {
+            let failed: Vec<(JobKey, DeadLetter)> = failed
+                .into_iter()
+                .filter(|(k, _)| keys.iter().any(|key| key.0 == k.0))
+                .collect();
+            return Ok(ServeReport {
+                total: keys.len(),
+                completed: done.len(),
+                failed,
+                reclaimed,
+            });
+        }
+        std::thread::sleep(Duration::from_millis(params.poll_ms));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+    use crate::trace::workloads;
+
+    fn tmp_store_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("larc_service_{name}"));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn k(n: u64) -> JobKey {
+        JobKey(n)
+    }
+
+    const P: ServiceParams = ServiceParams {
+        lease_ms: 200,
+        heartbeat_ms: 50,
+        max_retries: 3,
+        backoff_ms: 10,
+        timeout_floor_ms: 60_000,
+        timeout_ms_per_cost: 50.0,
+        poll_ms: 10,
+        exit_on_timeout: false,
+    };
+
+    #[test]
+    fn claim_renew_release_roundtrip() {
+        let d = tmp_store_dir("claim_rr");
+        let key = k(0xabc);
+        let c = try_claim(&d, key, "w1", P.lease_ms).unwrap();
+        let lease = match c {
+            Claim::Acquired(l) => l,
+            Claim::Busy => panic!("fresh key must claim"),
+        };
+        assert_eq!(lease.owner, "w1");
+        // a second claimant loses while the lease is live
+        assert_eq!(try_claim(&d, key, "w2", P.lease_ms).unwrap(), Claim::Busy);
+        // renewal moves the heartbeat forward
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(renew_lease(&d, key, "w1", lease.acquired_ms));
+        let l2 = read_lease(&d, key).unwrap();
+        assert_eq!(l2.owner, "w1");
+        assert!(l2.heartbeat_ms >= lease.heartbeat_ms);
+        // a non-owner cannot renew or release
+        assert!(!renew_lease(&d, key, "w2", lease.acquired_ms));
+        release_lease(&d, key, "w2");
+        assert!(read_lease(&d, key).is_some(), "non-owner release must be a no-op");
+        release_lease(&d, key, "w1");
+        assert!(read_lease(&d, key).is_none());
+    }
+
+    #[test]
+    fn expired_leases_are_reclaimable_and_reapable() {
+        let d = tmp_store_dir("expiry");
+        let key = k(0x111);
+        // plant a lease whose heartbeat died long ago
+        let stale = Lease {
+            owner: "dead".into(),
+            acquired_ms: now_ms() - 10_000,
+            heartbeat_ms: now_ms() - 9_000,
+        };
+        write_atomic(&lease_path(&d, key), &lease_json(key, &stale)).unwrap();
+        assert!(stale.expired(P.lease_ms, now_ms()));
+        // a claimant reclaims it
+        match try_claim(&d, key, "w2", P.lease_ms).unwrap() {
+            Claim::Acquired(l) => assert_eq!(l.owner, "w2"),
+            Claim::Busy => panic!("expired lease must be reclaimable"),
+        }
+        // the reaper removes a second stale lease wholesale
+        let key2 = k(0x222);
+        write_atomic(&lease_path(&d, key2), &lease_json(key2, &stale)).unwrap();
+        assert_eq!(reap_expired_leases(&d, P.lease_ms).unwrap(), 1);
+        assert!(read_lease(&d, key2).is_none());
+        // the live w2 lease survived the reap
+        assert_eq!(read_lease(&d, key).unwrap().owner, "w2");
+    }
+
+    #[test]
+    fn stale_acquire_with_live_heartbeat_stays_leased() {
+        // reused-worker-id scenario: the lease was acquired ages ago but
+        // its heartbeat is current — it must NOT be treated as stale just
+        // because the acquire timestamp is old
+        let d = tmp_store_dir("live_hb");
+        let key = k(0x333);
+        let lease = Lease {
+            owner: "w1".into(),
+            acquired_ms: now_ms() - 3_600_000,
+            heartbeat_ms: now_ms(),
+        };
+        write_atomic(&lease_path(&d, key), &lease_json(key, &lease)).unwrap();
+        assert!(!lease.expired(P.lease_ms, now_ms()));
+        assert_eq!(try_claim(&d, key, "w2", P.lease_ms).unwrap(), Claim::Busy);
+    }
+
+    #[test]
+    fn future_heartbeat_from_clock_skew_reads_as_fresh() {
+        let d = tmp_store_dir("skew");
+        let key = k(0x444);
+        // a worker with a fast clock stamped its heartbeat in our future
+        let lease = Lease {
+            owner: "w1".into(),
+            acquired_ms: now_ms() - 10_000,
+            heartbeat_ms: now_ms() + 60_000,
+        };
+        write_atomic(&lease_path(&d, key), &lease_json(key, &lease)).unwrap();
+        assert!(!lease.expired(P.lease_ms, now_ms()), "future heartbeat must read fresh");
+        assert_eq!(try_claim(&d, key, "w2", P.lease_ms).unwrap(), Claim::Busy);
+    }
+
+    #[test]
+    fn racing_claims_admit_exactly_one_winner() {
+        let d = tmp_store_dir("race");
+        for round in 0..32u64 {
+            let key = k(0x1000 + round);
+            let wins: Vec<bool> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4)
+                    .map(|w| {
+                        let d = d.clone();
+                        s.spawn(move || {
+                            matches!(
+                                try_claim(&d, key, &format!("w{w}"), P.lease_ms),
+                                Ok(Claim::Acquired(_))
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let winners = wins.iter().filter(|w| **w).count();
+            assert_eq!(winners, 1, "round {round}: {winners} claim winners");
+        }
+    }
+
+    #[test]
+    fn corrupt_lease_files_are_reclaimed_not_fatal() {
+        let d = tmp_store_dir("corrupt_lease");
+        let key = k(0x555);
+        fs::create_dir_all(leases_dir(&d)).unwrap();
+        fs::write(lease_path(&d, key), "not json at all").unwrap();
+        match try_claim(&d, key, "w1", P.lease_ms).unwrap() {
+            Claim::Acquired(l) => assert_eq!(l.owner, "w1"),
+            Claim::Busy => panic!("corrupt lease must be reclaimable"),
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_for_transient_and_zero_for_deterministic() {
+        assert_eq!(P.backoff_for(1, true), 10);
+        assert_eq!(P.backoff_for(2, true), 20);
+        assert_eq!(P.backoff_for(3, true), 40);
+        assert_eq!(P.backoff_for(4, true), 80);
+        // deterministic panics fail fast: no cool-down
+        for n in 1..5 {
+            assert_eq!(P.backoff_for(n, false), 0);
+        }
+        // the shift saturates instead of overflowing
+        assert!(P.backoff_for(200, true) >= P.backoff_for(21, true));
+    }
+
+    #[test]
+    fn record_failure_dead_letters_at_exactly_max_retries() {
+        let d = tmp_store_dir("dead_letter");
+        let key = k(0x666);
+        for n in 1..P.max_retries {
+            let out = record_failure(&d, key, "sim:x", "boom", true, &P).unwrap();
+            match out {
+                FailureOutcome::WillRetry { next_eligible_ms } => {
+                    let a = read_attempts(&d, key).unwrap();
+                    assert_eq!(a.count, n);
+                    assert_eq!(a.next_eligible_ms, next_eligible_ms);
+                    assert!(next_eligible_ms >= now_ms() - 1000);
+                }
+                FailureOutcome::DeadLettered => panic!("quarantined too early at attempt {n}"),
+            }
+        }
+        assert!(read_dead_letter(&d, key).is_none());
+        let out = record_failure(&d, key, "sim:x", "boom", true, &P).unwrap();
+        assert_eq!(out, FailureOutcome::DeadLettered);
+        let dl = read_dead_letter(&d, key).unwrap();
+        assert_eq!(dl.attempts, P.max_retries);
+        assert_eq!(dl.label, "sim:x");
+        assert_eq!(dl.kind, "io");
+        assert_eq!(dead_letters(&d).len(), 1);
+    }
+
+    #[test]
+    fn descriptor_round_trips_and_rejects_schema_drift() {
+        let d = tmp_store_dir("descriptor");
+        let desc = Descriptor {
+            experiment: "fig7a".into(),
+            scale: Scale::Tiny,
+            sampling: Sampling::Set { rate: 8 },
+            sweep: Some("latency".into()),
+            params: ServiceParams { exit_on_timeout: true, ..P },
+        };
+        desc.save(&d).unwrap();
+        let back = Descriptor::load(&d).unwrap();
+        assert_eq!(back, desc);
+
+        // a schema from another binary generation must refuse to load
+        let text = fs::read_to_string(Descriptor::path(&d)).unwrap();
+        let bumped = text.replace(
+            &format!("\"schema\":{SCHEMA_VERSION}"),
+            &format!("\"schema\":{}", SCHEMA_VERSION + 1),
+        );
+        assert_ne!(text, bumped, "schema field not found to bump");
+        fs::write(Descriptor::path(&d), bumped).unwrap();
+        let err = Descriptor::load(&d).unwrap_err().to_string();
+        assert!(err.contains("does not match this binary"), "{err}");
+    }
+
+    /// A job that reliably panics in the worker (L1 smaller than a line,
+    /// same trick as the campaign pool tests).
+    fn panicking_job() -> Job {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].params.size = 64;
+        Job::CacheSim {
+            spec: workloads::by_name("ep-omp", Scale::Tiny).unwrap(),
+            config: cfg,
+            threads: 2,
+            sampling: Sampling::Exact,
+        }
+    }
+
+    fn good_job(name: &str) -> Job {
+        let spec = workloads::by_name(name, Scale::Tiny).unwrap();
+        let cfg = configs::a64fx_s();
+        let threads = spec.effective_threads(cfg.cores);
+        Job::CacheSim { spec, config: cfg, threads, sampling: Sampling::Exact }
+    }
+
+    #[test]
+    fn worker_quarantines_a_permanent_failure_and_finishes_the_rest() {
+        let d = tmp_store_dir("worker_degraded");
+        let store = Store::open(&d).unwrap();
+        let jobs = vec![good_job("ep-omp"), panicking_job(), good_job("mvt")];
+        let bad_key = job_key(&jobs[1]);
+
+        let outcome = work(&store, &jobs, &P, "w1", false).unwrap();
+        assert_eq!(outcome.completed, 2, "{outcome:?}");
+        assert_eq!(outcome.dead_lettered, 1, "{outcome:?}");
+        assert_eq!(outcome.failed_attempts as u32, P.max_retries);
+
+        // exactly max_retries attempts, then quarantine with the panic text
+        let dl = read_dead_letter(&d, bad_key).unwrap();
+        assert_eq!(dl.attempts, P.max_retries);
+        assert_eq!(dl.kind, "panic");
+        assert!(dl.error.contains("panicked"), "{}", dl.error);
+
+        // the two good cells are valid store entries; the bad one is not
+        assert!(matches!(store.load(job_key(&jobs[0])), Lookup::Hit(_)));
+        assert!(matches!(store.load(job_key(&jobs[2])), Lookup::Hit(_)));
+        assert!(matches!(store.load(bad_key), Lookup::Miss));
+
+        // no lease litter survives a finished campaign
+        assert_eq!(reap_expired_leases(&d, 0).unwrap(), 0);
+
+        // serve() sees the same end state and reports degraded completion
+        let report = serve(&store, &jobs, &P, false).unwrap();
+        assert_eq!(report.total, 3);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.failed.len(), 1);
+        assert!(!report.clean());
+        assert_eq!(report.failed[0].0, bad_key);
+    }
+
+    #[test]
+    fn two_in_process_workers_converge_without_double_results() {
+        let d = tmp_store_dir("two_workers");
+        let store = Store::open(&d).unwrap();
+        let store2 = Store::open(&d).unwrap();
+        let jobs = vec![good_job("ep-omp"), good_job("mvt"), good_job("cg-omp")];
+
+        let (o1, o2) = std::thread::scope(|s| {
+            let jobs1 = jobs.clone();
+            let jobs2 = jobs.clone();
+            let h1 = s.spawn(move || work(&store, &jobs1, &P, "w1", false).unwrap());
+            let h2 = s.spawn(move || work(&store2, &jobs2, &P, "w2", false).unwrap());
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(o1.completed + o2.completed, jobs.len(), "{o1:?} {o2:?}");
+        assert_eq!(o1.dead_lettered + o2.dead_lettered, 0);
+
+        // at most one result file per key, and every key resolves
+        let check = Store::open(&d).unwrap();
+        for job in &jobs {
+            let key = job_key(job);
+            assert!(matches!(check.load(key), Lookup::Hit(_)));
+            assert!(
+                !check.flat_path_for(key).exists(),
+                "cell written outside the sharded layout"
+            );
+        }
+        assert!(dead_letters(&d).is_empty());
+    }
+}

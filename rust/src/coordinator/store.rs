@@ -51,6 +51,7 @@ use crate::coordinator::campaign::{
     collect_results, parallel_map, Campaign, Job, JobOutput, Progress,
 };
 use crate::mca::McaEstimate;
+use crate::util::faultpoint;
 use crate::util::json::{self, Json};
 
 /// Bump when the meaning of a stored result changes (simulator semantics,
@@ -612,6 +613,7 @@ pub struct Store {
     tmp_seq: AtomicU64,
     manifest_lock: Mutex<()>,
     bodies_opened: AtomicU64,
+    sync: bool,
 }
 
 /// First two hex digits of the key: the cell's shard directory name.
@@ -628,7 +630,10 @@ fn file_name_of(path: &Path) -> String {
 }
 
 impl Store {
-    /// Open (creating if needed) a store directory.
+    /// Open (creating if needed) a store directory.  Durability defaults
+    /// to rename-atomic only (crash-consistent against process death);
+    /// service mode opens with [`Store::with_sync`] for power-loss
+    /// durability.
     pub fn open(dir: &Path) -> io::Result<Store> {
         fs::create_dir_all(dir)?;
         Ok(Store {
@@ -636,7 +641,25 @@ impl Store {
             tmp_seq: AtomicU64::new(0),
             manifest_lock: Mutex::new(()),
             bodies_opened: AtomicU64::new(0),
+            sync: false,
         })
+    }
+
+    /// Toggle fsync durability.  When on, [`Store::save`] fsyncs the cell
+    /// body before the rename, fsyncs the shard directory after it, and
+    /// fsyncs each manifest append — so a manifest line can never point
+    /// at a cell the disk has not yet made durable.  The campaign service
+    /// turns this on; single-process campaigns keep the cheaper default
+    /// (rename atomicity alone is enough when the threat model is process
+    /// death, not power loss).
+    pub fn with_sync(mut self, on: bool) -> Store {
+        self.sync = on;
+        self
+    }
+
+    /// Whether fsync durability is enabled (see [`Store::with_sync`]).
+    pub fn sync_enabled(&self) -> bool {
+        self.sync
     }
 
     /// The store directory.
@@ -753,6 +776,7 @@ impl Store {
     /// `larc` invocations sharing one store never collide on the same
     /// temp path.
     pub fn save(&self, key: JobKey, label: &str, out: &JobOutput) -> io::Result<()> {
+        faultpoint::check("fail-nth-write")?;
         let body = entry_json(key, label, out).to_string();
         let shard = self.dir.join(shard_name(key));
         fs::create_dir_all(&shard)?;
@@ -760,7 +784,18 @@ impl Store {
         let pid = std::process::id();
         let tmp = shard.join(format!("{}.tmp{pid}-{seq}", key.hex()));
         fs::write(&tmp, &body)?;
+        if self.sync {
+            // flush the cell body before it becomes reachable under its
+            // final name; a crash here leaves only durable tmp litter
+            fs::File::open(&tmp)?.sync_all()?;
+        }
+        faultpoint::hit("crash-before-rename");
         fs::rename(&tmp, self.path_for(key))?;
+        if self.sync {
+            // fsync the shard directory so the rename itself is durable
+            fs::File::open(&shard)?.sync_all()?;
+        }
+        faultpoint::hit("crash-after-rename");
         self.append_manifest(key, label, out, &body)
     }
 
@@ -780,10 +815,15 @@ impl Store {
             fnv1a(body.as_bytes()),
             body,
         );
+        faultpoint::check("fail-manifest-append")?;
         let path = self.dir.join(shard_name(key)).join(MANIFEST_NAME);
         let _guard = self.manifest_lock.lock().unwrap();
         let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
-        f.write_all(line.as_bytes())
+        f.write_all(line.as_bytes())?;
+        if self.sync {
+            f.sync_all()?;
+        }
+        Ok(())
     }
 
     fn shard_dirs(&self) -> io::Result<Vec<(String, PathBuf)>> {

@@ -29,14 +29,14 @@ pub fn sizes(opts: &ExpOptions) -> Vec<u32> {
     }
 }
 
-/// Run the Fig. 1 pilot study (Milan vs Milan-X CCDs).
-pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+/// The exact simulation job set the Fig. 1 sweep submits, in submission
+/// order (pairs of Milan / Milan-X cells per grid size).  Shared with the
+/// campaign service so `larc work` reconstructs byte-identical JobKeys.
+pub fn jobs(opts: &ExpOptions) -> Vec<Job> {
     let milan = configs::milan();
     let milan_x = configs::milan_x();
-
-    let ns = sizes(opts);
     let mut jobs = Vec::new();
-    for &n in &ns {
+    for &n in &sizes(opts) {
         // per-rank share: the paper ran 16 MPI ranks across 16 CCDs
         let spec = ecp::minife_rank_share(n, 16);
         let threads = spec.effective_threads(milan.cores);
@@ -53,7 +53,13 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             sampling: opts.sampling,
         });
     }
-    let campaign = Campaign::new(jobs)
+    jobs
+}
+
+/// Run the Fig. 1 pilot study (Milan vs Milan-X CCDs).
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let ns = sizes(opts);
+    let campaign = Campaign::new(jobs(opts))
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);

@@ -93,20 +93,35 @@ fn achieved_bw_gbs(spec: &Spec, cfg: &MachineConfig, threads: usize) -> f64 {
 /// One sweep cell: (triad spec, machine, thread count).
 type SweepCase = (Spec, MachineConfig, usize);
 
-/// Run the sweep cells through the campaign scheduler — and therefore
-/// through the result store when configured — then reduce each cell to
-/// achieved bandwidth.
-fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> {
-    let jobs: Vec<Job> = cases
+/// Convert sweep cells to campaign jobs (shared with the service's
+/// job-set reconstruction, so the key derivation has a single source).
+fn jobs_of(cases: &[SweepCase], sampling: crate::cachesim::Sampling) -> Vec<Job> {
+    cases
         .iter()
         .map(|(spec, cfg, threads)| Job::CacheSim {
             spec: spec.clone(),
             config: cfg.clone(),
             threads: *threads,
-            sampling: opts.sampling,
+            sampling,
         })
-        .collect();
-    let campaign = Campaign::new(jobs)
+        .collect()
+}
+
+/// The exact job set of the 7a thread-count sweep, in submission order.
+pub fn jobs_7a(opts: &ExpOptions) -> Vec<Job> {
+    jobs_of(&cases_7a(opts), opts.sampling)
+}
+
+/// The exact job set of the 7b size sweep, in submission order.
+pub fn jobs_7b(opts: &ExpOptions) -> Vec<Job> {
+    jobs_of(&cases_7b(opts), opts.sampling)
+}
+
+/// Run the sweep cells through the campaign scheduler — and therefore
+/// through the result store when configured — then reduce each cell to
+/// achieved bandwidth.
+fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> {
+    let campaign = Campaign::new(jobs_of(cases, opts.sampling))
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);
@@ -121,13 +136,8 @@ fn sweep_bw(cases: &[SweepCase], opts: &ExpOptions) -> anyhow::Result<Vec<f64>> 
         .collect())
 }
 
-/// 7a: thread-count sweep with 128 KiB per-core vectors.
-pub fn run_7a(opts: &ExpOptions) -> anyhow::Result<Report> {
-    let mut report = Report::new(
-        "fig7a",
-        "STREAM Triad, 128 KiB vectors per core: achieved bandwidth (GB/s)",
-        &["config", "threads", "bw_gbs"],
-    );
+/// Sweep cells of 7a: thread counts per machine, 128 KiB per-core vectors.
+fn cases_7a(opts: &ExpOptions) -> Vec<SweepCase> {
     let passes = match opts.scale {
         crate::trace::Scale::Tiny => 4,
         _ => 12,
@@ -141,20 +151,11 @@ pub fn run_7a(opts: &ExpOptions) -> anyhow::Result<Report> {
             t = if t < 4 { t + 1 } else { t + 4 };
         }
     }
-    let bws = sweep_bw(&cases, opts)?;
-    for ((_, cfg, t), bw) in cases.iter().zip(bws) {
-        report.row(&[cfg.name.clone(), t.to_string(), csv::f(bw)]);
-    }
-    Ok(report)
+    cases
 }
 
-/// 7b: vector-size sweep at full thread count.
-pub fn run_7b(opts: &ExpOptions) -> anyhow::Result<Report> {
-    let mut report = Report::new(
-        "fig7b",
-        "STREAM Triad, size sweep: bandwidth cliffs at capacity boundaries",
-        &["config", "total_kib_per_vec", "bw_gbs"],
-    );
+/// Sweep cells of 7b: per-vector sizes at full thread count.
+fn cases_7b(opts: &ExpOptions) -> Vec<SweepCase> {
     // sweep 64 KiB .. 1 GiB per vector (log2 steps)
     let max_bytes = match opts.scale {
         crate::trace::Scale::Tiny => 16 * 1024 * KIB,
@@ -171,6 +172,32 @@ pub fn run_7b(opts: &ExpOptions) -> anyhow::Result<Report> {
             bytes *= 4;
         }
     }
+    cases
+}
+
+/// 7a: thread-count sweep with 128 KiB per-core vectors.
+pub fn run_7a(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let mut report = Report::new(
+        "fig7a",
+        "STREAM Triad, 128 KiB vectors per core: achieved bandwidth (GB/s)",
+        &["config", "threads", "bw_gbs"],
+    );
+    let cases = cases_7a(opts);
+    let bws = sweep_bw(&cases, opts)?;
+    for ((_, cfg, t), bw) in cases.iter().zip(bws) {
+        report.row(&[cfg.name.clone(), t.to_string(), csv::f(bw)]);
+    }
+    Ok(report)
+}
+
+/// 7b: vector-size sweep at full thread count.
+pub fn run_7b(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let mut report = Report::new(
+        "fig7b",
+        "STREAM Triad, size sweep: bandwidth cliffs at capacity boundaries",
+        &["config", "total_kib_per_vec", "bw_gbs"],
+    );
+    let cases = cases_7b(opts);
     let bws = sweep_bw(&cases, opts)?;
     for ((spec, cfg, _), bw) in cases.iter().zip(bws) {
         let kib = spec.phases[0].pattern.footprint() / 3 / KIB;

@@ -79,12 +79,13 @@ fn kernels(opts: &ExpOptions) -> Vec<crate::trace::Spec> {
     }
 }
 
-/// Run the Fig. 8 TAPP sensitivity sweeps.
-pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+/// The exact simulation job set of the sweep selected by `opts.sweep`,
+/// in submission order (baseline cell then each variant, per kernel).
+/// Shared with the campaign service's job-set reconstruction.
+pub fn jobs(opts: &ExpOptions) -> anyhow::Result<Vec<Job>> {
     let baseline = configs::larc_c();
     let specs = kernels(opts);
     let vars = variants(opts.sweep.as_deref())?;
-
     let mut jobs = Vec::new();
     for spec in &specs {
         let threads = spec.effective_threads(baseline.cores);
@@ -103,7 +104,14 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             });
         }
     }
-    let campaign = Campaign::new(jobs)
+    Ok(jobs)
+}
+
+/// Run the Fig. 8 TAPP sensitivity sweeps.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let specs = kernels(opts);
+    let vars = variants(opts.sweep.as_deref())?;
+    let campaign = Campaign::new(jobs(opts)?)
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);

@@ -50,14 +50,14 @@ fn specs(opts: &ExpOptions) -> Vec<Spec> {
         .collect()
 }
 
-/// Run the prefetch sensitivity sweep.
-pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+/// The exact simulation job set of the sweep (workload × prefetcher ×
+/// machine, in presentation order).  Shared with the campaign service's
+/// job-set reconstruction.
+pub fn jobs(opts: &ExpOptions) -> Vec<Job> {
     let machines = [configs::a64fx_s(), configs::larc_c()];
     let pfs = prefetchers();
-    let specs = specs(opts);
-
     let mut jobs = Vec::new();
-    for spec in &specs {
+    for spec in &specs(opts) {
         for pf in &pfs {
             for m in &machines {
                 let config = if pf.is_none() {
@@ -75,7 +75,15 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             }
         }
     }
-    let campaign = Campaign::new(jobs)
+    jobs
+}
+
+/// Run the prefetch sensitivity sweep.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let machines = [configs::a64fx_s(), configs::larc_c()];
+    let pfs = prefetchers();
+    let specs = specs(opts);
+    let campaign = Campaign::new(jobs(opts))
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);

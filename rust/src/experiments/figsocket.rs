@@ -47,14 +47,14 @@ fn specs(opts: &ExpOptions) -> Vec<Spec> {
         .collect()
 }
 
-/// Run the socket scale-out sweep.
-pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+/// The exact simulation job set of the sweep (workload × placement ×
+/// socket, in presentation order).  Shared with the campaign service's
+/// job-set reconstruction.
+pub fn jobs(opts: &ExpOptions) -> Vec<Job> {
     let machines = sockets();
     let pls = placements();
-    let specs = specs(opts);
-
     let mut jobs = Vec::new();
-    for spec in &specs {
+    for spec in &specs(opts) {
         for pl in &pls {
             for m in &machines {
                 let config = m.clone().with_placement(*pl);
@@ -68,7 +68,15 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
             }
         }
     }
-    let campaign = Campaign::new(jobs)
+    jobs
+}
+
+/// Run the socket scale-out sweep.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let machines = sockets();
+    let pls = placements();
+    let specs = specs(opts);
+    let campaign = Campaign::new(jobs(opts))
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);

@@ -31,14 +31,13 @@ impl MatrixRow {
     }
 }
 
-/// Run the full matrix (cached per options by the caller if needed).
-/// With `opts.store` set, completed cells are read from / written to the
-/// content-addressed store, so re-running any consumer figure after a
-/// tweak only recomputes invalidated cells.
-pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
+/// The exact simulation job set of the matrix (workload-major over the
+/// four Table-2 configs), in submission order.  Fig. 9 and the headline
+/// both run this set, so the campaign service reconstructs it from the
+/// experiment id alone.
+pub fn jobs(opts: &ExpOptions) -> Vec<Job> {
     let specs = workloads::gem5_set(opts.scale);
     let cfgs = configs::table2_configs();
-
     let mut jobs = Vec::with_capacity(specs.len() * cfgs.len());
     for spec in &specs {
         for cfg in &cfgs {
@@ -51,8 +50,18 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
             });
         }
     }
+    jobs
+}
 
-    let campaign = Campaign::new(jobs)
+/// Run the full matrix (cached per options by the caller if needed).
+/// With `opts.store` set, completed cells are read from / written to the
+/// content-addressed store, so re-running any consumer figure after a
+/// tweak only recomputes invalidated cells.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Vec<MatrixRow>> {
+    let specs = workloads::gem5_set(opts.scale);
+    let cfgs = configs::table2_configs();
+
+    let campaign = Campaign::new(jobs(opts))
         .with_workers(opts.workers)
         .verbose(opts.verbose)
         .progress(opts.progress);

@@ -27,7 +27,7 @@ use std::path::PathBuf;
 use crate::cachesim::Sampling;
 use crate::coordinator::report::Report;
 use crate::coordinator::store::Store;
-use crate::coordinator::{Campaign, JobOutput};
+use crate::coordinator::{Campaign, Job, JobOutput};
 use crate::trace::Scale;
 
 /// Options shared by all experiment drivers.
@@ -122,6 +122,28 @@ pub const EXPERIMENTS: [&str; 14] = [
 /// `--store` / `--resume`.
 pub const STORE_BACKED: [&str; 8] =
     ["fig1", "fig7a", "fig7b", "fig8", "fig9", "fig-prefetch", "fig-socket", "headline"];
+
+/// The exact store-routed simulation job set experiment `id` submits
+/// under `opts` — the single source the campaign service uses to
+/// materialize (coordinator) and reconstruct (workers) a campaign's
+/// JobKey set.  Each store-backed driver's `run` builds its jobs through
+/// the same function, so a key derived here is byte-identical to the one
+/// a single-process `--store` run would write.  Non-store-backed ids are
+/// an error: they have no cells to lease.
+pub fn campaign_jobs(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Job>> {
+    match id {
+        "fig1" => Ok(fig1::jobs(opts)),
+        "fig7a" => Ok(fig7::jobs_7a(opts)),
+        "fig7b" => Ok(fig7::jobs_7b(opts)),
+        "fig8" => fig8::jobs(opts),
+        "fig9" | "headline" => Ok(matrix::jobs(opts)),
+        "fig-prefetch" => Ok(figprefetch::jobs(opts)),
+        "fig-socket" => Ok(figsocket::jobs(opts)),
+        other => anyhow::bail!(
+            "'{other}' is not a store-backed experiment (serve/work support: {STORE_BACKED:?})"
+        ),
+    }
+}
 
 /// Run one experiment by id.
 pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {

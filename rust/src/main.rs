@@ -10,6 +10,7 @@ use anyhow::{anyhow, bail, Result};
 use larc::cachesim::{self, configs, Sampling};
 use larc::cli::{Cli, USAGE};
 use larc::coordinator::report::{results_dir, Report};
+use larc::coordinator::service;
 use larc::coordinator::store::{EntryState, Store};
 use larc::experiments::{self, ExpOptions};
 use larc::mca::{self, PortArch, PortModel};
@@ -37,6 +38,8 @@ fn run(args: &[String]) -> Result<()> {
         "mca" => cmd_mca(&cli),
         "figure" => cmd_figure(&cli),
         "campaign" => cmd_campaign(&cli),
+        "serve" => cmd_serve(&cli),
+        "work" => cmd_work(&cli),
         "store" => cmd_store(&cli),
         "bench" => cmd_bench(&cli),
         "model" => emit(&experiments::run("model", &opts(&cli)?)?, &cli),
@@ -295,6 +298,150 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
         .ok_or_else(|| anyhow!("figure id required, e.g. `larc figure fig9`"))?;
     let reports = experiments::run(id, &opts(cli)?)?;
     emit(&reports, cli)
+}
+
+/// Protocol parameters from the service flags, defaulting to
+/// [`service::ServiceParams::default`].
+fn service_params(cli: &Cli) -> Result<service::ServiceParams> {
+    let d = service::ServiceParams::default();
+    let u64_flag = |name: &str, default: u64| -> Result<u64> {
+        Ok(cli.usize_flag(name, default as usize).map_err(|e| anyhow!(e))? as u64)
+    };
+    let ms_per_cost = match cli.flag("timeout-ms-per-cost") {
+        None => d.timeout_ms_per_cost,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--timeout-ms-per-cost expects a number, got {v:?}"))?,
+    };
+    let params = service::ServiceParams {
+        lease_ms: u64_flag("lease-ms", d.lease_ms)?,
+        heartbeat_ms: u64_flag("heartbeat-ms", d.heartbeat_ms)?,
+        max_retries: u64_flag("max-retries", d.max_retries as u64)? as u32,
+        backoff_ms: u64_flag("backoff-ms", d.backoff_ms)?,
+        timeout_floor_ms: u64_flag("timeout-floor-ms", d.timeout_floor_ms)?,
+        timeout_ms_per_cost: ms_per_cost,
+        poll_ms: u64_flag("poll-ms", d.poll_ms)?,
+        exit_on_timeout: true,
+    };
+    if params.max_retries == 0 {
+        bail!("--max-retries must be >= 1");
+    }
+    if params.heartbeat_ms == 0 || params.lease_ms <= params.heartbeat_ms {
+        bail!(
+            "--lease-ms ({}) must exceed --heartbeat-ms ({}, >= 1): a lease that expires \
+             between renewals would be reclaimed out from under every healthy worker",
+            params.lease_ms,
+            params.heartbeat_ms
+        );
+    }
+    Ok(params)
+}
+
+/// `larc serve <id> --store DIR` — coordinate a crash-tolerant campaign:
+/// publish the descriptor, optionally spawn local workers, watch the
+/// store to convergence, then render the figure (exit 2 if degraded).
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let id = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment id required, e.g. `larc serve fig7a --store DIR`"))?;
+    let dir = cli
+        .flag("store")
+        .ok_or_else(|| anyhow!("--store DIR required"))?;
+    let o = opts(cli)?;
+    let jobs = experiments::campaign_jobs(id, &o)?;
+    let params = service_params(cli)?;
+    // durability on: a worker crash right after a rename must not be able
+    // to lose the cell the lease protocol just accounted as done
+    let store = Store::open(Path::new(dir))?.with_sync(true);
+    let desc = service::Descriptor {
+        experiment: id.to_string(),
+        scale: o.scale,
+        sampling: o.sampling,
+        sweep: o.sweep.clone(),
+        params,
+    };
+    desc.save(store.dir())?;
+    eprintln!("serve: campaign {id} ({} jobs) published in {dir}", jobs.len());
+
+    let spawn = cli.usize_flag("spawn", 0).map_err(|e| anyhow!(e))?;
+    let mut children = Vec::new();
+    for w in 0..spawn {
+        let child = std::process::Command::new(std::env::current_exe()?)
+            .args(["work", "--store", dir, "--worker-id", &format!("spawned-w{w}")])
+            .spawn()?;
+        children.push(child);
+    }
+
+    let report = service::serve(&store, &jobs, &params, !cli.has("quiet"))?;
+    for mut c in children {
+        let _ = c.wait();
+    }
+    if !report.clean() {
+        eprintln!(
+            "serve: campaign DEGRADED — {}/{} cells computed, {} dead-lettered:",
+            report.completed,
+            report.total,
+            report.failed.len()
+        );
+        for (key, dl) in &report.failed {
+            eprintln!(
+                "  {}  {}  {} after {} attempts: {}",
+                key.hex(),
+                dl.label,
+                dl.kind,
+                dl.attempts,
+                dl.error
+            );
+        }
+        eprintln!("inspect {dir}/failed/, fix the cause, delete the dead letters, re-serve");
+        std::process::exit(2);
+    }
+    eprintln!(
+        "serve: campaign complete ({} cells, {} expired leases reclaimed)",
+        report.total, report.reclaimed
+    );
+    // render the figure from the warm store (all hits, no recompute)
+    let render = ExpOptions {
+        store: Some(PathBuf::from(dir)),
+        resume: true,
+        ..o
+    };
+    emit(&experiments::run(id, &render)?, cli)
+}
+
+/// `larc work --store DIR` — join a served campaign: wait for the
+/// descriptor, rebuild the job set, and claim cells under the lease
+/// protocol until every one is computed or quarantined.
+fn cmd_work(cli: &Cli) -> Result<()> {
+    let dir = cli
+        .flag("store")
+        .ok_or_else(|| anyhow!("--store DIR required"))?;
+    let wait_ms = cli.usize_flag("wait-ms", 60_000).map_err(|e| anyhow!(e))? as u64;
+    let desc = service::Descriptor::load_waiting(Path::new(dir), wait_ms)?;
+    let o = ExpOptions {
+        scale: desc.scale,
+        sampling: desc.sampling,
+        sweep: desc.sweep.clone(),
+        ..ExpOptions::default()
+    };
+    let jobs = experiments::campaign_jobs(&desc.experiment, &o)?;
+    let store = Store::open(Path::new(dir))?.with_sync(true);
+    let owner = match cli.flag("worker-id") {
+        Some(id) => id.to_string(),
+        None => format!("w{}-{}", std::process::id(), service::now_ms()),
+    };
+    eprintln!(
+        "work[{owner}]: joined campaign {} ({} jobs) in {dir}",
+        desc.experiment,
+        jobs.len()
+    );
+    let out = service::work(&store, &jobs, &desc.params, &owner, cli.has("verbose"))?;
+    eprintln!(
+        "work[{owner}]: campaign settled — {} computed here, {} failed attempts, {} dead-lettered",
+        out.completed, out.failed_attempts, out.dead_lettered
+    );
+    Ok(())
 }
 
 fn cmd_campaign(cli: &Cli) -> Result<()> {

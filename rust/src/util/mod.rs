@@ -8,6 +8,7 @@
 pub mod artifacts;
 pub mod bench;
 pub mod csv;
+pub mod faultpoint;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -1,0 +1,274 @@
+//! Chaos tests for the crash-tolerant campaign service: SIGKILL real
+//! worker processes (and, with `--features fault-injection`, crash or
+//! stall them at exact protocol steps) and assert the campaign still
+//! converges to a store byte-identical to a single-process run.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output};
+use std::time::Duration;
+
+use larc::cachesim::Sampling;
+use larc::coordinator::service::{Descriptor, ServiceParams};
+use larc::coordinator::store::Store;
+use larc::coordinator::{Campaign, Job};
+use larc::experiments::{self, ExpOptions};
+use larc::trace::Scale;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("larc_chaos_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn larc(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_larc"))
+        .args(args)
+        .output()
+        .expect("failed to spawn larc")
+}
+
+/// Spawn a `larc work` process against `store`, optionally with armed
+/// faultpoints (the env var only bites in `fault-injection` builds).
+fn spawn_worker(store: &Path, id: &str, faults: Option<&str>) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_larc"));
+    cmd.args(["work", "--store", store.to_str().unwrap(), "--worker-id", id]);
+    match faults {
+        Some(f) => {
+            cmd.env("LARC_FAULTPOINTS", f);
+        }
+        None => {
+            cmd.env_remove("LARC_FAULTPOINTS");
+        }
+    }
+    cmd.spawn().expect("failed to spawn worker")
+}
+
+/// Run a worker to completion and capture its output.
+fn run_worker(store: &Path, id: &str, faults: Option<&str>) -> Output {
+    spawn_worker(store, id, faults)
+        .wait_with_output()
+        .expect("worker did not exit")
+}
+
+/// All committed cell files of a store: `(file name, bytes)` pairs from
+/// the 2-hex shard directories, sorted by name.  Manifests (derived
+/// state), tmp litter (crash debris), and the service's own
+/// subdirectories (`leases/`, `service/`, `failed/`) are not cells.
+fn cell_files(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut cells = Vec::new();
+    for entry in fs::read_dir(dir).unwrap() {
+        let shard = entry.unwrap().path();
+        let name = shard.file_name().unwrap().to_string_lossy().into_owned();
+        if !shard.is_dir() || name.len() != 2 || !name.bytes().all(|b| b.is_ascii_hexdigit()) {
+            continue;
+        }
+        for cell in fs::read_dir(&shard).unwrap() {
+            let cell = cell.unwrap().path();
+            let n = cell.file_name().unwrap().to_string_lossy().into_owned();
+            if n != "manifest.jsonl" && !n.contains(".tmp") {
+                cells.push((n, fs::read(&cell).unwrap()));
+            }
+        }
+    }
+    cells.sort();
+    cells
+}
+
+/// Byte-identity between two stores' cell sets, with readable failures.
+fn assert_same_cells(got_dir: &Path, want_dir: &Path) {
+    let got = cell_files(got_dir);
+    let want = cell_files(want_dir);
+    let names = |v: &[(String, Vec<u8>)]| v.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>();
+    assert_eq!(names(&got), names(&want), "cell sets differ");
+    assert!(!got.is_empty(), "no cells written at all");
+    for ((name, g), (_, w)) in got.iter().zip(&want) {
+        assert_eq!(g, w, "cell {name} is not byte-identical");
+    }
+}
+
+/// Publish a campaign descriptor and compute the reference store for the
+/// same job set with the ordinary in-process pool.
+fn publish(dir: &Path, experiment: &str, params: ServiceParams) -> (Vec<Job>, PathBuf) {
+    let opts = ExpOptions { scale: Scale::Tiny, ..ExpOptions::default() };
+    let jobs = experiments::campaign_jobs(experiment, &opts).unwrap();
+    Descriptor {
+        experiment: experiment.to_string(),
+        scale: Scale::Tiny,
+        sampling: Sampling::Exact,
+        sweep: None,
+        params,
+    }
+    .save(dir)
+    .unwrap();
+    let ref_dir = tmpdir(&format!("{}_ref", dir.file_name().unwrap().to_string_lossy()));
+    let store = Store::open(&ref_dir).unwrap();
+    Campaign::new(jobs.clone())
+        .with_workers(2)
+        .run_with_store(&store, true)
+        .unwrap();
+    (jobs, ref_dir)
+}
+
+fn quick_params() -> ServiceParams {
+    ServiceParams {
+        lease_ms: 1_500,
+        heartbeat_ms: 300,
+        backoff_ms: 50,
+        poll_ms: 25,
+        ..ServiceParams::default()
+    }
+}
+
+#[test]
+fn sigkilled_worker_is_reclaimed_and_the_campaign_converges_byte_identically() {
+    let dir = tmpdir("sigkill");
+    let (_jobs, ref_dir) = publish(&dir, "fig7a", quick_params());
+
+    // victim worker: SIGKILL'd mid-campaign (no unwinding, no cleanup —
+    // whatever lease it held stays on disk until expiry)
+    let mut victim = spawn_worker(&dir, "victim", None);
+    std::thread::sleep(Duration::from_millis(400));
+    victim.kill().expect("kill victim");
+    victim.wait().expect("reap victim");
+
+    // survivor drains the rest, re-leasing the victim's cells after the
+    // 1.5 s lease expiry
+    let out = run_worker(&dir, "survivor", None);
+    assert!(out.status.success(), "survivor failed: {out:?}");
+
+    assert_same_cells(&dir, &ref_dir);
+
+    // the service's state directories are invisible to the store tools
+    let verify = larc(&["store", "verify", "--store", dir.to_str().unwrap()]);
+    assert!(verify.status.success(), "verify failed: {verify:?}");
+    assert!(dir.join("service").join("campaign.json").exists());
+}
+
+#[test]
+fn serve_spawns_workers_completes_and_renders_the_figure() {
+    let dir = tmpdir("serve_spawn");
+    let dir_s = dir.to_str().unwrap();
+    let out = larc(&[
+        "serve", "fig1", "--scale", "tiny", "--store", dir_s, "--spawn", "2", "--lease-ms",
+        "4000", "--heartbeat-ms", "500", "--quiet",
+    ]);
+    assert!(out.status.success(), "serve failed: {out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("campaign complete"), "{stderr}");
+    // the figure rendered from the warm store (all hits, no recompute)
+    assert!(stderr.contains(" 0 misses, 0 recomputed"), "{stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fig1"), "no report rendered: {stdout}");
+
+    let verify = larc(&["store", "verify", "--store", dir_s]);
+    assert!(verify.status.success(), "verify failed: {verify:?}");
+}
+
+#[test]
+fn work_without_a_descriptor_times_out_with_a_clear_error() {
+    let dir = tmpdir("no_descriptor");
+    let out = larc(&["work", "--store", dir.to_str().unwrap(), "--wait-ms", "200"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no campaign descriptor"), "{stderr}");
+}
+
+/// Faultpoint-armed chaos: only meaningful when the binary was built
+/// with `--features fault-injection` (otherwise `LARC_FAULTPOINTS` is
+/// inert and these tests would assert nothing).
+#[cfg(feature = "fault-injection")]
+mod faults {
+    use super::*;
+
+    #[test]
+    fn crash_before_rename_never_commits_a_half_written_cell() {
+        let dir = tmpdir("crash_before_rename");
+        let (_jobs, ref_dir) = publish(&dir, "fig1", quick_params());
+
+        // the crasher dies (abort = SIGKILL stand-in) between the tmp
+        // write and the rename: tmp litter is allowed, a torn cell is not
+        let out = run_worker(&dir, "crasher", Some("crash-before-rename"));
+        assert!(!out.status.success(), "crasher should have aborted: {out:?}");
+
+        let verify = larc(&["store", "verify", "--store", dir.to_str().unwrap()]);
+        assert!(verify.status.success(), "torn cell committed: {verify:?}");
+
+        let out = run_worker(&dir, "survivor", None);
+        assert!(out.status.success(), "survivor failed: {out:?}");
+        assert_same_cells(&dir, &ref_dir);
+    }
+
+    #[test]
+    fn crash_after_lease_is_re_leased_after_expiry() {
+        let dir = tmpdir("crash_after_lease");
+        let (_jobs, ref_dir) = publish(&dir, "fig1", quick_params());
+
+        // the crasher dies the instant it wins its first claim, leaving
+        // an orphaned lease file behind
+        let out = run_worker(&dir, "crasher", Some("crash-after-lease"));
+        assert!(!out.status.success(), "crasher should have aborted: {out:?}");
+        let leases: Vec<_> = fs::read_dir(dir.join("leases"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".json"))
+            .collect();
+        assert_eq!(leases.len(), 1, "expected exactly the orphaned lease");
+
+        // the survivor must wait out the 1.5 s expiry, reclaim, and finish
+        let out = run_worker(&dir, "survivor", None);
+        assert!(out.status.success(), "survivor failed: {out:?}");
+        assert_same_cells(&dir, &ref_dir);
+
+        // no lease survives a settled campaign
+        let leftover = fs::read_dir(dir.join("leases"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".json"))
+            .count();
+        assert_eq!(leftover, 0, "lease litter after convergence");
+    }
+
+    #[test]
+    fn stalled_heartbeat_worker_coexists_with_a_healthy_one() {
+        // the staller's heartbeat thread wedges for 120 s on its first
+        // renewal, so its lease expires mid-run and the healthy worker
+        // may re-lease and double-run the cell — which must be benign:
+        // deterministic jobs + atomic content-addressed writes
+        let dir = tmpdir("stall_heartbeat");
+        let (_jobs, ref_dir) = publish(&dir, "fig1", quick_params());
+
+        let staller = spawn_worker(&dir, "staller", Some("stall-heartbeat"));
+        let healthy = spawn_worker(&dir, "healthy", None);
+        let out_s = staller.wait_with_output().expect("staller did not exit");
+        let out_h = healthy.wait_with_output().expect("healthy did not exit");
+        assert!(out_s.status.success(), "staller failed: {out_s:?}");
+        assert!(out_h.status.success(), "healthy worker failed: {out_h:?}");
+
+        assert_same_cells(&dir, &ref_dir);
+        let verify = larc(&["store", "verify", "--store", dir.to_str().unwrap()]);
+        assert!(verify.status.success(), "verify failed: {verify:?}");
+    }
+
+    #[test]
+    fn transient_write_failure_retries_and_recovers_without_dead_letters() {
+        let dir = tmpdir("fail_nth_write");
+        let (_jobs, ref_dir) = publish(&dir, "fig1", quick_params());
+
+        // the worker's second cell write fails once with an injected IO
+        // error; the attempt is recorded and the retry (after backoff)
+        // succeeds — one worker finishes the whole campaign alone
+        let out = run_worker(&dir, "flaky", Some("fail-nth-write:2"));
+        assert!(out.status.success(), "flaky worker failed: {out:?}");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("injected fault: fail-nth-write"), "{stderr}");
+
+        assert_same_cells(&dir, &ref_dir);
+        assert!(
+            !dir.join("failed").exists()
+                || fs::read_dir(dir.join("failed")).unwrap().next().is_none(),
+            "transient failure was dead-lettered"
+        );
+    }
+}
