@@ -104,7 +104,7 @@ pub fn cachesim_cases() -> Vec<BenchCase> {
         },
         BenchCase {
             name: "stencil_12t",
-            cfg,
+            cfg: cfg.clone(),
             spec: spec(
                 Pattern::Stencil3d {
                     nx: 64,
@@ -114,6 +114,43 @@ pub fn cachesim_cases() -> Vec<BenchCase> {
                     sweeps: 2,
                 },
                 "stencil",
+                12,
+            ),
+            threads: 12,
+        },
+        // datacenter serving hot paths: the Zipf-sampled KV state machine
+        // (one inverse-CDF draw + a value burst per request) and the
+        // dependent index descent
+        BenchCase {
+            name: "zipfian_kv_12t",
+            cfg: cfg.clone(),
+            spec: spec(
+                Pattern::ZipfianKv {
+                    table_bytes: 16 * MIB,
+                    requests: 50_000,
+                    value_bytes: 1024,
+                    read_fraction: 0.9,
+                    theta: 0.99,
+                    seed: 1,
+                },
+                "zipfian-kv",
+                12,
+            ),
+            threads: 12,
+        },
+        BenchCase {
+            name: "index_walk_12t",
+            cfg,
+            spec: spec(
+                Pattern::IndexWalk {
+                    leaf_bytes: 16 * MIB,
+                    node_bytes: 256,
+                    depth: 6,
+                    requests: 60_000,
+                    theta: 0.9,
+                    seed: 1,
+                },
+                "index-walk",
                 12,
             ),
             threads: 12,

@@ -3,10 +3,10 @@
 //! ```text
 //! larc list [workloads|configs|experiments]
 //! larc run --workload <name> [--config <name>] [--threads N] [--levels N]
-//!          [--prefetch spec] [--scale s]
+//!          [--prefetch spec] [--theta θ] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
-//!              |fig-socket|table2|table3|headline|model>
+//!              |fig-socket|fig-datacenter|table2|table3|headline|model>
 //! larc campaign [--scale small|paper|tiny] [--pjrt] [--csv] [--store DIR] [--resume]
 //! larc serve <id> --store DIR [--spawn K] [--lease-ms N] [--max-retries N] ...
 //! larc work --store DIR [--worker-id ID]          # join a served campaign
@@ -108,7 +108,7 @@ larc — LARC (3D-stacked cache) reproduction toolkit
 USAGE:
   larc list [workloads|configs|experiments]
   larc run --workload <name> [--config <cfg>] [--threads N] [--levels N]
-           [--prefetch spec] [--scale ...] [--sample mode] [--exact]
+           [--prefetch spec] [--theta θ] [--scale ...] [--sample mode] [--exact]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
               [--store DIR] [--resume] [--sample mode] [--exact]
@@ -130,7 +130,21 @@ HIERARCHY:
                 (DRAM moves up behind level N); e.g. `--config larc_c_3d
                 --levels 2` is the flat near-L2 machine
   --sweep fam   fig8 sweep family: latency | capacity | bankbits | l3
-                (l3 = stacked-L3 level-count sweep over larc_c_3d slabs)
+                (l3 = stacked-L3 level-count sweep over larc_c_3d slabs);
+                fig-datacenter: restrict the sweep to one serving workload
+                (memcached-like, rocksdb-like, ...)
+
+DATACENTER:
+  the datacenter family (suite `datacenter` in `larc list workloads`)
+  models server-class serving: Zipfian KV GET/SET mixes (memcached-like,
+  cassandra-like), B-tree/LSM index walks (rocksdb-like, mysql-like,
+  neo4j-like) and a TPC-H-style scan-join (tpch-q-like).  `larc figure
+  fig-datacenter` sweeps workload x machine x NUMA placement x request
+  rate (per-request compute scale) to locate the latency-bound →
+  bandwidth-bound crossover.
+  --theta θ     (run) override the Zipf skew of the workload's serving
+                phases (finite, >= 0; 0 = uniform); errors on workloads
+                without a Zipfian pattern
 
 SOCKET:
   socket configs simulate every CMG of the chip as a coupled NUMA tile:
@@ -212,12 +226,12 @@ STORE:
   store reindex rebuilds every shard's manifest.jsonl from the cell bodies
                 (after hand edits, gc of corrupt cells, or manifest damage)
   (simulation campaigns only: fig1 fig7a fig7b fig8 fig9 fig-prefetch
-   fig-socket headline; other experiments are closed-form or direct and note
-   that the flags are ignored)
+   fig-socket fig-datacenter headline; other experiments are closed-form or
+   direct and note that the flags are ignored)
 
 EXPERIMENT IDS:
-  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 fig-prefetch fig-socket table2
-  table3 headline model
+  fig1 fig2 fig5 fig6 fig7a fig7b fig8 fig9 fig-prefetch fig-socket
+  fig-datacenter table2 table3 headline model
 ";
 
 #[cfg(test)]

@@ -80,11 +80,17 @@ use crate::util::json::{self, Json};
 ///   exact cells of the same (workload, machine, threads) triple address
 ///   different entries) and `SimStats` gained the optional `sampled`
 ///   confidence-interval block.
+/// * v6 — the datacenter workload family: `Pattern` grew the `ZipfianKv`
+///   / `IndexWalk` / `ScanJoin` serving variants.  Their parameters enter
+///   the canonical string through the `Spec` Debug form, and the enum's
+///   shape itself is part of that form's meaning, so the version bump
+///   retires every v5 cell rather than risking a silent collision
+///   (recorded v5 pins: sim `749fe0ec3a9c5f16`, mca `322f1cabfe7a518f`).
 ///
 /// The sharded directory layout and the manifest index are *not* part of
 /// the schema: they change where a cell lives and how fast it is found,
 /// never what it means, so the v2 layout migration preserves every key.
-pub const SCHEMA_VERSION: u32 = 5;
+pub const SCHEMA_VERSION: u32 = 6;
 
 /// Per-shard index file name (one JSON record per line, append-only).
 pub const MANIFEST_NAME: &str = "manifest.jsonl";

@@ -1,0 +1,353 @@
+//! `fig-datacenter` — server-class serving sweep (beyond the paper).
+//!
+//! The paper quantifies stacked cache on HPC proxies; the north-star
+//! question is whether LARC-style copious SRAM helps latency-critical
+//! *serving*.  Lowe-Power et al. (PAPERS.md) showed stacked memory pays
+//! off for big-data workloads only in specific bandwidth regimes, so the
+//! sweep adds a request-rate axis: each datacenter workload runs with its
+//! per-request compute mix scaled by [`RATES`] (a lightly loaded server
+//! spends many more instructions per byte of traffic than a saturated
+//! one), exposing the latency-bound → bandwidth-bound crossover.  At low
+//! rates compute gaps dominate and the stacked slab buys nothing over the
+//! plain A64FX CMG; as the rate rises, DRAM-bandwidth utilization climbs
+//! and larc_c_3d's copious capacity starts paying.  Each report row
+//! classifies its regime
+//! against the workload's own low/high-rate utilization endpoints, so
+//! the crossover is the rate where the `regime` column flips.
+//!
+//! Grid: 6 workloads × {a64fx_s, larc_c, larc_c_3d, larc_c_sock} ×
+//! {local, interleave, first-touch} × 3 request rates, all routed through
+//! the campaign store with sampling support.
+
+use super::ExpOptions;
+use crate::cachesim::configs;
+use crate::cachesim::{MachineConfig, SimResult};
+use crate::coordinator::report::Report;
+use crate::coordinator::{Campaign, Job};
+use crate::trace::workloads;
+use crate::trace::{Placement, Spec};
+use crate::util::csv;
+
+/// The swept NUMA placements, in presentation order.
+pub fn placements() -> Vec<Placement> {
+    vec![Placement::Local, Placement::Interleave, Placement::FirstTouch]
+}
+
+/// The swept machines: the real A64FX CMG, the LARC_C CMG, its
+/// stacked-L3 variant, and the full 8-CMG LARC_C socket.
+pub fn machines() -> Vec<MachineConfig> {
+    vec![configs::a64fx_s(), configs::larc_c(), configs::larc_c_3d(), configs::larc_c_sock()]
+}
+
+/// Request-rate axis: `(label, compute scale)`.  The scale multiplies
+/// every phase's per-chunk instruction mix — a *low* request rate means
+/// each request carries much more application compute per byte of cache
+/// traffic, so the access stream (and every cache statistic) is
+/// rate-invariant while the cycle count is not.
+pub const RATES: [(&str, f32); 3] = [("low", 256.0), ("mid", 16.0), ("high", 1.0)];
+
+/// The swept serving workloads (the whole datacenter family).
+pub const WORKLOADS: [&str; 6] = [
+    "memcached-like",
+    "cassandra-like",
+    "rocksdb-like",
+    "mysql-like",
+    "neo4j-like",
+    "tpch-q-like",
+];
+
+fn specs(opts: &ExpOptions) -> Vec<Spec> {
+    WORKLOADS
+        .iter()
+        .filter(|n| match &opts.sweep {
+            Some(w) => *n == w,
+            None => true,
+        })
+        .filter_map(|n| workloads::by_name(n, opts.scale))
+        .collect()
+}
+
+/// `spec` at one request rate: same access stream, compute mix scaled by
+/// `k`.  The rate label lands in the name (and therefore the store key).
+pub fn rated(spec: &Spec, label: &str, k: f32) -> Spec {
+    let mut s = spec.clone();
+    s.name = format!("{}@{}", s.name, label);
+    for p in &mut s.phases {
+        p.mix = p.mix.scaled(k);
+    }
+    s
+}
+
+/// Fraction of the machine's DRAM-bandwidth budget (per CMG) the run
+/// consumed — the sweep's latency-vs-bandwidth regime signal.
+pub fn dram_utilization(r: &SimResult, cfg: &MachineConfig) -> f64 {
+    if r.cycles == 0.0 {
+        return 0.0;
+    }
+    r.stats.dram_bytes as f64 / (r.cycles * cfg.dram_bytes_per_cycle())
+}
+
+/// The exact simulation job set of the sweep (workload × rate ×
+/// placement × machine, in presentation order).  Shared with the
+/// campaign service's job-set reconstruction.
+pub fn jobs(opts: &ExpOptions) -> Vec<Job> {
+    let machines = machines();
+    let pls = placements();
+    let mut jobs = Vec::new();
+    for spec in &specs(opts) {
+        for (label, k) in RATES {
+            let spec = rated(spec, label, k);
+            for pl in &pls {
+                for m in &machines {
+                    let config = m.clone().with_placement(*pl);
+                    let threads = spec.effective_threads(m.total_cores());
+                    jobs.push(Job::CacheSim {
+                        spec: spec.clone(),
+                        config,
+                        threads,
+                        sampling: opts.sampling,
+                    });
+                }
+            }
+        }
+    }
+    jobs
+}
+
+/// Run the datacenter serving sweep.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<Report> {
+    let machines = machines();
+    let pls = placements();
+    let specs = specs(opts);
+    if specs.is_empty() {
+        anyhow::bail!(
+            "--sweep '{}' matches no datacenter workload (known: {WORKLOADS:?})",
+            opts.sweep.as_deref().unwrap_or("")
+        );
+    }
+    let campaign = Campaign::new(jobs(opts))
+        .with_workers(opts.workers)
+        .verbose(opts.verbose)
+        .progress(opts.progress);
+    let out = super::run_campaign(&campaign, opts)?;
+
+    let mut report = Report::new(
+        "fig-datacenter",
+        "datacenter serving: runtimes, stacked-L3 speedup over a64fx_s and DRAM regime per (workload, rate, placement)",
+        &[
+            "workload",
+            "class",
+            "rate",
+            "placement",
+            "a64fx_s",
+            "larc_c",
+            "larc_c_3d",
+            "larc_c_sock",
+            "larc_3d_speedup",
+            "larc_c_dram_util",
+            "regime",
+        ],
+    );
+    let stride_r = pls.len() * machines.len();
+    let stride_w = RATES.len() * stride_r;
+    for (i, spec) in specs.iter().enumerate() {
+        for (j, pl) in pls.iter().enumerate() {
+            // the workload's own utilization endpoints at this placement
+            // (on larc_c, machine index 1): a row is "bandwidth"-regime
+            // once it crosses the midpoint of its low/high-rate envelope
+            let util_at = |r: usize| {
+                let res = out[i * stride_w + r * stride_r + j * machines.len() + 1]
+                    .as_sim()
+                    .unwrap();
+                dram_utilization(res, &machines[1])
+            };
+            let mid = (util_at(0) + util_at(RATES.len() - 1)) / 2.0;
+            for (r, (label, _)) in RATES.iter().enumerate() {
+                let cell =
+                    |k: usize| out[i * stride_w + r * stride_r + j * machines.len() + k].as_sim().unwrap();
+                let a64fx = cell(0).runtime_s;
+                let larc_c = cell(1).runtime_s;
+                let larc_3d = cell(2).runtime_s;
+                let sock = cell(3).runtime_s;
+                let util = util_at(r);
+                // speedup of the stacked variant over the real chip —
+                // larc_c is the idealized planar bound, not the baseline
+                let speedup = a64fx / larc_3d;
+                report.row(&[
+                    spec.name.clone(),
+                    format!("{:?}", spec.class).to_lowercase(),
+                    label.to_string(),
+                    pl.label().to_string(),
+                    csv::f(a64fx),
+                    csv::f(larc_c),
+                    csv::f(larc_3d),
+                    csv::f(sock),
+                    csv::f(speedup),
+                    csv::f(util),
+                    (if util > mid { "bandwidth" } else { "latency" }).to_string(),
+                ]);
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim;
+    use crate::trace::workloads::mixes;
+    use crate::trace::{patterns::Pattern, BoundClass, Phase, Scale, Suite};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn driver_routes_through_the_store_and_resumes_byte_identically() {
+        let dir = std::env::temp_dir().join("larc_store_figdatacenter");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ExpOptions {
+            scale: Scale::Tiny,
+            store: Some(dir.clone()),
+            resume: true,
+            // one workload keeps the grid at 36 cells; the LARC socket
+            // cells are memory-hungry, so keep the pool narrow
+            sweep: Some("memcached-like".into()),
+            workers: 2,
+            ..ExpOptions::default()
+        };
+        let first = run(&opts).unwrap();
+        assert_eq!(first.len(), RATES.len() * placements().len());
+        // resumed run is served from the store and renders identically
+        let second = run(&opts).unwrap();
+        assert_eq!(first.render(), second.render());
+        assert_eq!(first.csv_text(), second.csv_text());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_sweep_family_is_an_error() {
+        let opts = ExpOptions {
+            scale: Scale::Tiny,
+            sweep: Some("no-such-workload".into()),
+            ..ExpOptions::default()
+        };
+        assert!(run(&opts).is_err());
+    }
+
+    /// A serving spec with real cache-capacity tension: a 64 MiB KV
+    /// table spills the A64FX 8 MiB near-L2 but sits entirely inside the
+    /// stacked 256 MiB slab, and ~2.5 requests per slot mean most of the
+    /// traffic is re-touches that only larc_c_3d can serve from SRAM.
+    /// The mild skew (θ = 0.5) keeps the hot set wider than the 8 MiB
+    /// near-L2 instead of collapsing onto a cache-resident head.
+    fn kv(rate_scale: f32) -> Spec {
+        let (mix, ilp) = mixes::lookup();
+        let base = Spec {
+            name: "kv-crossover".into(),
+            suite: Suite::Datacenter,
+            class: BoundClass::Latency,
+            threads: 12,
+            max_threads: usize::MAX,
+            ranks: 1,
+            phases: vec![Phase {
+                label: "serve",
+                pattern: Pattern::ZipfianKv {
+                    table_bytes: 64 * MIB,
+                    requests: 40_000,
+                    value_bytes: 4096,
+                    read_fraction: 0.9,
+                    theta: 0.5,
+                    seed: 0xDC,
+                },
+                mix,
+                ilp,
+            }],
+        };
+        rated(&base, "x", rate_scale)
+    }
+
+    #[test]
+    fn request_rate_moves_the_sweep_from_latency_to_bandwidth_bound() {
+        // the access stream is rate-invariant, so DRAM utilization on
+        // larc_c must climb monotonically as the per-request compute
+        // shrinks: the latency→bandwidth crossover exists and sits at a
+        // higher rate the more compute each request carries
+        let cfg = configs::larc_c();
+        let utils: Vec<f64> = RATES
+            .iter()
+            .map(|(_, k)| {
+                let s = kv(*k);
+                let r = cachesim::simulate(&s, &cfg, s.effective_threads(cfg.total_cores()));
+                dram_utilization(&r, &cfg)
+            })
+            .collect();
+        assert!(
+            utils[0] < utils[1] && utils[1] < utils[2],
+            "utilization not monotone in request rate: {utils:?}"
+        );
+        assert!(
+            utils[2] > utils[0] * 1.5,
+            "no crossover span between rate endpoints: {utils:?}"
+        );
+        // the midpoint of the envelope is crossed strictly after the
+        // lowest rate — i.e. the regime flip moves with request rate
+        let mid = (utils[0] + utils[2]) / 2.0;
+        assert!(utils[0] < mid, "crossover did not move off the low-rate end: {utils:?}");
+    }
+
+    #[test]
+    fn stacked_l3_pays_only_once_the_rate_makes_serving_bandwidth_bound() {
+        // at a low request rate the compute gap dominates both machines
+        // equally; at a high rate the 64 MiB table's re-touches turn into
+        // DRAM misses on the plain A64FX CMG but slab hits on larc_c_3d
+        let c = configs::a64fx_s();
+        let c3d = configs::larc_c_3d();
+        let speedup = |k: f32| {
+            let s = kv(k);
+            let rc = cachesim::simulate(&s, &c, s.effective_threads(c.total_cores()));
+            let r3 = cachesim::simulate(&s, &c3d, s.effective_threads(c3d.total_cores()));
+            rc.runtime_s / r3.runtime_s
+        };
+        let low = speedup(RATES[0].1);
+        let high = speedup(RATES[2].1);
+        assert!(
+            high > low,
+            "stacked-L3 speedup did not grow with request rate: low {low}, high {high}"
+        );
+        assert!(high > 1.05, "no bandwidth-regime stacked-L3 win: {high}");
+        assert!(low < high * 0.98, "speedup flat across the rate axis: {low} vs {high}");
+    }
+
+    #[test]
+    fn interleave_never_beats_local_for_the_zipfian_key_space() {
+        // NUMA sensitivity on the serving family: spreading the KV table
+        // across CMGs pays inter-CMG hops on most DRAM traffic and can
+        // only slow the socket down relative to the all-local bound
+        let spec = workloads::by_name("memcached-like", Scale::Tiny).unwrap();
+        let sock = configs::larc_c_sock();
+        let t = spec.effective_threads(sock.total_cores());
+        let local = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Local), t);
+        let il = cachesim::simulate(&spec, &sock.clone().with_placement(Placement::Interleave), t);
+        assert_eq!(local.stats.remote_dram_accesses, 0);
+        assert!(il.stats.remote_dram_accesses > 0);
+        assert!(
+            local.runtime_s <= il.runtime_s * 1.01,
+            "interleave beat the local bound: {} vs {}",
+            il.runtime_s,
+            local.runtime_s
+        );
+    }
+
+    #[test]
+    fn rated_scales_mixes_and_renames_without_touching_the_stream() {
+        let base = workloads::by_name("memcached-like", Scale::Tiny).unwrap();
+        let hot = rated(&base, "high", 1.0);
+        let slow = rated(&base, "low", 64.0);
+        assert_eq!(hot.name, "memcached-like@high");
+        assert_eq!(slow.name, "memcached-like@low");
+        // compute scaling must leave the access stream untouched
+        let a: Vec<_> = hot.phases[0].pattern.stream(0, 0, 1).take(64).collect();
+        let b: Vec<_> = slow.phases[0].pattern.stream(0, 0, 1).take(64).collect();
+        assert_eq!(a, b);
+        assert!(slow.phases[0].mix.total() > hot.phases[0].mix.total() * 8.0);
+    }
+}

@@ -14,6 +14,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod figdatacenter;
 pub mod figprefetch;
 pub mod figsocket;
 pub mod headline;
@@ -100,7 +101,7 @@ pub fn run_campaign(c: &Campaign, opts: &ExpOptions) -> anyhow::Result<Vec<JobOu
 }
 
 /// Experiment registry for the CLI.
-pub const EXPERIMENTS: [&str; 14] = [
+pub const EXPERIMENTS: [&str; 15] = [
     "fig1",
     "fig2",
     "fig5",
@@ -111,6 +112,7 @@ pub const EXPERIMENTS: [&str; 14] = [
     "fig9",
     "fig-prefetch",
     "fig-socket",
+    "fig-datacenter",
     "table2",
     "table3",
     "headline",
@@ -120,8 +122,17 @@ pub const EXPERIMENTS: [&str; 14] = [
 /// Experiments whose simulation jobs route through the result store.
 /// The rest are closed-form or call the simulators directly and ignore
 /// `--store` / `--resume`.
-pub const STORE_BACKED: [&str; 8] =
-    ["fig1", "fig7a", "fig7b", "fig8", "fig9", "fig-prefetch", "fig-socket", "headline"];
+pub const STORE_BACKED: [&str; 9] = [
+    "fig1",
+    "fig7a",
+    "fig7b",
+    "fig8",
+    "fig9",
+    "fig-prefetch",
+    "fig-socket",
+    "fig-datacenter",
+    "headline",
+];
 
 /// The exact store-routed simulation job set experiment `id` submits
 /// under `opts` — the single source the campaign service uses to
@@ -139,6 +150,7 @@ pub fn campaign_jobs(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Job>> {
         "fig9" | "headline" => Ok(matrix::jobs(opts)),
         "fig-prefetch" => Ok(figprefetch::jobs(opts)),
         "fig-socket" => Ok(figsocket::jobs(opts)),
+        "fig-datacenter" => Ok(figdatacenter::jobs(opts)),
         other => anyhow::bail!(
             "'{other}' is not a store-backed experiment (serve/work support: {STORE_BACKED:?})"
         ),
@@ -161,6 +173,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
         "fig9" => Ok(vec![fig9::run(opts)?]),
         "fig-prefetch" => Ok(vec![figprefetch::run(opts)?]),
         "fig-socket" => Ok(vec![figsocket::run(opts)?]),
+        "fig-datacenter" => Ok(vec![figdatacenter::run(opts)?]),
         "table2" => Ok(vec![table2::run()]),
         "table3" => Ok(vec![table3::run(opts)?]),
         "headline" => headline::run(opts),

@@ -142,8 +142,35 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         .flag("workload")
         .ok_or_else(|| anyhow!("--workload required"))?;
     let scale = cli.scale().map_err(|e| anyhow!(e))?;
-    let spec = workloads::by_name(name, scale)
+    let mut spec = workloads::by_name(name, scale)
         .ok_or_else(|| anyhow!("unknown workload {name:?} (try `larc list workloads`)"))?;
+    if let Some(t) = cli.flag("theta") {
+        let theta: f64 = t
+            .parse()
+            .map_err(|_| anyhow!("--theta expects a number, got {t:?}"))?;
+        if !theta.is_finite() || theta < 0.0 {
+            bail!("--theta must be finite and >= 0, got {t}");
+        }
+        let mut hit = false;
+        for p in &mut spec.phases {
+            use larc::trace::patterns::Pattern as P;
+            match &mut p.pattern {
+                P::ZipfianKv { theta: th, .. }
+                | P::IndexWalk { theta: th, .. }
+                | P::ScanJoin { theta: th, .. } => {
+                    *th = theta;
+                    hit = true;
+                }
+                _ => {}
+            }
+        }
+        if !hit {
+            bail!(
+                "--theta only applies to Zipfian serving workloads (the datacenter family); \
+                 {name} has no Zipf-skewed phase"
+            );
+        }
+    }
     let cfg_name = cli.flag_or("config", "a64fx_s");
     let mut cfg = configs::by_name(&cfg_name)
         .ok_or_else(|| anyhow!("unknown config {cfg_name:?} (try `larc list configs`)"))?;

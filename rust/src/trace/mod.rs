@@ -147,6 +147,8 @@ pub enum Suite {
     SpecCpu,
     /// SPEC OMP 2012.
     SpecOmp,
+    /// Datacenter serving proxies (KV stores, index walks, scan-joins).
+    Datacenter,
 }
 
 impl Suite {
@@ -161,6 +163,7 @@ impl Suite {
             Suite::Fiber => "fiber",
             Suite::SpecCpu => "spec-cpu",
             Suite::SpecOmp => "spec-omp",
+            Suite::Datacenter => "datacenter",
         }
     }
 }

@@ -26,7 +26,7 @@
 //!   and pinned by the `gen_matches_iterator_*` tests below.
 
 use super::{Access, AccessIter, CHUNK};
-use crate::util::prng::Rng;
+use crate::util::prng::{Rng, Zipf};
 
 /// Parameterized access pattern.
 #[derive(Clone, Debug)]
@@ -99,6 +99,46 @@ pub enum Pattern {
         streams: u32,
         write_fraction: f32,
     },
+    /// Request-driven key–value serving (memcached/Cassandra class):
+    /// `requests` GET/SET operations against a `table_bytes` slab of
+    /// slots (64-byte key header + the value rounded up to whole
+    /// chunks), key popularity Zipf(`theta`) with rank 0 hottest, a
+    /// `read_fraction` of requests GETs (the rest SETs).  Each request
+    /// is one independent key probe followed by a value stream of
+    /// `value_bytes` whose first chunk depends on the probe.
+    ZipfianKv {
+        table_bytes: u64,
+        requests: u64,
+        value_bytes: u32,
+        read_fraction: f32,
+        theta: f64,
+        seed: u64,
+    },
+    /// Pointer-rich index descent (RocksDB/MySQL/Neo4j class): per
+    /// request, `depth` *serialized* node lookups walk root→leaf through
+    /// per-level node arrays (fan-out 16) over a `leaf_bytes` leaf level
+    /// of `node_bytes`-sized nodes; the leaf is chosen Zipf(`theta`).
+    /// Upper levels are tiny and cache-resident; the leaf array is the
+    /// working set.
+    IndexWalk {
+        leaf_bytes: u64,
+        node_bytes: u32,
+        depth: u32,
+        requests: u64,
+        theta: f64,
+        seed: u64,
+    },
+    /// Analytic scan–join (TPC-H class): `passes` sequential sweeps of a
+    /// `fact_bytes` fact table; every scanned chunk is followed by one
+    /// dependent hash-probe read into a `dim_bytes` side table at a
+    /// Zipf(`theta`)-popular key.
+    ScanJoin {
+        fact_bytes: u64,
+        dim_bytes: u64,
+        theta: f64,
+        passes: u32,
+        seed: u64,
+    },
 }
 
 impl Pattern {
@@ -134,6 +174,27 @@ impl Pattern {
                 streams,
                 ..
             } => bytes_per_thread * streams as u64,
+            // The usable table: whole slots only, so every emitted
+            // address (key probe and value chunks) lands strictly inside.
+            Pattern::ZipfianKv {
+                table_bytes,
+                value_bytes,
+                ..
+            } => {
+                let (slot_bytes, _, slots) = kv_geometry(table_bytes, value_bytes);
+                slots * slot_bytes
+            }
+            Pattern::IndexWalk {
+                leaf_bytes,
+                node_bytes,
+                depth,
+                ..
+            } => index_geometry(leaf_bytes, node_bytes, depth).4,
+            Pattern::ScanJoin {
+                fact_bytes,
+                dim_bytes,
+                ..
+            } => chunks_of(fact_bytes) * CHUNK + (dim_bytes / 64).max(1) * 64,
         }
     }
 
@@ -207,6 +268,25 @@ impl Pattern {
                 streams,
                 ..
             } => chunks_of(bytes_per_thread) * passes as u64 * streams as u64,
+            Pattern::ZipfianKv {
+                table_bytes,
+                requests,
+                value_bytes,
+                ..
+            } => {
+                let (_, value_chunks, _) = kv_geometry(table_bytes, value_bytes);
+                requests * (1 + value_chunks)
+            }
+            Pattern::IndexWalk {
+                leaf_bytes,
+                node_bytes,
+                depth,
+                requests,
+                ..
+            } => requests * index_geometry(leaf_bytes, node_bytes, depth).1 as u64,
+            Pattern::ScanJoin {
+                fact_bytes, passes, ..
+            } => chunks_of(fact_bytes) * 2 * passes as u64,
         }
     }
 
@@ -284,6 +364,43 @@ impl Pattern {
                     1,
                 )
             }
+            Pattern::ZipfianKv {
+                table_bytes,
+                requests,
+                value_bytes,
+                read_fraction,
+                theta,
+                seed,
+            } => zipfian_kv_iter(
+                base,
+                table_bytes,
+                requests,
+                value_bytes,
+                read_fraction,
+                theta,
+                seed,
+                thread,
+                nthreads,
+            ),
+            Pattern::IndexWalk {
+                leaf_bytes,
+                node_bytes,
+                depth,
+                requests,
+                theta,
+                seed,
+            } => index_walk_iter(
+                base, leaf_bytes, node_bytes, depth, requests, theta, seed, thread, nthreads,
+            ),
+            Pattern::ScanJoin {
+                fact_bytes,
+                dim_bytes,
+                theta,
+                passes,
+                seed,
+            } => scan_join_iter(
+                base, fact_bytes, dim_bytes, theta, passes, seed, thread, nthreads,
+            ),
         }
     }
 
@@ -385,6 +502,43 @@ impl Pattern {
                     1,
                 ))
             }
+            Pattern::ZipfianKv {
+                table_bytes,
+                requests,
+                value_bytes,
+                read_fraction,
+                theta,
+                seed,
+            } => AccessGen::ZipfianKv(ZipfianKvGen::new(
+                base,
+                table_bytes,
+                requests,
+                value_bytes,
+                read_fraction,
+                theta,
+                seed,
+                thread,
+                nthreads,
+            )),
+            Pattern::IndexWalk {
+                leaf_bytes,
+                node_bytes,
+                depth,
+                requests,
+                theta,
+                seed,
+            } => AccessGen::IndexWalk(IndexWalkGen::new(
+                base, leaf_bytes, node_bytes, depth, requests, theta, seed, thread, nthreads,
+            )),
+            Pattern::ScanJoin {
+                fact_bytes,
+                dim_bytes,
+                theta,
+                passes,
+                seed,
+            } => AccessGen::ScanJoin(ScanJoinGen::new(
+                base, fact_bytes, dim_bytes, theta, passes, seed, thread, nthreads,
+            )),
         }
     }
 }
@@ -412,6 +566,12 @@ pub enum AccessGen {
     Spmv(SpmvGen),
     /// State machine for [`Pattern::Butterfly`].
     Butterfly(ButterflyGen),
+    /// State machine for [`Pattern::ZipfianKv`].
+    ZipfianKv(ZipfianKvGen),
+    /// State machine for [`Pattern::IndexWalk`].
+    IndexWalk(IndexWalkGen),
+    /// State machine for [`Pattern::ScanJoin`].
+    ScanJoin(ScanJoinGen),
 }
 
 impl AccessGen {
@@ -427,6 +587,9 @@ impl AccessGen {
             AccessGen::Gemm(g) => g.refill(buf, limit, phase),
             AccessGen::Spmv(g) => g.refill(buf, limit, phase),
             AccessGen::Butterfly(g) => g.refill(buf, limit, phase),
+            AccessGen::ZipfianKv(g) => g.refill(buf, limit, phase),
+            AccessGen::IndexWalk(g) => g.refill(buf, limit, phase),
+            AccessGen::ScanJoin(g) => g.refill(buf, limit, phase),
         }
     }
 }
@@ -953,8 +1116,302 @@ impl ButterflyGen {
     }
 }
 
+/// `zipfian_kv_iter` as a state machine: request -> (key probe, value
+/// chunks).  Both RNG draws (Zipfian key rank, then the GET/SET coin)
+/// happen at request start, mirroring the iterator's eager `flat_map`
+/// closure body.
+#[derive(Clone, Debug)]
+pub struct ZipfianKvGen {
+    base: u64,
+    slot_bytes: u64,
+    value_chunks: u64,
+    read_fraction: f32,
+    remaining: u64,
+    zipf: Zipf,
+    rng: Rng,
+    slot: u64,
+    write: bool,
+    /// Position within the request: 0 = key probe, then value chunks.
+    k: u64,
+    fresh: bool,
+}
+
+impl ZipfianKvGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        table_bytes: u64,
+        requests: u64,
+        value_bytes: u32,
+        read_fraction: f32,
+        theta: f64,
+        seed: u64,
+        thread: usize,
+        nthreads: usize,
+    ) -> ZipfianKvGen {
+        let (slot_bytes, value_chunks, slots) = kv_geometry(table_bytes, value_bytes);
+        let (lo, hi) = split(requests, thread, nthreads);
+        ZipfianKvGen {
+            base,
+            slot_bytes,
+            value_chunks,
+            read_fraction,
+            remaining: hi - lo,
+            zipf: Zipf::new(slots, theta),
+            rng: Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9)),
+            slot: 0,
+            write: false,
+            k: 0,
+            fresh: true,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.remaining > 0 {
+            if self.fresh {
+                self.slot = self.base + self.zipf.sample(&mut self.rng) * self.slot_bytes;
+                self.write = self.rng.f64() >= self.read_fraction as f64;
+                self.fresh = false;
+            }
+            buf.push(if self.k == 0 {
+                Access {
+                    addr: self.slot,
+                    bytes: 64,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            } else {
+                Access {
+                    addr: self.slot + 64 + (self.k - 1) * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: self.write,
+                    dep: self.k == 1,
+                    phase,
+                }
+            });
+            self.k += 1;
+            if self.k == 1 + self.value_chunks {
+                self.k = 0;
+                self.fresh = true;
+                self.remaining -= 1;
+            }
+        }
+    }
+}
+
+/// `index_walk_iter` as a state machine: request -> level descent.  One
+/// RNG draw (the Zipfian leaf choice) per request, at request start.
+#[derive(Clone, Debug)]
+pub struct IndexWalkGen {
+    base: u64,
+    node: u64,
+    depth: usize,
+    off: [u64; INDEX_MAX_DEPTH],
+    nodes: [u64; INDEX_MAX_DEPTH],
+    remaining: u64,
+    zipf: Zipf,
+    rng: Rng,
+    leaf: u64,
+    d: usize,
+    fresh: bool,
+}
+
+impl IndexWalkGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        leaf_bytes: u64,
+        node_bytes: u32,
+        depth: u32,
+        requests: u64,
+        theta: f64,
+        seed: u64,
+        thread: usize,
+        nthreads: usize,
+    ) -> IndexWalkGen {
+        let (node, depth, off, nodes, _) = index_geometry(leaf_bytes, node_bytes, depth);
+        let (lo, hi) = split(requests, thread, nthreads);
+        IndexWalkGen {
+            base,
+            node,
+            depth,
+            off,
+            nodes,
+            remaining: hi - lo,
+            zipf: Zipf::new(nodes[depth - 1], theta),
+            rng: Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9)),
+            leaf: 0,
+            d: 0,
+            fresh: true,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.remaining > 0 {
+            if self.fresh {
+                self.leaf = self.zipf.sample(&mut self.rng);
+                self.fresh = false;
+            }
+            let shift = INDEX_FANOUT_SHIFT * (self.depth - 1 - self.d) as u32;
+            let idx = (self.leaf >> shift).min(self.nodes[self.d] - 1);
+            buf.push(Access {
+                addr: self.base + self.off[self.d] + idx * self.node,
+                bytes: 64,
+                write: false,
+                dep: true,
+                phase,
+            });
+            self.d += 1;
+            if self.d == self.depth {
+                self.d = 0;
+                self.fresh = true;
+                self.remaining -= 1;
+            }
+        }
+    }
+}
+
+/// `scan_join_iter` as a state machine: pass -> chunk -> (scan, probe).
+/// RNG nesting mirrors the iterator exactly: the outer RNG advances once
+/// per pass (seeding `local`), and `local` serves one probe draw per
+/// scanned chunk, drawn when the chunk starts.
+#[derive(Clone, Debug)]
+pub struct ScanJoinGen {
+    base: u64,
+    dim_base: u64,
+    lo: u64,
+    hi: u64,
+    passes: u32,
+    pass: u32,
+    c: u64,
+    /// 0 = scan read of the chunk, 1 = the dependent dimension probe.
+    half: u8,
+    zipf: Zipf,
+    rng: Rng,
+    local: Rng,
+    probe: u64,
+    fresh_pass: bool,
+}
+
+impl ScanJoinGen {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        base: u64,
+        fact_bytes: u64,
+        dim_bytes: u64,
+        theta: f64,
+        passes: u32,
+        seed: u64,
+        thread: usize,
+        nthreads: usize,
+    ) -> ScanJoinGen {
+        let fact_chunks = chunks_of(fact_bytes);
+        let (lo, hi) = split(fact_chunks, thread, nthreads);
+        let pass = if lo >= hi { passes } else { 0 };
+        ScanJoinGen {
+            base,
+            dim_base: base + fact_chunks * CHUNK,
+            lo,
+            hi,
+            passes,
+            pass,
+            c: lo,
+            half: 0,
+            zipf: Zipf::new((dim_bytes / 64).max(1), theta),
+            rng: Rng::new(seed ^ (thread as u64).wrapping_mul(0xA5A5_5A5A)),
+            local: Rng::new(0),
+            probe: 0,
+            fresh_pass: true,
+        }
+    }
+
+    fn refill(&mut self, buf: &mut Vec<Access>, limit: usize, phase: u8) {
+        while buf.len() < limit && self.pass < self.passes {
+            if self.fresh_pass {
+                self.local = Rng::new(self.rng.next_u64());
+                self.fresh_pass = false;
+            }
+            buf.push(if self.half == 0 {
+                self.probe = self.dim_base + self.zipf.sample(&mut self.local) * 64;
+                Access {
+                    addr: self.base + self.c * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                    phase,
+                }
+            } else {
+                Access {
+                    addr: self.probe,
+                    bytes: 64,
+                    write: false,
+                    dep: true,
+                    phase,
+                }
+            });
+            self.half += 1;
+            if self.half == 2 {
+                self.half = 0;
+                self.c += 1;
+                if self.c == self.hi {
+                    self.c = self.lo;
+                    self.pass += 1;
+                    self.fresh_pass = true;
+                }
+            }
+        }
+    }
+}
+
 fn chunks_of(bytes: u64) -> u64 {
     (bytes / CHUNK).max(1)
+}
+
+/// [`Pattern::ZipfianKv`] table geometry: (slot bytes, value chunks,
+/// slot count).  A slot is a 64-byte key header plus the value rounded
+/// up to whole chunks; only whole slots fit, so `slots * slot_bytes` is
+/// an exact address bound.
+fn kv_geometry(table_bytes: u64, value_bytes: u32) -> (u64, u64, u64) {
+    let value_chunks = chunks_of(value_bytes as u64);
+    let slot_bytes = 64 + value_chunks * CHUNK;
+    let slots = (table_bytes / slot_bytes).max(1);
+    (slot_bytes, value_chunks, slots)
+}
+
+/// Fan-out of the modelled index: each level is 16x smaller than the
+/// one below it.
+const INDEX_FANOUT_SHIFT: u32 = 4;
+
+/// Hard depth cap for [`Pattern::IndexWalk`]: the per-level tables are
+/// fixed-size arrays so generator state stays `Copy`-capturable by the
+/// reference iterator's closures.
+const INDEX_MAX_DEPTH: usize = 16;
+
+/// Per-level geometry of [`Pattern::IndexWalk`]: (node bytes normalized
+/// to ≥ 64, clamped depth, per-level base offsets root-first, per-level
+/// node counts, total index bytes).  The total is an exact address
+/// bound: every lookup reads 64 bytes at a node start and nodes are
+/// ≥ 64 bytes.
+fn index_geometry(
+    leaf_bytes: u64,
+    node_bytes: u32,
+    depth: u32,
+) -> (u64, usize, [u64; INDEX_MAX_DEPTH], [u64; INDEX_MAX_DEPTH], u64) {
+    let node = (node_bytes as u64).max(64);
+    let depth = (depth.max(1) as usize).min(INDEX_MAX_DEPTH);
+    let leaf_nodes = (leaf_bytes / node).max(1);
+    let mut off = [0u64; INDEX_MAX_DEPTH];
+    let mut nodes = [0u64; INDEX_MAX_DEPTH];
+    let mut total = 0u64;
+    for d in 0..depth {
+        let shift = INDEX_FANOUT_SHIFT * (depth - 1 - d) as u32;
+        let n = (leaf_nodes >> shift.min(63)).max(1);
+        off[d] = total;
+        nodes[d] = n;
+        total += n * node;
+    }
+    (node, depth, off, nodes, total)
 }
 
 /// Split `[0, total)` contiguously and evenly: thread t gets
@@ -1211,6 +1668,123 @@ fn butterfly_iter(
     Box::new(iter)
 }
 
+#[allow(clippy::too_many_arguments)]
+fn zipfian_kv_iter(
+    base: u64,
+    table_bytes: u64,
+    requests: u64,
+    value_bytes: u32,
+    read_fraction: f32,
+    theta: f64,
+    seed: u64,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let (slot_bytes, value_chunks, slots) = kv_geometry(table_bytes, value_bytes);
+    let (lo, hi) = split(requests, thread, nthreads);
+    let zipf = Zipf::new(slots, theta);
+    let mut rng = Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9));
+    let iter = (lo..hi).flat_map(move |_| {
+        // key probe at the Zipfian-popular slot, then the GET/SET coin
+        let slot = base + zipf.sample(&mut rng) * slot_bytes;
+        let write = rng.f64() >= read_fraction as f64;
+        std::iter::once(Access {
+            addr: slot,
+            bytes: 64,
+            write: false,
+            dep: false,
+            phase: 0,
+        })
+        .chain((0..value_chunks).map(move |c| Access {
+            addr: slot + 64 + c * CHUNK,
+            bytes: CHUNK as u32,
+            write,
+            // the value address is known only after the key probe
+            dep: c == 0,
+            phase: 0,
+        }))
+    });
+    Box::new(iter)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn index_walk_iter(
+    base: u64,
+    leaf_bytes: u64,
+    node_bytes: u32,
+    depth: u32,
+    requests: u64,
+    theta: f64,
+    seed: u64,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let (node, depth, off, nodes, _) = index_geometry(leaf_bytes, node_bytes, depth);
+    let (lo, hi) = split(requests, thread, nthreads);
+    let zipf = Zipf::new(nodes[depth - 1], theta);
+    let mut rng = Rng::new(seed ^ (thread as u64).wrapping_mul(0x9E37_79B9));
+    let iter = (lo..hi).flat_map(move |_| {
+        let leaf = zipf.sample(&mut rng);
+        (0..depth).map(move |d| {
+            // each level resolves 4 more key bits; every lookup is
+            // serialized behind the parent node's pointer load
+            let shift = INDEX_FANOUT_SHIFT * (depth - 1 - d) as u32;
+            let idx = (leaf >> shift).min(nodes[d] - 1);
+            Access {
+                addr: base + off[d] + idx * node,
+                bytes: 64,
+                write: false,
+                dep: true,
+                phase: 0,
+            }
+        })
+    });
+    Box::new(iter)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scan_join_iter(
+    base: u64,
+    fact_bytes: u64,
+    dim_bytes: u64,
+    theta: f64,
+    passes: u32,
+    seed: u64,
+    thread: usize,
+    nthreads: usize,
+) -> AccessIter {
+    let fact_chunks = chunks_of(fact_bytes);
+    let (lo, hi) = split(fact_chunks, thread, nthreads);
+    let dim_base = base + fact_chunks * CHUNK;
+    let zipf = Zipf::new((dim_bytes / 64).max(1), theta);
+    let mut rng = Rng::new(seed ^ (thread as u64).wrapping_mul(0xA5A5_5A5A));
+    let iter = (0..passes).flat_map(move |_| {
+        let mut local = Rng::new(rng.next_u64());
+        (lo..hi).flat_map(move |c| {
+            // scan the fact chunk, then probe the join key it carries
+            let probe = dim_base + zipf.sample(&mut local) * 64;
+            [
+                Access {
+                    addr: base + c * CHUNK,
+                    bytes: CHUNK as u32,
+                    write: false,
+                    dep: false,
+                    phase: 0,
+                },
+                Access {
+                    addr: probe,
+                    bytes: 64,
+                    write: false,
+                    dep: true,
+                    phase: 0,
+                },
+            ]
+            .into_iter()
+        })
+    });
+    Box::new(iter)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1452,6 +2026,135 @@ mod tests {
             1 << 40,
         );
         assert_gen_matches(&Pattern::Butterfly { bytes: 64 * CHUNK, stages: 5 }, 1 << 40);
+    }
+
+    #[test]
+    fn gen_matches_iterator_datacenter_family() {
+        // RNG draw points (Zipfian rank, GET/SET coin, per-pass probe
+        // seeding) must line up exactly across thread splits
+        assert_gen_matches(
+            &Pattern::ZipfianKv {
+                table_bytes: 1 << 20,
+                requests: 500,
+                value_bytes: 700,
+                read_fraction: 0.9,
+                theta: 0.99,
+                seed: 11,
+            },
+            1 << 40,
+        );
+        assert_gen_matches(
+            &Pattern::IndexWalk {
+                leaf_bytes: 1 << 20,
+                node_bytes: 256,
+                depth: 5,
+                requests: 400,
+                theta: 0.8,
+                seed: 13,
+            },
+            1 << 41,
+        );
+        assert_gen_matches(
+            &Pattern::ScanJoin {
+                fact_bytes: 100 * CHUNK,
+                dim_bytes: 1 << 16,
+                theta: 0.6,
+                passes: 3,
+                seed: 17,
+            },
+            1 << 42,
+        );
+    }
+
+    #[test]
+    fn datacenter_gens_handle_empty_thread_ranges() {
+        // fewer requests/chunks than threads: starved generators must
+        // report exhaustion immediately
+        let pats = [
+            Pattern::ZipfianKv {
+                table_bytes: 1 << 16,
+                requests: 2,
+                value_bytes: 256,
+                read_fraction: 1.0,
+                theta: 0.5,
+                seed: 1,
+            },
+            Pattern::IndexWalk {
+                leaf_bytes: 1 << 16,
+                node_bytes: 128,
+                depth: 3,
+                requests: 2,
+                theta: 0.5,
+                seed: 1,
+            },
+            Pattern::ScanJoin {
+                fact_bytes: 2 * CHUNK,
+                dim_bytes: 1 << 12,
+                theta: 0.5,
+                passes: 1,
+                seed: 1,
+            },
+        ];
+        for p in &pats {
+            assert_gen_matches(p, 0);
+            // thread 0 of 4 owns [2*0/4, 2*1/4) = an empty range
+            let mut buf = Vec::new();
+            p.gen(0, 0, 4).refill(&mut buf, 256, 0);
+            assert!(buf.is_empty(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn zipfian_kv_mixes_gets_and_sets_within_the_table() {
+        let p = Pattern::ZipfianKv {
+            table_bytes: 1 << 20,
+            requests: 2000,
+            value_bytes: 512,
+            read_fraction: 0.7,
+            theta: 0.9,
+            seed: 5,
+        };
+        let fp = p.footprint();
+        let acc: Vec<_> = p.stream(0, 0, 1).collect();
+        assert_eq!(acc.len() as u64, p.total_chunks());
+        assert!(acc.iter().all(|a| a.addr + a.bytes as u64 <= fp));
+        let writes = acc.iter().filter(|a| a.write).count();
+        assert!(writes > 0 && writes < acc.len(), "{writes} writes");
+    }
+
+    #[test]
+    fn index_walk_is_a_dependent_descent_within_the_index() {
+        let p = Pattern::IndexWalk {
+            leaf_bytes: 1 << 20,
+            node_bytes: 4096,
+            depth: 4,
+            requests: 100,
+            theta: 0.99,
+            seed: 2,
+        };
+        let fp = p.footprint();
+        let acc: Vec<_> = p.stream(0, 0, 1).collect();
+        assert_eq!(acc.len() as u64, p.total_chunks());
+        assert!(acc.iter().all(|a| a.dep && !a.write));
+        assert!(acc.iter().all(|a| a.addr + a.bytes as u64 <= fp));
+    }
+
+    #[test]
+    fn scan_join_alternates_scan_and_probe() {
+        let p = Pattern::ScanJoin {
+            fact_bytes: 64 * CHUNK,
+            dim_bytes: 1 << 14,
+            theta: 0.8,
+            passes: 2,
+            seed: 7,
+        };
+        let fp = p.footprint();
+        let acc: Vec<_> = p.stream(0, 0, 1).collect();
+        assert_eq!(acc.len() as u64, p.total_chunks());
+        assert!(acc.iter().all(|a| a.addr + a.bytes as u64 <= fp));
+        // even positions scan the fact table, odd ones probe the side table
+        assert!(acc.iter().step_by(2).all(|a| !a.dep && a.bytes == CHUNK as u32));
+        assert!(acc.iter().skip(1).step_by(2).all(|a| a.dep && a.bytes == 64));
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Datacenter serving proxies — the beyond-paper workload family.
+//!
+//! The paper's suites are HPC kernels; the ROADMAP north star is a system
+//! serving millions of users, and Lowe-Power et al. (PAPERS.md) show
+//! stacked memory pays off for big-data serving only in specific
+//! bandwidth regimes.  These six presets put server-class archetypes on
+//! the same simulator: Zipfian key-value GET/SET mixes (memcached,
+//! Cassandra), pointer-rich index descents (RocksDB, MySQL, Neo4j), and
+//! a scan+hash-probe analytics query (TPC-H).  Working sets are sized to
+//! production-plausible footprints (tens of GiB of table at paper scale)
+//! so the stacked-cache question is non-trivial: key popularity is
+//! Zipfian, and whether the hot set fits in 256 MiB of L2 depends on θ.
+
+use super::{mixes, sb};
+use crate::trace::patterns::Pattern;
+use crate::trace::{BoundClass, Phase, Scale, Spec, Suite};
+use crate::util::units::{GIB, MIB};
+
+fn dc(name: &str, class: BoundClass, threads: usize, phases: Vec<Phase>) -> Spec {
+    Spec {
+        name: name.into(),
+        suite: Suite::Datacenter,
+        class,
+        threads,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases,
+    }
+}
+
+/// Request counts scale like footprints so Tiny sweeps stay fast.
+fn sreq(requests: u64, scale: Scale) -> u64 {
+    sb(requests * 256, scale) / 256
+}
+
+/// Datacenter serving specs at `scale`.
+pub fn workloads(scale: Scale) -> Vec<Spec> {
+    vec![
+        memcached_like(scale),
+        cassandra_like(scale),
+        rocksdb_like(scale),
+        mysql_like(scale),
+        neo4j_like(scale),
+        tpch_q_like(scale),
+    ]
+}
+
+/// memcached-like: GET-heavy Zipfian KV cache, small values.
+///
+/// YCSB-C-style 95/5 read mix at the classic θ = 0.99 skew; 32 GiB of
+/// table at paper scale, so only the Zipfian hot set can be cache
+/// resident.
+pub fn memcached_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::lookup();
+    dc(
+        "memcached-like",
+        BoundClass::Latency,
+        12,
+        vec![Phase {
+            label: "serve",
+            pattern: Pattern::ZipfianKv {
+                table_bytes: sb(32 * GIB, scale),
+                requests: sreq(300_000, scale),
+                value_bytes: 1024,
+                read_fraction: 0.95,
+                theta: 0.99,
+                seed: 0xD1,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// cassandra-like: write-heavier wide-row store, 4 KiB values.
+///
+/// The larger values make it stream more bytes per request than
+/// memcached, pushing it toward the bandwidth side of the spectrum.
+pub fn cassandra_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::lookup();
+    dc(
+        "cassandra-like",
+        BoundClass::Mixed,
+        12,
+        vec![Phase {
+            label: "serve",
+            pattern: Pattern::ZipfianKv {
+                table_bytes: sb(64 * GIB, scale),
+                requests: sreq(200_000, scale),
+                value_bytes: 4096,
+                read_fraction: 0.8,
+                theta: 0.8,
+                seed: 0xD2,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// rocksdb-like: LSM point reads — 6-deep block-index descents.
+pub fn rocksdb_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::latency();
+    dc(
+        "rocksdb-like",
+        BoundClass::Latency,
+        12,
+        vec![Phase {
+            label: "point-get",
+            pattern: Pattern::IndexWalk {
+                leaf_bytes: sb(16 * GIB, scale),
+                node_bytes: 4096,
+                depth: 6,
+                requests: sreq(150_000, scale),
+                theta: 0.9,
+                seed: 0xD3,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// mysql-like: InnoDB B+-tree lookups — shallow tree, 16 KiB pages,
+/// more per-request integer work (SQL layer) than a bare LSM get.
+pub fn mysql_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::int_compute();
+    dc(
+        "mysql-like",
+        BoundClass::Mixed,
+        12,
+        vec![Phase {
+            label: "btree",
+            pattern: Pattern::IndexWalk {
+                leaf_bytes: sb(8 * GIB, scale),
+                node_bytes: 16384,
+                depth: 4,
+                requests: sreq(150_000, scale),
+                theta: 0.7,
+                seed: 0xD4,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// neo4j-like: graph hops — tiny 256 B nodes, deep dependent walks,
+/// mild skew (supernodes), the most latency-bound preset.
+pub fn neo4j_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::latency();
+    dc(
+        "neo4j-like",
+        BoundClass::Latency,
+        12,
+        vec![Phase {
+            label: "traverse",
+            pattern: Pattern::IndexWalk {
+                leaf_bytes: sb(4 * GIB, scale),
+                node_bytes: 256,
+                depth: 8,
+                requests: sreq(200_000, scale),
+                theta: 0.6,
+                seed: 0xD5,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+/// tpch-q-like: analytics scan-join — sequential fact scan with a
+/// Zipfian-keyed probe into a 512 MiB dimension hash table.
+pub fn tpch_q_like(scale: Scale) -> Spec {
+    let (mix, ilp) = mixes::spmv();
+    dc(
+        "tpch-q-like",
+        BoundClass::Bandwidth,
+        12,
+        vec![Phase {
+            label: "scan-join",
+            pattern: Pattern::ScanJoin {
+                fact_bytes: sb(2 * GIB, scale),
+                dim_bytes: sb(512 * MIB, scale),
+                theta: 0.5,
+                passes: 1,
+                seed: 0xD6,
+            },
+            mix,
+            ilp,
+        }],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_is_complete_and_datacenter_suite() {
+        let ws = workloads(Scale::Tiny);
+        assert_eq!(ws.len(), 6);
+        for s in &ws {
+            assert_eq!(s.suite, Suite::Datacenter, "{}", s.name);
+            assert!(s.name.ends_with("-like"), "{}", s.name);
+            assert!(s.footprint() > 0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn paper_scale_tables_spill_any_single_cache() {
+        // the serving question is only interesting if the full tables
+        // dwarf LARC's 256 MiB L2 at paper scale
+        for s in workloads(Scale::Paper) {
+            assert!(s.footprint() > GIB, "{} too small", s.name);
+        }
+    }
+
+    #[test]
+    fn tiny_scale_stays_sweepable() {
+        for s in workloads(Scale::Tiny) {
+            let total: u64 = s.phases.iter().map(|p| p.pattern.total_chunks()).sum();
+            assert!(total < 2_000_000, "{}: {} accesses at Tiny", s.name, total);
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! is calibrated against (e.g. "XSBench: L2 miss 32.1% → 0.1% on LARC_C",
 //! Table 3).
 
+pub mod datacenter;
 pub mod ecp;
 pub mod fiber;
 pub mod npb;
@@ -183,16 +184,23 @@ pub fn all(scale: Scale) -> Vec<Spec> {
     v.extend(tapp::workloads(scale));
     v.extend(fiber::workloads(scale));
     v.extend(spec_suite::workloads(scale));
+    v.extend(datacenter::workloads(scale));
     v
 }
 
 /// Workloads the gem5-substitute pipeline runs (the paper excludes
 /// multi-rank MPI programs — MODYLAS, NICAM, NTChem, NPB-MPI — and omits
-/// PolyBench from Fig. 9 for lack of signal).
+/// PolyBench from Fig. 9 for lack of signal; the beyond-paper Datacenter
+/// family has its own `fig-datacenter` sweep and stays out of the
+/// paper-figure job sets).
 pub fn gem5_set(scale: Scale) -> Vec<Spec> {
     all(scale)
         .into_iter()
-        .filter(|s| s.ranks == 1 && s.suite != crate::trace::Suite::PolyBench)
+        .filter(|s| {
+            s.ranks == 1
+                && s.suite != crate::trace::Suite::PolyBench
+                && s.suite != crate::trace::Suite::Datacenter
+        })
         .collect()
 }
 
@@ -250,6 +258,7 @@ mod tests {
         for s in gem5_set(Scale::Tiny) {
             assert_eq!(s.ranks, 1, "{}", s.name);
             assert_ne!(s.suite, crate::trace::Suite::PolyBench, "{}", s.name);
+            assert_ne!(s.suite, crate::trace::Suite::Datacenter, "{}", s.name);
         }
         // the exclusions mirror the paper: MODYLAS/NICAM/NTChem missing
         let names: Vec<String> = gem5_set(Scale::Tiny).iter().map(|s| s.name.clone()).collect();

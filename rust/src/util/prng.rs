@@ -82,6 +82,69 @@ impl Rng {
     }
 }
 
+/// Rejection-free Zipf(θ) rank sampler over `0..n` (rank 0 hottest).
+///
+/// Datacenter key-popularity distributions (memcached, Cassandra,
+/// RocksDB point reads) are Zipfian; the classic Gray et al. generator
+/// needs an O(n) harmonic-sum precomputation and YCSB's variant needs a
+/// rejection loop — both unusable inside a resumable access-generator
+/// state machine that must mirror its reference iterator draw-for-draw.
+/// This sampler instead inverts the continuous power-law envelope of the
+/// Zipf pmf: rank `k` is drawn with probability `F(k+2) - F(k+1)` where,
+/// over `x ∈ [1, n+1)`,
+///
+/// * θ ≠ 1: `F(x) = (x^(1-θ) - 1) / ((n+1)^(1-θ) - 1)`
+/// * θ = 1: `F(x) = ln x / ln (n+1)`
+///
+/// The density `∝ x^(-θ)` is non-increasing, so rank probabilities fall
+/// monotonically with rank, steeper for larger θ.  `θ = 0` is
+/// special-cased to an *exactly* uniform [`Rng::below`] draw.  Every
+/// sample costs exactly one RNG draw and no rejection loop.
+#[derive(Clone, Copy, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    /// `(n+1)^(1-θ) - 1` (θ ∉ {0, 1} branch).
+    span: f64,
+    /// `1 / (1-θ)` (θ ∉ {0, 1} branch).
+    inv: f64,
+    /// `ln (n+1)` (θ = 1 branch).
+    ln_n1: f64,
+}
+
+impl Zipf {
+    /// Sampler over `n` ranks (clamped to ≥ 1) with skew `theta`
+    /// (non-finite or negative values clamp to 0 = uniform).
+    pub fn new(n: u64, theta: f64) -> Zipf {
+        let n = n.max(1);
+        let theta = if theta.is_finite() { theta.max(0.0) } else { 0.0 };
+        let n1 = (n + 1) as f64;
+        Zipf {
+            n,
+            theta,
+            span: n1.powf(1.0 - theta) - 1.0,
+            inv: 1.0 / (1.0 - theta),
+            ln_n1: n1.ln(),
+        }
+    }
+
+    /// Draw one rank in `[0, n)` — exactly one `rng` draw, rejection-free.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.theta == 0.0 {
+            return rng.below(self.n);
+        }
+        let u = rng.f64();
+        let x = if (self.theta - 1.0).abs() < 1e-9 {
+            (u * self.ln_n1).exp()
+        } else {
+            (u * self.span + 1.0).powf(self.inv)
+        };
+        // x ∈ [1, n+1); floor and clamp the floating-point edges
+        ((x as u64).max(1) - 1).min(self.n - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +192,56 @@ mod tests {
         }
         for &c in &counts {
             assert!((9_000..11_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn zipf_theta_zero_is_exactly_uniform() {
+        let z = Zipf::new(1024, 0.0);
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..1000 {
+            assert_eq!(z.sample(&mut a), b.below(1024));
+        }
+    }
+
+    #[test]
+    fn zipf_ranks_in_range_and_deterministic() {
+        for theta in [0.0, 0.5, 0.99, 1.0, 1.2] {
+            let z = Zipf::new(100, theta);
+            let mut a = Rng::new(7);
+            let mut b = Rng::new(7);
+            for _ in 0..10_000 {
+                let r = z.sample(&mut a);
+                assert!(r < 100, "theta {theta}: rank {r}");
+                assert_eq!(r, z.sample(&mut b));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_frequencies_fall_with_rank() {
+        let z = Zipf::new(4, 1.2);
+        let mut rng = Rng::new(11);
+        let mut counts = [0u32; 4];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for k in 0..3 {
+            assert!(counts[k] > counts[k + 1], "rank {k} not hotter: {counts:?}");
+        }
+        // the skew concentrates well over a uniform share on the head
+        assert!(counts[0] > 50_000 * 35 / 100, "head too cold: {counts:?}");
+    }
+
+    #[test]
+    fn zipf_single_rank_degenerates() {
+        for theta in [0.0, 0.9, 1.0, 2.0] {
+            let z = Zipf::new(1, theta);
+            let mut rng = Rng::new(3);
+            for _ in 0..100 {
+                assert_eq!(z.sample(&mut rng), 0);
+            }
         }
     }
 

@@ -252,3 +252,67 @@ fn unknown_figure_id_exits_nonzero() {
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
 }
+
+// ------------------------------------------------ datacenter family
+
+const DATACENTER_PRESETS: [&str; 6] = [
+    "memcached-like",
+    "cassandra-like",
+    "rocksdb-like",
+    "mysql-like",
+    "neo4j-like",
+    "tpch-q-like",
+];
+
+#[test]
+fn list_shows_the_datacenter_serving_family() {
+    let out = larc(&["list", "workloads"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for w in DATACENTER_PRESETS {
+        assert!(stdout.contains(w), "missing preset {w}: {stdout}");
+    }
+    assert!(stdout.contains("datacenter"), "no datacenter suite label: {stdout}");
+}
+
+#[test]
+fn run_accepts_every_datacenter_preset() {
+    for w in DATACENTER_PRESETS {
+        let out = larc(&["run", "--workload", w, "--scale", "tiny"]);
+        assert!(out.status.success(), "{w}: {:?}", out);
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("datacenter"), "{w}: {stdout}");
+    }
+    // sampling and prefetch ride along like any other workload
+    let out = larc(&[
+        "run", "--workload", "memcached-like", "--scale", "tiny", "--sample", "set:8",
+    ]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("sampled  : set:8"));
+    let out = larc(&[
+        "run", "--workload", "rocksdb-like", "--scale", "tiny", "--prefetch", "default",
+    ]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("prefetch :"));
+}
+
+#[test]
+fn run_theta_overrides_skew_and_rejects_malformed_values() {
+    // a valid override on a serving workload runs (θ = 0 is uniform)
+    let out = larc(&["run", "--workload", "memcached-like", "--scale", "tiny", "--theta", "0"]);
+    assert!(out.status.success(), "{:?}", out);
+
+    // malformed or out-of-domain skews are parse errors, not silent runs
+    for bad in ["banana", "NaN", "-1"] {
+        let out =
+            larc(&["run", "--workload", "memcached-like", "--scale", "tiny", "--theta", bad]);
+        assert_eq!(out.status.code(), Some(1), "--theta {bad} was accepted");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("--theta"), "no parse error for {bad}: {stderr}");
+    }
+
+    // workloads without a Zipf-skewed phase refuse the flag outright
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--theta", "0.9"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("datacenter family"));
+}

@@ -482,6 +482,167 @@ fn prop_milan_x_l3_never_misses_more_than_milan() {
     }
 }
 
+// --------------------------------------------------- datacenter props
+
+#[test]
+fn prop_zipf_frequencies_fall_with_rank_and_theta_zero_is_uniform() {
+    use larc::util::prng::Zipf;
+    // (a) positive skew: empirical frequencies are monotone
+    // non-increasing in rank, up to 3-sigma sampling slack on adjacent
+    // ranks, with the head strictly hotter than the tail
+    check("zipf rank monotonicity", 20, |rng| {
+        let n = 2 + rng.below(9);
+        let theta = 0.3 + rng.f64() * 1.4;
+        let z = Zipf::new(n, theta);
+        let mut local = Rng::new(rng.next_u64());
+        let draws = 20_000u64;
+        let mut counts = vec![0u64; n as usize];
+        for _ in 0..draws {
+            counts[z.sample(&mut local) as usize] += 1;
+        }
+        let slack = 3.0 * (draws as f64).sqrt();
+        for k in 0..counts.len() - 1 {
+            if (counts[k] as f64) + slack < counts[k + 1] as f64 {
+                return Err(format!(
+                    "rank {k} colder than rank {} at theta {theta:.2}: {counts:?}",
+                    k + 1
+                ));
+            }
+        }
+        if counts[0] <= counts[n as usize - 1] {
+            return Err(format!("head not hotter than tail at theta {theta:.2}: {counts:?}"));
+        }
+        Ok(())
+    });
+    // (b) theta = 0 degenerates to the uniform sampler *exactly*: same
+    // draw count, same values as Rng::below on a twin generator
+    check("zipf theta=0 uniform", 40, |rng| {
+        let n = 1 + rng.below(1 << 20);
+        let seed = rng.next_u64();
+        let z = Zipf::new(n, 0.0);
+        let (mut a, mut b) = (Rng::new(seed), Rng::new(seed));
+        for _ in 0..256 {
+            let (s, u) = (z.sample(&mut a), b.below(n));
+            if s != u {
+                return Err(format!("theta=0 diverged from below({n}): {s} vs {u}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A random serving pattern, sized so a full stream drain stays cheap.
+fn random_datacenter_pattern(rng: &mut Rng) -> Pattern {
+    match rng.below(3) {
+        0 => Pattern::ZipfianKv {
+            table_bytes: 64 * 1024 + rng.below(1 << 20),
+            requests: 1 + rng.below(300),
+            value_bytes: rng.below(4096) as u32,
+            read_fraction: rng.f64() as f32,
+            theta: rng.f64() * 1.5,
+            seed: rng.next_u64(),
+        },
+        1 => Pattern::IndexWalk {
+            leaf_bytes: 64 * 1024 + rng.below(1 << 20),
+            node_bytes: 64u32 << rng.below(7),
+            depth: 1 + rng.below(12) as u32,
+            requests: 1 + rng.below(300),
+            theta: rng.f64() * 1.5,
+            seed: rng.next_u64(),
+        },
+        _ => Pattern::ScanJoin {
+            fact_bytes: larc::trace::CHUNK * (1 + rng.below(200)),
+            dim_bytes: 64 + rng.below(1 << 18),
+            theta: rng.f64() * 1.5,
+            passes: 1 + rng.below(3) as u32,
+            seed: rng.next_u64(),
+        },
+    }
+}
+
+#[test]
+fn prop_datacenter_footprints_exactly_bound_emitted_addresses() {
+    // footprint() is an exact address-space bound for every serving
+    // pattern, and — the tables being shared, not per-thread — it must
+    // not scale with the thread count (footprint_at == footprint)
+    check("datacenter footprint bounds", 24, |rng| {
+        let p = random_datacenter_pattern(rng);
+        let nthreads = 1 + rng.below(4) as usize;
+        let fp = p.footprint();
+        if p.footprint_at(nthreads) != fp {
+            return Err(format!("shared table scaled with threads: {p:?}"));
+        }
+        for t in 0..nthreads {
+            for a in p.stream(0, t, nthreads) {
+                if a.addr + a.bytes as u64 > fp {
+                    return Err(format!(
+                        "access {:#x}+{} escapes footprint {fp} of {p:?}",
+                        a.addr, a.bytes
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn index_walk_speedup_bounded_by_the_equivalent_pointer_chase() {
+    // An IndexWalk is a *pointer chase with structure*: its upper levels
+    // and its Zipf-hot leaf head are cache-resident on the plain A64FX
+    // CMG already, so adding the stacked slab can speed it up at most as
+    // much as a uniform RandomLookup chase over the same table (whose
+    // re-touches only the slab can capture) — pointer walks stay
+    // latency-bound.
+    let walk = Spec {
+        name: "prop-walk".into(),
+        suite: Suite::Datacenter,
+        class: BoundClass::Latency,
+        threads: 4,
+        max_threads: usize::MAX,
+        ranks: 1,
+        phases: vec![Phase {
+            label: "descend",
+            pattern: Pattern::IndexWalk {
+                leaf_bytes: 16 * 1024 * 1024,
+                node_bytes: 64,
+                depth: 5,
+                requests: 100_000,
+                theta: 0.8,
+                seed: 31,
+            },
+            mix: InstrMix::new().with(InstrClass::Load, 1.0),
+            ilp: 1.0,
+        }],
+    };
+    let mut chase = walk.clone();
+    chase.name = "prop-walk-chase".into();
+    chase.phases[0].pattern = Pattern::RandomLookup {
+        // same table, same access count, every lookup serialized
+        table_bytes: walk.footprint(),
+        lookups: 500_000,
+        chase: true,
+        seed: 31,
+    };
+    let a64fx = configs::a64fx_s();
+    let c3d = configs::larc_c_3d();
+    let speedup = |s: &Spec| {
+        let base = cachesim::simulate(s, &a64fx, s.threads);
+        let slab = cachesim::simulate(s, &c3d, s.threads);
+        base.runtime_s / slab.runtime_s
+    };
+    let walk_speedup = speedup(&walk);
+    let chase_speedup = speedup(&chase);
+    assert!(
+        walk_speedup <= chase_speedup * 1.02,
+        "the structured walk out-gained the uniform chase: {walk_speedup} vs {chase_speedup}"
+    );
+    assert!(
+        (0.7..1.2).contains(&walk_speedup),
+        "pointer walk left the latency-bound regime: {walk_speedup}"
+    );
+}
+
 #[test]
 fn milan_x_l3_wins_in_the_capacity_gap() {
     // the differentiating zone: a cyclic 36 MiB sweep thrashes Milan's

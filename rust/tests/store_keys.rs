@@ -12,10 +12,11 @@
 //! Any change that knowingly alters simulation semantics must bump
 //! `SCHEMA_VERSION` and update these constants in the same commit —
 //! this test makes that an explicit decision instead of an accident.
-//! The current pins date from the **v5** bump (the sampled simulation
-//! executor: `Job::CacheSim` grew the `sampling` mode, folded into the
-//! canonical string, and `SimStats` grew the optional `sampled` CI
-//! block); recorded for the audit trail, the v4 pins were
+//! The current pins date from the **v6** bump (the datacenter workload
+//! family: `Pattern` grew the `ZipfianKv` / `IndexWalk` / `ScanJoin`
+//! serving variants, whose parameters flow into the canonical string
+//! through the `Spec` Debug form); recorded for the audit trail, the v5
+//! pins were `749fe0ec3a9c5f16` / `322f1cabfe7a518f`, the v4 pins
 //! `bee5c61b6ea22c53` / `83750c5c5be26aac`, the v3 pins
 //! `044fd57562db917d` / `8732434b1dd14669`, and the v2 pins
 //! `969fba0d3e439a58` / `720ce2ae2601aae6`.
@@ -30,11 +31,10 @@ use larc::trace::patterns::Pattern;
 use larc::trace::{BoundClass, Phase, Placement, Spec, Suite};
 
 /// The store schema this engine generation writes.  Bumping it
-/// invalidates every existing store entry; the sampled executor did so
-/// deliberately (v4 -> v5) because the canonical job string grew the
-/// sampling mode and the serialized stats layout grew the optional
-/// `sampled` block.
-const PINNED_SCHEMA: u32 = 5;
+/// invalidates every existing store entry; the datacenter family did so
+/// deliberately (v5 -> v6) because the `Pattern` enum — whose Debug form
+/// feeds every canonical job string — grew three serving variants.
+const PINNED_SCHEMA: u32 = 6;
 
 /// Frozen `Debug` form of [`pin_spec`].
 const PINNED_SPEC_DEBUG: &str = "Spec { name: \"pin\", suite: Ecp, class: Latency, threads: 2, \
@@ -52,10 +52,10 @@ const PINNED_CFG_DEBUG: &str = "MachineConfig { name: \"pinmachine\", cores: 2, 
      dram_latency_cycles: 100.0, rob_entries: 32, mshrs: 4, l1_bytes_per_cycle: 16.0, \
      adjacent_prefetch: false, port_arch: A64fxLike }";
 
-/// Frozen key of the pinned CacheSim job (schema v5, exact sampling).
-const PINNED_SIM_KEY: &str = "749fe0ec3a9c5f16";
-/// Frozen key of the pinned Mca job (schema v5).
-const PINNED_MCA_KEY: &str = "322f1cabfe7a518f";
+/// Frozen key of the pinned CacheSim job (schema v6, exact sampling).
+const PINNED_SIM_KEY: &str = "94b8f51eba27e581";
+/// Frozen key of the pinned Mca job (schema v6).
+const PINNED_MCA_KEY: &str = "f54f9d82bc8bd412";
 
 fn pin_spec() -> Spec {
     Spec {
@@ -261,6 +261,52 @@ fn socket_fields_participate_in_the_key() {
         sampling: Sampling::Exact,
     };
     assert_ne!(job_key(&base), job_key(&fabric));
+}
+
+#[test]
+fn datacenter_pattern_params_participate_in_the_key() {
+    // every parameter of the new serving patterns must reach the
+    // canonical string: two specs differing only in a Zipf θ (or a value
+    // size, or a tree depth) must never share a store cell
+    let kv = |theta: f64, value_bytes: u32| {
+        let mut spec = pin_spec();
+        spec.phases[0].pattern = Pattern::ZipfianKv {
+            table_bytes: 1 << 20,
+            requests: 100,
+            value_bytes,
+            read_fraction: 0.9,
+            theta,
+            seed: 1,
+        };
+        Job::CacheSim {
+            spec,
+            config: pin_config(),
+            threads: 3,
+            sampling: Sampling::Exact,
+        }
+    };
+    assert_ne!(job_key(&kv(0.99, 1024)), job_key(&kv(0.8, 1024)));
+    assert_ne!(job_key(&kv(0.99, 1024)), job_key(&kv(0.99, 2048)));
+    assert_eq!(job_key(&kv(0.99, 1024)), job_key(&kv(0.99, 1024)));
+
+    let walk = |depth: u32| {
+        let mut spec = pin_spec();
+        spec.phases[0].pattern = Pattern::IndexWalk {
+            leaf_bytes: 1 << 20,
+            node_bytes: 256,
+            depth,
+            requests: 100,
+            theta: 0.8,
+            seed: 1,
+        };
+        Job::CacheSim {
+            spec,
+            config: pin_config(),
+            threads: 3,
+            sampling: Sampling::Exact,
+        }
+    };
+    assert_ne!(job_key(&walk(4)), job_key(&walk(5)));
 }
 
 #[test]
