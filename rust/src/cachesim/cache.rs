@@ -155,12 +155,17 @@ impl Cache {
         Cache::with_policy(size, ways, line_bytes, ReplacementPolicy::Lru)
     }
 
-    /// [`Cache::new`] with an explicit replacement policy.
+    /// [`Cache::new`] with an explicit replacement policy.  The panic
+    /// messages carry the same stable codes `larc lint` reports for
+    /// these geometries (`L002` line size, `L001` capacity).
     pub fn with_policy(size: u64, ways: u32, line_bytes: u32, policy: ReplacementPolicy) -> Self {
-        assert!(line_bytes.is_power_of_two());
+        assert!(
+            line_bytes.is_power_of_two(),
+            "L002: line size must be a nonzero power of two, got {line_bytes} B"
+        );
         let ways = ways as usize;
         let sets = (size / (ways as u64 * line_bytes as u64)) as usize;
-        assert!(sets > 0, "cache too small: {size} B / {ways} ways / {line_bytes} B lines");
+        assert!(sets > 0, "L001: cache too small: {size} B / {ways} ways / {line_bytes} B lines");
         let n = sets * ways;
         Cache {
             sets,

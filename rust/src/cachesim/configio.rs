@@ -1,0 +1,404 @@
+//! [`MachineConfig`] JSON serialization — the `--config-file` loader.
+//!
+//! `larc lint --config-file`, `larc run --config-file`, and `larc serve
+//! --config-file` accept a machine description as a JSON document so
+//! crafted or externally-generated configurations can be linted and
+//! simulated without recompiling.  The reader **never panics**: every
+//! shape or type problem comes back as an error, and domain problems
+//! (an inclusive L2 smaller than the L1s it must cover, a directory
+//! above a private level, ...) are deliberately *accepted* here and left
+//! to [`super::validate::check_config`] — loading and linting are
+//! separate stages, so `larc lint` can show every diagnostic of a bad
+//! file instead of dying on the first.
+//!
+//! The document shape mirrors [`MachineConfig`] field for field:
+//!
+//! ```json
+//! {
+//!   "name": "crafted", "cores": 12, "freq_ghz": 2.2,
+//!   "levels": [
+//!     {"size": 65536, "ways": 4, "line_bytes": 256, "latency": 8.0},
+//!     {"size": 8388608, "ways": 16, "line_bytes": 256, "latency": 37.0,
+//!      "banks": 4, "bank_bytes_per_cycle": 91.0,
+//!      "scope": "shared", "inclusive": true}
+//!   ],
+//!   "dram_bw_gbs": 256.0, "dram_latency_cycles": 180.0
+//! }
+//! ```
+//!
+//! Optional fields default to the A64FX-ish values every builtin
+//! constructor shares (`cmgs` 1, ring-bus interconnect, `local`
+//! placement, 4 DRAM channels, 128-entry ROB, 12 MSHRs, LRU, no
+//! prefetcher); per-level `scope` defaults to `private`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::ReplacementPolicy;
+use super::configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, RING_BUS, Scope};
+use super::prefetch::Prefetcher;
+use crate::mca::port_model::PortArch;
+use crate::trace::Placement;
+use crate::util::json::{self, Json};
+
+/// Serialize a config as the canonical `--config-file` JSON document.
+pub fn to_json(cfg: &MachineConfig) -> Json {
+    json::obj(vec![
+        ("name", json::s(&cfg.name)),
+        ("cores", json::num(cfg.cores as f64)),
+        ("cmgs", json::num(cfg.cmgs as f64)),
+        (
+            "interconnect",
+            json::obj(vec![
+                ("hop_cycles", json::num(cfg.interconnect.hop_cycles)),
+                ("bisection_gbs", json::num(cfg.interconnect.bisection_gbs)),
+            ]),
+        ),
+        ("placement", json::s(cfg.placement.label())),
+        ("freq_ghz", json::num(cfg.freq_ghz)),
+        (
+            "levels",
+            json::arr(cfg.levels.iter().map(level_to_json).collect()),
+        ),
+        ("dram_channels", json::num(cfg.dram_channels as f64)),
+        ("dram_bw_gbs", json::num(cfg.dram_bw_gbs)),
+        ("dram_latency_cycles", json::num(cfg.dram_latency_cycles)),
+        ("rob_entries", json::num(f64::from(cfg.rob_entries))),
+        ("mshrs", json::num(f64::from(cfg.mshrs))),
+        ("l1_bytes_per_cycle", json::num(cfg.l1_bytes_per_cycle)),
+        ("adjacent_prefetch", Json::Bool(cfg.adjacent_prefetch)),
+        ("port_arch", json::s(port_arch_label(cfg.port_arch))),
+    ])
+}
+
+fn level_to_json(l: &LevelConfig) -> Json {
+    let p = &l.params;
+    json::obj(vec![
+        ("size", json::num(p.size as f64)),
+        ("ways", json::num(f64::from(p.ways))),
+        ("line_bytes", json::num(f64::from(p.line_bytes))),
+        ("latency", json::num(p.latency)),
+        ("banks", json::num(f64::from(p.banks))),
+        ("bank_bytes_per_cycle", json::num(p.bank_bytes_per_cycle)),
+        (
+            "scope",
+            json::s(match l.scope {
+                Scope::Private => "private",
+                Scope::SharedBanked => "shared",
+            }),
+        ),
+        ("inclusive", Json::Bool(l.inclusive)),
+        (
+            "policy",
+            json::s(match l.policy {
+                ReplacementPolicy::Lru => "lru",
+                ReplacementPolicy::Random => "random",
+                ReplacementPolicy::Drrip => "drrip",
+            }),
+        ),
+        ("prefetcher", json::s(&prefetcher_spec(l.prefetcher))),
+    ])
+}
+
+fn port_arch_label(a: PortArch) -> &'static str {
+    match a {
+        PortArch::BroadwellLike => "broadwell",
+        PortArch::A64fxLike => "a64fx",
+        PortArch::Zen3Like => "zen3",
+    }
+}
+
+/// A [`Prefetcher`] as a `Prefetcher::parse` spec string — the identity
+/// round-trip for every in-domain prefetcher.
+fn prefetcher_spec(pf: Prefetcher) -> String {
+    match pf {
+        Prefetcher::None => "none".into(),
+        Prefetcher::NextLine { degree } => format!("nextline:{degree}"),
+        Prefetcher::Stride { table_entries, degree, distance } => {
+            format!("stride:{degree},{distance},{table_entries}")
+        }
+        Prefetcher::Stream { streams, degree } => format!("stream:{degree},{streams}"),
+    }
+}
+
+/// A required f64 field.
+fn num(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(other) => bail!("field {key:?} must be a number, got {other}"),
+        None => bail!("missing required field {key:?}"),
+    }
+}
+
+/// An optional f64 field.
+fn num_or(v: &Json, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(_) => num(v, key),
+    }
+}
+
+/// A non-negative integer field (counts, sizes).
+fn uint(v: &Json, key: &str) -> Result<u64> {
+    let n = num(v, key)?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 2.0_f64.powi(53) {
+        bail!("field {key:?} must be a non-negative integer, got {n}");
+    }
+    Ok(n as u64)
+}
+
+/// An optional non-negative integer field.
+fn uint_or(v: &Json, key: &str, default: u64) -> Result<u64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(_) => uint(v, key),
+    }
+}
+
+/// A u32-ranged integer field (ways, banks, ROB, MSHRs).
+fn uint32(v: &Json, key: &str, default: Option<u32>) -> Result<u32> {
+    let n = match (v.get(key), default) {
+        (None, Some(d)) => return Ok(d),
+        _ => uint(v, key)?,
+    };
+    u32::try_from(n).with_context(|| format!("field {key:?}: {n} does not fit in 32 bits"))
+}
+
+/// A required string field.
+fn string<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    match v.get(key) {
+        Some(Json::Str(s)) => Ok(s),
+        Some(other) => bail!("field {key:?} must be a string, got {other}"),
+        None => bail!("missing required field {key:?}"),
+    }
+}
+
+/// An optional bool field.
+fn flag(v: &Json, key: &str, default: bool) -> Result<bool> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => bail!("field {key:?} must be true or false, got {other}"),
+    }
+}
+
+fn level_from_json(v: &Json, index: usize) -> Result<LevelConfig> {
+    let at = |e: anyhow::Error| e.context(format!("level {} (L{})", index, index + 1));
+    let scope = match v.get("scope").and_then(Json::as_str) {
+        None => Scope::Private,
+        Some("private") => Scope::Private,
+        Some("shared") => Scope::SharedBanked,
+        Some(other) => {
+            return Err(at(anyhow::anyhow!(
+                "unknown scope {other:?} (private | shared)"
+            )))
+        }
+    };
+    let policy = match v.get("policy").and_then(Json::as_str) {
+        None => ReplacementPolicy::Lru,
+        Some("lru") => ReplacementPolicy::Lru,
+        Some("random") => ReplacementPolicy::Random,
+        Some("drrip") => ReplacementPolicy::Drrip,
+        Some(other) => {
+            return Err(at(anyhow::anyhow!(
+                "unknown policy {other:?} (lru | random | drrip)"
+            )))
+        }
+    };
+    let prefetcher = match v.get("prefetcher").and_then(Json::as_str) {
+        None => Prefetcher::None,
+        Some(spec) => Prefetcher::parse(spec).map_err(anyhow::Error::msg).map_err(at)?,
+    };
+    let build = || -> Result<CacheParams> {
+        Ok(CacheParams {
+            size: uint(v, "size")?,
+            ways: uint32(v, "ways", None)?,
+            line_bytes: uint32(v, "line_bytes", None)?,
+            latency: num(v, "latency")?,
+            banks: uint32(v, "banks", Some(1))?,
+            bank_bytes_per_cycle: num_or(v, "bank_bytes_per_cycle", 128.0)?,
+        })
+    };
+    Ok(LevelConfig {
+        params: build().map_err(at)?,
+        scope,
+        inclusive: flag(v, "inclusive", false).map_err(at)?,
+        policy,
+        prefetcher,
+    })
+}
+
+/// Deserialize a `--config-file` document.  Shape/type problems error;
+/// domain problems are left intact for [`super::validate::check_config`].
+pub fn from_json(v: &Json) -> Result<MachineConfig> {
+    if v.as_obj().is_none() {
+        bail!("a config file must be a JSON object, got {v}");
+    }
+    let interconnect = match v.get("interconnect") {
+        None => RING_BUS,
+        Some(ic) => Interconnect {
+            hop_cycles: num(ic, "hop_cycles").context("interconnect")?,
+            bisection_gbs: num(ic, "bisection_gbs").context("interconnect")?,
+        },
+    };
+    let placement = match v.get("placement").and_then(Json::as_str) {
+        None => Placement::Local,
+        Some("local") => Placement::Local,
+        Some("interleave") => Placement::Interleave,
+        Some("first-touch") => Placement::FirstTouch,
+        Some(other) => bail!("unknown placement {other:?} (local | interleave | first-touch)"),
+    };
+    let port_arch = match v.get("port_arch").and_then(Json::as_str) {
+        None => PortArch::A64fxLike,
+        Some("a64fx") => PortArch::A64fxLike,
+        Some("broadwell") => PortArch::BroadwellLike,
+        Some("zen3") => PortArch::Zen3Like,
+        Some(other) => bail!("unknown port_arch {other:?} (a64fx | broadwell | zen3)"),
+    };
+    let levels = match v.get("levels").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .enumerate()
+            .map(|(i, l)| level_from_json(l, i))
+            .collect::<Result<Vec<_>>>()?,
+        None => bail!("missing required field \"levels\" (array of cache levels, L1 first)"),
+    };
+    // the issue floor defaults to the L1's own per-core bandwidth
+    let l1_bw = levels
+        .first()
+        .map(|l| l.params.bw_bytes_per_cycle())
+        .unwrap_or(128.0);
+    Ok(MachineConfig {
+        name: string(v, "name")?.to_string(),
+        cores: usize::try_from(uint(v, "cores")?).context("field \"cores\"")?,
+        cmgs: usize::try_from(uint_or(v, "cmgs", 1)?).context("field \"cmgs\"")?,
+        interconnect,
+        placement,
+        freq_ghz: num(v, "freq_ghz")?,
+        levels,
+        dram_channels: usize::try_from(uint_or(v, "dram_channels", 4)?)
+            .context("field \"dram_channels\"")?,
+        dram_bw_gbs: num(v, "dram_bw_gbs")?,
+        dram_latency_cycles: num(v, "dram_latency_cycles")?,
+        rob_entries: uint32(v, "rob_entries", Some(128))?,
+        mshrs: uint32(v, "mshrs", Some(12))?,
+        l1_bytes_per_cycle: num_or(v, "l1_bytes_per_cycle", l1_bw)?,
+        adjacent_prefetch: flag(v, "adjacent_prefetch", true)?,
+        port_arch,
+    })
+}
+
+/// Parse a config from JSON text.
+pub fn from_str(text: &str) -> Result<MachineConfig> {
+    let v = json::parse(text).map_err(anyhow::Error::msg).context("config file is not valid JSON")?;
+    from_json(&v)
+}
+
+/// Load a config from a `--config-file` path.
+pub fn load(path: &Path) -> Result<MachineConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config file {}", path.display()))?;
+    from_str(&text).with_context(|| format!("config file {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs;
+    use crate::cachesim::validate;
+
+    #[test]
+    fn every_builtin_round_trips_bit_for_bit() {
+        for name in configs::CONFIG_NAMES {
+            let cfg = configs::by_name(name).unwrap();
+            let doc = to_json(&cfg).to_string();
+            let back = from_str(&doc).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(
+                to_json(&back).to_string(),
+                doc,
+                "{name} did not survive the round trip"
+            );
+            assert!(validate::check_config(&back).is_clean(), "{name}");
+        }
+    }
+
+    #[test]
+    fn minimal_document_fills_defaults() {
+        let cfg = from_str(
+            r#"{"name": "mini", "cores": 4, "freq_ghz": 2.0,
+                "levels": [{"size": 65536, "ways": 4, "line_bytes": 256, "latency": 8.0},
+                           {"size": 8388608, "ways": 16, "line_bytes": 256, "latency": 37.0,
+                            "banks": 4, "bank_bytes_per_cycle": 91.0,
+                            "scope": "shared", "inclusive": true}],
+                "dram_bw_gbs": 256.0, "dram_latency_cycles": 180.0}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cmgs, 1);
+        assert_eq!(cfg.rob_entries, 128);
+        assert_eq!(cfg.levels[0].scope, Scope::Private);
+        assert!(!cfg.levels[0].inclusive);
+        assert_eq!(cfg.l1_bytes_per_cycle, 128.0); // L1's 1 x 128 B/cyc
+        assert!(validate::check_config(&cfg).is_clean());
+    }
+
+    #[test]
+    fn shape_errors_error_instead_of_panicking() {
+        for bad in [
+            "not json at all",
+            "[1, 2, 3]",
+            r#"{"name": 3, "cores": 4, "freq_ghz": 2.0, "levels": [],
+                "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+            r#"{"name": "x", "cores": "four", "freq_ghz": 2.0, "levels": [],
+                "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+            r#"{"name": "x", "cores": 4, "freq_ghz": 2.0,
+                "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+            r#"{"name": "x", "cores": 4, "freq_ghz": 2.0,
+                "levels": [{"size": 1024, "ways": 4}],
+                "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+            r#"{"name": "x", "cores": 4.5, "freq_ghz": 2.0, "levels": [],
+                "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+            r#"{"name": "x", "cores": 4, "freq_ghz": 2.0, "placement": "nowhere",
+                "levels": [], "dram_bw_gbs": 1.0, "dram_latency_cycles": 1.0}"#,
+        ] {
+            assert!(from_str(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn domain_problems_load_fine_and_lint_dirty() {
+        // inclusive L2 smaller than the L1s it covers + a private level
+        // below the directory: loads, then lints with stable codes
+        let cfg = from_str(
+            r#"{"name": "bad", "cores": 12, "freq_ghz": 2.2,
+                "levels": [
+                  {"size": 65536, "ways": 4, "line_bytes": 256, "latency": 8.0},
+                  {"size": 131072, "ways": 16, "line_bytes": 256, "latency": 37.0,
+                   "scope": "shared", "inclusive": true},
+                  {"size": 16777216, "ways": 16, "line_bytes": 256, "latency": 60.0}],
+                "dram_bw_gbs": 256.0, "dram_latency_cycles": 180.0}"#,
+        )
+        .unwrap();
+        let d = validate::check_config(&cfg);
+        let codes: Vec<_> = d.list.iter().map(|x| x.code).collect();
+        assert!(codes.contains(&"L003"), "{}", d.render());
+        assert!(codes.contains(&"L004"), "{}", d.render());
+    }
+
+    #[test]
+    fn prefetcher_specs_round_trip() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].prefetcher = Prefetcher::Stride { table_entries: 16, degree: 2, distance: 4 };
+        cfg.levels[1].prefetcher = Prefetcher::NextLine { degree: 3 };
+        let doc = to_json(&cfg).to_string();
+        let back = from_str(&doc).unwrap();
+        assert_eq!(back.levels[0].prefetcher, cfg.levels[0].prefetcher);
+        assert_eq!(back.levels[1].prefetcher, cfg.levels[1].prefetcher);
+    }
+
+    #[test]
+    fn load_reports_the_path_on_missing_files() {
+        let err = load(Path::new("/nonexistent/larc-config.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("larc-config.json"));
+    }
+}

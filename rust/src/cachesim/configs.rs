@@ -491,7 +491,8 @@ pub fn larc_c_3d() -> MachineConfig {
 /// 8 MiB L2 slices, and 4 x 256 GB/s of HBM.  `cmgs == 1` returns the
 /// machine unchanged (bit-identical engine path).
 pub fn socket(mut c: MachineConfig, cmgs: usize, fabric: Interconnect) -> MachineConfig {
-    assert!(cmgs >= 1, "a socket needs at least one CMG");
+    // registry-coded guard (L010): same rule `larc lint` reports statically
+    super::validate::guard(&super::validate::check_cmg_count(cmgs, &c.name), "socket()");
     c.cmgs = cmgs;
     c.interconnect = fabric;
     c

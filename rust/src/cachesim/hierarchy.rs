@@ -111,8 +111,20 @@ pub struct Hierarchy {
 
 impl Hierarchy {
     /// Instantiate `cfg`'s levels for `cores` cores (private levels replicate per core).
+    ///
+    /// Panics with registry-coded diagnostics (`L001` no levels, `L010`
+    /// core count vs the u64 sharer masks) on configs that bypassed the
+    /// `larc lint` preflight.
     pub fn new(cfg: &MachineConfig, cores: usize) -> Hierarchy {
-        assert!(!cfg.levels.is_empty(), "hierarchy needs at least one level");
+        let mut pre = super::validate::check_core_count(cores, &cfg.name);
+        if cfg.levels.is_empty() {
+            pre.push(
+                "L001",
+                format!("config {}", cfg.name),
+                "hierarchy needs at least one level",
+            );
+        }
+        super::validate::guard(&pre, "Hierarchy::new");
         let mut levels = Vec::with_capacity(cfg.levels.len());
         for lc in &cfg.levels {
             let replicas = match lc.scope {
@@ -137,7 +149,6 @@ impl Hierarchy {
                 pf,
             });
         }
-        assert!(cores <= 64, "sharer masks are u64: at most 64 cores per CMG");
         Hierarchy {
             levels,
             dir: cfg.directory_level(),

@@ -26,6 +26,7 @@
 
 pub mod cache;
 pub mod cmg;
+pub mod configio;
 pub mod configs;
 pub mod dram;
 pub mod hierarchy;
@@ -33,6 +34,7 @@ pub mod prefetch;
 pub mod sampling;
 pub mod socket;
 pub mod stats;
+pub mod validate;
 
 pub use cache::{LineRef, ReplacementPolicy};
 pub use cmg::{simulate, simulate_sampled, SimResult};
@@ -40,3 +42,4 @@ pub use sampling::{Sampling, SamplingStats};
 pub use configs::{CacheParams, Interconnect, LevelConfig, MachineConfig, Scope};
 pub use hierarchy::Hierarchy;
 pub use prefetch::Prefetcher;
+pub use validate::{check_config, check_sampling, check_spec, Diagnostic, Diagnostics, Severity};

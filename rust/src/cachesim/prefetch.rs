@@ -102,7 +102,8 @@ impl Prefetcher {
     ///
     /// Omitted numbers take the defaults used by the `fig-prefetch`
     /// sweep (`nextline:2`, `stride:2,4,16`, `stream:4,8`); degrees are
-    /// clamped to [`MAX_DEGREE`].
+    /// clamped to [`MAX_DEGREE`].  Errors carry the stable `L012`
+    /// diagnostic code (see [`crate::cachesim::validate::RULES`]).
     pub fn parse(spec: &str) -> Result<Prefetcher, String> {
         let (kind, rest) = match spec.split_once(':') {
             Some((k, r)) => (k, Some(r)),
@@ -114,7 +115,7 @@ impl Prefetcher {
                 .split(',')
                 .map(|n| {
                     n.parse::<u32>()
-                        .map_err(|_| format!("bad number {n:?} in prefetch spec {spec:?}"))
+                        .map_err(|_| format!("L012: bad number {n:?} in prefetch spec {spec:?}"))
                 })
                 .collect::<Result<_, _>>()?,
         };
@@ -133,7 +134,7 @@ impl Prefetcher {
             },
             other => {
                 return Err(format!(
-                    "unknown prefetcher {other:?} (none | nextline | stride | stream)"
+                    "L012: unknown prefetcher {other:?} (none | nextline | stride | stream)"
                 ))
             }
         };
@@ -145,7 +146,7 @@ impl Prefetcher {
         };
         if nums.len() > max_args {
             return Err(format!(
-                "too many numbers in prefetch spec {spec:?} (at most {max_args})"
+                "L012: too many numbers in prefetch spec {spec:?} (at most {max_args})"
             ));
         }
         Ok(pf)

@@ -56,7 +56,8 @@ pub enum Sampling {
 
 impl Sampling {
     /// Parse a `--sample` argument: `exact`, `set:R`, or
-    /// `interval:W:M`.
+    /// `interval:W:M`.  Domain errors carry the stable `S001` diagnostic
+    /// code (see [`super::validate::RULES`]).
     pub fn parse(s: &str) -> Result<Sampling, String> {
         if s == "exact" {
             return Ok(Sampling::Exact);
@@ -64,31 +65,31 @@ impl Sampling {
         if let Some(r) = s.strip_prefix("set:") {
             let rate: u32 = r
                 .parse()
-                .map_err(|_| format!("--sample set:R expects an integer rate, got {r:?}"))?;
+                .map_err(|_| format!("S001: --sample set:R expects an integer rate, got {r:?}"))?;
             if !(2..=64).contains(&rate) || !rate.is_power_of_two() {
                 return Err(format!(
-                    "--sample set:R needs a power-of-two rate in 2..=64, got {rate}"
+                    "S001: --sample set:R needs a power-of-two rate in 2..=64, got {rate}"
                 ));
             }
             return Ok(Sampling::Set { rate });
         }
         if let Some(rest) = s.strip_prefix("interval:") {
             let (w, m) = rest.split_once(':').ok_or_else(|| {
-                format!("--sample interval:W:M needs warmup and measure counts, got {rest:?}")
+                format!("S001: --sample interval:W:M needs warmup and measure counts, got {rest:?}")
             })?;
-            let warmup: u32 = w
-                .parse()
-                .map_err(|_| format!("--sample interval warmup must be an integer, got {w:?}"))?;
-            let measure: u32 = m
-                .parse()
-                .map_err(|_| format!("--sample interval measure must be an integer, got {m:?}"))?;
+            let warmup: u32 = w.parse().map_err(|_| {
+                format!("S001: --sample interval warmup must be an integer, got {w:?}")
+            })?;
+            let measure: u32 = m.parse().map_err(|_| {
+                format!("S001: --sample interval measure must be an integer, got {m:?}")
+            })?;
             if warmup == 0 || measure == 0 {
-                return Err("--sample interval:W:M needs W >= 1 and M >= 1".into());
+                return Err("S001: --sample interval:W:M needs W >= 1 and M >= 1".into());
             }
             return Ok(Sampling::Interval { warmup, measure });
         }
         Err(format!(
-            "unknown --sample mode {s:?} (expected exact | set:R | interval:W:M)"
+            "S001: unknown --sample mode {s:?} (expected exact | set:R | interval:W:M)"
         ))
     }
 

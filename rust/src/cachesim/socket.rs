@@ -285,7 +285,9 @@ pub(crate) fn simulate_socket_sampled(
     mut sampler: Option<&mut Sampler>,
 ) -> SimResult {
     let cmgs = cfg.cmgs.max(1);
-    assert!(cmgs <= 32, "socket directory masks are u32: at most 32 CMGs");
+    // registry-coded guard (L010): the socket directory masks are u32,
+    // so at most 32 CMGs — same rule `larc lint` reports statically
+    super::validate::guard(&super::validate::check_cmg_count(cmgs, &cfg.name), "simulate_socket");
     let threads = threads.max(1).min(cfg.total_cores()).min(64 * cmgs);
 
     let phase_costs = phase_costs(spec, cfg, threads);

@@ -1,0 +1,1065 @@
+//! Static validation & diagnostics — the `larc lint` engine.
+//!
+//! The paper's conclusions rest on sweeping hundreds of machine ×
+//! workload × placement cells, and one silently-nonsensical
+//! configuration (an L2 smaller than an inclusive L1, a directory above
+//! a private level, a bisection bandwidth below a single CMG's DRAM
+//! interleave share) poisons a whole figure without crashing.  This
+//! module is the front door: a pure, allocation-light static analysis
+//! pass over [`MachineConfig`]s, workload [`Spec`]s, and sampling /
+//! sweep definitions that every CLI entry point
+//! (`larc run|figure|campaign|serve|work`) runs as a mandatory
+//! preflight before a single cycle is simulated.
+//!
+//! Every rule has a **stable code** (`L0xx` machine config, `W0xx`
+//! workload, `S0xx` sweep/service), a fixed [`Severity`], and a
+//! span-like context naming the offending level or field
+//! (`config milan_x / L3`).  The catalog is the [`RULES`] table — docs,
+//! tests, and `larc lint --rules` all read the same registry, and the
+//! engine's own constructor guards ([`guard`]) panic with
+//! registry-rendered diagnostics so a config that somehow bypasses the
+//! preflight still dies with the same code it would have linted with.
+//!
+//! Severity policy: *hard* invariants (the simulation would be wrong or
+//! would panic) are `Error`; *suspicious-but-physical* shapes that real
+//! sweeps legitimately explore (e.g. the fig8 bank-bits sweep's 1-bank
+//! L2, whose bandwidth drops below HBM) are `Warn`.  `larc lint
+//! --deny-warnings` promotes warnings to failures for the shipped
+//! builtin set, which is pinned warning-free.
+
+use std::fmt;
+
+use super::configs::{MachineConfig, Scope};
+use super::prefetch::{Prefetcher, MAX_DEGREE};
+use super::sampling::Sampling;
+use crate::trace::patterns::Pattern;
+use crate::trace::Spec;
+use crate::util::json::{self, Json};
+
+/// Bytes of address space one workload phase owns (phase `i` is based at
+/// `(i + 1) << 40`): a phase footprint must fit below this or phases
+/// alias each other's windows.
+pub const PHASE_WINDOW_BYTES: u64 = 1 << 40;
+
+/// Diagnostic severity.  `Error` aborts preflights; `Warn` is advisory
+/// unless `--deny-warnings` promotes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but physically meaningful; the simulation proceeds.
+    Warn,
+    /// Invariant violation: simulating this input would be meaningless
+    /// (or would panic in a constructor).
+    Error,
+}
+
+impl Severity {
+    /// Lowercase label (`warning` / `error`) for rendering and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One registered lint rule: stable code, fixed severity, one-line
+/// summary (the `larc lint --rules` catalog row).
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    /// Stable diagnostic code (`L0xx` config, `W0xx` workload, `S0xx`
+    /// sweep/service).
+    pub code: &'static str,
+    /// Fixed severity of every diagnostic carrying this code.
+    pub severity: Severity,
+    /// One-line summary for the rule catalog.
+    pub summary: &'static str,
+}
+
+/// The rule registry: the single source of truth for codes, severities,
+/// and catalog text.  ARCHITECTURE.md's rule table mirrors this list.
+pub const RULES: &[Rule] = &[
+    Rule { code: "L001", severity: Severity::Error, summary: "cache level geometry/banking: nonzero size, ways, banks, bank bandwidth; capacity divisible by ways x line" },
+    Rule { code: "L002", severity: Severity::Error, summary: "line size must be a nonzero power of two" },
+    Rule { code: "L003", severity: Severity::Error, summary: "an inclusive level must be able to cover every level above it" },
+    Rule { code: "L004", severity: Severity::Error, summary: "no private level may sit below the coherence directory" },
+    Rule { code: "L005", severity: Severity::Warn, summary: "multi-core config without a shared inclusive level has no coherence directory home" },
+    Rule { code: "L006", severity: Severity::Warn, summary: "only the first shared inclusive level hosts the directory; deeper inclusive shared levels are inert" },
+    Rule { code: "L007", severity: Severity::Warn, summary: "aggregate capacity shrinks going down the hierarchy" },
+    Rule { code: "L008", severity: Severity::Error, summary: "load-to-use latency must be positive and strictly increase level to level, with DRAM slowest" },
+    Rule { code: "L009", severity: Severity::Warn, summary: "shared level aggregate bandwidth below the DRAM behind it" },
+    Rule { code: "L010", severity: Severity::Error, summary: "socket topology: 1..=64 cores/CMG, 1..=32 CMGs, sane interconnect, bisection >= one CMG's DRAM interleave share" },
+    Rule { code: "L011", severity: Severity::Error, summary: "machine scalars: positive finite frequency, DRAM bandwidth/latency, issue floor; nonzero channels, ROB, MSHRs" },
+    Rule { code: "L012", severity: Severity::Error, summary: "prefetcher parameters in domain (degree 1..=8, nonzero streams/table/distance)" },
+    Rule { code: "L013", severity: Severity::Warn, summary: "a level's line size is smaller than the level above it" },
+    Rule { code: "L014", severity: Severity::Warn, summary: "per-core issue floor exceeds the L1's own bandwidth" },
+    Rule { code: "L015", severity: Severity::Warn, summary: "more MSHRs than ROB entries (window cannot generate that many misses)" },
+    Rule { code: "W001", severity: Severity::Error, summary: "a workload needs 1..=256 phases (phase tags are u8)" },
+    Rule { code: "W002", severity: Severity::Error, summary: "phase footprint must be nonzero and fit the 2^40-byte phase address window" },
+    Rule { code: "W003", severity: Severity::Error, summary: "pattern parameters in domain (nonzero counts, fractions within [0,1])" },
+    Rule { code: "W004", severity: Severity::Error, summary: "Zipf skew theta must be finite and >= 0" },
+    Rule { code: "W005", severity: Severity::Error, summary: "threads, max_threads, and ranks must be nonzero" },
+    Rule { code: "W006", severity: Severity::Error, summary: "phase ILP positive and finite; instruction-mix counts finite and non-negative" },
+    Rule { code: "W007", severity: Severity::Error, summary: "--theta only applies to workloads with a Zipf-skewed phase" },
+    Rule { code: "S001", severity: Severity::Error, summary: "sampling parameters: set rate a power of two in 2..=64; interval warmup/measure >= 1" },
+    Rule { code: "S002", severity: Severity::Error, summary: "a campaign must produce at least one cell" },
+    Rule { code: "S003", severity: Severity::Error, summary: "campaign cells must have distinct store keys" },
+    Rule { code: "S004", severity: Severity::Error, summary: "campaign descriptor schema version must match this binary" },
+    Rule { code: "S005", severity: Severity::Warn, summary: "campaign cell count is implausibly large" },
+];
+
+/// Look up a rule by code.  Panics on an unregistered code — every code
+/// a checker emits must be in [`RULES`] (pinned by tests).
+pub fn rule(code: &str) -> &'static Rule {
+    RULES
+        .iter()
+        .find(|r| r.code == code)
+        .unwrap_or_else(|| panic!("unregistered diagnostic code {code:?}"))
+}
+
+/// One diagnostic: a rule instance anchored at a context.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    /// Stable rule code (see [`RULES`]).
+    pub code: &'static str,
+    /// Severity, copied from the rule at construction.
+    pub severity: Severity,
+    /// Span-like context naming the offending object/level/field, e.g.
+    /// `config milan_x / L3` or `workload memcached-like / phase 0 (serve)`.
+    pub context: String,
+    /// Human-readable explanation with the offending values.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}",
+            self.severity.label(),
+            self.code,
+            self.context,
+            self.message
+        )
+    }
+}
+
+impl Diagnostic {
+    /// JSON form (one element of the `diagnostics` array emitted by
+    /// `larc lint --json`).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("code", json::s(self.code)),
+            ("severity", json::s(self.severity.label())),
+            ("context", json::s(&self.context)),
+            ("message", json::s(&self.message)),
+        ])
+    }
+}
+
+/// An ordered collection of diagnostics (the result of one lint pass).
+#[derive(Clone, Debug, Default)]
+pub struct Diagnostics {
+    /// The diagnostics, in emission order (config rules first, then
+    /// workload, then sweep — the order the checkers ran).
+    pub list: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    /// An empty (clean) collection.
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    /// Record one diagnostic; severity is looked up in the registry.
+    pub fn push(&mut self, code: &'static str, context: impl Into<String>, message: impl Into<String>) {
+        self.list.push(Diagnostic {
+            code,
+            severity: rule(code).severity,
+            context: context.into(),
+            message: message.into(),
+        });
+    }
+
+    /// Append every diagnostic of `other`.
+    pub fn extend(&mut self, other: Diagnostics) {
+        self.list.extend(other.list);
+    }
+
+    /// Builder-style [`Diagnostics::extend`].
+    pub fn merge(mut self, other: Diagnostics) -> Diagnostics {
+        self.extend(other);
+        self
+    }
+
+    /// The error-severity diagnostics.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.list.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// The warn-severity diagnostics.
+    pub fn warnings(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.list.iter().filter(|d| d.severity == Severity::Warn)
+    }
+
+    /// Number of error-severity diagnostics.
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    /// Number of warn-severity diagnostics.
+    pub fn warning_count(&self) -> usize {
+        self.warnings().count()
+    }
+
+    /// Whether any error-severity diagnostic is present.
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// Whether no diagnostic at all is present.
+    pub fn is_clean(&self) -> bool {
+        self.list.is_empty()
+    }
+
+    /// Exit-status predicate: fails on any error, and with
+    /// `deny_warnings` on any diagnostic at all.
+    pub fn fails(&self, deny_warnings: bool) -> bool {
+        if deny_warnings {
+            !self.is_clean()
+        } else {
+            self.has_errors()
+        }
+    }
+
+    /// All diagnostics rendered one per line.
+    pub fn render(&self) -> String {
+        self.list
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Only the error-severity diagnostics, rendered one per line (the
+    /// body of every preflight refusal message).
+    pub fn render_errors(&self) -> String {
+        self.errors()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// The `larc lint --json` document: error/warning counts plus the
+    /// full diagnostic array.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("errors", json::num(self.error_count() as f64)),
+            ("warnings", json::num(self.warning_count() as f64)),
+            (
+                "diagnostics",
+                json::arr(self.list.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Constructor-level guard: panic with registry-rendered diagnostics if
+/// `d` carries errors.  The engine's last line of defence behind the CLI
+/// preflight — `configs::socket`, `Hierarchy::new`, and the socket
+/// simulator route their old ad-hoc `assert!`s through this so a config
+/// that bypasses `larc lint` still dies with a stable code.
+pub fn guard(d: &Diagnostics, what: &str) {
+    if d.has_errors() {
+        panic!("{what}: invalid configuration (run `larc lint`):\n{}", d.render());
+    }
+}
+
+/// Per-CMG instance count of a level (private levels replicate per core).
+fn instances(scope: Scope, cores: usize) -> u64 {
+    match scope {
+        Scope::Private => cores.max(1) as u64,
+        Scope::SharedBanked => 1,
+    }
+}
+
+/// L010 core-count subset, usable standalone by `Hierarchy::new` (the
+/// coherence sharer masks are u64).
+pub fn check_core_count(cores: usize, name: &str) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    let ctx = format!("config {name} / cores");
+    if cores == 0 {
+        d.push("L010", ctx, "a CMG needs at least one core");
+    } else if cores > 64 {
+        d.push(
+            "L010",
+            ctx,
+            format!("{cores} cores per CMG exceed the u64 coherence sharer masks (max 64)"),
+        );
+    }
+    d
+}
+
+/// L010 CMG-count subset, usable standalone by `configs::socket` and the
+/// socket simulator (the socket directory masks are u32).
+pub fn check_cmg_count(cmgs: usize, name: &str) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    let ctx = format!("config {name} / cmgs");
+    if cmgs == 0 {
+        d.push("L010", ctx, "a socket needs at least one CMG");
+    } else if cmgs > 32 {
+        d.push(
+            "L010",
+            ctx,
+            format!("{cmgs} CMGs exceed the u32 socket directory masks (max 32)"),
+        );
+    }
+    d
+}
+
+/// Whether `x` is a usable positive finite quantity.
+fn pos_finite(x: f64) -> bool {
+    x.is_finite() && x > 0.0
+}
+
+/// Statically check every [`MachineConfig`] invariant (rules `L0xx`).
+pub fn check_config(cfg: &MachineConfig) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    let name = &cfg.name;
+    let at = |field: &str| format!("config {name} / {field}");
+
+    // --- socket topology (L010) ---
+    d.extend(check_core_count(cfg.cores, name));
+    d.extend(check_cmg_count(cfg.cmgs, name));
+    if cfg.cmgs > 1 {
+        let ic = &cfg.interconnect;
+        if !ic.hop_cycles.is_finite() || ic.hop_cycles < 0.0 {
+            d.push(
+                "L010",
+                at("interconnect"),
+                format!("hop latency must be finite and >= 0 cycles, got {}", ic.hop_cycles),
+            );
+        }
+        if !pos_finite(ic.bisection_gbs) {
+            d.push(
+                "L010",
+                at("interconnect"),
+                format!("bisection bandwidth must be positive, got {} GB/s", ic.bisection_gbs),
+            );
+        } else if pos_finite(cfg.dram_bw_gbs) {
+            // feasibility floor: under interleave placement each CMG
+            // pulls ~1/cmgs of its traffic across the fabric from every
+            // remote slice; a bisection below one slice's share can
+            // never keep up
+            let share = cfg.dram_bw_gbs / cfg.cmgs as f64;
+            if ic.bisection_gbs < share {
+                d.push(
+                    "L010",
+                    at("interconnect"),
+                    format!(
+                        "bisection {} GB/s cannot sustain one CMG's DRAM interleave share ({share:.1} GB/s = {} GB/s / {} CMGs)",
+                        ic.bisection_gbs, cfg.dram_bw_gbs, cfg.cmgs
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- machine scalars (L011) ---
+    if !pos_finite(cfg.freq_ghz) {
+        d.push("L011", at("freq_ghz"), format!("core clock must be positive, got {}", cfg.freq_ghz));
+    }
+    if !pos_finite(cfg.dram_bw_gbs) {
+        d.push("L011", at("dram_bw_gbs"), format!("DRAM bandwidth must be positive, got {}", cfg.dram_bw_gbs));
+    }
+    if !pos_finite(cfg.dram_latency_cycles) {
+        d.push(
+            "L011",
+            at("dram_latency_cycles"),
+            format!("DRAM latency must be positive, got {}", cfg.dram_latency_cycles),
+        );
+    }
+    if cfg.dram_channels == 0 {
+        d.push("L011", at("dram_channels"), "at least one DRAM channel is required");
+    }
+    if cfg.rob_entries == 0 {
+        d.push("L011", at("rob_entries"), "the out-of-order window needs at least one ROB entry");
+    }
+    if cfg.mshrs == 0 {
+        d.push("L011", at("mshrs"), "at least one MSHR is required to miss at all");
+    }
+    if !pos_finite(cfg.l1_bytes_per_cycle) {
+        d.push(
+            "L011",
+            at("l1_bytes_per_cycle"),
+            format!("the issue-occupancy floor must be positive, got {}", cfg.l1_bytes_per_cycle),
+        );
+    }
+
+    if cfg.levels.is_empty() {
+        d.push("L001", format!("config {name}"), "no cache levels (at least an L1 is required)");
+        return d;
+    }
+
+    // --- per-level geometry, latency, bandwidth, prefetchers ---
+    let mut prev_latency: Option<f64> = None;
+    let mut prev_line: Option<u32> = None;
+    for (i, l) in cfg.levels.iter().enumerate() {
+        let p = &l.params;
+        let lvl = format!("config {name} / L{}", i + 1);
+
+        // L002: line geometry
+        if p.line_bytes == 0 || !p.line_bytes.is_power_of_two() {
+            d.push(
+                "L002",
+                lvl.clone(),
+                format!("line size must be a nonzero power of two, got {} B", p.line_bytes),
+            );
+        }
+        // L001: capacity/associativity/banking
+        if p.size == 0 || p.ways == 0 {
+            d.push(
+                "L001",
+                lvl.clone(),
+                format!("capacity and associativity must be nonzero (size {} B, {} ways)", p.size, p.ways),
+            );
+        } else if p.line_bytes != 0 {
+            let frame = p.ways as u64 * p.line_bytes as u64;
+            if p.size < frame {
+                d.push(
+                    "L001",
+                    lvl.clone(),
+                    format!(
+                        "capacity {} B holds no complete set ({} ways x {} B lines = {frame} B)",
+                        p.size, p.ways, p.line_bytes
+                    ),
+                );
+            } else if p.size % frame != 0 {
+                d.push(
+                    "L001",
+                    lvl.clone(),
+                    format!(
+                        "capacity {} B is not a multiple of ways x line ({frame} B): {} B would be silently dropped",
+                        p.size,
+                        p.size % frame
+                    ),
+                );
+            }
+        }
+        if p.banks == 0 || !pos_finite(p.bank_bytes_per_cycle) {
+            d.push(
+                "L001",
+                lvl.clone(),
+                format!(
+                    "banking must provide positive bandwidth ({} banks x {} B/cycle)",
+                    p.banks, p.bank_bytes_per_cycle
+                ),
+            );
+        }
+        // L008: latency positivity + strict monotonicity
+        if !pos_finite(p.latency) {
+            d.push("L008", lvl.clone(), format!("load-to-use latency must be positive, got {}", p.latency));
+        } else if let Some(prev) = prev_latency {
+            if p.latency <= prev {
+                d.push(
+                    "L008",
+                    lvl.clone(),
+                    format!("latency {} cyc does not exceed the level above ({prev} cyc)", p.latency),
+                );
+            }
+        }
+        if pos_finite(p.latency) {
+            prev_latency = Some(p.latency);
+        }
+        // L013: line-size inversion
+        if let Some(prev) = prev_line {
+            if p.line_bytes < prev {
+                d.push(
+                    "L013",
+                    lvl.clone(),
+                    format!("line size {} B is smaller than the level above ({prev} B): a victim line cannot fit one line here", p.line_bytes),
+                );
+            }
+        }
+        if p.line_bytes != 0 {
+            prev_line = Some(p.line_bytes);
+        }
+        // L009: shared-level bandwidth vs the DRAM behind it
+        if l.scope == Scope::SharedBanked && pos_finite(cfg.dram_bw_gbs) && pos_finite(cfg.freq_ghz) {
+            let bw = p.bw_bytes_per_cycle();
+            let dram = cfg.dram_bytes_per_cycle();
+            if bw > 0.0 && bw < dram {
+                d.push(
+                    "L009",
+                    lvl.clone(),
+                    format!(
+                        "aggregate bandwidth {bw:.0} B/cyc is below the DRAM behind it ({dram:.0} B/cyc): this cache slows fills down"
+                    ),
+                );
+            }
+        }
+        // L003: inclusive-chain capacity coverage
+        if l.inclusive {
+            let inst_i = instances(l.scope, cfg.cores);
+            let required: f64 = cfg.levels[..i]
+                .iter()
+                .map(|u| u.params.size as f64 * instances(u.scope, cfg.cores) as f64)
+                .sum::<f64>()
+                / inst_i as f64;
+            if (p.size as f64) < required {
+                d.push(
+                    "L003",
+                    lvl.clone(),
+                    format!(
+                        "inclusive capacity {} B cannot cover the {} B of upper-level data it must duplicate",
+                        p.size, required as u64
+                    ),
+                );
+            }
+        }
+        // L012: prefetcher parameter domain
+        let pf_err = |msg: String, d: &mut Diagnostics| d.push("L012", lvl.clone(), msg);
+        match l.prefetcher {
+            Prefetcher::None => {}
+            Prefetcher::NextLine { degree } => {
+                if degree == 0 || degree > MAX_DEGREE {
+                    pf_err(format!("next-line degree must be 1..={MAX_DEGREE}, got {degree}"), &mut d);
+                }
+            }
+            Prefetcher::Stride { table_entries, degree, distance } => {
+                if degree == 0 || degree > MAX_DEGREE {
+                    pf_err(format!("stride degree must be 1..={MAX_DEGREE}, got {degree}"), &mut d);
+                }
+                if table_entries == 0 {
+                    pf_err("stride table needs at least one entry".into(), &mut d);
+                }
+                if distance == 0 {
+                    pf_err("stride distance must be >= 1".into(), &mut d);
+                }
+            }
+            Prefetcher::Stream { streams, degree } => {
+                if degree == 0 || degree > MAX_DEGREE {
+                    pf_err(format!("stream degree must be 1..={MAX_DEGREE}, got {degree}"), &mut d);
+                }
+                if streams == 0 {
+                    pf_err("at least one tracked stream is required".into(), &mut d);
+                }
+            }
+        }
+    }
+
+    // L008: DRAM must be the slowest tier
+    if let Some(last) = prev_latency {
+        if pos_finite(cfg.dram_latency_cycles) && cfg.dram_latency_cycles <= last {
+            d.push(
+                "L008",
+                at("dram_latency_cycles"),
+                format!(
+                    "DRAM latency {} cyc does not exceed the LLC's {last} cyc",
+                    cfg.dram_latency_cycles
+                ),
+            );
+        }
+    }
+
+    // --- directory placement (L004/L005/L006) ---
+    match cfg.directory_level() {
+        None => {
+            if cfg.total_cores() > 1 {
+                d.push(
+                    "L005",
+                    format!("config {name}"),
+                    "no shared inclusive level: coherence between cores has no directory home",
+                );
+            }
+        }
+        Some(dl) => {
+            for (j, l) in cfg.levels.iter().enumerate().skip(dl + 1) {
+                if l.scope == Scope::Private {
+                    d.push(
+                        "L004",
+                        format!("config {name} / L{}", j + 1),
+                        format!(
+                            "private level below the coherence directory (L{}): back-invalidation cannot reach it",
+                            dl + 1
+                        ),
+                    );
+                }
+                if l.scope == Scope::SharedBanked && l.inclusive {
+                    d.push(
+                        "L006",
+                        format!("config {name} / L{}", j + 1),
+                        format!("only the first shared inclusive level (L{}) hosts the directory; the inclusive bit here is inert", dl + 1),
+                    );
+                }
+            }
+        }
+    }
+
+    // L007: aggregate capacity monotonicity (warn)
+    for i in 1..cfg.levels.len() {
+        let up = &cfg.levels[i - 1];
+        let lo = &cfg.levels[i];
+        let agg_up = up.params.size.saturating_mul(instances(up.scope, cfg.cores));
+        let agg_lo = lo.params.size.saturating_mul(instances(lo.scope, cfg.cores));
+        if agg_lo < agg_up {
+            d.push(
+                "L007",
+                format!("config {name} / L{}", i + 1),
+                format!(
+                    "aggregate capacity shrinks going down: {agg_lo} B here vs {agg_up} B at L{i}"
+                ),
+            );
+        }
+    }
+
+    // L014: issue floor vs the L1's own bandwidth (warn)
+    let l1 = cfg.l1();
+    if pos_finite(cfg.l1_bytes_per_cycle) && cfg.l1_bytes_per_cycle > l1.bw_bytes_per_cycle() {
+        d.push(
+            "L014",
+            at("l1_bytes_per_cycle"),
+            format!(
+                "issue floor {} B/cyc exceeds the L1's own bandwidth ({} B/cyc)",
+                cfg.l1_bytes_per_cycle,
+                l1.bw_bytes_per_cycle()
+            ),
+        );
+    }
+    // L015: MSHRs vs ROB (warn)
+    if cfg.mshrs > cfg.rob_entries {
+        d.push(
+            "L015",
+            at("mshrs"),
+            format!("{} MSHRs exceed the {}-entry ROB: the window cannot generate that many outstanding misses", cfg.mshrs, cfg.rob_entries),
+        );
+    }
+    d
+}
+
+/// Fraction-domain helper: in `[0, 1]` and finite.
+fn bad_fraction(f: f32) -> bool {
+    !f.is_finite() || !(0.0..=1.0).contains(&f)
+}
+
+/// W003/W004 checks of one pattern's parameter domain.
+fn check_pattern(p: &Pattern, ctx: &str, d: &mut Diagnostics) {
+    let nonzero = |what: &str, v: u64, d: &mut Diagnostics| {
+        if v == 0 {
+            d.push("W003", ctx.to_string(), format!("{what} must be nonzero"));
+        }
+    };
+    let fraction = |what: &str, f: f32, d: &mut Diagnostics| {
+        if bad_fraction(f) {
+            d.push("W003", ctx.to_string(), format!("{what} must lie in [0, 1], got {f}"));
+        }
+    };
+    let zipf = |theta: f64, d: &mut Diagnostics| {
+        if !theta.is_finite() || theta < 0.0 {
+            d.push("W004", ctx.to_string(), format!("Zipf theta must be finite and >= 0, got {theta}"));
+        }
+    };
+    match *p {
+        Pattern::Stream { bytes, passes, streams, write_fraction } => {
+            nonzero("stream bytes", bytes, d);
+            nonzero("passes", passes as u64, d);
+            nonzero("streams", streams as u64, d);
+            fraction("write_fraction", write_fraction, d);
+        }
+        Pattern::Strided { bytes, stride_chunks, passes } => {
+            nonzero("strided bytes", bytes, d);
+            nonzero("stride_chunks", stride_chunks as u64, d);
+            nonzero("passes", passes as u64, d);
+        }
+        Pattern::RandomLookup { table_bytes, lookups, .. } => {
+            nonzero("table_bytes", table_bytes, d);
+            nonzero("lookups", lookups, d);
+        }
+        Pattern::Stencil3d { nx, ny, nz, elem_bytes, sweeps } => {
+            nonzero("nx", nx as u64, d);
+            nonzero("ny", ny as u64, d);
+            nonzero("nz", nz as u64, d);
+            nonzero("elem_bytes", elem_bytes as u64, d);
+            nonzero("sweeps", sweeps as u64, d);
+        }
+        Pattern::BlockedGemm { n, block, elem_bytes } => {
+            nonzero("n", n as u64, d);
+            nonzero("block", block as u64, d);
+            nonzero("elem_bytes", elem_bytes as u64, d);
+        }
+        Pattern::CsrSpmv { rows, nnz_per_row, elem_bytes, passes, .. } => {
+            nonzero("rows", rows, d);
+            nonzero("nnz_per_row", nnz_per_row as u64, d);
+            nonzero("elem_bytes", elem_bytes as u64, d);
+            nonzero("passes", passes as u64, d);
+        }
+        Pattern::Butterfly { bytes, stages } => {
+            nonzero("butterfly bytes", bytes, d);
+            nonzero("stages", stages as u64, d);
+        }
+        Pattern::Reduction { bytes, passes } => {
+            nonzero("reduction bytes", bytes, d);
+            nonzero("passes", passes as u64, d);
+        }
+        Pattern::PrivateStream { bytes_per_thread, passes, streams, write_fraction } => {
+            nonzero("bytes_per_thread", bytes_per_thread, d);
+            nonzero("passes", passes as u64, d);
+            nonzero("streams", streams as u64, d);
+            fraction("write_fraction", write_fraction, d);
+        }
+        Pattern::ZipfianKv { table_bytes, requests, value_bytes, read_fraction, theta, .. } => {
+            nonzero("table_bytes", table_bytes, d);
+            nonzero("requests", requests, d);
+            nonzero("value_bytes", value_bytes as u64, d);
+            fraction("read_fraction", read_fraction, d);
+            zipf(theta, d);
+        }
+        Pattern::IndexWalk { leaf_bytes, node_bytes, depth, requests, theta, .. } => {
+            nonzero("leaf_bytes", leaf_bytes, d);
+            nonzero("node_bytes", node_bytes as u64, d);
+            nonzero("depth", depth as u64, d);
+            nonzero("requests", requests, d);
+            zipf(theta, d);
+        }
+        Pattern::ScanJoin { fact_bytes, dim_bytes, theta, passes, .. } => {
+            nonzero("fact_bytes", fact_bytes, d);
+            nonzero("dim_bytes", dim_bytes, d);
+            nonzero("passes", passes as u64, d);
+            zipf(theta, d);
+        }
+    }
+}
+
+/// Statically check every workload [`Spec`] invariant (rules `W0xx`).
+pub fn check_spec(spec: &Spec) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    let base = format!("workload {}", spec.name);
+    if spec.threads == 0 {
+        d.push("W005", base.clone(), "threads must be >= 1");
+    }
+    if spec.max_threads == 0 {
+        d.push("W005", base.clone(), "max_threads must be >= 1");
+    }
+    if spec.ranks == 0 {
+        d.push("W005", base.clone(), "ranks must be >= 1");
+    }
+    if spec.phases.is_empty() {
+        d.push("W001", base, "a workload needs at least one phase");
+        return d;
+    }
+    if spec.phases.len() > 256 {
+        d.push(
+            "W001",
+            base,
+            format!("{} phases exceed the u8 phase tag space (max 256)", spec.phases.len()),
+        );
+    }
+    for (i, ph) in spec.phases.iter().enumerate() {
+        let ctx = format!("workload {} / phase {i} ({})", spec.name, ph.label);
+        if !ph.ilp.is_finite() || ph.ilp <= 0.0 {
+            d.push("W006", ctx.clone(), format!("ILP must be positive and finite, got {}", ph.ilp));
+        }
+        if ph.mix.counts.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            d.push("W006", ctx.clone(), "instruction-mix counts must be finite and non-negative");
+        }
+        let fp = ph.pattern.footprint();
+        if fp == 0 {
+            d.push("W002", ctx.clone(), "phase footprint is zero: the phase touches no data");
+        } else if fp >= PHASE_WINDOW_BYTES {
+            d.push(
+                "W002",
+                ctx.clone(),
+                format!(
+                    "footprint {fp} B overflows the 2^40-byte phase address window: phases would alias"
+                ),
+            );
+        }
+        check_pattern(&ph.pattern, &ctx, &mut d);
+    }
+    d
+}
+
+/// Statically check a [`Sampling`] mode (rule `S001`).  `Sampling::parse`
+/// enforces the same domain at the CLI; this covers modes deserialized or
+/// constructed programmatically.
+pub fn check_sampling(s: &Sampling) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    match *s {
+        Sampling::Exact => {}
+        Sampling::Set { rate } => {
+            if !(2..=64).contains(&rate) || !rate.is_power_of_two() {
+                d.push(
+                    "S001",
+                    "sampling",
+                    format!("set-sampling needs a power-of-two rate in 2..=64, got {rate}"),
+                );
+            }
+        }
+        Sampling::Interval { warmup, measure } => {
+            if warmup == 0 || measure == 0 {
+                d.push(
+                    "S001",
+                    "sampling",
+                    format!("interval sampling needs warmup >= 1 and measure >= 1, got {warmup}:{measure}"),
+                );
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::configs::{self, CacheParams, LevelConfig};
+    use crate::trace::workloads;
+    use crate::trace::Scale;
+
+    fn codes(d: &Diagnostics) -> Vec<&'static str> {
+        d.list.iter().map(|x| x.code).collect()
+    }
+
+    #[test]
+    fn rule_codes_are_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for r in RULES {
+            assert!(seen.insert(r.code), "duplicate code {}", r.code);
+            assert_eq!(r.code.len(), 4, "{}", r.code);
+            assert!(
+                r.code.starts_with('L') || r.code.starts_with('W') || r.code.starts_with('S'),
+                "{}",
+                r.code
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered diagnostic code")]
+    fn unknown_codes_are_rejected() {
+        rule("L999");
+    }
+
+    #[test]
+    fn all_builtin_configs_are_clean() {
+        for name in configs::CONFIG_NAMES {
+            let cfg = configs::by_name(name).unwrap();
+            let d = check_config(&cfg);
+            assert!(d.is_clean(), "{name}:\n{}", d.render());
+        }
+    }
+
+    #[test]
+    fn fig8_sweep_variants_lint_with_at_most_bandwidth_warnings() {
+        use configs::LarcParam;
+        for lat in crate::experiments::fig8::LATENCIES {
+            let d = check_config(&configs::larc_c_variant(LarcParam::Latency(lat)));
+            assert!(d.is_clean(), "lat {lat}:\n{}", d.render());
+        }
+        for mib in crate::experiments::fig8::SIZES_MIB {
+            let d = check_config(&configs::larc_c_variant(LarcParam::CapacityMib(mib)));
+            assert!(d.is_clean(), "cap {mib}:\n{}", d.render());
+        }
+        for mib in crate::experiments::fig8::L3_MIB {
+            let d = check_config(&configs::larc_c_variant(LarcParam::StackedL3Mib(mib)));
+            assert!(d.is_clean(), "l3 {mib}:\n{}", d.render());
+        }
+        for bb in crate::experiments::fig8::BANKBITS {
+            let d = check_config(&configs::larc_c_variant(LarcParam::BankBits(bb)));
+            assert!(!d.has_errors(), "bb {bb}:\n{}", d.render());
+            // the 1-bank variant's L2 bandwidth drops below HBM — a
+            // legitimate sweep point, so it must warn, not error
+            if bb == 0 {
+                assert_eq!(codes(&d), vec!["L009"], "{}", d.render());
+            } else {
+                assert!(d.is_clean(), "bb {bb}:\n{}", d.render());
+            }
+        }
+    }
+
+    #[test]
+    fn all_builtin_workloads_are_clean_at_every_scale() {
+        for scale in [Scale::Tiny, Scale::Small, Scale::Paper] {
+            for spec in workloads::all(scale) {
+                let d = check_spec(&spec);
+                assert!(d.is_clean(), "{} @ {scale:?}:\n{}", spec.name, d.render());
+            }
+        }
+    }
+
+    #[test]
+    fn inclusive_l2_smaller_than_l1_is_l003() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[1].params.size = 512 * 1024; // 512 KiB < 12 x 64 KiB
+        let d = check_config(&cfg);
+        assert!(codes(&d).contains(&"L003"), "{}", d.render());
+        assert!(d.has_errors());
+    }
+
+    #[test]
+    fn private_level_below_the_directory_is_l004() {
+        let mut cfg = configs::a64fx_s();
+        let l1 = cfg.levels[0];
+        cfg.levels.push(LevelConfig {
+            params: CacheParams { latency: 60.0, size: 16 * 1024 * 1024, ..l1.params },
+            ..l1
+        });
+        let d = check_config(&cfg);
+        assert!(codes(&d).contains(&"L004"), "{}", d.render());
+    }
+
+    #[test]
+    fn geometry_rules_fire() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].params.line_bytes = 192; // not a power of two
+        cfg.levels[1].params.size = 8 * 1024 * 1024 + 1; // not divisible
+        let d = check_config(&cfg);
+        assert!(codes(&d).contains(&"L002"), "{}", d.render());
+        assert!(codes(&d).contains(&"L001"), "{}", d.render());
+    }
+
+    #[test]
+    fn latency_inversion_is_l008() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[1].params.latency = 4.0; // below the L1's 8
+        let d = check_config(&cfg);
+        assert!(codes(&d).contains(&"L008"), "{}", d.render());
+        let mut cfg = configs::a64fx_s();
+        cfg.dram_latency_cycles = 20.0; // below the L2's 37
+        assert!(codes(&check_config(&cfg)).contains(&"L008"));
+    }
+
+    #[test]
+    fn socket_rules_fire() {
+        let mut cfg = configs::a64fx_sock();
+        cfg.interconnect.bisection_gbs = 10.0; // < 256/4 = 64 GB/s share
+        assert!(codes(&check_config(&cfg)).contains(&"L010"));
+        assert!(!check_cmg_count(33, "x").is_clean());
+        assert!(!check_cmg_count(0, "x").is_clean());
+        assert!(!check_core_count(65, "x").is_clean());
+        assert!(check_cmg_count(32, "x").is_clean());
+        assert!(check_core_count(64, "x").is_clean());
+    }
+
+    #[test]
+    fn warn_rules_have_warn_severity() {
+        for code in ["L005", "L006", "L007", "L009", "L013", "L014", "L015", "S005"] {
+            assert_eq!(rule(code).severity, Severity::Warn, "{code}");
+        }
+        for code in ["L001", "L003", "L004", "L008", "L010", "W002", "W004", "S001"] {
+            assert_eq!(rule(code).severity, Severity::Error, "{code}");
+        }
+    }
+
+    #[test]
+    fn truncated_single_level_config_warns_without_a_directory() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels.truncate(1);
+        let d = check_config(&cfg);
+        assert!(!d.has_errors(), "{}", d.render());
+        assert_eq!(codes(&d), vec!["L005"], "{}", d.render());
+    }
+
+    #[test]
+    fn prefetcher_domain_is_l012() {
+        let mut cfg = configs::a64fx_s();
+        cfg.levels[0].prefetcher = Prefetcher::Stream { streams: 0, degree: 99 };
+        let d = check_config(&cfg);
+        let c = codes(&d);
+        assert_eq!(c.iter().filter(|&&x| x == "L012").count(), 2, "{}", d.render());
+    }
+
+    #[test]
+    fn spec_rules_fire() {
+        let mut spec = workloads::by_name("memcached-like", Scale::Tiny).unwrap();
+        // break the Zipf theta and the thread counts
+        if let Pattern::ZipfianKv { theta, .. } = &mut spec.phases[0].pattern {
+            *theta = -1.0;
+        } else {
+            panic!("memcached-like phase 0 is not ZipfianKv");
+        }
+        spec.threads = 0;
+        let d = check_spec(&spec);
+        assert!(codes(&d).contains(&"W004"), "{}", d.render());
+        assert!(codes(&d).contains(&"W005"), "{}", d.render());
+
+        let mut empty = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        empty.phases.clear();
+        assert_eq!(codes(&check_spec(&empty)), vec!["W001"]);
+    }
+
+    #[test]
+    fn footprint_overflowing_the_phase_window_is_w002() {
+        let mut spec = workloads::by_name("ep-omp", Scale::Tiny).unwrap();
+        spec.phases[0].pattern = Pattern::Reduction { bytes: PHASE_WINDOW_BYTES, passes: 1 };
+        assert!(codes(&check_spec(&spec)).contains(&"W002"));
+    }
+
+    #[test]
+    fn sampling_rules_fire() {
+        assert!(check_sampling(&Sampling::Exact).is_clean());
+        assert!(check_sampling(&Sampling::Set { rate: 8 }).is_clean());
+        assert_eq!(codes(&check_sampling(&Sampling::Set { rate: 3 })), vec!["S001"]);
+        assert_eq!(
+            codes(&check_sampling(&Sampling::Interval { warmup: 0, measure: 4 })),
+            vec!["S001"]
+        );
+    }
+
+    #[test]
+    fn display_and_json_shapes_are_stable() {
+        let mut d = Diagnostics::new();
+        d.push("L003", "config bad / L2", "inclusive capacity 1 B cannot cover 2 B");
+        let line = d.list[0].to_string();
+        assert_eq!(
+            line,
+            "error[L003] config bad / L2: inclusive capacity 1 B cannot cover 2 B"
+        );
+        assert_eq!(d.render(), line);
+        let doc = d.to_json().to_string();
+        assert!(doc.contains("\"errors\":1"), "{doc}");
+        assert!(doc.contains("\"warnings\":0"), "{doc}");
+        assert!(doc.contains("\"code\":\"L003\""), "{doc}");
+        assert!(doc.contains("\"severity\":\"error\""), "{doc}");
+        // the document round-trips through the hand-rolled parser
+        let parsed = json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("errors").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn fails_predicate_matches_exit_semantics() {
+        let clean = Diagnostics::new();
+        assert!(!clean.fails(false) && !clean.fails(true));
+        let mut warn = Diagnostics::new();
+        warn.push("L009", "c", "m");
+        assert!(!warn.fails(false) && warn.fails(true));
+        let mut err = Diagnostics::new();
+        err.push("L001", "c", "m");
+        assert!(err.fails(false) && err.fails(true));
+    }
+
+    #[test]
+    #[should_panic(expected = "L010")]
+    fn guard_panics_with_the_rendered_code() {
+        let mut d = Diagnostics::new();
+        d.push("L010", "config x / cmgs", "a socket needs at least one CMG");
+        guard(&d, "socket()");
+    }
+
+    #[test]
+    fn guard_is_silent_on_warnings() {
+        let mut d = Diagnostics::new();
+        d.push("L009", "config x / L2", "slow");
+        guard(&d, "test"); // must not panic
+    }
+
+    #[test]
+    fn with_policy_constructs_any_builtin_level() {
+        // the divisibility rule (not pow2 sets!) is exactly what
+        // Cache::with_policy needs: milan_x's 96 MiB L3 has a non-pow2
+        // set count and must stay legal
+        let cfg = configs::milan_x();
+        assert!(check_config(&cfg).is_clean());
+        let p = cfg.llc();
+        let c = crate::cachesim::cache::Cache::new(p.size, p.ways, p.line_bytes);
+        drop(c);
+    }
+}

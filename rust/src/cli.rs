@@ -2,8 +2,11 @@
 //!
 //! ```text
 //! larc list [workloads|configs|experiments]
-//! larc run --workload <name> [--config <name>] [--threads N] [--levels N]
-//!          [--prefetch spec] [--theta θ] [--scale s]
+//! larc lint [--all-configs] [--all-workloads] [--config <name>]
+//!           [--config-file FILE] [--workload <name>] [--experiment id]
+//!           [--json] [--deny-warnings] [--rules]
+//! larc run --workload <name> [--config <name>|--config-file FILE]
+//!          [--threads N] [--levels N] [--prefetch spec] [--theta θ] [--scale s]
 //! larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
 //! larc figure <fig1|fig2|fig5|fig6|fig7a|fig7b|fig8|fig9|fig-prefetch
 //!              |fig-socket|fig-datacenter|table2|table3|headline|model>
@@ -107,8 +110,12 @@ larc — LARC (3D-stacked cache) reproduction toolkit
 
 USAGE:
   larc list [workloads|configs|experiments]
-  larc run --workload <name> [--config <cfg>] [--threads N] [--levels N]
-           [--prefetch spec] [--theta θ] [--scale ...] [--sample mode] [--exact]
+  larc lint [--all-configs] [--all-workloads] [--config <cfg>]
+            [--config-file FILE] [--workload <name>] [--experiment id]
+            [--scale ...] [--sample mode] [--json] [--deny-warnings] [--rules]
+  larc run --workload <name> [--config <cfg>|--config-file FILE] [--threads N]
+           [--levels N] [--prefetch spec] [--theta θ] [--scale ...]
+           [--sample mode] [--exact]
   larc mca --workload <name> [--arch broadwell|a64fx|zen3] [--pjrt]
   larc figure <id> [--scale ...] [--sweep fam] [--pjrt] [--verbose] [--csv]
               [--store DIR] [--resume] [--sample mode] [--exact]
@@ -116,7 +123,8 @@ USAGE:
   larc campaign [--scale ...] [--pjrt] [--csv] [--store DIR] [--resume]
                 [--sample mode] [--exact] [--progress] [--quiet]
   larc serve <id> --store DIR [--spawn K] [--scale ...] [--sample mode]
-             [--sweep fam] [--lease-ms N] [--heartbeat-ms N] [--max-retries N]
+             [--config-file FILE] [--sweep fam]
+             [--lease-ms N] [--heartbeat-ms N] [--max-retries N]
              [--backoff-ms N] [--timeout-floor-ms N] [--timeout-ms-per-cost X]
              [--csv] [--quiet]
   larc work --store DIR [--worker-id ID] [--wait-ms N] [--verbose]
@@ -124,6 +132,26 @@ USAGE:
              [--tmp-age SECS] [--dry-run]
   larc bench [all|cachesim|hierarchy|store] [--iters N] [--out DIR] [--check DIR]
   larc model
+
+LINT (static diagnostics — run before you burn simulation hours):
+  larc lint statically checks machine configs (codes L0xx), workload
+  specs (W0xx), and sampling/campaign definitions (S0xx) and prints one
+  `severity[CODE] context: message` line per finding.  With no scope
+  flags it lints every builtin config, every workload at --scale, and
+  every store-backed campaign's job set.  The same rules run as a
+  mandatory preflight inside run/figure/campaign/serve/work: errors
+  abort before any cell simulates.  Exit status: 0 iff no Error-severity
+  diagnostics (with --deny-warnings: iff none at all).
+  --all-configs      lint exactly the builtin config registry
+  --all-workloads    lint exactly the workload suites at --scale
+  --config NAME      lint one builtin config
+  --config-file FILE lint a JSON machine config (same format `larc run
+                     --config-file` and `larc serve --config-file` accept)
+  --workload NAME    lint one workload at --scale
+  --experiment ID    lint one store-backed campaign's job set
+  --json             machine-readable {errors, warnings, diagnostics}
+  --deny-warnings    treat warnings as fatal (CI mode)
+  --rules            print the rule catalog (code, severity, summary)
 
 HIERARCHY:
   --levels N    truncate the config's cache hierarchy to its first N levels
@@ -340,6 +368,29 @@ mod tests {
 
         let c = parse(&["bench", "store", "--iters", "1"]);
         assert_eq!(c.positional, vec!["store"]);
+    }
+
+    #[test]
+    fn lint_flags_parse() {
+        let c = parse(&["lint", "--all-configs", "--deny-warnings"]);
+        assert_eq!(c.command, "lint");
+        assert!(c.has("all-configs") && c.has("deny-warnings"));
+        assert!(!c.has("json"));
+
+        let c = parse(&["lint", "--config", "larc_c", "--json"]);
+        assert_eq!(c.flag("config"), Some("larc_c"));
+        assert!(c.has("json"));
+
+        let c = parse(&["lint", "--config-file", "/tmp/m.json", "--workload", "ep-omp"]);
+        assert_eq!(c.flag("config-file"), Some("/tmp/m.json"));
+        assert_eq!(c.flag("workload"), Some("ep-omp"));
+
+        let c = parse(&["lint", "--experiment", "fig8", "--sweep", "bankbits", "--rules"]);
+        assert_eq!(c.flag("experiment"), Some("fig8"));
+        assert!(c.has("rules"));
+
+        let c = parse(&["run", "--workload", "ep-omp", "--config-file", "cfg.json"]);
+        assert_eq!(c.flag("config-file"), Some("cfg.json"));
     }
 
     #[test]

@@ -69,7 +69,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-use crate::cachesim::Sampling;
+use crate::cachesim::{MachineConfig, Sampling};
 use crate::coordinator::campaign::{panic_message, run_job};
 use crate::coordinator::store::{job_key, JobKey, Lookup, Store, SCHEMA_VERSION};
 use crate::coordinator::Job;
@@ -213,6 +213,11 @@ pub struct Descriptor {
     pub sampling: Sampling,
     /// Sweep-family restriction (fig8's `--sweep`).
     pub sweep: Option<String>,
+    /// Canonical JSON of a `--config-file` machine-config override
+    /// applied to every cache-sim job (`None` for builtin campaigns).
+    /// Carried in the descriptor so workers rebuild the *same* job set
+    /// — and therefore the same [`JobKey`]s — as the coordinator.
+    pub config_override: Option<String>,
     /// Protocol parameters all processes must share.
     pub params: ServiceParams,
 }
@@ -256,6 +261,13 @@ impl Descriptor {
                     None => Json::Null,
                 },
             ),
+            (
+                "config_override",
+                match &self.config_override {
+                    Some(s) => json::s(s),
+                    None => Json::Null,
+                },
+            ),
             ("lease_ms", json::num(p.lease_ms as f64)),
             ("heartbeat_ms", json::num(p.heartbeat_ms as f64)),
             ("max_retries", json::num(p.max_retries as f64)),
@@ -280,7 +292,7 @@ impl Descriptor {
         let schema = doc.get("schema").and_then(|v| v.as_usize()).unwrap_or(0);
         anyhow::ensure!(
             schema == SCHEMA_VERSION as usize,
-            "campaign descriptor schema v{schema} does not match this binary (v{SCHEMA_VERSION})"
+            "S004: campaign descriptor schema v{schema} does not match this binary (v{SCHEMA_VERSION})"
         );
         let str_field = |k: &str| -> anyhow::Result<&str> {
             doc.get(k)
@@ -297,6 +309,10 @@ impl Descriptor {
         let sampling = Sampling::parse(str_field("sampling")?)
             .map_err(|e| anyhow::anyhow!("campaign descriptor sampling: {e}"))?;
         let sweep = doc.get("sweep").and_then(|v| v.as_str()).map(str::to_string);
+        let config_override = doc
+            .get("config_override")
+            .and_then(|v| v.as_str())
+            .map(str::to_string);
         let params = ServiceParams {
             lease_ms: num_field("lease_ms")? as u64,
             heartbeat_ms: num_field("heartbeat_ms")? as u64,
@@ -312,6 +328,7 @@ impl Descriptor {
             scale,
             sampling,
             sweep,
+            config_override,
             params,
         })
     }
@@ -332,6 +349,36 @@ impl Descriptor {
                 );
             }
             std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Parse the `config_override` field back into a machine config
+    /// (`None` when the campaign has no override).
+    pub fn override_config(&self) -> anyhow::Result<Option<MachineConfig>> {
+        match &self.config_override {
+            None => Ok(None),
+            Some(text) => Ok(Some(crate::cachesim::configio::from_str(text)?)),
+        }
+    }
+}
+
+/// Replace every cache-sim job's machine config with `cfg`, re-deriving
+/// each thread count from its spec on the new machine (the same clamp
+/// the campaign drivers apply via `effective_threads`).  Coordinator and
+/// workers both route reconstructed job sets through this, so an
+/// overridden campaign's [`JobKey`]s stay byte-identical across
+/// processes.
+pub fn apply_config_override(jobs: &mut [Job], cfg: &MachineConfig) {
+    for job in jobs {
+        if let Job::CacheSim {
+            spec,
+            config,
+            threads,
+            ..
+        } = job
+        {
+            *threads = spec.effective_threads(cfg.total_cores());
+            *config = cfg.clone();
         }
     }
 }
@@ -1100,11 +1147,24 @@ mod tests {
             scale: Scale::Tiny,
             sampling: Sampling::Set { rate: 8 },
             sweep: Some("latency".into()),
+            config_override: None,
             params: ServiceParams { exit_on_timeout: true, ..P },
         };
         desc.save(&d).unwrap();
         let back = Descriptor::load(&d).unwrap();
         assert_eq!(back, desc);
+
+        // a --config-file override rides along verbatim
+        let text = crate::cachesim::configio::to_json(&configs::a64fx_s()).to_string();
+        let with_override = Descriptor {
+            config_override: Some(text),
+            ..desc.clone()
+        };
+        with_override.save(&d).unwrap();
+        let back = Descriptor::load(&d).unwrap();
+        assert_eq!(back, with_override);
+        let cfg = back.override_config().unwrap().unwrap();
+        assert_eq!(cfg.name, "a64fx_s");
 
         // a schema from another binary generation must refuse to load
         let text = fs::read_to_string(Descriptor::path(&d)).unwrap();

@@ -19,6 +19,7 @@ pub mod figprefetch;
 pub mod figsocket;
 pub mod headline;
 pub mod matrix;
+pub mod preflight;
 pub mod table2;
 pub mod table3;
 pub mod table_model;
@@ -161,6 +162,11 @@ pub fn campaign_jobs(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Job>> {
 pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<Vec<Report>> {
     if opts.store.is_some() && !STORE_BACKED.contains(&id) {
         eprintln!("note: {id} does not route through the result store; --store/--resume ignored");
+    }
+    if STORE_BACKED.contains(&id) {
+        // Mandatory preflight: lint the exact job set before any cell
+        // simulates.  Errors abort here with their `larc lint` codes.
+        preflight::gate(id, &campaign_jobs(id, opts)?)?;
     }
     match id {
         "fig1" => Ok(vec![fig1::run(opts)?]),

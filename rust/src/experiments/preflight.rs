@@ -1,0 +1,186 @@
+//! Campaign preflight — static lint of a job set before any cell runs.
+//!
+//! Every store-backed experiment funnels its jobs through
+//! [`check_jobs`] before simulation starts (and the campaign service
+//! refuses to publish a campaign that fails it).  The checks reuse the
+//! [`crate::cachesim::validate`] rule registry: configs, workloads, and
+//! sampling modes are linted once per distinct name, and the job set
+//! itself is checked for emptiness (`S002`), duplicate store keys
+//! (`S003`), and implausible size (`S005`).
+
+use std::collections::BTreeSet;
+
+use crate::cachesim::validate::{check_config, check_sampling, check_spec, Diagnostics};
+use crate::coordinator::{job_key, Job};
+
+/// Ceiling above which a campaign's cell count is flagged as a likely
+/// sweep-definition mistake (`S005`).  Generous: the largest builtin
+/// campaign (fig8, all sweeps, paper scale) is under 2 000 cells.
+pub const MAX_CELLS: usize = 250_000;
+
+/// Lint a campaign's job set.  Configs, workloads, and sampling modes
+/// are deduplicated by name so a 1 000-cell sweep over two configs
+/// reports each config problem once, not 500 times.
+pub fn check_jobs(id: &str, jobs: &[Job]) -> Diagnostics {
+    let mut d = Diagnostics::new();
+    let ctx = format!("campaign {id}");
+    if jobs.is_empty() {
+        d.push("S002", ctx, "job set is empty; nothing to simulate");
+        return d;
+    }
+    if jobs.len() > MAX_CELLS {
+        d.push(
+            "S005",
+            ctx.clone(),
+            format!(
+                "{} cells exceeds the plausibility ceiling of {MAX_CELLS}; \
+                 check the sweep definition",
+                jobs.len()
+            ),
+        );
+    }
+    let mut keys: BTreeSet<u64> = BTreeSet::new();
+    let mut configs: BTreeSet<String> = BTreeSet::new();
+    let mut specs: BTreeSet<String> = BTreeSet::new();
+    let mut samplings: BTreeSet<String> = BTreeSet::new();
+    for job in jobs {
+        if !keys.insert(job_key(job).0) {
+            d.push(
+                "S003",
+                ctx.clone(),
+                format!("duplicate store key for job '{}'", job.label()),
+            );
+        }
+        match job {
+            Job::CacheSim {
+                spec,
+                config,
+                sampling,
+                ..
+            } => {
+                if configs.insert(config.name.clone()) {
+                    d.extend(check_config(config));
+                }
+                if specs.insert(spec.name.clone()) {
+                    d.extend(check_spec(spec));
+                }
+                if samplings.insert(sampling.label()) {
+                    d.extend(check_sampling(sampling));
+                }
+            }
+            Job::Mca { spec, .. } => {
+                if specs.insert(spec.name.clone()) {
+                    d.extend(check_spec(spec));
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Mandatory preflight gate: warnings go to stderr, any error aborts
+/// with every rendered diagnostic before a single cell simulates.
+pub fn gate(id: &str, jobs: &[Job]) -> anyhow::Result<()> {
+    let d = check_jobs(id, jobs);
+    for w in d.warnings() {
+        eprintln!("preflight: {w}");
+    }
+    if d.has_errors() {
+        anyhow::bail!(
+            "preflight failed for campaign {id} ({} error(s)):\n{}",
+            d.error_count(),
+            d.render_errors()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::Sampling;
+    use crate::experiments::{campaign_jobs, ExpOptions, STORE_BACKED};
+
+    #[test]
+    fn every_builtin_campaign_passes_preflight() {
+        let opts = ExpOptions {
+            scale: crate::trace::Scale::Tiny,
+            ..ExpOptions::default()
+        };
+        for id in STORE_BACKED {
+            let jobs = campaign_jobs(id, &opts).expect("builtin campaign");
+            let d = check_jobs(id, &jobs);
+            assert!(
+                !d.has_errors(),
+                "campaign {id} should have no lint errors, got:\n{}",
+                d.render()
+            );
+            // fig8's default sweep includes the deliberate 1-bank variant,
+            // whose bandwidth shortfall is the L009 warning; every other
+            // builtin campaign lints fully clean.
+            if id == "fig8" {
+                assert!(d.warnings().all(|w| w.code == "L009"), "{}", d.render());
+            } else {
+                assert!(
+                    d.is_clean(),
+                    "campaign {id} should lint clean, got:\n{}",
+                    d.render()
+                );
+            }
+            gate(id, &jobs).expect("gate should pass");
+        }
+    }
+
+    #[test]
+    fn empty_job_set_is_s002() {
+        let d = check_jobs("nothing", &[]);
+        let codes: Vec<_> = d.list.iter().map(|x| x.code).collect();
+        assert_eq!(codes, ["S002"]);
+        assert!(gate("nothing", &[]).is_err());
+    }
+
+    #[test]
+    fn duplicate_jobs_are_s003() {
+        let opts = ExpOptions {
+            scale: crate::trace::Scale::Tiny,
+            ..ExpOptions::default()
+        };
+        let mut jobs = campaign_jobs("fig1", &opts).expect("fig1 jobs");
+        jobs.push(jobs[0].clone());
+        let d = check_jobs("fig1", &jobs);
+        assert!(d.list.iter().any(|x| x.code == "S003"), "{}", d.render());
+        let err = gate("fig1", &jobs).unwrap_err().to_string();
+        assert!(err.contains("S003"), "{err}");
+    }
+
+    #[test]
+    fn broken_config_in_a_job_set_fails_the_gate() {
+        let opts = ExpOptions {
+            scale: crate::trace::Scale::Tiny,
+            ..ExpOptions::default()
+        };
+        let mut jobs = campaign_jobs("fig1", &opts).expect("fig1 jobs");
+        if let Some(Job::CacheSim { config, .. }) = jobs.first_mut() {
+            config.levels[0].params.latency = -1.0;
+        } else {
+            panic!("fig1 should lead with a cache-sim job");
+        }
+        let err = gate("fig1", &jobs).unwrap_err().to_string();
+        assert!(err.contains("L008"), "{err}");
+    }
+
+    #[test]
+    fn bad_sampling_in_a_job_set_fails_the_gate() {
+        let opts = ExpOptions {
+            scale: crate::trace::Scale::Tiny,
+            sampling: Sampling::Interval {
+                warmup: 0,
+                measure: 0,
+            },
+            ..ExpOptions::default()
+        };
+        let jobs = campaign_jobs("fig1", &opts).expect("fig1 jobs");
+        let err = gate("fig1", &jobs).unwrap_err().to_string();
+        assert!(err.contains("S001"), "{err}");
+    }
+}

@@ -77,6 +77,99 @@
 //! (`RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`) rather than every
 //! incremental `cargo check`.
 #![cfg_attr(doc, warn(missing_docs))]
+// The whole crate is safe Rust: the simulators, the store, and the lease
+// protocol are pure std (file I/O + threads); PJRT FFI lives behind the
+// artifacts boundary, not in this crate.  Enforced, not aspirational.
+#![forbid(unsafe_code)]
+// Curated pedantic promotion (CI runs clippy with `-D warnings`): the
+// pedantic group is on, minus the lints that fight this codebase's idiom
+// — saturating `as` casts between simulator counter domains, long
+// driver functions mirroring paper figures, and f32/f64 literals.
+#![warn(clippy::pedantic)]
+#![allow(
+    clippy::bool_to_int_with_if,
+    clippy::case_sensitive_file_extension_comparisons,
+    clippy::cast_lossless,
+    clippy::cast_possible_truncation,
+    clippy::cast_possible_wrap,
+    clippy::cast_precision_loss,
+    clippy::cast_sign_loss,
+    clippy::checked_conversions,
+    clippy::cloned_instead_of_copied,
+    clippy::default_trait_access,
+    clippy::doc_markdown,
+    clippy::enum_glob_use,
+    clippy::expl_impl_clone_on_copy,
+    clippy::explicit_deref_methods,
+    clippy::explicit_iter_loop,
+    clippy::filter_map_next,
+    clippy::flat_map_option,
+    clippy::float_cmp,
+    clippy::fn_params_excessive_bools,
+    clippy::from_iter_instead_of_collect,
+    clippy::if_not_else,
+    clippy::ignored_unit_patterns,
+    clippy::implicit_clone,
+    clippy::implicit_hasher,
+    clippy::inconsistent_struct_constructor,
+    clippy::inefficient_to_string,
+    clippy::inline_always,
+    clippy::invalid_upcast_comparisons,
+    clippy::items_after_statements,
+    clippy::iter_without_into_iter,
+    clippy::large_types_passed_by_value,
+    clippy::manual_assert,
+    clippy::manual_instant_elapsed,
+    clippy::manual_is_variant_and,
+    clippy::manual_let_else,
+    clippy::manual_ok_or,
+    clippy::manual_string_new,
+    clippy::many_single_char_names,
+    clippy::map_flatten,
+    clippy::map_unwrap_or,
+    clippy::match_bool,
+    clippy::match_on_vec_items,
+    clippy::match_same_arms,
+    clippy::match_wildcard_for_single_variants,
+    clippy::maybe_infinite_iter,
+    clippy::missing_errors_doc,
+    clippy::missing_fields_in_debug,
+    clippy::missing_panics_doc,
+    clippy::module_name_repetitions,
+    clippy::must_use_candidate,
+    clippy::naive_bytecount,
+    clippy::needless_continue,
+    clippy::needless_for_each,
+    clippy::needless_pass_by_value,
+    clippy::needless_raw_string_hashes,
+    clippy::option_option,
+    clippy::range_plus_one,
+    clippy::redundant_closure_for_method_calls,
+    clippy::redundant_else,
+    clippy::return_self_not_must_use,
+    clippy::semicolon_if_nothing_returned,
+    clippy::should_panic_without_expect,
+    clippy::similar_names,
+    clippy::single_match_else,
+    clippy::stable_sort_primitive,
+    clippy::string_add_assign,
+    clippy::struct_excessive_bools,
+    clippy::struct_field_names,
+    clippy::too_many_lines,
+    clippy::trivially_copy_pass_by_ref,
+    clippy::unchecked_duration_subtraction,
+    clippy::unicode_not_nfc,
+    clippy::uninlined_format_args,
+    clippy::unnecessary_join,
+    clippy::unnecessary_wraps,
+    clippy::unnested_or_patterns,
+    clippy::unreadable_literal,
+    clippy::unused_self,
+    clippy::used_underscore_binding,
+    clippy::verbose_bit_mask,
+    clippy::wildcard_imports,
+    clippy::zero_sized_map_values
+)]
 
 pub mod benchsuite;
 pub mod cachesim;

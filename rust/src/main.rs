@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use larc::cachesim::{self, configs, Sampling};
+use larc::cachesim::{self, configio, configs, validate, MachineConfig, Sampling};
 use larc::cli::{Cli, USAGE};
 use larc::coordinator::report::{results_dir, Report};
 use larc::coordinator::service;
@@ -34,6 +34,7 @@ fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
     match cli.command.as_str() {
         "list" => cmd_list(&cli),
+        "lint" => cmd_lint(&cli),
         "run" => cmd_run(&cli),
         "mca" => cmd_mca(&cli),
         "figure" => cmd_figure(&cli),
@@ -137,6 +138,142 @@ fn levels_summary(c: &larc::cachesim::MachineConfig) -> String {
         .join(" + ")
 }
 
+/// `larc lint` — static diagnostics over machine configs, workload
+/// specs, and campaign definitions.  With no scope flags everything
+/// builtin is linted: all `CONFIG_NAMES`, all workloads at `--scale`,
+/// and every store-backed campaign's job set.  Exit status is 0 iff no
+/// Error-severity diagnostics were emitted (with `--deny-warnings`, iff
+/// none at all); `--json` emits a machine-readable document instead of
+/// the line-per-diagnostic report.
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    if cli.has("rules") {
+        for r in validate::RULES {
+            println!("{:<6} {:<8} {}", r.code, r.severity.label(), r.summary);
+        }
+        return Ok(());
+    }
+    let scale = cli.scale().map_err(|e| anyhow!(e))?;
+    let sampling = sampling_flag(cli)?;
+    let mut d = validate::Diagnostics::new();
+    let mut scoped = false;
+    let (mut n_configs, mut n_workloads, mut n_campaigns) = (0usize, 0usize, 0usize);
+
+    if let Some(name) = cli.flag("config") {
+        scoped = true;
+        let cfg = configs::by_name(name)
+            .ok_or_else(|| anyhow!("unknown config {name:?} (try `larc list configs`)"))?;
+        d.extend(validate::check_config(&cfg));
+        n_configs += 1;
+    }
+    if let Some(path) = cli.flag("config-file") {
+        scoped = true;
+        let cfg = configio::load(Path::new(path))?;
+        d.extend(validate::check_config(&cfg));
+        n_configs += 1;
+    }
+    if let Some(name) = cli.flag("workload") {
+        scoped = true;
+        let spec = workloads::by_name(name, scale)
+            .ok_or_else(|| anyhow!("unknown workload {name:?} (try `larc list workloads`)"))?;
+        d.extend(validate::check_spec(&spec));
+        n_workloads += 1;
+    }
+    if let Some(id) = cli.flag("experiment") {
+        scoped = true;
+        let o = ExpOptions {
+            scale,
+            sampling,
+            sweep: cli.flag("sweep").map(str::to_string),
+            ..ExpOptions::default()
+        };
+        let jobs = experiments::campaign_jobs(id, &o)?;
+        d.extend(experiments::preflight::check_jobs(id, &jobs));
+        n_campaigns += 1;
+    }
+    if cli.flag("sample").is_some() {
+        d.extend(validate::check_sampling(&sampling));
+    }
+
+    let default_scope = !scoped && !cli.has("all-configs") && !cli.has("all-workloads");
+    if cli.has("all-configs") || default_scope {
+        for name in configs::CONFIG_NAMES {
+            let cfg = configs::by_name(name).expect("registry name");
+            d.extend(validate::check_config(&cfg));
+            n_configs += 1;
+        }
+    }
+    if cli.has("all-workloads") || default_scope {
+        for spec in workloads::all(scale) {
+            d.extend(validate::check_spec(&spec));
+            n_workloads += 1;
+        }
+    }
+    if default_scope {
+        let o = ExpOptions {
+            scale,
+            sampling,
+            ..ExpOptions::default()
+        };
+        for id in experiments::STORE_BACKED {
+            let jobs = experiments::campaign_jobs(id, &o)?;
+            d.extend(experiments::preflight::check_jobs(id, &jobs));
+            n_campaigns += 1;
+        }
+    }
+
+    let deny = cli.has("deny-warnings");
+    if cli.has("json") {
+        println!("{}", d.to_json());
+    } else {
+        if !d.is_clean() {
+            println!("{}", d.render());
+        }
+        println!(
+            "lint: {} error(s), {} warning(s) across {n_configs} config(s), {n_workloads} workload(s), {n_campaigns} campaign(s)",
+            d.error_count(),
+            d.warning_count()
+        );
+    }
+    if d.fails(deny) {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Resolve `--config NAME` / `--config-file FILE` into a machine config
+/// (builtin `a64fx_s` when neither is given).  File-loaded configs are
+/// shape-checked here and domain-checked by the caller's lint preflight.
+fn base_config(cli: &Cli) -> Result<MachineConfig> {
+    if let Some(path) = cli.flag("config-file") {
+        if cli.has("config") {
+            bail!("--config and --config-file are mutually exclusive");
+        }
+        return configio::load(Path::new(path));
+    }
+    let cfg_name = cli.flag_or("config", "a64fx_s");
+    configs::by_name(&cfg_name)
+        .ok_or_else(|| anyhow!("unknown config {cfg_name:?} (try `larc list configs`)"))
+}
+
+/// Mandatory single-job preflight for `larc run`: warnings to stderr,
+/// any error refuses to simulate with the rendered `larc lint` codes.
+fn gate_run(cfg: &MachineConfig, spec: &larc::trace::Spec, sampling: Sampling) -> Result<()> {
+    let d = validate::check_config(cfg)
+        .merge(validate::check_spec(spec))
+        .merge(validate::check_sampling(&sampling));
+    for w in d.warnings() {
+        eprintln!("lint: {w}");
+    }
+    if d.has_errors() {
+        bail!(
+            "refusing to simulate: {} lint error(s) (see `larc lint`):\n{}",
+            d.error_count(),
+            d.render_errors()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_run(cli: &Cli) -> Result<()> {
     let name = cli
         .flag("workload")
@@ -147,9 +284,9 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     if let Some(t) = cli.flag("theta") {
         let theta: f64 = t
             .parse()
-            .map_err(|_| anyhow!("--theta expects a number, got {t:?}"))?;
+            .map_err(|_| anyhow!("W004: --theta expects a number, got {t:?}"))?;
         if !theta.is_finite() || theta < 0.0 {
-            bail!("--theta must be finite and >= 0, got {t}");
+            bail!("W004: --theta must be finite and >= 0, got {t}");
         }
         let mut hit = false;
         for p in &mut spec.phases {
@@ -166,14 +303,12 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         }
         if !hit {
             bail!(
-                "--theta only applies to Zipfian serving workloads (the datacenter family); \
-                 {name} has no Zipf-skewed phase"
+                "W007: --theta only applies to Zipfian serving workloads (the datacenter \
+                 family); {name} has no Zipf-skewed phase"
             );
         }
     }
-    let cfg_name = cli.flag_or("config", "a64fx_s");
-    let mut cfg = configs::by_name(&cfg_name)
-        .ok_or_else(|| anyhow!("unknown config {cfg_name:?} (try `larc list configs`)"))?;
+    let mut cfg = base_config(cli)?;
     if let Some(levels) = cli.flag("levels") {
         let n: usize = levels
             .parse()
@@ -217,6 +352,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     }
 
     let sampling = sampling_flag(cli)?;
+    gate_run(&cfg, &spec, sampling)?;
     let r = cachesim::simulate_sampled(&spec, &cfg, threads, sampling);
     println!("workload : {} ({})", r.workload, spec.suite.label());
     println!("config   : {} x{} threads", r.config, r.threads);
@@ -376,7 +512,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .flag("store")
         .ok_or_else(|| anyhow!("--store DIR required"))?;
     let o = opts(cli)?;
-    let jobs = experiments::campaign_jobs(id, &o)?;
+    let mut jobs = experiments::campaign_jobs(id, &o)?;
+    // a --config-file override replaces every cache-sim job's machine;
+    // it rides in the descriptor so workers rebuild identical job keys
+    let override_cfg = match cli.flag("config-file") {
+        None => None,
+        Some(path) => Some(configio::load(Path::new(path))?),
+    };
+    if let Some(cfg) = &override_cfg {
+        service::apply_config_override(&mut jobs, cfg);
+    }
+    // the service refuses to publish an unlintable campaign: preflight
+    // runs before the descriptor ever reaches campaign.json
+    experiments::preflight::gate(id, &jobs)?;
     let params = service_params(cli)?;
     // durability on: a worker crash right after a rename must not be able
     // to lose the cell the lease protocol just accounted as done
@@ -386,6 +534,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         scale: o.scale,
         sampling: o.sampling,
         sweep: o.sweep.clone(),
+        config_override: override_cfg
+            .as_ref()
+            .map(|cfg| configio::to_json(cfg).to_string()),
         params,
     };
     desc.save(store.dir())?;
@@ -428,6 +579,12 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "serve: campaign complete ({} cells, {} expired leases reclaimed)",
         report.total, report.reclaimed
     );
+    if override_cfg.is_some() {
+        // the figure drivers rebuild the *builtin* job set; rendering
+        // them against an overridden key space would miss every cell
+        eprintln!("serve: --config-file override active; skipping figure render (cells are in {dir})");
+        return Ok(());
+    }
     // render the figure from the warm store (all hits, no recompute)
     let render = ExpOptions {
         store: Some(PathBuf::from(dir)),
@@ -452,7 +609,13 @@ fn cmd_work(cli: &Cli) -> Result<()> {
         sweep: desc.sweep.clone(),
         ..ExpOptions::default()
     };
-    let jobs = experiments::campaign_jobs(&desc.experiment, &o)?;
+    let mut jobs = experiments::campaign_jobs(&desc.experiment, &o)?;
+    if let Some(cfg) = desc.override_config()? {
+        service::apply_config_override(&mut jobs, &cfg);
+    }
+    // same preflight as the coordinator: a worker must never burn cycles
+    // on (or write cells for) a campaign this binary considers invalid
+    experiments::preflight::gate(&desc.experiment, &jobs)?;
     let store = Store::open(Path::new(dir))?.with_sync(true);
     let owner = match cli.flag("worker-id") {
         Some(id) => id.to_string(),

@@ -1,0 +1,268 @@
+//! `larc lint` end to end through the real binary: golden codes and JSON
+//! shape, the exit-status-iff-errors property, and the acceptance path —
+//! a crafted invalid config (inclusive L2 smaller than the L1s it must
+//! cover, a private level below the directory) is refused by `lint`,
+//! `run`, and `serve` before anything simulates.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn larc(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_larc"))
+        .args(args)
+        .output()
+        .expect("failed to spawn larc")
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("larc_lint_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The acceptance-criteria config: 12 private 64 KiB L1s over a shared
+/// *inclusive* 128 KiB L2 (cannot cover 12 x 64 KiB -> L003) with a
+/// private 16 MiB L3 *below* the directory level (-> L004).
+const BAD_CONFIG: &str = r#"{
+  "name": "bad_machine",
+  "cores": 12,
+  "freq_ghz": 2.2,
+  "dram_bw_gbs": 256.0,
+  "dram_latency_cycles": 180.0,
+  "levels": [
+    {"size": 65536, "ways": 4, "line_bytes": 256, "latency": 8.0,
+     "banks": 8, "bank_bytes_per_cycle": 128.0},
+    {"size": 131072, "ways": 16, "line_bytes": 256, "latency": 37.0,
+     "banks": 4, "bank_bytes_per_cycle": 91.0,
+     "scope": "shared", "inclusive": true},
+    {"size": 16777216, "ways": 16, "line_bytes": 256, "latency": 60.0,
+     "banks": 4, "bank_bytes_per_cycle": 91.0}
+  ]
+}"#;
+
+fn write_bad_config(dir: &PathBuf) -> String {
+    let path = dir.join("bad_machine.json");
+    fs::write(&path, BAD_CONFIG).unwrap();
+    path.to_str().unwrap().to_string()
+}
+
+#[test]
+fn lint_all_configs_deny_warnings_is_clean_on_the_shipped_tree() {
+    let out = larc(&["lint", "--all-configs", "--deny-warnings"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("0 error(s), 0 warning(s)"), "{stdout}");
+}
+
+#[test]
+fn lint_default_scope_exits_zero_with_only_the_known_fig8_warning() {
+    let out = larc(&["lint", "--scale", "tiny"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("0 error(s)"), "{stdout}");
+    // fig8's deliberate 1-bank sweep point is the only warning source
+    if stdout.contains("warning[") {
+        assert!(stdout.contains("warning[L009]"), "{stdout}");
+    }
+}
+
+#[test]
+fn lint_rules_prints_the_catalog() {
+    let out = larc(&["lint", "--rules"]);
+    assert!(out.status.success(), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for code in ["L001", "L003", "L004", "W004", "S001", "S003"] {
+        assert!(stdout.contains(code), "missing {code}: {stdout}");
+    }
+    assert!(stdout.contains("error") && stdout.contains("warning"), "{stdout}");
+}
+
+#[test]
+fn crafted_invalid_config_is_refused_by_lint_run_and_serve() {
+    let d = tmpdir("refusal");
+    let cfg = write_bad_config(&d);
+
+    // lint: nonzero exit with both stable codes on stdout
+    let out = larc(&["lint", "--config-file", &cfg]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("error[L003]"), "{stdout}");
+    assert!(stdout.contains("error[L004]"), "{stdout}");
+
+    // lint --json: machine-readable document with the same codes
+    let out = larc(&["lint", "--config-file", &cfg, "--json"]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out);
+    let doc = larc::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let errors = doc.get("errors").and_then(|v| v.as_usize()).unwrap();
+    assert!(errors >= 2, "expected >= 2 errors, got {errors}");
+    let codes: Vec<String> = doc
+        .get("diagnostics")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|e| e.get("code").and_then(|c| c.as_str()).unwrap().to_string())
+        .collect();
+    assert!(codes.contains(&"L003".to_string()), "{codes:?}");
+    assert!(codes.contains(&"L004".to_string()), "{codes:?}");
+
+    // run: refused at preflight, nothing simulated
+    let out = larc(&[
+        "run", "--workload", "ep-omp", "--scale", "tiny", "--config-file", &cfg,
+    ]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("refusing to simulate"), "{stderr}");
+    assert!(stderr.contains("L003") && stderr.contains("L004"), "{stderr}");
+    assert!(
+        !String::from_utf8_lossy(&out.stdout).contains("cycles"),
+        "simulated despite lint errors"
+    );
+
+    // serve: the service refuses to publish an unlintable campaign
+    let store = d.join("store");
+    fs::create_dir_all(&store).unwrap();
+    let out = larc(&[
+        "serve", "fig7a", "--store", store.to_str().unwrap(),
+        "--scale", "tiny", "--config-file", &cfg,
+    ]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("preflight failed"), "{stderr}");
+    assert!(stderr.contains("L003"), "{stderr}");
+    assert!(
+        !store.join("service").join("campaign.json").exists(),
+        "descriptor was published despite lint errors"
+    );
+}
+
+#[test]
+fn lint_exit_status_is_zero_iff_the_json_reports_zero_errors() {
+    // property, driven through the real binary over a seeded family of
+    // configs: good ones, warning-only ones, and broken ones
+    let d = tmpdir("property");
+    let cases: Vec<(&str, String)> = vec![
+        // clean single-core machine
+        ("clean", level_doc(65536, 256, 8.0, 37.0)),
+        // L002: non-power-of-two line
+        ("badline", level_doc(65536, 192, 8.0, 37.0)),
+        // L001: capacity not a multiple of ways x line
+        ("badsize", level_doc(65537, 256, 8.0, 37.0)),
+        // L008: inverted latencies
+        ("badlat", level_doc(65536, 256, 37.0, 8.0)),
+        // L011: zero DRAM bandwidth
+        (
+            "badbw",
+            level_doc(65536, 256, 8.0, 37.0).replace("\"dram_bw_gbs\": 256.0", "\"dram_bw_gbs\": 0"),
+        ),
+    ];
+    for (name, doc) in cases {
+        let path = d.join(format!("{name}.json"));
+        fs::write(&path, &doc).unwrap();
+        let out = larc(&["lint", "--config-file", path.to_str().unwrap(), "--json"]);
+        let parsed = larc::util::json::parse(&String::from_utf8_lossy(&out.stdout))
+            .unwrap_or_else(|e| panic!("{name}: bad json ({e})"));
+        let errors = parsed.get("errors").and_then(|v| v.as_usize()).unwrap();
+        assert_eq!(
+            out.status.success(),
+            errors == 0,
+            "{name}: exit {:?} but {errors} errors",
+            out.status.code()
+        );
+    }
+}
+
+/// A two-level 12-core machine document with the given L1 geometry and
+/// the two level latencies.
+fn level_doc(l1_size: u64, line: u32, lat1: f64, lat2: f64) -> String {
+    format!(
+        r#"{{
+  "name": "prop_machine",
+  "cores": 12,
+  "freq_ghz": 2.2,
+  "dram_bw_gbs": 256.0,
+  "dram_latency_cycles": 180.0,
+  "levels": [
+    {{"size": {l1_size}, "ways": 4, "line_bytes": {line}, "latency": {lat1},
+      "banks": 8, "bank_bytes_per_cycle": 128.0}},
+    {{"size": 16777216, "ways": 16, "line_bytes": 256, "latency": {lat2},
+      "banks": 4, "bank_bytes_per_cycle": 91.0,
+      "scope": "shared", "inclusive": true}}
+  ]
+}}"#
+    )
+}
+
+#[test]
+fn lint_scopes_select_what_is_checked() {
+    let out = larc(&["lint", "--workload", "ep-omp", "--scale", "tiny"]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("1 workload(s)"),
+        "{:?}",
+        out
+    );
+
+    let out = larc(&["lint", "--config", "larc_c_3d"]);
+    assert!(out.status.success(), "{:?}", out);
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("1 config(s)"),
+        "{:?}",
+        out
+    );
+
+    // fig8's default sweep carries the deliberate 1-bank L009 warning:
+    // plain lint passes, --deny-warnings turns it into a failure
+    let out = larc(&["lint", "--experiment", "fig8", "--scale", "tiny"]);
+    assert!(out.status.success(), "{:?}", out);
+    let out = larc(&["lint", "--experiment", "fig8", "--scale", "tiny", "--deny-warnings"]);
+    assert_eq!(out.status.code(), Some(1), "{:?}", out);
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("warning[L009]"),
+        "{:?}",
+        out
+    );
+
+    let out = larc(&["lint", "--experiment", "fig2"]);
+    assert_eq!(out.status.code(), Some(1), "not store-backed: {:?}", out);
+}
+
+#[test]
+fn invalid_flag_combos_surface_stable_codes() {
+    // --sample: malformed modes carry S001
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--sample", "set:3"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("S001"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // --prefetch: unknown kinds carry L012
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--prefetch", "bogus"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("L012"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // --theta: domain errors are W004, wrong-family use is W007
+    let out = larc(&[
+        "run", "--workload", "memcached-like", "--scale", "tiny", "--theta", "-1",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("W004"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let out = larc(&["run", "--workload", "ep-omp", "--scale", "tiny", "--theta", "0.9"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("W007"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

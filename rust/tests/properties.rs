@@ -658,3 +658,75 @@ fn milan_x_l3_wins_in_the_capacity_gap() {
         "no capacity gap: milan {milan}, milan_x {milan_x}"
     );
 }
+
+#[test]
+fn prop_config_lint_is_total_and_partitions_by_severity() {
+    // `validate::check_config` must be a *total* function: whatever a
+    // config file or a sweep mutation throws at it, it returns a
+    // diagnostics list (never panics, never divides by zero) and every
+    // diagnostic is exactly one of error/warning.
+    use larc::cachesim::validate;
+    let names = configs::CONFIG_NAMES;
+    check("config lint total", 400, |rng| {
+        let mut cfg = configs::by_name(names[rng.below(names.len() as u64) as usize])
+            .expect("registry name");
+        for _ in 0..=rng.below(4) {
+            let li = rng.below(cfg.levels.len() as u64) as usize;
+            match rng.below(9) {
+                0 => cfg.levels[li].params.size = rng.below(1 << 22),
+                1 => cfg.levels[li].params.ways = rng.below(40) as u32,
+                2 => cfg.levels[li].params.line_bytes = rng.below(700) as u32,
+                3 => cfg.levels[li].params.latency = rng.f64_range(-20.0, 300.0),
+                4 => cfg.levels[li].params.banks = rng.below(10) as u32,
+                5 => cfg.dram_bw_gbs = rng.f64_range(-10.0, 2000.0),
+                6 => cfg.cores = rng.below(100) as usize,
+                7 => cfg.cmgs = 1 + rng.below(40) as usize,
+                _ => cfg.interconnect.bisection_gbs = rng.f64_range(0.0, 400.0),
+            }
+        }
+        let d = validate::check_config(&cfg);
+        if d.error_count() + d.warning_count() != d.list.len() {
+            return Err(format!(
+                "severity partition broken ({} + {} != {}):\n{}",
+                d.error_count(),
+                d.warning_count(),
+                d.list.len(),
+                d.render()
+            ));
+        }
+        if d.is_clean() && (d.has_errors() || d.warning_count() > 0) {
+            return Err("clean list reported errors/warnings".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampling_lint_agrees_with_the_cli_parser() {
+    // The `--sample` grammar (`Sampling::parse`) and the `S001` lint rule
+    // (`validate::check_sampling`) must accept exactly the same domain:
+    // a mode round-tripped through its label parses iff it lints clean.
+    use larc::cachesim::validate;
+    use larc::cachesim::Sampling;
+    check("sampling lint = parse domain", 300, |rng| {
+        let s = match rng.below(3) {
+            0 => Sampling::Exact,
+            1 => Sampling::Set {
+                rate: rng.below(140) as u32,
+            },
+            _ => Sampling::Interval {
+                warmup: (rng.below(4) * 1000) as u32,
+                measure: (rng.below(4) * 100) as u32,
+            },
+        };
+        let lint_clean = validate::check_sampling(&s).is_clean();
+        let parses = Sampling::parse(&s.label()).is_ok();
+        if lint_clean != parses {
+            return Err(format!(
+                "{}: lint_clean={lint_clean} but parse ok={parses}",
+                s.label()
+            ));
+        }
+        Ok(())
+    });
+}

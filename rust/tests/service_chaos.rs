@@ -98,6 +98,7 @@ fn publish(dir: &Path, experiment: &str, params: ServiceParams) -> (Vec<Job>, Pa
         scale: Scale::Tiny,
         sampling: Sampling::Exact,
         sweep: None,
+        config_override: None,
         params,
     }
     .save(dir)
